@@ -1,0 +1,40 @@
+//! Regenerates Tables 1 and 2 (step time vs bandwidth; weak scaling), plus a
+//! finer bandwidth sweep to locate the crossover where quantization stops
+//! paying (very high bandwidth).
+//!
+//! Run: `cargo run --release --example bandwidth_sweep`
+
+use qoda::bench_harness::experiments::{
+    measure_qoda5_bytes_per_coord, step_time_ms, table1, table2,
+};
+use qoda::util::table::Table;
+
+fn main() {
+    let t1 = table1();
+    t1.print();
+    let _ = t1.save_csv("table1.csv");
+    println!();
+    let t2 = table2();
+    t2.print();
+    let _ = t2.save_csv("table2.csv");
+    println!();
+
+    // finer sweep (not in the paper): where does the baseline catch up?
+    let bpc = measure_qoda5_bytes_per_coord(1 << 20, 42);
+    let mut t = Table::new(
+        "Bandwidth sweep, K = 4 (model extrapolation)",
+        &["Gbps", "baseline ms", "QODA5 ms", "speedup"],
+    );
+    for bw in [0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 100.0] {
+        let b = step_time_ms(4, bw, false, bpc);
+        let q = step_time_ms(4, bw, true, bpc);
+        t.row(&[
+            format!("{bw}"),
+            format!("{b:.0}"),
+            format!("{q:.0}"),
+            format!("{:.2}x", b / q),
+        ]);
+    }
+    t.print();
+    let _ = t.save_csv("bandwidth_sweep.csv");
+}

@@ -1,0 +1,31 @@
+//! Figure 4 regenerator: FID evolution during WGAN training for
+//! Adam (uncompressed) vs QODA+global (Q-GenX) vs QODA+layer-wise (L-GreCo),
+//! averaged over seeds. Writes results/fig4_fid.csv.
+//!
+//! Run: `cargo run --release --example layerwise_vs_global -- [--steps 240] [--seeds 2]`
+
+use qoda::bench_harness::model_experiments::fig4;
+use qoda::util::cli::Args;
+use qoda::util::table::save_series_csv;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 240);
+    let nseeds = args.usize_or("seeds", 2);
+    let seeds: Vec<u64> = (1..=nseeds as u64).collect();
+    println!("Figure 4: {steps} steps x {nseeds} seeds x 3 configurations\n");
+    let (summary, rows) = fig4(steps, &seeds)?;
+    summary.print();
+    summary.save_csv("fig4_summary.csv")?;
+    save_series_csv(
+        "fig4_fid.csv",
+        &["step", "adam", "qoda_global", "qoda_layerwise"],
+        &rows,
+    )?;
+    println!("\nFID curves:");
+    println!("step      adam   qoda_global  qoda_layerwise");
+    for r in &rows {
+        println!("{:>5}  {:>8.4}  {:>10.4}  {:>12.4}", r[0], r[1], r[2], r[3]);
+    }
+    Ok(())
+}

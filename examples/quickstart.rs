@@ -1,0 +1,76 @@
+//! Quickstart: the library in ~60 lines.
+//!
+//! 1. quantize a gradient layer-wise, entropy-code it, decode it back;
+//! 2. solve a monotone VI with QODA under quantized communication;
+//! 3. check the Theorem 5.1 variance bound on the fly.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use qoda::coding::protocol::{decode_vector, encode_vector, Codebooks, ProtocolKind};
+use qoda::oda::compress::{Compressor, QuantCompressor};
+use qoda::oda::lr::AdaptiveLr;
+use qoda::oda::qoda::Qoda;
+use qoda::oda::source::OracleSource;
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::quantizer::{dequantize, quantize};
+use qoda::quant::{variance, QuantConfig};
+use qoda::stats::rng::Rng;
+use qoda::vi::gap::GapEvaluator;
+use qoda::vi::noise::NoiseModel;
+use qoda::vi::operator::{Operator, QuadraticOperator};
+
+fn main() {
+    // ---- 1. layer-wise quantization + coding round trip -------------------
+    let map = LayerMap::from_spec(&[
+        ("encoder.w", 4096, "ff"),
+        ("encoder.b", 64, "bias"),
+        ("head.w", 2048, "embedding"),
+    ]);
+    let cfg = QuantConfig::uniform_bits(map.num_types(), 5, 2.0);
+    let mut rng = Rng::new(7);
+    let grad: Vec<f32> = (0..map.dim).map(|_| rng.gaussian() as f32 * 0.1).collect();
+
+    let qv = quantize(&grad, &map, &cfg, &mut rng);
+    let books = Codebooks::uniform(ProtocolKind::Main, &cfg, &map.type_proportions());
+    let wire = encode_vector(&qv, &books);
+    let decoded = dequantize(&decode_vector(&wire, &map, &books), &cfg);
+
+    println!(
+        "quantized {} coords: {} -> {} bytes ({:.1}x), eps_Q bound = {:.3}",
+        map.dim,
+        map.dim * 4,
+        wire.len_bytes(),
+        (map.dim * 4) as f64 / wire.len_bytes() as f64,
+        variance::eps_q_for(&map, &cfg),
+    );
+    let err: f64 = grad
+        .iter()
+        .zip(&decoded)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / grad.iter().map(|a| (*a as f64).powi(2)).sum::<f64>();
+    println!("relative reconstruction error: {err:.4}");
+
+    // ---- 2. QODA on a monotone VI with 4 quantized nodes ------------------
+    let mut op_rng = Rng::new(1);
+    let op = QuadraticOperator::random(16, 0.5, &mut op_rng);
+    let mut src = OracleSource::new(&op, 4, NoiseModel::Absolute { sigma: 0.2 }, 3);
+    let vmap = LayerMap::single(16);
+    let comps: Vec<Box<dyn Compressor>> = (0..4)
+        .map(|i| Box::new(QuantCompressor::global_bits(&vmap, 5, 128, i as u64)) as _)
+        .collect();
+    let mut solver = Qoda::new(&mut src, comps, Box::new(AdaptiveLr::default()));
+    let run = solver.run(&vec![0.0; 16], 1000, &[]);
+
+    // ---- 3. evaluate the restricted gap ------------------------------------
+    let sol = op.solution().unwrap();
+    let radius = 1.0
+        + qoda::stats::vecops::l2_norm64(&qoda::stats::vecops::sub(&vec![0.0; 16], &sol));
+    let gap = GapEvaluator::new(&op, sol, radius).eval(&run.xbar);
+    println!(
+        "QODA: 1000 iters x 4 nodes, {:.1} bits/coord on the wire, GAP(x-bar) = {gap:.5}",
+        run.bits_per_iter_node / 16.0
+    );
+    assert!(gap < 0.05, "quickstart should converge");
+    println!("quickstart OK");
+}

@@ -1,0 +1,26 @@
+//! Table 3 + Figure 5 regenerator: transformer LM with PowerSGD and
+//! {global, layer-wise} factor quantization (Table 3), and the single-type
+//! quantization ablation (Figure 5).
+//!
+//! Run: `cargo run --release --example transformer_ablation -- [--steps 120] [--ablation]`
+
+use qoda::bench_harness::model_experiments::{fig5, table3};
+use qoda::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 120);
+    let nseeds = args.usize_or("seeds", 2);
+    let seeds: Vec<u64> = (1..=nseeds as u64).collect();
+    if !args.has("ablation") {
+        let t = table3(steps, &[4, 8, 16], &seeds)?;
+        t.print();
+        t.save_csv("table3.csv")?;
+    }
+    if args.has("ablation") || args.has("all") {
+        let t = fig5(steps, &seeds)?;
+        t.print();
+        t.save_csv("fig5.csv")?;
+    }
+    Ok(())
+}

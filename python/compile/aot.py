@@ -1,0 +1,200 @@
+"""AOT lowering: jit + lower every L2 entry point to HLO *text* artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` 0.1.6 crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all under artifacts/):
+  wgan_op.hlo.txt       (params f32[d], seed i32)      -> (dual, g_loss, w_dist)
+  wgan_sample.hlo.txt   (params, seed)                 -> (fake[N,2], real[N,2])
+  wgan_init.hlo.txt     (seed)                         -> (params,)
+  wgan.meta             layer map + dims (plain text, parsed by rust)
+  lm_grad.hlo.txt       (params f32[d], tokens i32[B,T+1]) -> (grads, loss)
+  lm_eval.hlo.txt       (params, tokens)               -> (loss,)
+  lm_init.hlo.txt       (seed)                         -> (params,)
+  lm.meta               layer map + dims
+  quantize_k8.hlo.txt   (v f32[n], levels f32[8], uniforms f32[n]) -> (q,)
+                        the L1 Pallas kernel lowered standalone so the rust
+                        runtime can cross-validate its own quantizer via PJRT
+  testvectors/quant_*.txt  shared quantization test vectors (rust cross-check)
+
+`make artifacts` re-runs this only when python sources change.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as wgan
+from . import transformer as lm
+from .kernels import quantize as qk
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} bytes)")
+
+
+def write_meta(path, kind, cfg, extra=()):
+    lines = [f"kind {kind}", f"dim {cfg.dim}"]
+    for k, v in extra:
+        lines.append(f"{k} {v}")
+    shapes = {name: shape for name, shape, _ in cfg.layers}
+    for name, off, ln, ty in cfg.layer_spec():
+        shape = shapes[name]
+        rows = shape[0]
+        cols = ln // rows
+        lines.append(f"layer {name} {off} {ln} {ty} {rows} {cols}")
+    write(path, "\n".join(lines) + "\n")
+
+
+def lower_wgan(outdir):
+    cfg = wgan.WganConfig()
+    print(f"[wgan] dim={cfg.dim} batch={cfg.batch} hidden={cfg.hidden}")
+    pspec = jax.ShapeDtypeStruct((cfg.dim,), jnp.float32)
+    sspec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    op = jax.jit(lambda p, s: wgan.wgan_operator(cfg, p, s))
+    write(f"{outdir}/wgan_op.hlo.txt", to_hlo_text(op.lower(pspec, sspec)))
+
+    samp = jax.jit(lambda p, s: wgan.wgan_sampler(cfg, p, s))
+    write(f"{outdir}/wgan_sample.hlo.txt", to_hlo_text(samp.lower(pspec, sspec)))
+
+    init = jax.jit(lambda s: wgan.wgan_init(cfg, s))
+    write(f"{outdir}/wgan_init.hlo.txt", to_hlo_text(init.lower(sspec)))
+
+    write_meta(
+        f"{outdir}/wgan.meta",
+        "wgan",
+        cfg,
+        extra=[
+            ("batch", cfg.batch),
+            ("sample_n", cfg.sample_n),
+            ("gen_dim", cfg.gen_dim),
+            ("modes", cfg.modes),
+            ("mode_radius", cfg.mode_radius),
+            ("mode_std", cfg.mode_std),
+        ],
+    )
+
+
+def lower_lm(outdir):
+    cfg = lm.LmConfig()
+    print(
+        f"[lm] dim={cfg.dim} vocab={cfg.vocab} d={cfg.d_model} "
+        f"layers={cfg.n_layers} seq={cfg.seq} batch={cfg.batch}"
+    )
+    pspec = jax.ShapeDtypeStruct((cfg.dim,), jnp.float32)
+    tspec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    sspec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    grad = jax.jit(lambda p, t: lm.lm_grad(cfg, p, t))
+    write(f"{outdir}/lm_grad.hlo.txt", to_hlo_text(grad.lower(pspec, tspec)))
+
+    ev = jax.jit(lambda p, t: lm.lm_eval(cfg, p, t))
+    write(f"{outdir}/lm_eval.hlo.txt", to_hlo_text(ev.lower(pspec, tspec)))
+
+    init = jax.jit(lambda s: lm.lm_init(cfg, s))
+    write(f"{outdir}/lm_init.hlo.txt", to_hlo_text(init.lower(sspec)))
+
+    write_meta(
+        f"{outdir}/lm.meta",
+        "lm",
+        cfg,
+        extra=[
+            ("vocab", cfg.vocab),
+            ("d_model", cfg.d_model),
+            ("n_layers", cfg.n_layers),
+            ("seq", cfg.seq),
+            ("batch", cfg.batch),
+        ],
+    )
+
+
+QUANT_N = 4096
+QUANT_LEVELS = 8
+
+
+def lower_quantize(outdir):
+    """Standalone lowering of the L1 Pallas quantization kernel."""
+    vspec = jax.ShapeDtypeStruct((QUANT_N,), jnp.float32)
+    lspec = jax.ShapeDtypeStruct((QUANT_LEVELS,), jnp.float32)
+    fn = jax.jit(lambda v, l, u: (qk.quantize(v, l, u, q=2),))
+    write(f"{outdir}/quantize_k8.hlo.txt", to_hlo_text(fn.lower(vspec, lspec, vspec)))
+
+
+def emit_testvectors(outdir):
+    """Deterministic quantization cases shared with the rust test-suite.
+
+    Format (one float per line blocks, '#'-prefixed section headers):
+      # case <i> n <n> levels <L> q <q>
+      # v / levels / uniforms / expected
+    """
+    tvdir = os.path.join(outdir, "testvectors")
+    os.makedirs(tvdir, exist_ok=True)
+    rng = np.random.default_rng(7)
+    cases = []
+    for i, (n, nl, q) in enumerate(
+        [(16, 4, 2), (100, 8, 2), (257, 8, 1), (1024, 16, 2), (33, 6, 2)]
+    ):
+        v = rng.standard_normal(n).astype(np.float32)
+        if i == 1:
+            v[::7] = 0.0  # exercise exact zeros
+        inner = np.sort(rng.uniform(0.02, 0.98, nl - 2)).astype(np.float32)
+        levels = np.concatenate([[0.0], inner, [1.0]]).astype(np.float32)
+        u = rng.uniform(0, 1, n).astype(np.float32)
+        expected = np.asarray(
+            ref.quantize_ref(jnp.asarray(v), jnp.asarray(levels), jnp.asarray(u), q=q)
+        )
+        kern = np.asarray(
+            qk.quantize(jnp.asarray(v), jnp.asarray(levels), jnp.asarray(u), q=q)
+        )
+        np.testing.assert_allclose(kern, expected, rtol=1e-5, atol=1e-6)
+        cases.append((n, nl, q, v, levels, u, expected))
+
+    lines = [f"ncases {len(cases)}"]
+    for i, (n, nl, q, v, levels, u, expected) in enumerate(cases):
+        lines.append(f"case {i} n {n} levels {nl} q {q}")
+        for tag, arr in [("v", v), ("levels", levels), ("u", u), ("expected", expected)]:
+            lines.append(tag + " " + " ".join(repr(float(x)) for x in arr))
+    write(os.path.join(tvdir, "quant_cases.txt"), "\n".join(lines) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma list: wgan,lm,quantize,tv")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else set()
+
+    jax.config.update("jax_platform_name", "cpu")
+    if not only or "wgan" in only:
+        lower_wgan(args.out)
+    if not only or "lm" in only:
+        lower_lm(args.out)
+    if not only or "quantize" in only:
+        lower_quantize(args.out)
+    if not only or "tv" in only:
+        emit_testvectors(args.out)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

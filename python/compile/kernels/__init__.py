@@ -1,0 +1,2 @@
+"""L1: Pallas kernels (quantize, matmul) + pure-jnp oracles (ref)."""
+from . import matmul, quantize, ref  # noqa: F401

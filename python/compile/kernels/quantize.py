@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: unbiased stochastic layer-wise quantization.
+
+This is the paper's compute hot-spot (Section 3): given a vector ``v``, its
+``L^q`` norm, a sequence of quantization levels ``0 = l_0 < l_1 < ... <
+l_{s+1} = 1`` and a stream of uniforms, emit the unbiased stochastic
+quantization
+
+    Q(v_i) = ||v||_q * sign(v_i) * q_l(|v_i| / ||v||_q)
+
+where ``q_l(u)`` rounds ``u`` to ``l_tau`` or ``l_{tau+1}`` with probability
+proportional to the relative distance (paper, Section 3.1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA original does a
+warp-level bucket max + LUT search; on TPU the level table is tiny and lives
+in VMEM alongside each (8x128-aligned) gradient tile, and the level search is
+a branchless vectorized comparison on the VPU. ``interpret=True`` is mandatory
+on CPU PJRT (Mosaic custom-calls cannot run there); the BlockSpec structure is
+the TPU schedule.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block of coordinates processed per grid step. 1024 = 8 * 128: one VPU-tile
+# row-aligned chunk; at f32 this is 4 KiB of gradient + 4 KiB of uniforms +
+# the (tiny) level table resident in VMEM per step.
+BLOCK = 1024
+
+
+def _quantize_kernel(v_ref, norm_ref, levels_ref, u_ref, o_ref):
+    """Quantize one block of coordinates against the level table."""
+    v = v_ref[...]
+    norm = norm_ref[0]
+    levels = levels_ref[...]  # [L], levels[0] = 0, levels[L-1] = 1
+    u01 = u_ref[...]
+
+    inv = jnp.where(norm > 0.0, 1.0 / jnp.maximum(norm, 1e-38), 0.0)
+    mag = jnp.clip(jnp.abs(v) * inv, 0.0, 1.0)
+
+    # Branchless level search: tau = #{j : levels[j] <= mag} - 1, clipped so
+    # that [l_tau, l_{tau+1}] is always a valid bracket (mag == 1.0 lands in
+    # the last interval and rounds up with probability 1).
+    cmp = (levels[None, :] <= mag[:, None]).astype(jnp.int32)
+    tau = jnp.clip(jnp.sum(cmp, axis=1) - 1, 0, levels.shape[0] - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+
+    xi = (mag - lo) / jnp.maximum(hi - lo, 1e-38)
+    qmag = jnp.where(u01 < xi, hi, lo)
+    o_ref[...] = norm * jnp.sign(v) * qmag
+
+
+def quantize_block(v, norm, levels, uniforms):
+    """Stochastically quantize ``v`` (flat f32[n], n % BLOCK == 0 not
+    required — we pad) against ``levels`` (f32[L] with endpoints 0 and 1).
+
+    ``norm`` is the f32[1] L^q norm of the *unpadded* vector; ``uniforms`` are
+    i.i.d. U[0,1) of the same shape as ``v``.
+    """
+    n = v.shape[0]
+    nl = levels.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        v = jnp.pad(v, (0, pad))
+        uniforms = jnp.pad(uniforms, (0, pad))
+    npad = v.shape[0]
+    grid = (npad // BLOCK,)
+    out = pl.pallas_call(
+        _quantize_kernel,
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((nl,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(v, norm, levels, uniforms)
+    return out[:n]
+
+
+def lq_norm(v, q):
+    """L^q norm used for normalization; q in {1, 2} or jnp.inf."""
+    if q == jnp.inf or q == "inf":
+        return jnp.max(jnp.abs(v))
+    return jnp.sum(jnp.abs(v) ** q) ** (1.0 / q)
+
+
+@partial(jax.jit, static_argnames=("q",))
+def quantize(v, levels, uniforms, q=2):
+    """Full unbiased quantization Q_{L}(v) of a flat vector with one level
+    sequence (one 'type'); returns the dequantized vector."""
+    norm = lq_norm(v, q).reshape((1,))
+    return quantize_block(v, norm, levels, uniforms)
+
+
+def quantize_layerwise(v, offsets, lengths, level_table, type_of_layer, uniforms, q=2):
+    """Layer-wise quantization of a flat vector: layer ``k`` spans
+    ``v[offsets[k]:offsets[k]+lengths[k]]`` and uses the level sequence
+    ``level_table[type_of_layer[k]]`` with its own norm. Python-level loop —
+    layers are static at trace time (they come from the model's layer map).
+    """
+    outs = []
+    for off, ln, ty in zip(offsets, lengths, type_of_layer):
+        seg = jax.lax.dynamic_slice(v, (off,), (ln,))
+        useg = jax.lax.dynamic_slice(uniforms, (off,), (ln,))
+        norm = lq_norm(seg, q).reshape((1,))
+        outs.append(quantize_block(seg, norm, jnp.asarray(level_table[ty]), useg))
+    return jnp.concatenate(outs)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These implement the exact same math with no Pallas machinery; pytest asserts
+allclose between kernel and oracle across shape/level/dtype sweeps
+(python/tests/test_kernel.py), and aot.py dumps shared test vectors that the
+rust quantizer checks against bit-for-bit (rust/tests/quant_crosscheck.rs).
+"""
+
+import jax.numpy as jnp
+
+
+def lq_norm_ref(v, q):
+    if q == jnp.inf or q == "inf":
+        return jnp.max(jnp.abs(v))
+    return jnp.sum(jnp.abs(v) ** q) ** (1.0 / q)
+
+
+def quantize_ref(v, levels, uniforms, q=2):
+    """Reference unbiased stochastic quantization (single type)."""
+    norm = lq_norm_ref(v, q)
+    inv = jnp.where(norm > 0.0, 1.0 / jnp.maximum(norm, 1e-38), 0.0)
+    mag = jnp.clip(jnp.abs(v) * inv, 0.0, 1.0)
+    cmp = (levels[None, :] <= mag[:, None]).astype(jnp.int32)
+    tau = jnp.clip(jnp.sum(cmp, axis=1) - 1, 0, levels.shape[0] - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    xi = (mag - lo) / jnp.maximum(hi - lo, 1e-38)
+    qmag = jnp.where(uniforms < xi, hi, lo)
+    return norm * jnp.sign(v) * qmag
+
+
+def quantize_indices_ref(v, levels, uniforms, q=2):
+    """Same as quantize_ref but returns (level_index, sign, norm) — the wire
+    representation the coding layer consumes."""
+    norm = lq_norm_ref(v, q)
+    inv = jnp.where(norm > 0.0, 1.0 / jnp.maximum(norm, 1e-38), 0.0)
+    mag = jnp.clip(jnp.abs(v) * inv, 0.0, 1.0)
+    cmp = (levels[None, :] <= mag[:, None]).astype(jnp.int32)
+    tau = jnp.clip(jnp.sum(cmp, axis=1) - 1, 0, levels.shape[0] - 2)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    xi = (mag - lo) / jnp.maximum(hi - lo, 1e-38)
+    idx = jnp.where(uniforms < xi, tau + 1, tau)
+    return idx, jnp.sign(v), norm
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def variance_bound_eps_q(level_seqs, d, q):
+    """Theorem 5.1 epsilon_Q for a set of level sequences (one per type).
+
+    level_seqs: list of 1-D arrays, each [0, l_1, ..., l_alpha, 1].
+    Mirrors rust/src/quant/variance.rs (tested for agreement via shared
+    vectors).
+    """
+    import numpy as np
+
+    lbar_m = []
+    l1s = []
+    for seq in level_seqs:
+        seq = np.asarray(seq, dtype=np.float64)
+        ratios = seq[2:] / seq[1:-1]  # l_{j+1}/l_j for j >= 1
+        lbar_m.append(ratios.max() if ratios.size else 1.0)
+        l1s.append(seq[1])
+    lbar = max(lbar_m)
+    l1 = max(l1s)
+    qm = min(q, 2)
+    d_th = (2.0 / l1) ** qm
+    eps = (lbar - 1.0) ** 2 / (4.0 * lbar)
+    if d >= d_th:
+        eps += l1 * d ** (1.0 / qm) - 1.0
+    else:
+        eps += 0.25 * l1**2 * d ** (2.0 / qm)
+    return eps

@@ -1,0 +1,189 @@
+"""L2: WGAN minimax game as a VI operator (build-time JAX, lowered AOT).
+
+The paper trains a Wasserstein GAN (Arjovsky et al., 2017) on CIFAR with the
+VI formulation of Gidel et al. (2018): for the saddle problem
+
+    min_G max_D  E_x[D(x)] - E_z[D(G(z))]
+
+the (stochastic) dual vector / operator is
+
+    A(theta) = ( grad_G L_G(theta),  grad_D L_D(theta) )
+    L_G = -E_z[D(G(z))],   L_D = E_z[D(G(z))] - E_x[D(x)]
+
+Environment substitution (DESIGN.md): CIFAR is replaced by an 8-mode 2-D
+Gaussian mixture synthesized *inside the graph* from the seed input, and the
+DCGAN conv stacks by MLPs routed through the L1 Pallas matmul kernel. The VI
+structure, gradient-compression path and FID metric formula are unchanged.
+
+All functions operate on a single flat f32[d] parameter vector; the layer
+segmentation (offsets / lengths / types) is exported via `layer_spec()` and
+written to artifacts/wgan.meta by aot.py for the rust coordinator.
+"""
+
+import math
+import os
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import linear
+
+# ---------------------------------------------------------------------------
+# Configuration (env-overridable so `make artifacts` can scale the model).
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class WganConfig:
+    z_dim: int = int(os.environ.get("QODA_WGAN_ZDIM", 16))
+    hidden: int = int(os.environ.get("QODA_WGAN_HIDDEN", 64))
+    data_dim: int = 2
+    batch: int = int(os.environ.get("QODA_WGAN_BATCH", 256))
+    sample_n: int = int(os.environ.get("QODA_WGAN_SAMPLES", 512))
+    modes: int = 8
+    mode_radius: float = 2.0
+    mode_std: float = 0.05
+    layers: list = field(default_factory=list)
+
+    def __post_init__(self):
+        h, z, x = self.hidden, self.z_dim, self.data_dim
+        # (name, shape, type) — types drive the layer-wise quantization.
+        self.layers = [
+            ("g.fc1.w", (z, h), "ff"),
+            ("g.fc1.b", (h,), "bias"),
+            ("g.fc2.w", (h, h), "ff"),
+            ("g.fc2.b", (h,), "bias"),
+            ("g.out.w", (h, x), "ff"),
+            ("g.out.b", (x,), "bias"),
+            ("d.fc1.w", (x, h), "ff"),
+            ("d.fc1.b", (h,), "bias"),
+            ("d.fc2.w", (h, h), "ff"),
+            ("d.fc2.b", (h,), "bias"),
+            ("d.out.w", (h, 1), "ff"),
+            ("d.out.b", (1,), "bias"),
+        ]
+
+    @property
+    def dim(self):
+        return sum(int(math.prod(s)) for _, s, _ in self.layers)
+
+    def layer_spec(self):
+        """[(name, offset, length, type)] over the flat parameter vector."""
+        out, off = [], 0
+        for name, shape, ty in self.layers:
+            ln = int(math.prod(shape))
+            out.append((name, off, ln, ty))
+            off += ln
+        return out
+
+    # generator params come first; the critic segment starts here
+    @property
+    def gen_dim(self):
+        return sum(
+            int(math.prod(s)) for n, s, _ in self.layers if n.startswith("g.")
+        )
+
+
+def unflatten(cfg: WganConfig, flat):
+    params, off = {}, 0
+    for name, shape, _ in cfg.layers:
+        ln = int(math.prod(shape))
+        params[name] = flat[off : off + ln].reshape(shape)
+        off += ln
+    return params
+
+
+def flatten_tree(cfg: WganConfig, tree):
+    return jnp.concatenate([tree[name].reshape(-1) for name, _, _ in cfg.layers])
+
+
+def init_params(cfg: WganConfig, key):
+    """He-style init, returned as the flat vector the rust side owns."""
+    parts = []
+    for name, shape, ty in cfg.layers:
+        key, sub = jax.random.split(key)
+        if ty == "bias":
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+            parts.append(w.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# Networks (all matmuls go through the L1 Pallas kernel).
+# ---------------------------------------------------------------------------
+
+
+def generator(cfg, p, z):
+    h = jax.nn.relu(linear(z, p["g.fc1.w"], p["g.fc1.b"]))
+    h = jax.nn.relu(linear(h, p["g.fc2.w"], p["g.fc2.b"]))
+    return linear(h, p["g.out.w"], p["g.out.b"])
+
+
+def critic(cfg, p, x):
+    h = jax.nn.relu(linear(x, p["d.fc1.w"], p["d.fc1.b"]))
+    h = jax.nn.relu(linear(h, p["d.fc2.w"], p["d.fc2.b"]))
+    return linear(h, p["d.out.w"], p["d.out.b"])[:, 0]
+
+
+def sample_real(cfg, key, n):
+    """8-mode Gaussian mixture on a circle (the classic WGAN toy testbed)."""
+    km, kn = jax.random.split(key)
+    mode = jax.random.randint(km, (n,), 0, cfg.modes)
+    ang = 2.0 * jnp.pi * mode.astype(jnp.float32) / cfg.modes
+    centers = cfg.mode_radius * jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+    return centers + cfg.mode_std * jax.random.normal(kn, (n, cfg.data_dim))
+
+
+# ---------------------------------------------------------------------------
+# The VI operator (stochastic dual vector) + auxiliary entry points.
+# ---------------------------------------------------------------------------
+
+
+def wgan_operator(cfg: WganConfig, params_flat, seed):
+    """A(theta) + noise-from-minibatch: returns (dual f32[d], g_loss, w_dist).
+
+    The minibatch subsampling *is* the stochastic oracle of Section 2.4: at a
+    saddle point the residual scales with the operator norm (relative-noise
+    regime); far from it the minibatch variance acts as absolute noise.
+    """
+    key = jax.random.PRNGKey(seed)
+    kz, kx = jax.random.split(key)
+    z = jax.random.normal(kz, (cfg.batch, cfg.z_dim))
+    real = sample_real(cfg, kx, cfg.batch)
+
+    def g_loss_fn(pf):
+        p = unflatten(cfg, pf)
+        return -jnp.mean(critic(cfg, p, generator(cfg, p, z)))
+
+    def d_loss_fn(pf):
+        p = unflatten(cfg, pf)
+        fake = generator(cfg, p, z)
+        return jnp.mean(critic(cfg, p, fake)) - jnp.mean(critic(cfg, p, real))
+
+    g_loss, g_grad = jax.value_and_grad(g_loss_fn)(params_flat)
+    d_loss, d_grad = jax.value_and_grad(d_loss_fn)(params_flat)
+
+    gd = cfg.gen_dim
+    dual = jnp.concatenate([g_grad[:gd], d_grad[gd:]])
+    # w_dist = E D(real) - E D(fake) = -d_loss
+    return dual, g_loss, -d_loss
+
+
+def wgan_sampler(cfg: WganConfig, params_flat, seed):
+    """(fake[N,2], real[N,2]) for the FID evaluation on the rust side."""
+    key = jax.random.PRNGKey(seed)
+    kz, kx = jax.random.split(key)
+    p = unflatten(cfg, params_flat)
+    z = jax.random.normal(kz, (cfg.sample_n, cfg.z_dim))
+    fake = generator(cfg, p, z)
+    real = sample_real(cfg, kx, cfg.sample_n)
+    return fake, real
+
+
+def wgan_init(cfg: WganConfig, seed):
+    """Initial flat parameter vector (lowered so rust never inits params)."""
+    return (init_params(cfg, jax.random.PRNGKey(seed)),)

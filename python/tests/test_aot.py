@@ -1,0 +1,94 @@
+"""AOT pipeline tests: meta emission consistency, HLO text validity,
+layer-spec/shape agreement between python and what rust parses."""
+
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as wgan
+from compile import transformer as lm
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_roundtrip():
+    """A tiny jitted fn lowers to parseable HLO text containing ENTRY."""
+    fn = jax.jit(lambda x: (x * 2.0 + 1.0,))
+    txt = aot.to_hlo_text(fn.lower(jax.ShapeDtypeStruct((4,), jnp.float32)))
+    assert "ENTRY" in txt
+    assert "f32[4]" in txt
+
+
+def test_wgan_meta_matches_config(tmp_path):
+    cfg = wgan.WganConfig()
+    aot.write_meta(str(tmp_path / "w.meta"), "wgan", cfg, extra=[("gen_dim", cfg.gen_dim)])
+    lines = (tmp_path / "w.meta").read_text().strip().splitlines()
+    assert lines[0] == "kind wgan"
+    assert lines[1] == f"dim {cfg.dim}"
+    layer_lines = [l for l in lines if l.startswith("layer ")]
+    assert len(layer_lines) == len(cfg.layers)
+    # offsets contiguous and rows*cols == len
+    off = 0
+    for l in layer_lines:
+        toks = l.split()
+        assert int(toks[2]) == off
+        ln, rows, cols = int(toks[3]), int(toks[5]), int(toks[6])
+        assert rows * cols == ln
+        off += ln
+    assert off == cfg.dim
+
+
+def test_lm_meta_types_cover_ablation(tmp_path):
+    cfg = lm.LmConfig()
+    aot.write_meta(str(tmp_path / "l.meta"), "lm", cfg)
+    txt = (tmp_path / "l.meta").read_text()
+    for ty in ["embedding", "attention", "ff", "norm", "bias"]:
+        assert f" {ty} " in txt, ty
+
+
+def test_layer_spec_total_dims():
+    wcfg = wgan.WganConfig()
+    assert sum(ln for _, _, ln, _ in wcfg.layer_spec()) == wcfg.dim
+    lcfg = lm.LmConfig()
+    assert sum(ln for _, _, ln, _ in lcfg.layer_spec()) == lcfg.dim
+    # gen params strictly before critic params
+    gen_layers = [s for s in wcfg.layer_spec() if s[0].startswith("g.")]
+    crit_layers = [s for s in wcfg.layer_spec() if s[0].startswith("d.")]
+    assert max(o + l for _, o, l, _ in gen_layers) == wcfg.gen_dim
+    assert min(o for _, o, _, _ in crit_layers) == wcfg.gen_dim
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "wgan_op.hlo.txt")),
+    reason="artifacts not built",
+)
+def test_artifacts_exist_and_nonempty():
+    for name in [
+        "wgan_op.hlo.txt",
+        "wgan_sample.hlo.txt",
+        "wgan_init.hlo.txt",
+        "wgan.meta",
+        "lm_grad.hlo.txt",
+        "lm_eval.hlo.txt",
+        "lm_init.hlo.txt",
+        "lm.meta",
+        "quantize_k8.hlo.txt",
+    ]:
+        path = os.path.join(ART, name)
+        assert os.path.getsize(path) > 100, name
+
+
+def test_quantize_artifact_signature():
+    """The standalone kernel lowering takes (v, levels, uniforms)."""
+    path = os.path.join(ART, "quantize_k8.hlo.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    txt = open(path).read()
+    assert f"f32[{aot.QUANT_N}]" in txt
+    assert f"f32[{aot.QUANT_LEVELS}]" in txt

@@ -1,0 +1,147 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis sweeps).
+
+This is the CORE correctness signal for the quantization kernel: shapes,
+level-sequence geometry, norms q in {1, 2, inf}, zeros, padding boundaries.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize as qk
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _levels(nl, rng):
+    inner = np.sort(rng.uniform(0.01, 0.99, nl - 2)).astype(np.float32)
+    # enforce strict ordering
+    inner = np.unique(inner)
+    return np.concatenate([[0.0], inner, [1.0]]).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3000),
+    nl=st.integers(min_value=3, max_value=17),
+    q=st.sampled_from([1, 2, "inf"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_quantize_matches_ref(n, nl, q, seed):
+    rng = np.random.default_rng(seed)
+    v = (rng.standard_normal(n) * rng.uniform(0.1, 10)).astype(np.float32)
+    levels = _levels(nl, rng)
+    u = rng.uniform(0, 1, n).astype(np.float32)
+    qq = jnp.inf if q == "inf" else q
+    got = qk.quantize(jnp.asarray(v), jnp.asarray(levels), jnp.asarray(u), q=qq)
+    want = ref.quantize_ref(jnp.asarray(v), jnp.asarray(levels), jnp.asarray(u), q=qq)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_quantize_zero_vector():
+    v = jnp.zeros(64, jnp.float32)
+    levels = jnp.asarray([0.0, 0.5, 1.0], jnp.float32)
+    u = jnp.full((64,), 0.3, jnp.float32)
+    out = qk.quantize(v, levels, u, q=2)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(64, np.float32))
+
+
+def test_quantize_output_in_level_set():
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal(500).astype(np.float32)
+    levels = _levels(8, rng)
+    u = rng.uniform(0, 1, 500).astype(np.float32)
+    out = np.asarray(qk.quantize(jnp.asarray(v), jnp.asarray(levels), jnp.asarray(u)))
+    norm = float(np.linalg.norm(v))
+    mags = np.abs(out) / norm
+    # every output magnitude is (numerically) one of the levels
+    d = np.min(np.abs(mags[:, None] - levels[None, :]), axis=1)
+    assert np.all(d < 1e-5)
+
+
+def test_quantize_unbiased_statistically():
+    """E[Q(v)] = v — the paper's defining property of the scheme."""
+    rng = np.random.default_rng(3)
+    n, reps = 256, 400
+    v = rng.standard_normal(n).astype(np.float32)
+    levels = _levels(6, rng)
+    acc = np.zeros(n, np.float64)
+    for r in range(reps):
+        u = rng.uniform(0, 1, n).astype(np.float32)
+        acc += np.asarray(
+            qk.quantize(jnp.asarray(v), jnp.asarray(levels), jnp.asarray(u))
+        )
+    mean = acc / reps
+    # componentwise CLT bound: 5 sigma of the quantization variance
+    norm = np.linalg.norm(v)
+    err = np.abs(mean - v)
+    assert np.max(err) < 5 * norm * 0.5 / np.sqrt(reps), np.max(err)
+
+
+def test_quantize_variance_bound_thm51():
+    """Empirical variance <= eps_Q ||v||^2 (Theorem 5.1), M = 1."""
+    rng = np.random.default_rng(11)
+    n, reps = 128, 300
+    v = rng.standard_normal(n).astype(np.float32)
+    levels = np.asarray([0.0, 0.25, 0.5, 0.75, 1.0], np.float32)
+    norm2 = float(np.sum(v.astype(np.float64) ** 2))
+    acc = 0.0
+    for r in range(reps):
+        u = rng.uniform(0, 1, n).astype(np.float32)
+        qv = np.asarray(
+            qk.quantize(jnp.asarray(v), jnp.asarray(levels), jnp.asarray(u))
+        )
+        acc += float(np.sum((qv - v) ** 2))
+    emp = acc / reps
+    eps = ref.variance_bound_eps_q([levels], n, 2)
+    assert emp <= eps * norm2 * 1.05, (emp, eps * norm2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 24, 64, 128]),
+    k=st.sampled_from([8, 16, 64, 128, 192]),
+    n=st.sampled_from([8, 16, 64, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(mk.matmul(jnp.asarray(a), jnp.asarray(b)))
+    want = np.asarray(ref.matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_block_picker():
+    assert mk._pick_block(128) == 128
+    assert mk._pick_block(256) == 128
+    assert mk._pick_block(100) == 100
+    assert mk._pick_block(192) == 96
+    assert mk._pick_block(1) == 1
+
+
+def test_layerwise_quantize_segments_independent():
+    """Each layer is normalized by its own norm (the whole point)."""
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal(100).astype(np.float32)
+    b = (rng.standard_normal(50) * 100).astype(np.float32)  # big-norm layer
+    v = np.concatenate([a, b])
+    u = rng.uniform(0, 1, 150).astype(np.float32)
+    lv = {"ff": np.asarray([0.0, 0.5, 1.0], np.float32)}
+    out = np.asarray(
+        qk.quantize_layerwise(
+            jnp.asarray(v), [0, 100], [100, 50], lv, ["ff", "ff"], jnp.asarray(u)
+        )
+    )
+    wa = np.asarray(
+        ref.quantize_ref(jnp.asarray(a), jnp.asarray(lv["ff"]), jnp.asarray(u[:100]))
+    )
+    wb = np.asarray(
+        ref.quantize_ref(jnp.asarray(b), jnp.asarray(lv["ff"]), jnp.asarray(u[100:]))
+    )
+    np.testing.assert_allclose(out, np.concatenate([wa, wb]), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,163 @@
+"""L2 model correctness: shapes, flatten/unflatten round trips, operator
+structure (WGAN VI operator), transformer LM gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as wgan
+from compile import transformer as lm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def wcfg():
+    return wgan.WganConfig()
+
+
+@pytest.fixture(scope="module")
+def lcfg():
+    return lm.LmConfig()
+
+
+# ------------------------------- WGAN --------------------------------------
+
+
+def test_wgan_layer_spec_contiguous(wcfg):
+    off = 0
+    for name, o, ln, ty in wcfg.layer_spec():
+        assert o == off, name
+        assert ln > 0
+        assert ty in ("ff", "bias")
+        off += ln
+    assert off == wcfg.dim
+
+
+def test_wgan_gen_dim_prefix(wcfg):
+    spec = wcfg.layer_spec()
+    gen_layers = [s for s in spec if s[0].startswith("g.")]
+    assert gen_layers[-1][1] + gen_layers[-1][2] == wcfg.gen_dim
+
+
+def test_wgan_flatten_roundtrip(wcfg):
+    flat = wgan.init_params(wcfg, jax.random.PRNGKey(0))
+    tree = wgan.unflatten(wcfg, flat)
+    back = wgan.flatten_tree(wcfg, tree)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(back))
+
+
+def test_wgan_operator_shapes(wcfg):
+    flat = wgan.init_params(wcfg, jax.random.PRNGKey(0))
+    dual, gl, wd = wgan.wgan_operator(wcfg, flat, jnp.int32(1))
+    assert dual.shape == (wcfg.dim,)
+    assert gl.shape == () and wd.shape == ()
+    assert np.all(np.isfinite(np.asarray(dual)))
+
+
+def test_wgan_operator_is_gradient_field(wcfg):
+    """The generator segment of A equals d(g_loss)/d(theta_G)."""
+    flat = wgan.init_params(wcfg, jax.random.PRNGKey(2))
+    dual, gl, wd = wgan.wgan_operator(wcfg, flat, jnp.int32(7))
+    dual2, gl2, _ = wgan.wgan_operator(wcfg, flat, jnp.int32(7))
+    np.testing.assert_array_equal(np.asarray(dual), np.asarray(dual2))
+    assert float(gl) == float(gl2)
+
+
+def test_wgan_operator_seed_changes_sample(wcfg):
+    flat = wgan.init_params(wcfg, jax.random.PRNGKey(2))
+    d1, _, _ = wgan.wgan_operator(wcfg, flat, jnp.int32(1))
+    d2, _, _ = wgan.wgan_operator(wcfg, flat, jnp.int32(2))
+    assert not np.allclose(np.asarray(d1), np.asarray(d2))
+
+
+def test_wgan_sampler_real_modes(wcfg):
+    flat = wgan.init_params(wcfg, jax.random.PRNGKey(0))
+    fake, real = wgan.wgan_sampler(wcfg, flat, jnp.int32(3))
+    assert fake.shape == (wcfg.sample_n, 2)
+    assert real.shape == (wcfg.sample_n, 2)
+    r = np.linalg.norm(np.asarray(real), axis=1)
+    # all real points near the mode circle of radius 2
+    assert np.all(np.abs(r - wcfg.mode_radius) < 0.5)
+
+
+def test_wgan_critic_grad_descends(wcfg):
+    """One gradient step on the critic decreases d_loss (sanity of signs)."""
+    flat = wgan.init_params(wcfg, jax.random.PRNGKey(4))
+    seed = jnp.int32(5)
+    dual, _, wd0 = wgan.wgan_operator(wcfg, flat, seed)
+    step = flat - 0.05 * dual
+    _, _, wd1 = wgan.wgan_operator(wcfg, step, seed)
+    # moving along -A increases the W-distance estimate for the critic
+    assert float(wd1) >= float(wd0) - 1e-3
+
+
+# ---------------------------- Transformer ----------------------------------
+
+
+def test_lm_layer_spec_types(lcfg):
+    types = {ty for _, _, _, ty in lcfg.layer_spec()}
+    assert types == {"embedding", "attention", "ff", "norm", "bias"}
+    off = 0
+    for name, o, ln, ty in lcfg.layer_spec():
+        assert o == off, name
+        off += ln
+    assert off == lcfg.dim
+
+
+def test_lm_forward_shapes(lcfg):
+    flat = lm.init_params(lcfg, jax.random.PRNGKey(0))
+    toks = jnp.zeros((lcfg.batch, lcfg.seq), jnp.int32)
+    logits = lm.forward(lcfg, flat, toks)
+    assert logits.shape == (lcfg.batch, lcfg.seq, lcfg.vocab)
+
+
+def test_lm_grad_finite_and_full(lcfg):
+    flat = lm.init_params(lcfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(
+        jax.random.PRNGKey(1), (lcfg.batch, lcfg.seq + 1), 0, lcfg.vocab
+    ).astype(jnp.int32)
+    grads, loss = lm.lm_grad(lcfg, flat, toks)
+    assert grads.shape == (lcfg.dim,)
+    assert np.isfinite(float(loss))
+    g = np.asarray(grads)
+    assert np.all(np.isfinite(g))
+    # every weight layer receives gradient signal
+    for name, off, ln, ty in lcfg.layer_spec():
+        if ty in ("bias",):
+            continue
+        assert np.linalg.norm(g[off : off + ln]) > 0, name
+
+
+def test_lm_loss_at_init_near_uniform(lcfg):
+    flat = lm.init_params(lcfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(
+        jax.random.PRNGKey(2), (lcfg.batch, lcfg.seq + 1), 0, lcfg.vocab
+    ).astype(jnp.int32)
+    (loss,) = lm.lm_eval(lcfg, flat, toks)
+    assert abs(float(loss) - np.log(lcfg.vocab)) < 0.7
+
+
+def test_lm_one_sgd_step_reduces_loss(lcfg):
+    flat = lm.init_params(lcfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(
+        jax.random.PRNGKey(3), (lcfg.batch, lcfg.seq + 1), 0, lcfg.vocab
+    ).astype(jnp.int32)
+    grads, loss0 = lm.lm_grad(lcfg, flat, toks)
+    (loss1,) = lm.lm_eval(lcfg, flat - 0.5 * grads, toks)
+    assert float(loss1) < float(loss0)
+
+
+def test_lm_causal_mask(lcfg):
+    """Changing a future token must not change earlier logits."""
+    flat = lm.init_params(lcfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(
+        jax.random.PRNGKey(4), (1, lcfg.seq), 0, lcfg.vocab
+    ).astype(jnp.int32)
+    la = lm.forward(lcfg, flat, toks)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % lcfg.vocab)
+    lb = lm.forward(lcfg, flat, toks2)
+    np.testing.assert_allclose(
+        np.asarray(la[0, :-1]), np.asarray(lb[0, :-1]), rtol=1e-5, atol=1e-5
+    )

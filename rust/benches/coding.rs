@@ -1,0 +1,85 @@
+//! Coding-layer benches: Elias codes, Huffman build/encode/decode, and both
+//! wire protocols end to end.
+
+use qoda::bench_harness::bench;
+use qoda::coding::bitio::BitWriter;
+use qoda::coding::elias::{gamma_decode, gamma_encode};
+use qoda::coding::huffman::{normalize, Huffman};
+use qoda::coding::protocol::{encode_vector, symbol_counts, Codebooks, ProtocolKind};
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::quantizer::quantize;
+use qoda::quant::QuantConfig;
+use qoda::stats::rng::Rng;
+
+fn main() {
+    let n = 1usize << 16;
+    let mut rng = Rng::new(3);
+    let syms: Vec<u64> = (0..n).map(|_| 1 + rng.below(64)).collect();
+    bench("elias/gamma/encode 64k", Some(n as u64), || {
+        let mut w = BitWriter::new();
+        for &s in &syms {
+            gamma_encode(&mut w, s);
+        }
+        w.finish()
+    });
+    let mut w = BitWriter::new();
+    for &s in &syms {
+        gamma_encode(&mut w, s);
+    }
+    let buf = w.finish();
+    bench("elias/gamma/decode 64k", Some(n as u64), || {
+        let mut r = buf.reader();
+        let mut acc = 0u64;
+        for _ in 0..n {
+            acc = acc.wrapping_add(gamma_decode(&mut r));
+        }
+        acc
+    });
+
+    let weights: Vec<f64> = (0..32).map(|i| 1.0 / (1 + i) as f64).collect();
+    bench("huffman/build/32sym", None, || Huffman::from_weights(&weights));
+    let h = Huffman::from_weights(&weights);
+    let hsyms: Vec<usize> = (0..n).map(|_| rng.below(32) as usize).collect();
+    bench("huffman/encode 64k", Some(n as u64), || {
+        let mut w = BitWriter::new();
+        for &s in &hsyms {
+            h.encode(&mut w, s);
+        }
+        w.finish()
+    });
+    let mut hw = BitWriter::new();
+    for &s in &hsyms {
+        h.encode(&mut hw, s);
+    }
+    let hbuf = hw.finish();
+    bench("huffman/decode 64k", Some(n as u64), || {
+        let mut r = hbuf.reader();
+        let mut acc = 0usize;
+        for _ in 0..n {
+            acc = acc.wrapping_add(h.decode(&mut r));
+        }
+        acc
+    });
+
+    // protocols end-to-end on a quantized gradient
+    let v: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+    let map = LayerMap::from_spec(&[("a", n / 2, "ff"), ("b", n / 2, "emb")]).bucketed(128);
+    let cfg = QuantConfig {
+        sequences: vec![
+            qoda::quant::LevelSequence::bits(4),
+            qoda::quant::LevelSequence::bits(6),
+        ],
+        q: 2.0,
+    };
+    let mut qrng = Rng::new(4);
+    let qv = quantize(&v, &map, &cfg, &mut qrng);
+    let sizes: Vec<usize> = cfg.sequences.iter().map(|s| s.num_symbols()).collect();
+    let probs: Vec<Vec<f64>> =
+        symbol_counts(&qv, 2, &sizes).iter().map(|c| normalize(c)).collect();
+    for (kind, name) in [(ProtocolKind::Main, "main"), (ProtocolKind::Alternating, "alt")] {
+        let books = Codebooks::build(kind, &probs, &map.type_proportions());
+        bench(&format!("protocol/{name}/encode 64k"), Some(n as u64), || {
+            encode_vector(&qv, &books)
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Solver-step benches: QODA vs Q-GenX per-iteration cost (the optimism
+//! saving), identity vs quantized compression.
+
+use qoda::bench_harness::bench;
+use qoda::oda::compress::{Compressor, IdentityCompressor, QuantCompressor};
+use qoda::oda::lr::AdaptiveLr;
+use qoda::oda::qgenx::QGenX;
+use qoda::oda::qoda::Qoda;
+use qoda::oda::source::OracleSource;
+use qoda::quant::layer_map::LayerMap;
+use qoda::stats::rng::Rng;
+use qoda::vi::noise::NoiseModel;
+use qoda::vi::operator::QuadraticOperator;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let op = QuadraticOperator::random(64, 0.5, &mut rng);
+    let d = 64;
+    let k = 4;
+    let map = LayerMap::single(d);
+    let steps = 50;
+
+    let mk_q = |seed: u64| -> Vec<Box<dyn Compressor>> {
+        (0..k)
+            .map(|i| Box::new(QuantCompressor::global_bits(&map, 5, 128, seed + i as u64)) as _)
+            .collect()
+    };
+    let mk_id = || -> Vec<Box<dyn Compressor>> {
+        (0..k).map(|_| Box::new(IdentityCompressor) as _).collect()
+    };
+
+    bench(&format!("qoda/identity/{steps}steps/K{k}/d{d}"), Some(steps as u64), || {
+        let mut src = OracleSource::new(&op, k, NoiseModel::Absolute { sigma: 0.2 }, 2);
+        Qoda::new(&mut src, mk_id(), Box::new(AdaptiveLr::default()))
+            .run(&vec![0.0; d], steps, &[])
+    });
+    bench(&format!("qoda/quant5/{steps}steps/K{k}/d{d}"), Some(steps as u64), || {
+        let mut src = OracleSource::new(&op, k, NoiseModel::Absolute { sigma: 0.2 }, 2);
+        Qoda::new(&mut src, mk_q(7), Box::new(AdaptiveLr::default()))
+            .run(&vec![0.0; d], steps, &[])
+    });
+    bench(&format!("qgenx/quant5/{steps}steps/K{k}/d{d}"), Some(steps as u64), || {
+        let mut src = OracleSource::new(&op, k, NoiseModel::Absolute { sigma: 0.2 }, 2);
+        QGenX::new(&mut src, mk_q(7), Box::new(AdaptiveLr::default()))
+            .run(&vec![0.0; d], steps, &[])
+    });
+}

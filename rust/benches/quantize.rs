@@ -1,0 +1,34 @@
+//! Hot-path bench: the layer-wise quantizer (quantize / dequantize /
+//! quantize+code round trip) at gradient-realistic sizes.
+
+use qoda::bench_harness::bench;
+use qoda::coding::protocol::{decode_vector, encode_vector, Codebooks, ProtocolKind};
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::quantizer::{dequantize, quantize};
+use qoda::quant::QuantConfig;
+use qoda::stats::rng::Rng;
+
+fn main() {
+    for &n in &[1usize << 14, 1 << 18, 1 << 20] {
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+        let map = LayerMap::single(n).bucketed(128);
+        let cfg = QuantConfig::uniform_bits(1, 5, 2.0);
+        let mut qrng = Rng::new(2);
+        bench(&format!("quantize/5bit/bucket128/n={n}"), Some(n as u64), || {
+            quantize(&v, &map, &cfg, &mut qrng)
+        });
+        let qv = quantize(&v, &map, &cfg, &mut qrng);
+        bench(&format!("dequantize/5bit/n={n}"), Some(n as u64), || {
+            dequantize(&qv, &cfg)
+        });
+        let books = Codebooks::uniform(ProtocolKind::Main, &cfg, &map.type_proportions());
+        bench(&format!("encode/main/n={n}"), Some(n as u64), || {
+            encode_vector(&qv, &books)
+        });
+        let buf = encode_vector(&qv, &books);
+        bench(&format!("decode/main/n={n}"), Some(n as u64), || {
+            decode_vector(&buf, &map, &books)
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Table 1 regenerator bench: prints the paper table and times one full
+//! simulated QODA5 communication round at the paper's payload size.
+
+use qoda::bench_harness::bench;
+use qoda::bench_harness::experiments::{measure_qoda5_bytes_per_coord, table1};
+
+fn main() {
+    let t = table1();
+    t.print();
+    let _ = t.save_csv("table1.csv");
+    bench("table1/qoda5 quantize+code 1M coords", Some(1 << 20), || {
+        measure_qoda5_bytes_per_coord(1 << 20, 9)
+    });
+}

@@ -1,0 +1,32 @@
+//! Table 2 regenerator bench (weak scaling) + the end-to-end cluster
+//! exchange cost at each node count.
+
+use qoda::bench_harness::bench;
+use qoda::bench_harness::experiments::table2;
+use qoda::coordinator::sim::ClusterSim;
+use qoda::net::NetworkModel;
+use qoda::oda::compress::{Compressor, QuantCompressor};
+use qoda::quant::layer_map::LayerMap;
+use qoda::stats::rng::Rng;
+
+fn main() {
+    let t = table2();
+    t.print();
+    let _ = t.save_csv("table2.csv");
+
+    // real codec work per exchange at increasing K (payload per node fixed)
+    let d = 1usize << 16;
+    for &k in &[4usize, 8] {
+        let map = LayerMap::single(d);
+        let comps: Vec<Box<dyn Compressor>> = (0..k)
+            .map(|i| Box::new(QuantCompressor::global_bits(&map, 5, 128, i as u64)) as _)
+            .collect();
+        let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), false);
+        let mut rng = Rng::new(5);
+        let duals: Vec<Vec<f64>> =
+            (0..k).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect();
+        bench(&format!("cluster_exchange/K={k}/d=64k"), Some((k * d) as u64), || {
+            sim.exchange(&duals)
+        });
+    }
+}

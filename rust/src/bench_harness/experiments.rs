@@ -1,0 +1,660 @@
+//! Experiment harnesses: one function per paper table/figure (T1, T2, F4,
+//! T3, F5) plus the theory-verification experiments (V1–V6 of DESIGN.md).
+//! The CLI (`qoda <exp>`), the examples and the benches all call these.
+
+use crate::coding::huffman::normalize;
+use crate::coding::protocol::{
+    encoded_bits, symbol_counts, Codebooks, ProtocolKind,
+};
+use crate::net::{Collective, NetworkModel};
+use crate::oda::compress::{Compressor, IdentityCompressor, QuantCompressor};
+use crate::oda::lr::{AdaptiveLr, AltLr};
+use crate::oda::qgenx::QGenX;
+use crate::oda::qoda::Qoda;
+use crate::oda::source::OracleSource;
+use crate::quant::layer_map::LayerMap;
+use crate::quant::levels::LevelSequence;
+use crate::quant::quantizer::{quantize, QuantConfig};
+use crate::quant::variance;
+use crate::stats::rng::Rng;
+use crate::util::table::Table;
+use crate::vi::gap::GapEvaluator;
+use crate::vi::noise::NoiseModel;
+use crate::vi::operator::{BilinearGame, Operator, QuadraticOperator};
+
+// ---------------------------------------------------------------------------
+// Step-time model for Tables 1–2 (calibration documented in DESIGN.md §T1/T2
+// and EXPERIMENTS.md): the paper's WGAN communicates ~4.2 MB of fp32
+// gradients per step; per-step compute shrinks under weak scaling
+// (constant global batch) as a + b/K; the fp32 baseline additionally pays a
+// per-peer synchronization/incast cost that quantized sub-MB payloads avoid.
+// ---------------------------------------------------------------------------
+
+/// fp32 payload bytes per node (≈1.05 M parameters).
+pub const PAYLOAD_BYTES: f64 = 4.2e6;
+/// weak-scaling compute model (ms): a + b / K
+pub const COMPUTE_A_MS: f64 = 88.0;
+pub const COMPUTE_B_MS: f64 = 400.0;
+/// baseline per-peer full-precision sync overhead (ms per peer)
+pub const BASELINE_SYNC_MS_PER_PEER: f64 = 13.0;
+/// measured-once codec cost of the paper's CUDA quantizer (ms) — our CPU
+/// codec is benchmarked separately in rust/benches; the table uses the
+/// device-speed figure so the regime matches the testbed
+pub const QODA_CODEC_MS: f64 = 4.0;
+
+/// Real encoded bytes/coordinate for a gradient-shaped vector under the
+/// QODA5 configuration (5-bit, bucket 128, entropy-coded): measured by
+/// running the actual quantizer + coder once on `n` synthetic coordinates.
+pub fn measure_qoda5_bytes_per_coord(n: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    // heavy-tailed gradient: a few coordinates dominate each bucket's norm
+    let v: Vec<f32> = (0..n)
+        .map(|i| {
+            let base = rng.gaussian() as f32;
+            if i % 61 == 0 {
+                base * 20.0
+            } else {
+                base * 0.3
+            }
+        })
+        .collect();
+    let map = LayerMap::single(n).bucketed(128);
+    let cfg = QuantConfig::uniform_bits(1, 5, 2.0);
+    let qv = quantize(&v, &map, &cfg, &mut rng);
+    let sizes = vec![cfg.sequences[0].num_symbols()];
+    let probs: Vec<Vec<f64>> =
+        symbol_counts(&qv, 1, &sizes).iter().map(|c| normalize(c)).collect();
+    let books = Codebooks::build(ProtocolKind::Main, &probs, &map.type_proportions());
+    encoded_bits(&qv, &books) as f64 / 8.0 / n as f64
+}
+
+/// Step time (ms) for one configuration of the Tables 1–2 testbed.
+pub fn step_time_ms(k: usize, bandwidth_gbps: f64, qoda5: bool, bytes_per_coord: f64) -> f64 {
+    let net = NetworkModel::genesis_cloud(bandwidth_gbps);
+    let compute = COMPUTE_A_MS + COMPUTE_B_MS / k as f64;
+    if qoda5 {
+        let coords = PAYLOAD_BYTES / 4.0;
+        let bytes = coords * bytes_per_coord;
+        let wire =
+            net.collective_seconds(Collective::RingAllGather, &vec![bytes; k]) * 1e3;
+        compute + QODA_CODEC_MS + wire
+    } else {
+        let wire =
+            net.collective_seconds(Collective::RingAllReduce, &vec![PAYLOAD_BYTES; k])
+                * 1e3;
+        let sync = BASELINE_SYNC_MS_PER_PEER * (k as f64 - 1.0);
+        compute + sync + wire
+    }
+}
+
+/// Table 1: time per optimization step vs inter-node bandwidth (K = 4).
+pub fn table1() -> Table {
+    let bpc = measure_qoda5_bytes_per_coord(1 << 20, 42);
+    let bws = [1.0, 2.5, 5.0];
+    let mut t = Table::new(
+        "Table 1 — time per optimization step (ms), K = 4",
+        &["Mode", "1 Gbps", "2.5 Gbps", "5 Gbps"],
+    );
+    let base: Vec<f64> = bws.iter().map(|&bw| step_time_ms(4, bw, false, bpc)).collect();
+    let qoda: Vec<f64> = bws.iter().map(|&bw| step_time_ms(4, bw, true, bpc)).collect();
+    t.row(&[
+        "Baseline".into(),
+        format!("{:.0}", base[0]),
+        format!("{:.0}", base[1]),
+        format!("{:.0}", base[2]),
+    ]);
+    t.row(&[
+        "QODA5".into(),
+        format!("{:.0}", qoda[0]),
+        format!("{:.0}", qoda[1]),
+        format!("{:.0}", qoda[2]),
+    ]);
+    t.row(&[
+        "Speedup".into(),
+        format!("{:.2}x", base[0] / qoda[0]),
+        format!("{:.2}x", base[1] / qoda[1]),
+        format!("{:.2}x", base[2] / qoda[2]),
+    ]);
+    t
+}
+
+/// Table 2: weak scaling — time per step vs node count (5 Gbps).
+pub fn table2() -> Table {
+    let bpc = measure_qoda5_bytes_per_coord(1 << 20, 42);
+    let ks = [4usize, 8, 12, 16];
+    let mut t = Table::new(
+        "Table 2 — time per optimization step (ms) under weak scaling, 5 Gbps",
+        &["Mode", "4 GPUs", "8 GPUs", "12 GPUs", "16 GPUs"],
+    );
+    let base: Vec<f64> = ks.iter().map(|&k| step_time_ms(k, 5.0, false, bpc)).collect();
+    let qoda: Vec<f64> = ks.iter().map(|&k| step_time_ms(k, 5.0, true, bpc)).collect();
+    t.row(&[
+        "baseline".into(),
+        format!("{:.0}", base[0]),
+        format!("{:.0}", base[1]),
+        format!("{:.0}", base[2]),
+        format!("{:.0}", base[3]),
+    ]);
+    t.row(&[
+        "QODA5".into(),
+        format!("{:.0}", qoda[0]),
+        format!("{:.0}", qoda[1]),
+        format!("{:.0}", qoda[2]),
+        format!("{:.0}", qoda[3]),
+    ]);
+    t.row(&[
+        "Speedup".into(),
+        format!("{:.2}x", base[0] / qoda[0]),
+        format!("{:.2}x", base[1] / qoda[1]),
+        format!("{:.2}x", base[2] / qoda[2]),
+        format!("{:.2}x", base[3] / qoda[3]),
+    ]);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// V1 — Theorem 5.1 variance bound
+// ---------------------------------------------------------------------------
+
+pub fn verify_variance() -> Table {
+    let mut t = Table::new(
+        "V1 — Theorem 5.1: empirical variance ratio vs eps_Q bound",
+        &["d", "q", "levels", "empirical", "eps_Q", "holds"],
+    );
+    let mut rng = Rng::new(7);
+    for &d in &[16usize, 256, 4096, 65536] {
+        for &(q, qs) in &[(2.0, "L2"), (1.0, "L1"), (f64::INFINITY, "Linf")] {
+            for &(alpha, name) in &[(3usize, "uni(3)"), (14, "uni(14)")] {
+                let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+                let seq = LevelSequence::uniform(alpha);
+                let map = LayerMap::single(d);
+                let cfg = QuantConfig::same(1, seq.clone(), q);
+                let reps = if d > 10_000 { 5 } else { 40 };
+                let emp = variance::empirical_variance_ratio(&v, &map, &cfg, reps, 1);
+                let bound = variance::eps_q(&[seq], d, q);
+                t.row(&[
+                    format!("{d}"),
+                    qs.to_string(),
+                    name.to_string(),
+                    format!("{emp:.4}"),
+                    format!("{bound:.4}"),
+                    format!("{}", emp <= bound * 1.05),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// V2 — Theorem 5.3/D.5 code length vs measured bits
+// ---------------------------------------------------------------------------
+
+pub fn verify_codelen() -> Table {
+    let mut t = Table::new(
+        "V2 — Theorem 5.3 / D.5: measured wire bits vs entropy bounds (per vector)",
+        &["protocol", "d", "measured", "bound", "fixed-width", "within"],
+    );
+    let mut rng = Rng::new(11);
+    for &d in &[4096usize, 65536] {
+        let v: Vec<f32> = (0..d)
+            .map(|i| (rng.gaussian() as f32) * if i % 31 == 0 { 10.0 } else { 0.2 })
+            .collect();
+        let map = LayerMap::from_spec(&[("a", d / 2, "ff"), ("b", d / 2, "emb")]);
+        let cfg = QuantConfig {
+            sequences: vec![LevelSequence::bits(4), LevelSequence::bits(6)],
+            q: 2.0,
+        };
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        let sizes: Vec<usize> = cfg.sequences.iter().map(|s| s.num_symbols()).collect();
+        let probs: Vec<Vec<f64>> = symbol_counts(&qv, 2, &sizes)
+            .iter()
+            .map(|c| normalize(c))
+            .collect();
+        let mu = map.type_proportions();
+        for (kind, name) in
+            [(ProtocolKind::Main, "main"), (ProtocolKind::Alternating, "alternating")]
+        {
+            let books = Codebooks::build(kind, &probs, &mu);
+            let measured = encoded_bits(&qv, &books);
+            let bound = match kind {
+                ProtocolKind::Main => crate::coding::length::main_protocol_bound(
+                    &probs, &mu, d, 32,
+                ) + 32.0 * (map.layers.len() as f64 - 1.0),
+                ProtocolKind::Alternating => {
+                    crate::coding::length::alternating_protocol_bound(&probs, &mu, d, 32)
+                        + 32.0 * (map.layers.len() as f64 - 1.0)
+                }
+            };
+            let fixed = crate::quant::quantizer::fixed_width_bits(&qv, &cfg, 32);
+            t.row(&[
+                name.to_string(),
+                format!("{d}"),
+                format!("{measured}"),
+                format!("{bound:.0}"),
+                format!("{fixed}"),
+                format!("{}", (measured as f64) <= bound * 1.02),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// V3/V4 — convergence rates (Theorems 5.5, 5.7, 6.2)
+// ---------------------------------------------------------------------------
+
+pub struct RatePoint {
+    pub t: usize,
+    pub gap: f64,
+}
+
+/// GAP of QODA's ergodic average at a sweep of horizons, one (operator, K,
+/// noise) configuration.
+pub fn rate_sweep(
+    kind: &str,
+    k: usize,
+    noise: NoiseModel,
+    bits: Option<u32>,
+    horizons: &[usize],
+    seed: u64,
+    use_alt: bool,
+) -> Vec<RatePoint> {
+    let mut rng = Rng::new(seed);
+    let (op, x0): (Box<dyn Operator>, Vec<f64>) = match kind {
+        "bilinear" => {
+            let op = BilinearGame::random(8, &mut rng);
+            (Box::new(op), vec![1.0; 16])
+        }
+        _ => {
+            let op = QuadraticOperator::random(12, 0.8, &mut rng);
+            (Box::new(op), vec![0.0; 12])
+        }
+    };
+    let sol = op.solution().unwrap();
+    let radius = 1.0 + crate::stats::vecops::l2_norm64(
+        &crate::stats::vecops::sub(&x0, &sol),
+    );
+    let d = op.dim();
+    let steps = *horizons.last().unwrap();
+    let mut src = OracleSource::new(op.as_ref(), k, noise, seed ^ 0xABCD);
+    let comps: Vec<Box<dyn Compressor>> = (0..k)
+        .map(|i| -> Box<dyn Compressor> {
+            match bits {
+                None => Box::new(IdentityCompressor),
+                Some(b) => Box::new(QuantCompressor::global_bits(
+                    &LayerMap::single(d),
+                    b,
+                    128,
+                    seed + i as u64,
+                )),
+            }
+        })
+        .collect();
+    let lr: Box<dyn crate::oda::lr::LrSchedule> = if use_alt {
+        Box::new(AltLr::new(0.25))
+    } else {
+        Box::new(AdaptiveLr::default())
+    };
+    let mut solver = Qoda::new(&mut src, comps, lr);
+    let run = solver.run(&x0, steps, horizons);
+    let gap_eval = GapEvaluator::new(op.as_ref(), sol.clone(), radius);
+    run.checkpoints
+        .iter()
+        .map(|c| RatePoint { t: c.t, gap: gap_eval.eval(&c.xbar) })
+        .collect()
+}
+
+/// V3/V4 table: GAP vs T for both noise models, with fitted decay exponent.
+pub fn rates_table(noise_name: &str) -> Table {
+    let horizons = [64usize, 256, 1024, 4096];
+    let (noise, kind, use_alt) = match noise_name {
+        "relative" => (NoiseModel::Relative { sigma_r: 0.5 }, "quadratic", false),
+        "relative-alt" => (NoiseModel::Relative { sigma_r: 0.5 }, "bilinear", true),
+        _ => (NoiseModel::Absolute { sigma: 0.5 }, "quadratic", false),
+    };
+    let mut t = Table::new(
+        &format!("V3/V4 — QODA GAP vs T ({noise_name} noise, {kind})"),
+        &["K", "T=64", "T=256", "T=1024", "T=4096", "slope"],
+    );
+    for &k in &[1usize, 4] {
+        // average over seeds for stability
+        let mut gaps = vec![0.0; horizons.len()];
+        let seeds = 3;
+        for s in 0..seeds {
+            let pts = rate_sweep(kind, k, noise, Some(6), &horizons, 100 + s, use_alt);
+            for (g, p) in gaps.iter_mut().zip(&pts) {
+                *g += p.gap / seeds as f64;
+            }
+        }
+        // log-log slope between first and last horizon
+        let slope = (gaps.last().unwrap().max(1e-12) / gaps[0].max(1e-12)).ln()
+            / ((*horizons.last().unwrap() as f64) / horizons[0] as f64).ln();
+        t.row(&[
+            format!("{k}"),
+            format!("{:.4}", gaps[0]),
+            format!("{:.4}", gaps[1]),
+            format!("{:.4}", gaps[2]),
+            format!("{:.4}", gaps[3]),
+            format!("{slope:.2}"),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// V5 — Remark 3.2: layer-wise (MQV) <= global (MQV)
+// ---------------------------------------------------------------------------
+
+/// Samplers for heterogeneous layer-magnitude distributions.
+fn layer_sample(rng: &mut Rng, shape: &str, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| match shape {
+            // dense gaussian magnitudes
+            "gauss" => rng.gaussian() as f32,
+            // sparse/spiky: a few huge coordinates (attention-like)
+            "sparse" => {
+                if rng.uniform() < 0.08 {
+                    (rng.gaussian() * 10.0) as f32
+                } else {
+                    (rng.gaussian() * 0.05) as f32
+                }
+            }
+            // near-uniform magnitudes (normalization-layer-like)
+            _ => (rng.uniform() * 2.0 - 1.0) as f32,
+        })
+        .collect()
+}
+
+pub fn verify_mqv() -> Table {
+    // Remark 3.2 isolated: identical per-layer normalization in both arms;
+    // layer-wise = per-type sequences each optimized on its own CDF (Eq. 2),
+    // global = ONE sequence optimized on the merged CDF used for all types.
+    let mut t = Table::new(
+        "V5 — Remark 3.2: per-type optimized sequences vs one global sequence (MQV)",
+        &["scenario", "layerwise", "global", "improvement"],
+    );
+    let mut rng = Rng::new(13);
+    let per = 1024usize;
+    let alpha = 6usize;
+    for (name, shapes) in [
+        ("homogeneous", vec!["gauss", "gauss", "gauss"]),
+        ("two-kinds", vec!["gauss", "sparse", "gauss"]),
+        ("three-kinds", vec!["gauss", "sparse", "uniform"]),
+    ] {
+        let samples: Vec<Vec<f32>> = (0..4)
+            .map(|_| {
+                let mut v = Vec::new();
+                for sh in &shapes {
+                    v.extend(layer_sample(&mut rng, sh, per));
+                }
+                v
+            })
+            .collect();
+        let spec: Vec<(String, usize, String)> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| (format!("l{i}"), per, format!("t_{sh}_{i}")))
+            .collect();
+        let spec_ref: Vec<(&str, usize, &str)> =
+            spec.iter().map(|(n, l, ty)| (n.as_str(), *l, ty.as_str())).collect();
+        let map = LayerMap::from_spec(&spec_ref);
+        // gather per-type CDFs
+        let mut stats: Vec<crate::quant::adaptive::TypeStats> =
+            (0..map.num_types()).map(|_| Default::default()).collect();
+        let mut merged = crate::quant::adaptive::TypeStats::default();
+        for s in &samples {
+            for l in &map.layers {
+                let slice = &s[l.offset..l.offset + l.len];
+                stats[l.type_id].add_layer_sample(slice, 2.0);
+                merged.add_layer_sample(slice, 2.0);
+            }
+        }
+        let (lw_seqs, _) = crate::quant::adaptive::adapt_all(
+            &stats,
+            &vec![alpha; map.num_types()],
+            8,
+        );
+        let (gl_seq, _) =
+            crate::quant::adaptive::optimize_levels(&merged.hist, alpha, 8);
+        let lw_cfg = QuantConfig { sequences: lw_seqs, q: 2.0 };
+        let gl_cfg = QuantConfig::same(map.num_types(), gl_seq, 2.0);
+        let lw = variance::mqv_objective(&samples, &map, &lw_cfg, 20, 1);
+        let gl = variance::mqv_objective(&samples, &map, &gl_cfg, 20, 1);
+        t.row(&[
+            name.to_string(),
+            format!("{lw:.4}"),
+            format!("{gl:.4}"),
+            format!("{:.3}x", gl / lw.max(1e-12)),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// V6 — Remark D.3: protocol trade-off under jitter
+// ---------------------------------------------------------------------------
+
+pub fn protocols_table() -> Table {
+    let mut t = Table::new(
+        "V6 — Remark D.3: Main vs Alternating protocol under network jitter",
+        &["jitter p", "main bits", "alt bits", "main time(ms)", "alt time(ms)", "winner"],
+    );
+    let mut rng = Rng::new(17);
+    let d = 1 << 16;
+    let v: Vec<f32> = (0..d)
+        .map(|i| (rng.gaussian() as f32) * if i % 37 == 0 { 8.0 } else { 0.2 })
+        .collect();
+    let map = LayerMap::from_spec(&[("a", d / 2, "ff"), ("b", d / 2, "emb")]);
+    let cfg = QuantConfig {
+        sequences: vec![LevelSequence::bits(4), LevelSequence::bits(6)],
+        q: 2.0,
+    };
+    let qv = quantize(&v, &map, &cfg, &mut rng);
+    let sizes: Vec<usize> = cfg.sequences.iter().map(|s| s.num_symbols()).collect();
+    let probs: Vec<Vec<f64>> =
+        symbol_counts(&qv, 2, &sizes).iter().map(|c| normalize(c)).collect();
+    let mu = map.type_proportions();
+    let main_bits =
+        encoded_bits(&qv, &Codebooks::build(ProtocolKind::Main, &probs, &mu)) as f64;
+    let alt_bits =
+        encoded_bits(&qv, &Codebooks::build(ProtocolKind::Alternating, &probs, &mu))
+            as f64;
+    for &p in &[0.0, 0.05, 0.2, 0.5] {
+        let mut net = NetworkModel::genesis_cloud(5.0);
+        net.jitter =
+            crate::net::JitterModel { p, retrans_fraction: 1.0, resync_fraction: 0.05 };
+        let tm =
+            main_bits / 8.0 / (net.bandwidth_gbps * 1e9 / 8.0) * net.jitter_multiplier(true);
+        let ta = alt_bits / 8.0 / (net.bandwidth_gbps * 1e9 / 8.0)
+            * net.jitter_multiplier(false);
+        t.row(&[
+            format!("{p:.2}"),
+            format!("{main_bits:.0}"),
+            format!("{alt_bits:.0}"),
+            format!("{:.4}", tm * 1e3),
+            format!("{:.4}", ta * 1e3),
+            (if tm <= ta { "main" } else { "alternating" }).to_string(),
+        ]);
+    }
+    t
+}
+
+/// Q-GenX vs QODA oracle/communication cost at matched GAP (the optimism
+/// claim quantified — supports the Figure 4 discussion).
+pub fn optimism_table() -> Table {
+    let mut t = Table::new(
+        "Optimism — oracle calls & wire bits to reach GAP <= target (quadratic, abs noise)",
+        &["solver", "iters", "oracle calls", "wire Mbits", "GAP"],
+    );
+    let mut rng = Rng::new(23);
+    let op = QuadraticOperator::random(12, 0.8, &mut rng);
+    let sol = op.sol.clone();
+    let x0 = vec![0.0; 12];
+    let radius =
+        1.0 + crate::stats::vecops::l2_norm64(&crate::stats::vecops::sub(&x0, &sol));
+    let k = 4;
+    let steps = 2048;
+    let map = LayerMap::single(12);
+    let mk = |seed: u64| -> Vec<Box<dyn Compressor>> {
+        (0..k)
+            .map(|i| {
+                Box::new(QuantCompressor::global_bits(&map, 5, 128, seed + i as u64))
+                    as Box<dyn Compressor>
+            })
+            .collect()
+    };
+    let gap_eval = GapEvaluator::new(&op, sol.clone(), radius);
+    let noise = NoiseModel::Absolute { sigma: 0.3 };
+    {
+        let mut src = OracleSource::new(&op, k, noise, 1);
+        let run = Qoda::new(&mut src, mk(10), Box::new(AdaptiveLr::default()))
+            .run(&x0, steps, &[]);
+        t.row(&[
+            "QODA".into(),
+            format!("{steps}"),
+            format!("{}", run.oracle_calls),
+            format!("{:.2}", run.total_bits as f64 / 1e6),
+            format!("{:.4}", gap_eval.eval(&run.xbar)),
+        ]);
+    }
+    {
+        let mut src = OracleSource::new(&op, k, noise, 1);
+        let run = QGenX::new(&mut src, mk(10), Box::new(AdaptiveLr::default()))
+            .run(&x0, steps, &[]);
+        t.row(&[
+            "Q-GenX".into(),
+            format!("{steps}"),
+            format!("{}", run.oracle_calls),
+            format!("{:.2}", run.total_bits as f64 / 1e6),
+            format!("{:.4}", gap_eval.eval(&run.xbar)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_regime_matches_paper_shape() {
+        let bpc = measure_qoda5_bytes_per_coord(1 << 16, 1);
+        // QODA5 payload well under 32 bits/coord
+        assert!(bpc < 1.2, "bytes/coord {bpc}");
+        let b5 = step_time_ms(4, 5.0, false, bpc);
+        let b1 = step_time_ms(4, 1.0, false, bpc);
+        let q5 = step_time_ms(4, 5.0, true, bpc);
+        let q1 = step_time_ms(4, 1.0, true, bpc);
+        // baseline degrades as bandwidth drops; QODA5 nearly flat
+        assert!(b1 > b5 + 20.0, "{b1} vs {b5}");
+        assert!((q1 - q5).abs() < 15.0, "{q1} vs {q5}");
+        // speedups in the paper's 1.2-1.6x band
+        let s5 = b5 / q5;
+        let s1 = b1 / q1;
+        assert!(s5 > 1.1 && s5 < 1.6, "{s5}");
+        assert!(s1 > s5, "speedup should grow as bandwidth shrinks");
+    }
+
+    #[test]
+    fn table2_shape_baseline_degrades_qoda_scales() {
+        let bpc = measure_qoda5_bytes_per_coord(1 << 16, 1);
+        let b4 = step_time_ms(4, 5.0, false, bpc);
+        let b12 = step_time_ms(12, 5.0, false, bpc);
+        let q4 = step_time_ms(4, 5.0, true, bpc);
+        let q12 = step_time_ms(12, 5.0, true, bpc);
+        assert!(b12 > b4, "baseline should degrade with K: {b4} -> {b12}");
+        assert!(q12 < q4, "QODA should scale with K: {q4} -> {q12}");
+        let speedup12 = b12 / q12;
+        assert!(speedup12 > 2.0, "12-node speedup {speedup12} (paper: 2.5x)");
+    }
+
+    #[test]
+    fn mqv_improvement_grows_with_heterogeneity() {
+        let t = verify_mqv();
+        let imp = |row: usize| -> f64 {
+            t.rows[row][3].trim_end_matches('x').parse().unwrap()
+        };
+        // layerwise never loses (Remark 3.2) ...
+        for r in 0..3 {
+            assert!(imp(r) >= 0.99, "row {r}: {}", imp(r));
+        }
+        // ... and heterogeneity is where it wins
+        assert!(imp(2) > imp(0), "{} vs {}", imp(2), imp(0));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Design-choice ablations (DESIGN.md: adaptive levels, L-GreCo reallocation,
+// coding protocol) — same workload, one knob changed at a time.
+// ---------------------------------------------------------------------------
+
+/// Ablation: bits-on-the-wire and quantization error of one gradient stream
+/// under (a) static uniform levels, (b) adaptive levels (Eq. 2), (c) full
+/// L-GreCo, at a matched ~5-bit budget.
+pub fn ablation_table() -> Table {
+    use crate::oda::compress::{Adaptation, QuantCompressor};
+    let mut t = Table::new(
+        "Ablation — adaptation knobs at matched 5-bit budget (400 heterogeneous grads)",
+        &["configuration", "bits/coord", "rel. error", "vs static"],
+    );
+    let map = LayerMap::from_spec(&[
+        ("dense.w", 4096, "ff"),
+        ("emb.w", 2048, "embedding"),
+        ("head.w", 1024, "attention"),
+    ]);
+    let mk_grad = |rng: &mut Rng| -> Vec<f64> {
+        let mut v = Vec::with_capacity(map.dim);
+        for i in 0..map.dim {
+            let scale = if i < 4096 {
+                0.05
+            } else if i < 6144 {
+                if rng.uniform() < 0.05 { 5.0 } else { 0.01 }
+            } else {
+                1.0
+            };
+            v.push(rng.gaussian() * scale);
+        }
+        v
+    };
+    let configs: Vec<(&str, Adaptation)> = vec![
+        ("static uniform", Adaptation::Fixed),
+        ("adaptive levels", Adaptation::Levels { every: 40 }),
+        (
+            "L-GreCo (levels + alpha realloc)",
+            Adaptation::LGreco { every: 40, budget_bits_per_coord: 6.0, max_bits: 6 },
+        ),
+    ];
+    let mut static_bits = 0.0f64;
+    for (name, adaptation) in configs {
+        let cfg = QuantConfig::uniform_bits(map.num_types(), 5, 2.0);
+        let mut comp = QuantCompressor::new(
+            map.clone(),
+            cfg,
+            ProtocolKind::Main,
+            adaptation,
+            9,
+        );
+        let mut rng = Rng::new(31);
+        let (mut bits_acc, mut err_acc, mut norm_acc) = (0.0f64, 0.0, 0.0);
+        let steps = 400;
+        for _ in 0..steps {
+            let g = mk_grad(&mut rng);
+            let (out, bits) = crate::oda::compress::Compressor::compress(&mut comp, &g);
+            bits_acc += bits as f64;
+            err_acc += g.iter().zip(&out).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+            norm_acc += g.iter().map(|a| a * a).sum::<f64>();
+        }
+        let bpc = bits_acc / (steps as f64 * map.dim as f64);
+        if static_bits == 0.0 {
+            static_bits = bpc;
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{bpc:.3}"),
+            format!("{:.5}", err_acc / norm_acc),
+            format!("{:.2}x", static_bits / bpc),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,91 @@
+//! Micro-benchmark harness (offline environment: no criterion). Benches are
+//! `harness = false` binaries that use `bench()` below and print
+//! criterion-style lines; `cargo bench` runs them all.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub iters: u64,
+    /// optional throughput denominator (elements per iteration)
+    pub elems: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let per = self.mean_ns;
+        let (val, unit) = if per >= 1e9 {
+            (per / 1e9, "s")
+        } else if per >= 1e6 {
+            (per / 1e6, "ms")
+        } else if per >= 1e3 {
+            (per / 1e3, "us")
+        } else {
+            (per, "ns")
+        };
+        let thr = self
+            .elems
+            .map(|e| {
+                let per_sec = e as f64 / (per / 1e9);
+                if per_sec >= 1e9 {
+                    format!("  thrpt: {:.3} Gelem/s", per_sec / 1e9)
+                } else {
+                    format!("  thrpt: {:.3} Melem/s", per_sec / 1e6)
+                }
+            })
+            .unwrap_or_default();
+        println!(
+            "{:<46} time: [{:.3} {unit} ± {:.3} {unit}] ({} iters){}",
+            self.name,
+            val,
+            self.stddev_ns / per.max(1e-12) * val,
+            self.iters,
+            thr
+        );
+    }
+}
+
+/// Run `f` until ~`target_ms` of samples are collected (after warmup).
+pub fn bench<T>(name: &str, elems: Option<u64>, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup
+    let warm_t0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_t0.elapsed().as_millis() < 50 || warm_iters < 2 {
+        std::hint::black_box(f());
+        warm_iters += 1;
+    }
+    // calibrate iteration count for ~400 ms of measurement
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.4 / once) as u64).clamp(3, 1_000_000);
+    let mut samples = Vec::with_capacity((iters as usize).min(1000));
+    let chunk = (iters / 20).max(1);
+    let mut done = 0;
+    while done < iters {
+        let n = chunk.min(iters - done);
+        let t = Instant::now();
+        for _ in 0..n {
+            std::hint::black_box(f());
+        }
+        samples.push(t.elapsed().as_secs_f64() / n as f64 * 1e9);
+        done += n;
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+        / samples.len() as f64;
+    let res = BenchResult {
+        name: name.to_string(),
+        mean_ns: mean,
+        stddev_ns: var.sqrt(),
+        iters,
+        elems,
+    };
+    res.report();
+    res
+}
+
+pub mod experiments;
+pub mod model_experiments;

@@ -1,0 +1,226 @@
+//! PJRT-backed experiment harnesses: Figure 4 (WGAN FID curves), Table 3
+//! (Transformer compression rates at matched perplexity) and Figure 5
+//! (per-layer-type quantization ablation).
+
+use anyhow::Result;
+
+use crate::gan::trainer::{self as gan_trainer, GanCompression, GanOptimizer, GanTrainConfig};
+use crate::lm::trainer::{self as lm_trainer, LmTrainConfig, QuantTarget};
+use crate::runtime::{LmModel, Runtime, WganModel};
+use crate::util::table::Table;
+
+/// Figure 4: FID evolution for Adam vs QODA+global vs QODA+layerwise.
+/// Returns (rows for CSV: step, adam, global, layerwise averaged over seeds).
+pub fn fig4(steps: usize, seeds: &[u64]) -> Result<(Table, Vec<Vec<f64>>)> {
+    let rt = Runtime::cpu()?;
+    let model = WganModel::load(&rt)?;
+    let configs: Vec<(&str, GanOptimizer, GanCompression)> = vec![
+        ("Adam", GanOptimizer::Adam, GanCompression::None),
+        (
+            "QODA+global(Q-GenX)",
+            GanOptimizer::OptimisticAdam,
+            GanCompression::Global { bits: 5, bucket: 128 },
+        ),
+        (
+            "QODA+layerwise(L-GreCo)",
+            GanOptimizer::OptimisticAdam,
+            GanCompression::LayerwiseLGreco { bits: 5, bucket: 128, every: 50 },
+        ),
+    ];
+    let fid_every = (steps / 12).max(5);
+    // curves[c] = averaged fid at each checkpoint
+    let mut curves: Vec<Vec<f64>> = Vec::new();
+    let mut checkpoints: Vec<usize> = Vec::new();
+    let mut summary = Table::new(
+        "Figure 4 — final FID after training (mean over seeds)",
+        &["config", "final FID", "mean step ms", "MB/step/node"],
+    );
+    for (name, opt, comp) in &configs {
+        let mut acc: Vec<f64> = Vec::new();
+        let mut final_fid = 0.0;
+        let mut step_ms = 0.0;
+        let mut mb = 0.0;
+        for &seed in seeds {
+            let cfg = GanTrainConfig {
+                optimizer: *opt,
+                compression: *comp,
+                steps,
+                fid_every,
+                seed,
+                ..Default::default()
+            };
+            let run = gan_trainer::train(&model, &cfg)?;
+            if acc.is_empty() {
+                acc = vec![0.0; run.fid_curve.len()];
+                checkpoints = run.fid_curve.iter().map(|&(s, _)| s).collect();
+            }
+            for (a, &(_, f)) in acc.iter_mut().zip(&run.fid_curve) {
+                *a += f / seeds.len() as f64;
+            }
+            final_fid += run.final_fid / seeds.len() as f64;
+            step_ms += run.metrics.mean_step_ms() / seeds.len() as f64;
+            mb += run.metrics.steps.iter().map(|m| m.bytes_per_node).sum::<f64>()
+                / run.metrics.steps.len() as f64
+                / 1e6
+                / seeds.len() as f64;
+        }
+        summary.row(&[
+            name.to_string(),
+            format!("{final_fid:.4}"),
+            format!("{step_ms:.1}"),
+            format!("{mb:.4}"),
+        ]);
+        curves.push(acc);
+    }
+    // CSV rows: step, adam, global, layerwise
+    let rows: Vec<Vec<f64>> = checkpoints
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let mut r = vec![s as f64];
+            for c in &curves {
+                r.push(c.get(i).copied().unwrap_or(f64::NAN));
+            }
+            r
+        })
+        .collect();
+    Ok((summary, rows))
+}
+
+/// Table 3: PowerSGD rank x {global, layerwise} — test ppl + compression.
+pub fn table3(steps: usize, ranks: &[usize], seeds: &[u64]) -> Result<Table> {
+    let rt = Runtime::cpu()?;
+    let model = LmModel::load(&rt)?;
+    let mut t = Table::new(
+        "Table 3 — layer-wise vs global quantization for the transformer LM",
+        &["rank", "quantization", "test ppl", "ppl std", "compression rate", "vs global"],
+    );
+    // uncompressed baseline
+    {
+        let (mean_ppl, std_ppl, rate) = run_lm_avg(
+            &model,
+            seeds,
+            &LmTrainConfig {
+                rank: 0,
+                quant_bits: None,
+                layerwise: false,
+                steps,
+                ..Default::default()
+            },
+        )?;
+        t.row(&[
+            "-".into(),
+            "baseline".into(),
+            format!("{mean_ppl:.2}"),
+            format!("{std_ppl:.2}"),
+            format!("{rate:.2}"),
+            "-".into(),
+        ]);
+    }
+    for &rank in ranks {
+        let mut global_rate = 0.0;
+        for (layerwise, name) in [(false, "global"), (true, "layerwise")] {
+            let cfg = LmTrainConfig {
+                rank,
+                quant_bits: Some(4),
+                layerwise,
+                steps,
+                ..Default::default()
+            };
+            let (mean_ppl, std_ppl, rate) = run_lm_avg(&model, seeds, &cfg)?;
+            if !layerwise {
+                global_rate = rate;
+            }
+            let rel = if layerwise && global_rate > 0.0 {
+                format!("[{:.2}x]", rate / global_rate)
+            } else {
+                "-".into()
+            };
+            t.row(&[
+                format!("{rank}"),
+                name.into(),
+                format!("{mean_ppl:.2}"),
+                format!("{std_ppl:.2}"),
+                format!("{rate:.2}"),
+                rel,
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+fn run_lm_avg(
+    model: &LmModel,
+    seeds: &[u64],
+    cfg: &LmTrainConfig,
+) -> Result<(f64, f64, f64)> {
+    let mut ppls = Vec::new();
+    let mut rate = 0.0;
+    for &seed in seeds {
+        let mut c = cfg.clone();
+        c.seed = seed;
+        let run = lm_trainer::train(model, &c)?;
+        ppls.push(run.final_ppl);
+        rate += run.compression_rate / seeds.len() as f64;
+    }
+    let mean = crate::util::mean(&ppls);
+    let std = crate::util::stddev(&ppls);
+    Ok((mean, std, rate))
+}
+
+/// Figure 5: quantize ONLY one layer type at various bit widths and report
+/// the perplexity degradation (embedding should hurt most).
+pub fn fig5(steps: usize, seeds: &[u64]) -> Result<Table> {
+    let rt = Runtime::cpu()?;
+    let model = LmModel::load(&rt)?;
+    let mut t = Table::new(
+        "Figure 5 — ablation: quantizing a single layer type (PowerSGD rank 16)",
+        &["quantized type", "bits", "test ppl", "ppl std", "compression rate"],
+    );
+    // unquantized reference
+    {
+        let (ppl, std, rate) = run_lm_avg(
+            &model,
+            seeds,
+            &LmTrainConfig {
+                rank: 16,
+                quant_bits: None,
+                layerwise: false,
+                steps,
+                ..Default::default()
+            },
+        )?;
+        t.row(&[
+            "none".into(),
+            "-".into(),
+            format!("{ppl:.2}"),
+            format!("{std:.2}"),
+            format!("{rate:.2}"),
+        ]);
+    }
+    for ty in ["ff", "embedding", "attention"] {
+        for bits in [2u32, 4] {
+            let cfg = LmTrainConfig {
+                rank: 16,
+                quant_bits: Some(bits),
+                layerwise: false,
+                target: QuantTarget::OnlyType(match ty {
+                    "ff" => "ff",
+                    "embedding" => "embedding",
+                    _ => "attention",
+                }),
+                steps,
+                ..Default::default()
+            };
+            let (ppl, std, rate) = run_lm_avg(&model, seeds, &cfg)?;
+            t.row(&[
+                ty.into(),
+                format!("{bits}"),
+                format!("{ppl:.2}"),
+                format!("{std:.2}"),
+                format!("{rate:.2}"),
+            ]);
+        }
+    }
+    Ok(t)
+}

@@ -1,0 +1,291 @@
+//! Bit-level I/O for the wire protocols. LSB-first within each u64 word.
+
+/// Append-only bit writer.
+#[derive(Clone, Debug, Default)]
+pub struct BitWriter {
+    words: Vec<u64>,
+    /// total bits written
+    bits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        BitWriter { words: Vec::with_capacity(bits.div_ceil(64)), bits: 0 }
+    }
+
+    /// Total number of bits written.
+    #[inline]
+    pub fn len_bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.len_bits().div_ceil(8)
+    }
+
+    /// Write the low `n` bits of `value` (n <= 64).
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let value = if n == 64 { value } else { value & ((1u64 << n) - 1) };
+        let off = (self.bits % 64) as u32;
+        if off == 0 {
+            self.words.push(0);
+        }
+        let last = self.words.len() - 1;
+        self.words[last] |= value << off;
+        // spill into a fresh word when the write crosses the boundary
+        // (off > 0 guaranteed there, so the shift amount is in 1..=63)
+        if n > 64 - off {
+            self.words.push(value >> (64 - off));
+        }
+        self.bits += n as usize;
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, b: bool) {
+        self.write_bits(b as u64, 1);
+    }
+
+    /// Write an f32 as its 32 raw bits (the norm header, C_q = 32).
+    pub fn write_f32(&mut self, x: f32) {
+        self.write_bits(x.to_bits() as u64, 32);
+    }
+
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_bits(x.to_bits(), 64);
+    }
+
+    pub fn finish(self) -> BitBuf {
+        let bits = self.len_bits();
+        BitBuf { words: self.words, bits }
+    }
+}
+
+/// Finished bit buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitBuf {
+    words: Vec<u64>,
+    bits: usize,
+}
+
+impl BitBuf {
+    pub fn len_bits(&self) -> usize {
+        self.bits
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.bits.div_ceil(8)
+    }
+
+    pub fn reader(&self) -> BitReader<'_> {
+        BitReader { words: &self.words, pos: 0, bits: self.bits }
+    }
+}
+
+/// Sequential bit reader.
+#[derive(Clone, Debug)]
+pub struct BitReader<'a> {
+    words: &'a [u64],
+    pos: usize,
+    bits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.bits - self.pos
+    }
+
+    /// Read `n` bits (n <= 64); panics past the end (protocol bugs are bugs).
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n as usize <= self.remaining(), "bit underrun");
+        if n == 0 {
+            return 0;
+        }
+        let word = self.pos / 64;
+        let off = (self.pos % 64) as u32;
+        let avail = 64 - off;
+        let out = if n <= avail {
+            let v = self.words[word] >> off;
+            if n == 64 {
+                v
+            } else {
+                v & ((1u64 << n) - 1)
+            }
+        } else {
+            let lo = self.words[word] >> off;
+            let hi = self.words[word + 1] & ((1u64 << (n - avail)) - 1);
+            lo | (hi << avail)
+        };
+        self.pos += n as usize;
+        out
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> bool {
+        self.read_bits(1) == 1
+    }
+
+    pub fn read_f32(&mut self) -> f32 {
+        f32::from_bits(self.read_bits(32) as u32)
+    }
+
+    pub fn read_f64(&mut self) -> f64 {
+        f64::from_bits(self.read_bits(64))
+    }
+
+    /// Peek up to 32 bits without consuming (short reads near the end are
+    /// zero-padded) — used by the table-driven Huffman decoder.
+    #[inline]
+    pub fn peek_bits(&self, n: u32) -> u64 {
+        debug_assert!(n <= 32);
+        let word = self.pos / 64;
+        let off = (self.pos % 64) as u32;
+        // fast path: the n bits live in one word and inside the stream
+        if off + n <= 64 && self.pos + n as usize <= self.bits {
+            let mask = if n == 0 { 0 } else { (1u64 << n) - 1 };
+            return (self.words[word] >> off) & mask;
+        }
+        self.peek_bits_slow(n)
+    }
+
+    #[cold]
+    fn peek_bits_slow(&self, n: u32) -> u64 {
+        let mut out = 0u64;
+        let mut got = 0u32;
+        let take = (n as usize).min(self.remaining()) as u32;
+        let mut pos = self.pos;
+        while got < take {
+            let word = pos / 64;
+            let off = (pos % 64) as u32;
+            let avail = (64 - off).min(take - got);
+            let v = (self.words[word] >> off)
+                & if avail == 64 { u64::MAX } else { (1u64 << avail) - 1 };
+            out |= v << got;
+            got += avail;
+            pos += avail as usize;
+        }
+        out
+    }
+
+    #[inline]
+    pub fn skip(&mut self, n: u32) {
+        self.pos += n as usize;
+        debug_assert!(self.pos <= self.bits);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFF, 8);
+        w.write_bit(true);
+        let buf = w.finish();
+        assert_eq!(buf.len_bits(), 12);
+        let mut r = buf.reader();
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_bits(8), 0xFF);
+        assert!(r.read_bit());
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn word_boundary_crossing() {
+        let mut w = BitWriter::new();
+        w.write_bits(u64::MAX, 60);
+        w.write_bits(0b1010, 4);
+        w.write_bits(0xDEADBEEF, 32);
+        let buf = w.finish();
+        let mut r = buf.reader();
+        assert_eq!(r.read_bits(60), u64::MAX >> 4);
+        assert_eq!(r.read_bits(4), 0b1010);
+        assert_eq!(r.read_bits(32), 0xDEADBEEF);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bit(true); // misalign
+        w.write_f32(3.14159);
+        w.write_f32(-0.0);
+        let buf = w.finish();
+        let mut r = buf.reader();
+        r.read_bit();
+        assert_eq!(r.read_f32(), 3.14159f32);
+        assert_eq!(r.read_f32().to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn full_64bit_writes() {
+        let mut w = BitWriter::new();
+        w.write_bits(0x0123456789ABCDEF, 64);
+        w.write_bits(0xFEDCBA9876543210, 64);
+        let buf = w.finish();
+        assert_eq!(buf.len_bits(), 128);
+        let mut r = buf.reader();
+        assert_eq!(r.read_bits(64), 0x0123456789ABCDEF);
+        assert_eq!(r.read_bits(64), 0xFEDCBA9876543210);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b110101, 6);
+        let buf = w.finish();
+        let mut r = buf.reader();
+        assert_eq!(r.peek_bits(4), 0b0101);
+        assert_eq!(r.read_bits(6), 0b110101);
+    }
+
+    #[test]
+    fn peek_past_end_zero_pads() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        let buf = w.finish();
+        let r = buf.reader();
+        assert_eq!(r.peek_bits(8), 0b11);
+    }
+
+    #[test]
+    fn prop_random_chunks_roundtrip() {
+        for_cases(60, 21, |g| {
+            let n = g.usize_in(1, 200);
+            let chunks: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let bits = g.usize_in(1, 64) as u32;
+                    let v = g.rng.next_u64()
+                        & if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+                    (v, bits)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, b) in &chunks {
+                w.write_bits(v, b);
+            }
+            let buf = w.finish();
+            assert_eq!(
+                buf.len_bits(),
+                chunks.iter().map(|&(_, b)| b as usize).sum::<usize>()
+            );
+            let mut r = buf.reader();
+            for &(v, b) in &chunks {
+                assert_eq!(r.read_bits(b), v, "chunk of {b} bits");
+            }
+        });
+    }
+}

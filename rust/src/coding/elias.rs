@@ -1,0 +1,185 @@
+//! Elias universal integer codes (Elias, 1975) — gamma, delta, and the
+//! recursive (omega) code the paper calls "Elias recursive coding (ERC)"
+//! (Appendix D.3: the prefix code of choice when only "smaller values are
+//! more frequent" is known, without a full distribution estimate).
+//!
+//! All codes here encode n >= 1; the protocols map level indices i >= 0 via
+//! n = i + 1.
+
+use super::bitio::{BitReader, BitWriter};
+
+/// Elias gamma: unary length prefix + binary remainder. |gamma(n)| =
+/// 2*floor(log2 n) + 1.
+pub fn gamma_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1);
+    let nbits = 64 - n.leading_zeros(); // position of MSB, >= 1
+    // (nbits - 1) zeros, then the number MSB-first
+    w.write_bits(0, nbits - 1);
+    // write MSB-first: bit (nbits-1) down to 0
+    for i in (0..nbits).rev() {
+        w.write_bit((n >> i) & 1 == 1);
+    }
+}
+
+pub fn gamma_decode(r: &mut BitReader) -> u64 {
+    let mut zeros = 0u32;
+    while !r.read_bit() {
+        zeros += 1;
+        assert!(zeros < 64, "corrupt gamma code");
+    }
+    let mut n = 1u64;
+    for _ in 0..zeros {
+        n = (n << 1) | r.read_bit() as u64;
+    }
+    n
+}
+
+/// Elias delta: gamma-coded length + remainder. |delta(n)| =
+/// floor(log2 n) + 2*floor(log2(floor(log2 n)+1)) + 1 — asymptotically
+/// shorter than gamma.
+pub fn delta_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1);
+    let nbits = 64 - n.leading_zeros();
+    gamma_encode(w, nbits as u64);
+    for i in (0..nbits.saturating_sub(1)).rev() {
+        w.write_bit((n >> i) & 1 == 1);
+    }
+}
+
+pub fn delta_decode(r: &mut BitReader) -> u64 {
+    let nbits = gamma_decode(r) as u32;
+    let mut n = 1u64;
+    for _ in 0..nbits - 1 {
+        n = (n << 1) | r.read_bit() as u64;
+    }
+    n
+}
+
+/// Elias omega ("recursive"): recursively length-prefixed groups, terminated
+/// by a 0 bit.
+pub fn omega_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1);
+    // build groups in reverse
+    let mut groups: Vec<u64> = Vec::new();
+    let mut k = n;
+    while k > 1 {
+        groups.push(k);
+        let nbits = 64 - k.leading_zeros();
+        k = (nbits - 1) as u64;
+    }
+    for &g in groups.iter().rev() {
+        let nbits = 64 - g.leading_zeros();
+        for i in (0..nbits).rev() {
+            w.write_bit((g >> i) & 1 == 1);
+        }
+    }
+    w.write_bit(false);
+}
+
+pub fn omega_decode(r: &mut BitReader) -> u64 {
+    let mut n = 1u64;
+    loop {
+        if !r.read_bit() {
+            return n;
+        }
+        // group of n more bits, MSB already read as 1
+        let mut v = 1u64;
+        for _ in 0..n {
+            v = (v << 1) | r.read_bit() as u64;
+        }
+        n = v;
+    }
+}
+
+/// Code length in bits without encoding (for the code-length bound harness).
+pub fn gamma_len(n: u64) -> usize {
+    let nbits = 64 - n.leading_zeros();
+    (2 * nbits - 1) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::bitio::BitWriter;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn gamma_known_codewords() {
+        // classic table: 1 -> "1", 2 -> "010", 3 -> "011", 4 -> "00100"
+        let enc = |n: u64| {
+            let mut w = BitWriter::new();
+            gamma_encode(&mut w, n);
+            let buf = w.finish();
+            let mut r = buf.reader();
+            (0..buf.len_bits())
+                .map(|_| if r.read_bit() { '1' } else { '0' })
+                .collect::<String>()
+        };
+        assert_eq!(enc(1), "1");
+        assert_eq!(enc(2), "010");
+        assert_eq!(enc(3), "011");
+        assert_eq!(enc(4), "00100");
+        assert_eq!(enc(5), "00101");
+    }
+
+    #[test]
+    fn gamma_lengths() {
+        assert_eq!(gamma_len(1), 1);
+        assert_eq!(gamma_len(2), 3);
+        assert_eq!(gamma_len(4), 5);
+        assert_eq!(gamma_len(255), 15);
+    }
+
+    #[test]
+    fn all_codes_roundtrip_small() {
+        for n in 1u64..=300 {
+            for code in 0..3 {
+                let mut w = BitWriter::new();
+                match code {
+                    0 => gamma_encode(&mut w, n),
+                    1 => delta_encode(&mut w, n),
+                    _ => omega_encode(&mut w, n),
+                }
+                let buf = w.finish();
+                let mut r = buf.reader();
+                let got = match code {
+                    0 => gamma_decode(&mut r),
+                    1 => delta_decode(&mut r),
+                    _ => omega_decode(&mut r),
+                };
+                assert_eq!(got, n, "code {code} n {n}");
+                assert_eq!(r.remaining(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn streams_self_delimit() {
+        let ns = [1u64, 7, 2, 100, 1, 65535, 3];
+        let mut w = BitWriter::new();
+        for &n in &ns {
+            delta_encode(&mut w, n);
+        }
+        let buf = w.finish();
+        let mut r = buf.reader();
+        for &n in &ns {
+            assert_eq!(delta_decode(&mut r), n);
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_large_values() {
+        for_cases(50, 33, |g| {
+            let n = 1 + (g.rng.next_u64() >> g.usize_in(1, 40) as u32);
+            let mut w = BitWriter::new();
+            gamma_encode(&mut w, n);
+            delta_encode(&mut w, n);
+            omega_encode(&mut w, n);
+            let buf = w.finish();
+            let mut r = buf.reader();
+            assert_eq!(gamma_decode(&mut r), n);
+            assert_eq!(delta_decode(&mut r), n);
+            assert_eq!(omega_decode(&mut r), n);
+        });
+    }
+}

@@ -1,0 +1,363 @@
+//! Canonical Huffman coding (Huffman, 1952; Cover & Thomas Thm 5.4.1/5.8.1).
+//!
+//! The protocols build one codebook per quantization type (Alternating) or a
+//! merged codebook (Main) from the level-occurrence probabilities of
+//! Proposition D.1. Expected code length is within 1 bit of the source
+//! entropy — exactly the guarantee Theorem 5.3 builds on.
+
+use super::bitio::{BitReader, BitWriter};
+
+/// A built canonical Huffman code over symbols 0..n.
+#[derive(Clone, Debug)]
+pub struct Huffman {
+    /// code length per symbol (0 = symbol never occurs, unencodable)
+    pub lengths: Vec<u32>,
+    /// canonical codeword per symbol, MSB-first in the low `lengths[s]` bits
+    pub codes: Vec<u64>,
+    /// bit-reversed codeword (stream order) — single write_bits per symbol
+    rev_codes: Vec<u64>,
+    /// decode tables: for each length, (first_code, offset into sorted syms)
+    first_code: Vec<u64>,
+    offset: Vec<usize>,
+    count: Vec<usize>,
+    sorted_syms: Vec<u16>,
+    max_len: u32,
+    /// table-driven fast decode: indexed by the next `table_bits` stream
+    /// bits; entry = (symbol, len) or (u16::MAX, 0) => slow path
+    table_bits: u32,
+    table: Vec<(u16, u8)>,
+}
+
+impl Huffman {
+    /// Build from non-negative weights. Symbols with weight 0 get no code;
+    /// callers must only encode symbols with positive weight (the protocols
+    /// guarantee this by constructing weights from the actual index stream,
+    /// or by flooring with a tiny epsilon when building from model CDFs).
+    pub fn from_weights(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n >= 1 && n <= u16::MAX as usize);
+        let mut lengths = vec![0u32; n];
+        let alive: Vec<usize> = (0..n).filter(|&i| weights[i] > 0.0).collect();
+        match alive.len() {
+            0 => {}
+            1 => lengths[alive[0]] = 1,
+            _ => {
+                // O(s log s) heap Huffman over (weight, node)
+                #[derive(PartialEq)]
+                struct Node {
+                    w: f64,
+                    id: usize,
+                }
+                impl Eq for Node {}
+                impl PartialOrd for Node {
+                    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                        Some(self.cmp(o))
+                    }
+                }
+                impl Ord for Node {
+                    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                        // min-heap via reverse; tie-break on id for determinism
+                        o.w.partial_cmp(&self.w)
+                            .unwrap()
+                            .then_with(|| o.id.cmp(&self.id))
+                    }
+                }
+                let mut heap = std::collections::BinaryHeap::new();
+                // children[internal - n] = (left, right)
+                let mut children: Vec<(usize, usize)> = Vec::new();
+                for &i in &alive {
+                    heap.push(Node { w: weights[i], id: i });
+                }
+                let mut next_id = n;
+                while heap.len() > 1 {
+                    let a = heap.pop().unwrap();
+                    let b = heap.pop().unwrap();
+                    children.push((a.id, b.id));
+                    heap.push(Node { w: a.w + b.w, id: next_id });
+                    next_id += 1;
+                }
+                let root = heap.pop().unwrap().id;
+                // depth-first assign lengths
+                let mut stack = vec![(root, 0u32)];
+                while let Some((id, depth)) = stack.pop() {
+                    if id < n {
+                        lengths[id] = depth.max(1);
+                    } else {
+                        let (l, r) = children[id - n];
+                        stack.push((l, depth + 1));
+                        stack.push((r, depth + 1));
+                    }
+                }
+            }
+        }
+        Self::from_lengths(lengths)
+    }
+
+    /// Canonical code from the length vector.
+    pub fn from_lengths(lengths: Vec<u32>) -> Self {
+        let max_len = lengths.iter().copied().max().unwrap_or(0);
+        assert!(max_len <= 63, "codeword too long ({max_len})");
+        let ml = max_len as usize;
+        let mut count = vec![0usize; ml + 1];
+        for &l in &lengths {
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        // canonical first codes per length
+        let mut first_code = vec![0u64; ml + 1];
+        let mut code = 0u64;
+        for len in 1..=ml {
+            code = (code + count[len - 1] as u64) << 1;
+            first_code[len] = code;
+        }
+        // symbols sorted by (length, symbol)
+        let mut sorted_syms: Vec<u16> = (0..lengths.len() as u16)
+            .filter(|&s| lengths[s as usize] > 0)
+            .collect();
+        sorted_syms.sort_by_key(|&s| (lengths[s as usize], s));
+        let mut offset = vec![0usize; ml + 1];
+        {
+            let mut acc = 0usize;
+            for len in 1..=ml {
+                offset[len] = acc;
+                acc += count[len];
+            }
+        }
+        // assign codes
+        let mut codes = vec![0u64; lengths.len()];
+        let mut next = first_code.clone();
+        for &s in &sorted_syms {
+            let l = lengths[s as usize] as usize;
+            codes[s as usize] = next[l];
+            next[l] += 1;
+        }
+        // bit-reversed codes: one write_bits call per symbol on encode
+        let rev_codes: Vec<u64> = codes
+            .iter()
+            .zip(&lengths)
+            .map(|(&c, &l)| {
+                if l == 0 {
+                    0
+                } else {
+                    c.reverse_bits() >> (64 - l)
+                }
+            })
+            .collect();
+        // table-driven decode: index by the next `table_bits` stream bits
+        // (stream order = reversed code), entry = (symbol, code length)
+        let table_bits = max_len.min(11);
+        let mut table = vec![(u16::MAX, 0u8); 1usize << table_bits];
+        for (s, (&rc, &l)) in rev_codes.iter().zip(&lengths).enumerate() {
+            if l == 0 || l > table_bits {
+                continue;
+            }
+            // all entries whose low l bits equal rc
+            let step = 1usize << l;
+            let mut idx = rc as usize;
+            while idx < table.len() {
+                table[idx] = (s as u16, l as u8);
+                idx += step;
+            }
+        }
+        Huffman {
+            lengths,
+            codes,
+            rev_codes,
+            first_code,
+            offset,
+            count,
+            sorted_syms,
+            max_len,
+            table_bits,
+            table,
+        }
+    }
+
+    #[inline]
+    pub fn encode(&self, w: &mut BitWriter, sym: usize) {
+        let len = self.lengths[sym];
+        debug_assert!(len > 0, "symbol {sym} has no code");
+        // the bit-reversed code emits MSB-of-code first in stream order —
+        // a single write_bits call (perf: EXPERIMENTS.md §Perf L3 iter 2)
+        w.write_bits(self.rev_codes[sym], len);
+    }
+
+    #[inline]
+    pub fn decode(&self, r: &mut BitReader) -> usize {
+        // fast path: one peek + table lookup covers codes up to table_bits
+        let peek = r.peek_bits(self.table_bits) as usize;
+        let (sym, len) = self.table[peek];
+        if sym != u16::MAX {
+            r.skip(len as u32);
+            return sym as usize;
+        }
+        self.decode_slow(r)
+    }
+
+    #[cold]
+    fn decode_slow(&self, r: &mut BitReader) -> usize {
+        let mut code = 0u64;
+        for len in 1..=self.max_len as usize {
+            code = (code << 1) | r.read_bit() as u64;
+            let c = self.count[len];
+            if c > 0 {
+                let fc = self.first_code[len];
+                if code >= fc && code < fc + c as u64 {
+                    return self.sorted_syms[self.offset[len] + (code - fc) as usize]
+                        as usize;
+                }
+            }
+        }
+        panic!("corrupt huffman stream");
+    }
+
+    /// Expected code length under `probs` (bits/symbol).
+    pub fn expected_length(&self, probs: &[f64]) -> f64 {
+        probs
+            .iter()
+            .zip(&self.lengths)
+            .map(|(&p, &l)| p * l as f64)
+            .sum()
+    }
+
+    pub fn code_len(&self, sym: usize) -> u32 {
+        self.lengths[sym]
+    }
+}
+
+/// Shannon entropy in bits of a probability vector (0 log 0 = 0).
+pub fn entropy(probs: &[f64]) -> f64 {
+    probs
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.log2())
+        .sum()
+}
+
+/// Normalize raw counts into probabilities.
+pub fn normalize(counts: &[f64]) -> Vec<f64> {
+    let total: f64 = counts.iter().sum();
+    if total <= 0.0 {
+        return vec![0.0; counts.len()];
+    }
+    counts.iter().map(|&c| c / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::bitio::BitWriter;
+    use crate::stats::rng::Rng;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn prefix_free() {
+        let h = Huffman::from_weights(&[5.0, 3.0, 1.0, 1.0, 0.5]);
+        let codes: Vec<(u64, u32)> = (0..5).map(|s| (h.codes[s], h.lengths[s])).collect();
+        for (i, &(ci, li)) in codes.iter().enumerate() {
+            for (j, &(cj, lj)) in codes.iter().enumerate() {
+                if i == j {
+                    continue;
+                }
+                let l = li.min(lj);
+                assert!(
+                    ci >> (li - l) != cj >> (lj - l),
+                    "codes {i} and {j} share a prefix"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_stream() {
+        let weights = [10.0, 5.0, 2.0, 1.0];
+        let h = Huffman::from_weights(&weights);
+        let mut rng = Rng::new(1);
+        let syms: Vec<usize> = (0..2000).map(|_| rng.below(4) as usize).collect();
+        let mut w = BitWriter::new();
+        for &s in &syms {
+            h.encode(&mut w, s);
+        }
+        let buf = w.finish();
+        let mut r = buf.reader();
+        for &s in &syms {
+            assert_eq!(h.decode(&mut r), s);
+        }
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn within_one_bit_of_entropy() {
+        // Cover & Thomas 5.4.1: H <= E[L] < H + 1
+        let probs = normalize(&[0.4, 0.3, 0.15, 0.1, 0.05]);
+        let h = Huffman::from_weights(&probs);
+        let el = h.expected_length(&probs);
+        let ent = entropy(&probs);
+        assert!(el >= ent - 1e-9, "{el} < {ent}");
+        assert!(el < ent + 1.0, "{el} vs {ent}");
+    }
+
+    #[test]
+    fn skewed_source_gets_short_code() {
+        let probs = normalize(&[0.97, 0.01, 0.01, 0.01]);
+        let h = Huffman::from_weights(&probs);
+        assert_eq!(h.lengths[0], 1);
+        assert!(h.expected_length(&probs) < 1.2);
+    }
+
+    #[test]
+    fn single_symbol_source() {
+        let h = Huffman::from_weights(&[1.0]);
+        let mut w = BitWriter::new();
+        h.encode(&mut w, 0);
+        h.encode(&mut w, 0);
+        let buf = w.finish();
+        assert_eq!(buf.len_bits(), 2);
+        let mut r = buf.reader();
+        assert_eq!(h.decode(&mut r), 0);
+        assert_eq!(h.decode(&mut r), 0);
+    }
+
+    #[test]
+    fn zero_weight_symbols_excluded() {
+        let h = Huffman::from_weights(&[1.0, 0.0, 3.0]);
+        assert_eq!(h.lengths[1], 0);
+        assert!(h.lengths[0] > 0 && h.lengths[2] > 0);
+    }
+
+    #[test]
+    fn entropy_reference() {
+        assert!((entropy(&[0.5, 0.5]) - 1.0).abs() < 1e-12);
+        assert!((entropy(&[0.25; 4]) - 2.0).abs() < 1e-12);
+        assert_eq!(entropy(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_distributions() {
+        for_cases(30, 55, |g| {
+            let n = g.usize_in(2, 40);
+            let weights: Vec<f64> = (0..n).map(|_| g.f64_in(0.01, 10.0)).collect();
+            let h = Huffman::from_weights(&weights);
+            let syms: Vec<usize> =
+                (0..500).map(|_| g.usize_in(0, n - 1)).collect();
+            let mut w = BitWriter::new();
+            for &s in &syms {
+                h.encode(&mut w, s);
+            }
+            let buf = w.finish();
+            let mut r = buf.reader();
+            for &s in &syms {
+                assert_eq!(h.decode(&mut r), s);
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_construction() {
+        let w1 = Huffman::from_weights(&[1.0, 1.0, 1.0, 1.0]);
+        let w2 = Huffman::from_weights(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(w1.codes, w2.codes);
+        assert_eq!(w1.lengths, vec![2, 2, 2, 2]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Code-length bounds (Theorem 5.3 / D.5) and the Proposition D.1 level
+//! probabilities, computed from the synchronized per-type CDFs.
+
+use crate::quant::levels::LevelSequence;
+use crate::stats::histogram::NormalizedHistogram;
+
+/// Proposition D.1: probability of level j of a sequence under CDF F~:
+///   p_j = ∫_{l_{j-1}}^{l_j} (u - l_{j-1})/(l_j - l_{j-1}) dF
+///       + ∫_{l_j}^{l_{j+1}} (l_{j+1} - u)/(l_{j+1} - l_j) dF
+/// (boundary levels take only the existing side).
+pub fn level_probabilities(hist: &NormalizedHistogram, seq: &LevelSequence) -> Vec<f64> {
+    let ls = seq.as_slice();
+    let n = ls.len();
+    let mut probs = vec![0.0f64; n];
+    if hist.is_empty() {
+        // degenerate: uniform CDF fallback (matches histogram::cdf)
+        // fall through — mass/conditional_mean handle it
+    }
+    for j in 0..n {
+        let mut p = 0.0;
+        if j > 0 {
+            let (a, b) = (ls[j - 1], ls[j]);
+            let m = hist.mass(a, b);
+            if m > 0.0 && b > a {
+                p += m * (hist.conditional_mean(a, b) - a).max(0.0) / (b - a);
+            }
+        }
+        if j + 1 < n {
+            let (a, b) = (ls[j], ls[j + 1]);
+            let m = hist.mass(a, b);
+            if m > 0.0 && b > a {
+                p += m * (b - hist.conditional_mean(a, b)).max(0.0) / (b - a);
+            }
+        }
+        probs[j] = p;
+    }
+    // numerical renormalization
+    let total: f64 = probs.iter().sum();
+    if total > 0.0 {
+        for p in &mut probs {
+            *p /= total;
+        }
+    }
+    probs
+}
+
+/// The exact pre-big-O expression of Theorem 5.3 (Main protocol): expected
+/// bits to transmit one d-dimensional quantized dual vector,
+///   C_q + sum_m (1 - p_0^m) mu^m d + sum_m (H(l^m) + 1) mu^m d.
+pub fn main_protocol_bound(
+    probs_per_type: &[Vec<f64>],
+    proportions: &[f64],
+    d: usize,
+    norm_bits: usize,
+) -> f64 {
+    let mut total = norm_bits as f64;
+    for (probs, &mu) in probs_per_type.iter().zip(proportions) {
+        let p0 = probs.first().copied().unwrap_or(0.0);
+        let h: f64 = probs
+            .iter()
+            .skip(1)
+            .filter(|&&p| p > 0.0)
+            .map(|&p| -p * p.log2())
+            .sum();
+        total += (1.0 - p0) * mu * d as f64; // sign bits of nonzeros
+        total += (h + 1.0) * mu * d as f64; // entropy-coded symbols
+    }
+    total
+}
+
+/// Theorem D.5 (Alternating protocol) exact expression:
+///   C_q + (1 - sum_m p_0^m mu^m) d + (sum_m H(l^m) mu^m + 1) d
+/// evaluated with the joint (type,level) alphabet entropy.
+pub fn alternating_protocol_bound(
+    probs_per_type: &[Vec<f64>],
+    proportions: &[f64],
+    d: usize,
+    norm_bits: usize,
+) -> f64 {
+    let mut p0_total = 0.0;
+    let mut joint_entropy = 0.0;
+    for (probs, &mu) in probs_per_type.iter().zip(proportions) {
+        p0_total += mu * probs.first().copied().unwrap_or(0.0);
+        for &p in probs {
+            let pj = mu * p;
+            if pj > 0.0 {
+                joint_entropy += -pj * pj.log2();
+            }
+        }
+    }
+    norm_bits as f64 + (1.0 - p0_total) * d as f64 + (joint_entropy + 1.0) * d as f64
+}
+
+/// Expected number of nonzeros after quantization (Lemma D.2):
+/// sum_m (1 - p_0^m) mu^m d.
+pub fn expected_nonzeros(probs_per_type: &[Vec<f64>], proportions: &[f64], d: usize) -> f64 {
+    probs_per_type
+        .iter()
+        .zip(proportions)
+        .map(|(p, &mu)| (1.0 - p.first().copied().unwrap_or(0.0)) * mu * d as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    fn hist_gradientlike(seed: u64) -> NormalizedHistogram {
+        let mut rng = Rng::new(seed);
+        let mut h = NormalizedHistogram::new(256);
+        h.add_sample((0..20_000).map(|_| (rng.gaussian().abs() * 0.08).min(1.0)), 1.0);
+        h
+    }
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let h = hist_gradientlike(1);
+        let seq = LevelSequence::bits(4);
+        let p = level_probabilities(&h, &seq);
+        assert_eq!(p.len(), seq.num_symbols());
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn zero_level_dominates_for_gradients() {
+        // most normalized magnitudes are tiny => p_0 large
+        let h = hist_gradientlike(2);
+        let seq = LevelSequence::bits(4);
+        let p = level_probabilities(&h, &seq);
+        assert!(p[0] > 0.3, "p0 = {}", p[0]);
+        assert!(p[0] > p[seq.num_symbols() - 1]);
+    }
+
+    #[test]
+    fn uniform_cdf_uniform_levels_symmetric_probs() {
+        let mut h = NormalizedHistogram::new(512);
+        let mut rng = Rng::new(3);
+        h.add_sample((0..100_000).map(|_| rng.uniform()), 1.0);
+        let seq = LevelSequence::uniform(3);
+        let p = level_probabilities(&h, &seq);
+        // interior levels get ~1/4 each; boundary levels ~1/8
+        assert!((p[1] - 0.25).abs() < 0.02, "{p:?}");
+        assert!((p[0] - 0.125).abs() < 0.02, "{p:?}");
+    }
+
+    #[test]
+    fn bound_decreases_with_skew() {
+        // more skew toward level 0 => fewer expected bits
+        let seq = LevelSequence::bits(5);
+        let uniform = vec![1.0 / seq.num_symbols() as f64; seq.num_symbols()];
+        let mut skewed = vec![0.01; seq.num_symbols()];
+        skewed[0] = 1.0 - 0.01 * (seq.num_symbols() - 1) as f64;
+        let d = 10_000;
+        let b_u = main_protocol_bound(&[uniform], &[1.0], d, 32);
+        let b_s = main_protocol_bound(&[skewed], &[1.0], d, 32);
+        assert!(b_s < b_u, "{b_s} vs {b_u}");
+    }
+
+    #[test]
+    fn expected_nonzeros_lemma() {
+        let probs = vec![vec![0.8, 0.1, 0.1], vec![0.5, 0.25, 0.25]];
+        let nz = expected_nonzeros(&probs, &[0.5, 0.5], 1000);
+        assert!((nz - (0.2 * 500.0 + 0.5 * 500.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alternating_bound_at_least_main_minus_slack() {
+        // shared-codeword main protocol should not be (much) worse
+        let probs = vec![vec![0.7, 0.2, 0.1], vec![0.6, 0.3, 0.1]];
+        let mu = [0.5, 0.5];
+        let d = 1000;
+        let bm = main_protocol_bound(&probs, &mu, d, 32);
+        let ba = alternating_protocol_bound(&probs, &mu, d, 32);
+        assert!(bm <= ba * 1.2 + 64.0, "{bm} vs {ba}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Entropy coding stack (Section 3.2, Appendix D): bit I/O, Elias universal
+//! codes, canonical Huffman, the Main and Alternating wire protocols, and
+//! the Theorem 5.3 / D.5 code-length bounds.
+
+pub mod bitio;
+pub mod elias;
+pub mod huffman;
+pub mod length;
+pub mod protocol;
+
+pub use bitio::{BitBuf, BitReader, BitWriter};
+pub use huffman::{entropy, Huffman};
+pub use protocol::{decode_vector, encode_vector, Codebooks, ProtocolKind, NORM_BITS};

@@ -1,0 +1,318 @@
+//! The paper's two coding protocols (Section 3.2, Appendix D).
+//!
+//! **Main protocol**: codewords are *shared across types* — one canonical
+//! Huffman code over level *ranks*, built on the type-proportion-weighted
+//! merged distribution. The receiver knows each coordinate's type from the
+//! (shared) layer map, so rank j decodes to level l^m_j of the right type.
+//!
+//! **Alternating protocol**: one joint codebook over the *union alphabet*
+//! of all (type, level) pairs — every level of every type has a unique
+//! codeword, so the receiver needs no positional type knowledge (the
+//! robust-to-jitter variant of Remark D.3).
+//!
+//! Wire layout per layer: `f32` L^q norm (C_q = 32 bits), then per
+//! coordinate the entropy-coded symbol followed by one sign bit iff the
+//! symbol is a nonzero level (Appendix D.1: signs of *nonzero* entries).
+
+use super::bitio::{BitBuf, BitReader, BitWriter};
+use super::huffman::{normalize, Huffman};
+use crate::quant::layer_map::LayerMap;
+use crate::quant::quantizer::{QuantizedLayer, QuantizedVector};
+use crate::quant::QuantConfig;
+
+pub const NORM_BITS: usize = 32; // C_q
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    Main,
+    Alternating,
+}
+
+/// Shared encoder/decoder state: built identically on every node from the
+/// synchronized per-type level probabilities (Prop D.1), so codebooks never
+/// travel on the wire.
+#[derive(Clone, Debug)]
+pub struct Codebooks {
+    pub kind: ProtocolKind,
+    /// number of symbols per type
+    sizes: Vec<usize>,
+    /// Main: one code over ranks 0..max_size
+    main: Option<Huffman>,
+    /// Alternating: one code over the union alphabet; type m's symbol j is
+    /// `offsets[m] + j`
+    alt: Option<Huffman>,
+    offsets: Vec<usize>,
+}
+
+const FLOOR: f64 = 1e-6;
+
+impl Codebooks {
+    /// `probs_per_type[m][j]` = probability of level j of type m;
+    /// `proportions[m]` = mu^m share of coordinates of type m.
+    pub fn build(kind: ProtocolKind, probs_per_type: &[Vec<f64>], proportions: &[f64]) -> Self {
+        assert_eq!(probs_per_type.len(), proportions.len());
+        let sizes: Vec<usize> = probs_per_type.iter().map(|p| p.len()).collect();
+        match kind {
+            ProtocolKind::Main => {
+                let max = *sizes.iter().max().unwrap();
+                let mut merged = vec![0.0f64; max];
+                for (probs, &mu) in probs_per_type.iter().zip(proportions) {
+                    for (j, &p) in probs.iter().enumerate() {
+                        merged[j] += mu * p.max(FLOOR);
+                    }
+                }
+                let main = Huffman::from_weights(&normalize(&merged));
+                Codebooks { kind, sizes, main: Some(main), alt: None, offsets: vec![] }
+            }
+            ProtocolKind::Alternating => {
+                let mut offsets = Vec::with_capacity(sizes.len());
+                let mut joint = Vec::new();
+                for (probs, &mu) in probs_per_type.iter().zip(proportions) {
+                    offsets.push(joint.len());
+                    for &p in probs {
+                        joint.push(mu.max(FLOOR) * p.max(FLOOR));
+                    }
+                }
+                let alt = Huffman::from_weights(&normalize(&joint));
+                Codebooks { kind, sizes, main: None, alt: Some(alt), offsets }
+            }
+        }
+    }
+
+    /// Uniform-probability codebooks (before any statistics exist).
+    pub fn uniform(kind: ProtocolKind, cfg: &QuantConfig, proportions: &[f64]) -> Self {
+        let probs: Vec<Vec<f64>> = cfg
+            .sequences
+            .iter()
+            .map(|s| vec![1.0 / s.num_symbols() as f64; s.num_symbols()])
+            .collect();
+        Self::build(kind, &probs, proportions)
+    }
+
+    #[inline]
+    fn encode_symbol(&self, w: &mut BitWriter, type_id: usize, sym: usize) {
+        match self.kind {
+            ProtocolKind::Main => self.main.as_ref().unwrap().encode(w, sym),
+            ProtocolKind::Alternating => self
+                .alt
+                .as_ref()
+                .unwrap()
+                .encode(w, self.offsets[type_id] + sym),
+        }
+    }
+
+    #[inline]
+    fn decode_symbol(&self, r: &mut BitReader, type_id: usize) -> usize {
+        match self.kind {
+            ProtocolKind::Main => self.main.as_ref().unwrap().decode(r),
+            ProtocolKind::Alternating => {
+                let joint = self.alt.as_ref().unwrap().decode(r);
+                debug_assert!(
+                    joint >= self.offsets[type_id]
+                        && joint < self.offsets[type_id] + self.sizes[type_id],
+                    "alternating symbol decodes to wrong type"
+                );
+                joint - self.offsets[type_id]
+            }
+        }
+    }
+
+    /// Expected bits per coordinate of type m (excluding sign/norm).
+    pub fn expected_symbol_bits(&self, type_id: usize, probs: &[f64]) -> f64 {
+        match self.kind {
+            ProtocolKind::Main => self.main.as_ref().unwrap().expected_length(probs),
+            ProtocolKind::Alternating => {
+                let h = self.alt.as_ref().unwrap();
+                probs
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &p)| p * h.code_len(self.offsets[type_id] + j) as f64)
+                    .sum()
+            }
+        }
+    }
+}
+
+/// ENC: entropy-code a quantized vector into a bit buffer.
+pub fn encode_vector(qv: &QuantizedVector, books: &Codebooks) -> BitBuf {
+    // rough capacity guess: 6 bits/coord
+    let mut w = BitWriter::with_capacity_bits(qv.dim * 6 + qv.layers.len() * NORM_BITS);
+    for layer in &qv.layers {
+        w.write_f32(layer.norm as f32);
+        for i in 0..layer.len {
+            let sym = layer.indices[i] as usize;
+            books.encode_symbol(&mut w, layer.type_id, sym);
+            if sym != 0 {
+                w.write_bit(layer.sign(i));
+            }
+        }
+    }
+    w.finish()
+}
+
+/// DEC: reconstruct the wire form given the shared layer map.
+pub fn decode_vector(buf: &BitBuf, map: &LayerMap, books: &Codebooks) -> QuantizedVector {
+    let mut r = buf.reader();
+    let mut layers = Vec::with_capacity(map.layers.len());
+    for l in &map.layers {
+        let norm = r.read_f32() as f64;
+        let mut indices = vec![0u8; l.len];
+        let mut signs = vec![0u64; l.len.div_ceil(64)];
+        for i in 0..l.len {
+            let sym = books.decode_symbol(&mut r, l.type_id);
+            indices[i] = sym as u8;
+            if sym != 0 && r.read_bit() {
+                signs[i / 64] |= 1 << (i % 64);
+            }
+        }
+        layers.push(QuantizedLayer { norm, indices, signs, type_id: l.type_id, len: l.len });
+    }
+    debug_assert_eq!(r.remaining(), 0, "trailing bits");
+    QuantizedVector { layers, dim: map.dim }
+}
+
+/// Convenience: measured wire size in bits for a quantized vector.
+pub fn encoded_bits(qv: &QuantizedVector, books: &Codebooks) -> usize {
+    encode_vector(qv, books).len_bits()
+}
+
+/// Empirical per-type symbol counts of a quantized vector — used to build /
+/// refresh codebooks and to check the Theorem 5.3 bound.
+pub fn symbol_counts(qv: &QuantizedVector, num_types: usize, sizes: &[usize]) -> Vec<Vec<f64>> {
+    let mut counts: Vec<Vec<f64>> = (0..num_types).map(|m| vec![0.0; sizes[m]]).collect();
+    for l in &qv.layers {
+        for i in 0..l.len {
+            counts[l.type_id][l.indices[i] as usize] += 1.0;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::layer_map::LayerMap;
+    use crate::quant::quantizer::{dequantize, quantize};
+    use crate::quant::{LevelSequence, QuantConfig};
+    use crate::stats::rng::Rng;
+    use crate::util::prop::for_cases;
+
+    fn setup() -> (LayerMap, QuantConfig, Vec<f32>) {
+        let map = LayerMap::from_spec(&[
+            ("a.w", 300, "ff"),
+            ("a.b", 20, "bias"),
+            ("b.w", 200, "ff"),
+        ]);
+        let cfg = QuantConfig {
+            sequences: vec![LevelSequence::bits(3), LevelSequence::bits(5)],
+            q: 2.0,
+        };
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..map.dim).map(|_| rng.gaussian() as f32).collect();
+        (map, cfg, v)
+    }
+
+    #[test]
+    fn roundtrip_main() {
+        let (map, cfg, v) = setup();
+        let mut rng = Rng::new(2);
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        let books = Codebooks::uniform(ProtocolKind::Main, &cfg, &map.type_proportions());
+        let buf = encode_vector(&qv, &books);
+        let back = decode_vector(&buf, &map, &books);
+        assert_eq!(dequantize(&back, &cfg), dequantize(&qv, &cfg));
+    }
+
+    #[test]
+    fn roundtrip_alternating() {
+        let (map, cfg, v) = setup();
+        let mut rng = Rng::new(3);
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        let books =
+            Codebooks::uniform(ProtocolKind::Alternating, &cfg, &map.type_proportions());
+        let buf = encode_vector(&qv, &books);
+        let back = decode_vector(&buf, &map, &books);
+        assert_eq!(dequantize(&back, &cfg), dequantize(&qv, &cfg));
+    }
+
+    #[test]
+    fn tuned_codebook_shrinks_stream() {
+        let (map, cfg, v) = setup();
+        let mut rng = Rng::new(4);
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        let uniform = Codebooks::uniform(ProtocolKind::Main, &cfg, &map.type_proportions());
+        let sizes: Vec<usize> = cfg.sequences.iter().map(|s| s.num_symbols()).collect();
+        let counts = symbol_counts(&qv, map.num_types(), &sizes);
+        let probs: Vec<Vec<f64>> = counts.iter().map(|c| normalize(c)).collect();
+        let tuned = Codebooks::build(ProtocolKind::Main, &probs, &map.type_proportions());
+        let b_uniform = encoded_bits(&qv, &uniform);
+        let b_tuned = encoded_bits(&qv, &tuned);
+        assert!(b_tuned <= b_uniform, "{b_tuned} vs {b_uniform}");
+        // roundtrip still exact with the tuned codebook
+        let buf = encode_vector(&qv, &tuned);
+        let back = decode_vector(&buf, &map, &tuned);
+        assert_eq!(dequantize(&back, &cfg), dequantize(&qv, &cfg));
+    }
+
+    #[test]
+    fn main_beats_or_matches_alternating_on_shared_structure() {
+        // Remark D.3: main trades robustness for compression.
+        let (map, cfg, v) = setup();
+        let mut rng = Rng::new(5);
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        let sizes: Vec<usize> = cfg.sequences.iter().map(|s| s.num_symbols()).collect();
+        let probs: Vec<Vec<f64>> =
+            symbol_counts(&qv, map.num_types(), &sizes).iter().map(|c| normalize(c)).collect();
+        let main = Codebooks::build(ProtocolKind::Main, &probs, &map.type_proportions());
+        let alt =
+            Codebooks::build(ProtocolKind::Alternating, &probs, &map.type_proportions());
+        let bm = encoded_bits(&qv, &main);
+        let ba = encoded_bits(&qv, &alt);
+        assert!(bm as f64 <= ba as f64 * 1.05, "main {bm} vs alt {ba}");
+    }
+
+    #[test]
+    fn compresses_below_fixed_width_on_skewed_gradients(){
+        // gradient-like vectors: most mass at the zero level with a tuned book
+        let map = LayerMap::single(4096);
+        let cfg = QuantConfig::uniform_bits(1, 5, 2.0);
+        let mut rng = Rng::new(6);
+        // heavy-tailed: a few large coords dominate the norm
+        let v: Vec<f32> = (0..4096)
+            .map(|i| if i % 97 == 0 { rng.gaussian() as f32 * 30.0 } else { rng.gaussian() as f32 * 0.05 })
+            .collect();
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        let sizes = vec![cfg.sequences[0].num_symbols()];
+        let probs: Vec<Vec<f64>> =
+            symbol_counts(&qv, 1, &sizes).iter().map(|c| normalize(c)).collect();
+        let books = Codebooks::build(ProtocolKind::Main, &probs, &map.type_proportions());
+        let bits = encoded_bits(&qv, &books);
+        let fixed = crate::quant::quantizer::fixed_width_bits(&qv, &cfg, NORM_BITS);
+        assert!(bits < fixed, "entropy {bits} vs fixed {fixed}");
+    }
+
+    #[test]
+    fn prop_roundtrip_both_protocols() {
+        for_cases(25, 77, |g| {
+            let n1 = g.usize_in(1, 150);
+            let n2 = g.usize_in(1, 150);
+            let map = LayerMap::from_spec(&[("x", n1, "ff"), ("y", n2, "emb")]);
+            let cfg = QuantConfig {
+                sequences: vec![
+                    LevelSequence::new(g.level_sequence(6)),
+                    LevelSequence::new(g.level_sequence(10)),
+                ],
+                q: 2.0,
+            };
+            let v = g.vec_f32(map.dim, 2.0);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let qv = quantize(&v, &map, &cfg, &mut rng);
+            for kind in [ProtocolKind::Main, ProtocolKind::Alternating] {
+                let books = Codebooks::uniform(kind, &cfg, &map.type_proportions());
+                let buf = encode_vector(&qv, &books);
+                let back = decode_vector(&buf, &map, &books);
+                assert_eq!(dequantize(&back, &cfg), dequantize(&qv, &cfg));
+            }
+        });
+    }
+}

@@ -1,0 +1,87 @@
+//! Per-step metrics the coordinator emits (compute vs encode vs wire time,
+//! bytes, losses) — the raw material of Tables 1–2 and Figure 4.
+
+#[derive(Clone, Debug, Default)]
+pub struct StepMetrics {
+    pub step: usize,
+    /// measured seconds spent in oracle / model execution
+    pub compute_s: f64,
+    /// measured seconds spent quantizing + entropy coding + decoding
+    pub codec_s: f64,
+    /// modeled seconds on the wire (network simulator on real byte counts)
+    pub comm_s: f64,
+    /// encoded payload bytes per node this step
+    pub bytes_per_node: f64,
+    /// workload-specific scalars (losses, w-dist, fid...)
+    pub scalars: Vec<(String, f64)>,
+}
+
+impl StepMetrics {
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.codec_s + self.comm_s
+    }
+
+    pub fn scalar(&self, name: &str) -> Option<f64> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn push_scalar(&mut self, name: &str, v: f64) {
+        self.scalars.push((name.to_string(), v));
+    }
+}
+
+/// Aggregate a run's step metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub steps: Vec<StepMetrics>,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, m: StepMetrics) {
+        self.steps.push(m);
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|m| m.total_s()).sum::<f64>() / self.steps.len() as f64
+            * 1e3
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.steps.iter().map(|m| m.bytes_per_node).sum()
+    }
+
+    pub fn series(&self, name: &str) -> Vec<(usize, f64)> {
+        self.steps
+            .iter()
+            .filter_map(|m| m.scalar(name).map(|v| (m.step, v)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_series() {
+        let mut run = RunMetrics::default();
+        for i in 0..3 {
+            let mut m = StepMetrics {
+                step: i,
+                compute_s: 0.1,
+                codec_s: 0.01,
+                comm_s: 0.04,
+                bytes_per_node: 100.0,
+                scalars: vec![],
+            };
+            m.push_scalar("loss", i as f64);
+            run.push(m);
+        }
+        assert!((run.mean_step_ms() - 150.0).abs() < 1e-9);
+        assert_eq!(run.series("loss"), vec![(0, 0.0), (1, 1.0), (2, 2.0)]);
+        assert_eq!(run.total_bytes(), 300.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! L3 distributed coordinator: the data-parallel synchronous engine of
+//! Section 3.1 — K nodes, each holding a local parameter copy and a private
+//! stochastic oracle; per step every node quantizes + entropy-codes its dual
+//! vector, broadcasts it, decodes the others and applies the identical
+//! (ODA) update.
+//!
+//! Two engines share the same step math:
+//!  * `sim`      — deterministic in-process engine with a simulated network
+//!                 clock (drives the Table 1/2 harnesses and the GAN/LM
+//!                 trainers; PJRT executables are not Sync so model-backed
+//!                 sources run here);
+//!  * `parallel` — real `std::thread` workers exchanging encoded `BitBuf`s
+//!                 over channels (exercises the actual concurrency for
+//!                 VI-operator sources; integration-tested for bit-identical
+//!                 agreement with `sim`).
+
+pub mod metrics;
+pub mod parallel;
+pub mod sim;
+
+pub use metrics::StepMetrics;
+pub use sim::{ClusterSim, StepTimeModel};

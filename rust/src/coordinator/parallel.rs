@@ -1,0 +1,221 @@
+//! Threaded coordinator: real `std::thread` workers, real encoded `BitBuf`s
+//! over channels. Each worker owns its oracle + quantizer + encoder; the
+//! leader decodes every payload exactly as a receiving node would.
+//!
+//! Used by the VI-operator workloads (operators are `Sync`); the PJRT-backed
+//! models run on the `sim` engine instead (executables are not `Sync`).
+//! Integration tests assert bit-identical aggregates between both engines
+//! under the same seeds.
+
+use crate::coding::bitio::BitBuf;
+use crate::coding::protocol::{decode_vector, encode_vector, Codebooks, ProtocolKind};
+use crate::quant::layer_map::LayerMap;
+use crate::quant::quantizer::{dequantize, quantize};
+use crate::quant::QuantConfig;
+use crate::stats::rng::Rng;
+use crate::vi::noise::{NoiseModel, Oracle};
+use crate::vi::operator::Operator;
+use std::sync::mpsc;
+
+/// Message from leader to workers each round.
+enum Cmd {
+    Eval(Vec<f64>),
+    Stop,
+}
+
+/// Worker reply: the encoded dual vector.
+struct Reply {
+    node: usize,
+    payload: BitBuf,
+}
+
+/// Configuration shared by all nodes (the synchronized quantization state).
+#[derive(Clone)]
+pub struct SharedQuantState {
+    pub map: LayerMap,
+    pub cfg: QuantConfig,
+    pub protocol: ProtocolKind,
+}
+
+impl SharedQuantState {
+    pub fn books(&self) -> Codebooks {
+        Codebooks::uniform(self.protocol, &self.cfg, &self.map.type_proportions())
+    }
+}
+
+/// Run `steps` rounds of the distributed exchange with `k` worker threads:
+/// at each round the leader broadcasts the query point, every worker samples
+/// its oracle, quantizes, encodes; the leader decodes all payloads, averages
+/// and applies `update` to produce the next query point.
+///
+/// Returns (final x, total wire bits, mean decoded vector of the last round).
+pub fn run_rounds(
+    op: &dyn Operator,
+    noise: NoiseModel,
+    k: usize,
+    state: &SharedQuantState,
+    x0: Vec<f64>,
+    steps: usize,
+    seed: u64,
+    mut update: impl FnMut(&mut Vec<f64>, &[f64], usize),
+) -> (Vec<f64>, u64, Vec<f64>) {
+    let d = op.dim();
+    assert_eq!(x0.len(), d);
+    let books = state.books();
+
+    let mut to_workers: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(k);
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+
+    let mut x = x0;
+    let mut total_bits = 0u64;
+    let mut last_mean = vec![0.0; d];
+
+    std::thread::scope(|scope| {
+        for node in 0..k {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            to_workers.push(tx);
+            let reply_tx = reply_tx.clone();
+            let state = state.clone();
+            let books = state.books();
+            scope.spawn(move || {
+                let mut oracle =
+                    Oracle::new(op, noise, seed ^ (0x9E37 + node as u64 * 0x79B9));
+                let mut qrng = Rng::new(seed.wrapping_add(node as u64 * 7919 + 13));
+                while let Ok(Cmd::Eval(xq)) = rx.recv() {
+                    let dual = oracle.sample(&xq);
+                    let v32: Vec<f32> = dual.iter().map(|&v| v as f32).collect();
+                    let qv = quantize(&v32, &state.map, &state.cfg, &mut qrng);
+                    let payload = encode_vector(&qv, &books);
+                    if reply_tx.send(Reply { node, payload }).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(reply_tx);
+
+        for t in 1..=steps {
+            for tx in &to_workers {
+                tx.send(Cmd::Eval(x.clone())).expect("worker alive");
+            }
+            let mut mean = vec![0.0; d];
+            for _ in 0..k {
+                let r = reply_rx.recv().expect("reply");
+                total_bits += r.payload.len_bits() as u64;
+                let qv = decode_vector(&r.payload, &state.map, &books);
+                let hat = dequantize(&qv, &state.cfg);
+                let _ = r.node;
+                for (m, v) in mean.iter_mut().zip(&hat) {
+                    *m += *v as f64 / k as f64;
+                }
+            }
+            update(&mut x, &mean, t);
+            last_mean = mean;
+        }
+        for tx in &to_workers {
+            let _ = tx.send(Cmd::Stop);
+        }
+    });
+
+    (x, total_bits, last_mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::LevelSequence;
+    use crate::stats::rng::Rng;
+    use crate::stats::vecops::{l2_norm64, sub};
+    use crate::vi::operator::QuadraticOperator;
+
+    fn state(d: usize, bits: u32) -> SharedQuantState {
+        SharedQuantState {
+            map: LayerMap::single(d),
+            cfg: QuantConfig::same(1, LevelSequence::bits(bits), 2.0),
+            protocol: ProtocolKind::Main,
+        }
+    }
+
+    #[test]
+    fn threaded_sgd_converges() {
+        let mut rng = Rng::new(1);
+        let op = QuadraticOperator::random(16, 0.5, &mut rng);
+        let st = state(16, 6);
+        let (x, bits, _) = run_rounds(
+            &op,
+            NoiseModel::Absolute { sigma: 0.1 },
+            4,
+            &st,
+            vec![0.0; 16],
+            400,
+            7,
+            |x, mean, _| {
+                for (xi, g) in x.iter_mut().zip(mean) {
+                    *xi -= 0.08 * g;
+                }
+            },
+        );
+        let err = l2_norm64(&sub(&x, &op.sol));
+        assert!(err < 0.3 * l2_norm64(&op.sol), "{err}");
+        assert!(bits > 0);
+    }
+
+    #[test]
+    fn threaded_matches_sequential_given_seeds() {
+        // same oracle + quantizer seeds => identical aggregate per round
+        let mut rng = Rng::new(2);
+        let op = QuadraticOperator::random(8, 0.5, &mut rng);
+        let st = state(8, 5);
+        let books = st.books();
+        let seed = 42u64;
+        let k = 3;
+        let x0 = vec![0.25; 8];
+
+        // sequential reference for one round
+        let mut seq_mean = vec![0.0; 8];
+        for node in 0..k {
+            let mut oracle = Oracle::new(
+                &op,
+                NoiseModel::Absolute { sigma: 0.2 },
+                seed ^ (0x9E37 + node as u64 * 0x79B9),
+            );
+            let mut qrng = Rng::new(seed.wrapping_add(node as u64 * 7919 + 13));
+            let dual = oracle.sample(&x0);
+            let v32: Vec<f32> = dual.iter().map(|&v| v as f32).collect();
+            let qv = quantize(&v32, &st.map, &st.cfg, &mut qrng);
+            let hat = dequantize(&decode_vector(&encode_vector(&qv, &books), &st.map, &books), &st.cfg);
+            for (m, v) in seq_mean.iter_mut().zip(&hat) {
+                *m += *v as f64 / k as f64;
+            }
+        }
+
+        let (_, _, par_mean) = run_rounds(
+            &op,
+            NoiseModel::Absolute { sigma: 0.2 },
+            k,
+            &st,
+            x0,
+            1,
+            seed,
+            |_x, _mean, _| {},
+        );
+        for (a, b) in par_mean.iter().zip(&seq_mean) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn all_nodes_contribute() {
+        let mut rng = Rng::new(3);
+        let op = QuadraticOperator::random(4, 0.5, &mut rng);
+        let st = state(4, 8);
+        // with zero noise and fine quantization, mean ~= A(x0)
+        let x0 = vec![1.0; 4];
+        let a = op.apply_vec(&x0);
+        let (_, _, mean) =
+            run_rounds(&op, NoiseModel::None, 5, &st, x0, 1, 9, |_, _, _| {});
+        for (m, t) in mean.iter().zip(&a) {
+            assert!((m - t).abs() < 0.05 * t.abs().max(1.0), "{m} vs {t}");
+        }
+    }
+}

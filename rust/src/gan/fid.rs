@@ -1,0 +1,144 @@
+//! Fréchet distance between Gaussian fits of sample clouds — the FID metric
+//! of Figure 4, computed exactly on the 2-D feature space of the GMM
+//! substitute (DESIGN.md): FID = ||mu1 - mu2||^2 + tr(C1 + C2 - 2 (C1 C2)^{1/2}).
+//!
+//! For 2x2 PSD covariances tr((C1 C2)^{1/2}) = sqrt(l1) + sqrt(l2) with
+//! l1, l2 the (real, nonnegative) eigenvalues of C1 C2 — computed in closed
+//! form from the characteristic polynomial.
+
+/// Mean + covariance of a 2-D point cloud (rows of (x, y)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Gauss2 {
+    pub mean: [f64; 2],
+    /// covariance [[xx, xy], [xy, yy]]
+    pub cov: [[f64; 2]; 2],
+}
+
+impl Gauss2 {
+    pub fn fit(points: &[f32]) -> Self {
+        assert!(points.len() >= 4 && points.len() % 2 == 0);
+        let n = points.len() / 2;
+        let nf = n as f64;
+        let mut mean = [0.0f64; 2];
+        for p in points.chunks(2) {
+            mean[0] += p[0] as f64;
+            mean[1] += p[1] as f64;
+        }
+        mean[0] /= nf;
+        mean[1] /= nf;
+        let mut cov = [[0.0f64; 2]; 2];
+        for p in points.chunks(2) {
+            let dx = p[0] as f64 - mean[0];
+            let dy = p[1] as f64 - mean[1];
+            cov[0][0] += dx * dx;
+            cov[0][1] += dx * dy;
+            cov[1][1] += dy * dy;
+        }
+        cov[0][0] /= nf;
+        cov[0][1] /= nf;
+        cov[1][0] = cov[0][1];
+        cov[1][1] /= nf;
+        Gauss2 { mean, cov }
+    }
+}
+
+fn mat_mul(a: &[[f64; 2]; 2], b: &[[f64; 2]; 2]) -> [[f64; 2]; 2] {
+    let mut c = [[0.0; 2]; 2];
+    for i in 0..2 {
+        for j in 0..2 {
+            c[i][j] = a[i][0] * b[0][j] + a[i][1] * b[1][j];
+        }
+    }
+    c
+}
+
+/// tr(sqrt(M)) for M = C1 C2 with C1, C2 PSD: eigenvalues of M are real and
+/// nonnegative; tr sqrt = sqrt(l1) + sqrt(l2) = sqrt(tr + 2 sqrt(det)).
+fn tr_sqrt_product(c1: &[[f64; 2]; 2], c2: &[[f64; 2]; 2]) -> f64 {
+    let m = mat_mul(c1, c2);
+    let tr = m[0][0] + m[1][1];
+    let det = m[0][0] * m[1][1] - m[0][1] * m[1][0];
+    // numerical guards: PSD product can dip slightly negative
+    let det = det.max(0.0);
+    let inner = (tr + 2.0 * det.sqrt()).max(0.0);
+    inner.sqrt()
+}
+
+/// Fréchet distance between two fitted Gaussians.
+pub fn frechet(a: &Gauss2, b: &Gauss2) -> f64 {
+    let dm = (a.mean[0] - b.mean[0]).powi(2) + (a.mean[1] - b.mean[1]).powi(2);
+    let tr_a = a.cov[0][0] + a.cov[1][1];
+    let tr_b = b.cov[0][0] + b.cov[1][1];
+    (dm + tr_a + tr_b - 2.0 * tr_sqrt_product(&a.cov, &b.cov)).max(0.0)
+}
+
+/// FID between two interleaved (x, y) sample buffers.
+pub fn fid(fake: &[f32], real: &[f32]) -> f64 {
+    frechet(&Gauss2::fit(fake), &Gauss2::fit(real))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    fn cloud(rng: &mut Rng, n: usize, mx: f64, my: f64, sx: f64, sy: f64) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            out.push((mx + sx * rng.gaussian()) as f32);
+            out.push((my + sy * rng.gaussian()) as f32);
+        }
+        out
+    }
+
+    #[test]
+    fn identical_clouds_zero_fid() {
+        let mut rng = Rng::new(1);
+        let c = cloud(&mut rng, 4000, 0.5, -0.5, 1.0, 2.0);
+        assert!(fid(&c, &c) < 1e-9);
+    }
+
+    #[test]
+    fn mean_shift_equals_squared_distance() {
+        // same covariance, shifted mean: FID -> ||dmu||^2
+        let mut rng = Rng::new(2);
+        let a = cloud(&mut rng, 60_000, 0.0, 0.0, 1.0, 1.0);
+        let b = cloud(&mut rng, 60_000, 3.0, 4.0, 1.0, 1.0);
+        let f = fid(&a, &b);
+        assert!((f - 25.0).abs() < 0.7, "{f}");
+    }
+
+    #[test]
+    fn scale_mismatch_detected() {
+        // zero-mean isotropic with std 1 vs std 2:
+        // FID = tr(C1 + C2 - 2 sqrt(C1 C2)) = 2 (1 + 4 - 2*2) = 2
+        let mut rng = Rng::new(3);
+        let a = cloud(&mut rng, 80_000, 0.0, 0.0, 1.0, 1.0);
+        let b = cloud(&mut rng, 80_000, 0.0, 0.0, 2.0, 2.0);
+        let f = fid(&a, &b);
+        assert!((f - 2.0).abs() < 0.25, "{f}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let mut rng = Rng::new(4);
+        let a = cloud(&mut rng, 5000, 0.0, 0.0, 1.0, 0.5);
+        let b = cloud(&mut rng, 5000, 1.0, 0.0, 0.8, 1.2);
+        let fab = fid(&a, &b);
+        let fba = fid(&b, &a);
+        assert!((fab - fba).abs() < 1e-9);
+        assert!(fab > 0.5);
+    }
+
+    #[test]
+    fn fit_recovers_moments() {
+        let mut rng = Rng::new(5);
+        let c = cloud(&mut rng, 100_000, 1.0, -2.0, 0.5, 1.5);
+        let g = Gauss2::fit(&c);
+        assert!((g.mean[0] - 1.0).abs() < 0.02);
+        assert!((g.mean[1] + 2.0).abs() < 0.03);
+        assert!((g.cov[0][0] - 0.25).abs() < 0.02);
+        assert!((g.cov[1][1] - 2.25).abs() < 0.06);
+        assert!(g.cov[0][1].abs() < 0.02);
+    }
+}

@@ -1,0 +1,9 @@
+//! WGAN training system (Section 7.1): the FID metric on the GMM substitute
+//! and the distributed training driver combining PJRT model execution,
+//! compression and the network-timed coordinator.
+
+pub mod fid;
+pub mod trainer;
+
+pub use fid::{fid, Gauss2};
+pub use trainer::{train, GanCompression, GanOptimizer, GanRunResult, GanTrainConfig};

@@ -1,0 +1,24 @@
+//! # qoda — Layer-wise Quantization for Quantized Optimistic Dual Averaging
+//!
+//! Production reproduction of the ICML 2025 paper: a three-layer
+//! rust + JAX + Pallas stack where rust owns the distributed training loop
+//! (L3), JAX defines the models (L2, AOT-lowered to HLO text) and Pallas
+//! provides the quantization / matmul kernels (L1). Python never runs on
+//! the request path — the rust binary executes `artifacts/*.hlo.txt` via
+//! PJRT (the `xla` crate).
+//!
+//! Top-level modules mirror DESIGN.md's system inventory.
+
+pub mod bench_harness;
+pub mod coding;
+pub mod coordinator;
+pub mod gan;
+pub mod lm;
+pub mod net;
+pub mod oda;
+pub mod powersgd;
+pub mod quant;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+pub mod vi;

@@ -1,0 +1,9 @@
+//! Transformer-LM training system (Section 7.2): the synthetic Markov
+//! corpus (WikiText substitute), and the PowerSGD + quantization trainer
+//! behind Table 3 and Figure 5.
+
+pub mod corpus;
+pub mod trainer;
+
+pub use corpus::Corpus;
+pub use trainer::{train, LmRunResult, LmTrainConfig, QuantTarget};

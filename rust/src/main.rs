@@ -1,0 +1,208 @@
+//! `qoda` — the leader entrypoint / experiment CLI.
+//!
+//! Subcommands (every paper table & figure + theory verifications):
+//!   table1            step time vs bandwidth (Table 1)
+//!   table2            weak scaling (Table 2)
+//!   fig4              WGAN FID curves: Adam vs QODA global vs layerwise
+//!   table3            transformer: PowerSGD x quantization (Table 3)
+//!   fig5              per-layer-type quantization ablation (Figure 5)
+//!   rates             GAP decay (V3/V4)   [--noise absolute|relative|relative-alt]
+//!   verify-variance   Theorem 5.1 check (V1)
+//!   verify-codelen    Theorem 5.3/D.5 check (V2)
+//!   verify-mqv        Remark 3.2 check (V5)
+//!   protocols         Main vs Alternating under jitter (V6)
+//!   optimism          QODA vs Q-GenX oracle/wire cost
+//!   ablations         adaptation-knob ablation (static/adaptive/L-GreCo)
+//!   train-gan         single WGAN training run
+//!   train-lm          single transformer-LM training run
+//!   all               run the non-PJRT suite (writes results/*.csv)
+
+use anyhow::Result;
+use qoda::bench_harness::{experiments, model_experiments};
+use qoda::gan::trainer::{GanCompression, GanOptimizer, GanTrainConfig};
+use qoda::lm::trainer::{LmTrainConfig, QuantTarget};
+use qoda::runtime::{LmModel, Runtime, WganModel};
+use qoda::util::cli::Args;
+use qoda::util::table::save_series_csv;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "table1" => {
+            let t = experiments::table1();
+            t.print();
+            t.save_csv("table1.csv")?;
+        }
+        "table2" => {
+            let t = experiments::table2();
+            t.print();
+            t.save_csv("table2.csv")?;
+        }
+        "fig4" => {
+            let steps = args.usize_or("steps", 240);
+            let nseeds = args.usize_or("seeds", 2);
+            let seeds: Vec<u64> = (1..=nseeds as u64).collect();
+            let (summary, rows) = model_experiments::fig4(steps, &seeds)?;
+            summary.print();
+            summary.save_csv("fig4_summary.csv")?;
+            save_series_csv(
+                "fig4_fid.csv",
+                &["step", "adam", "qoda_global", "qoda_layerwise"],
+                &rows,
+            )?;
+            println!("curves -> results/fig4_fid.csv");
+        }
+        "table3" => {
+            let steps = args.usize_or("steps", 120);
+            let nseeds = args.usize_or("seeds", 2);
+            let seeds: Vec<u64> = (1..=nseeds as u64).collect();
+            let ranks = [4usize, 8, 16];
+            let t = model_experiments::table3(steps, &ranks, &seeds)?;
+            t.print();
+            t.save_csv("table3.csv")?;
+        }
+        "fig5" => {
+            let steps = args.usize_or("steps", 120);
+            let nseeds = args.usize_or("seeds", 2);
+            let seeds: Vec<u64> = (1..=nseeds as u64).collect();
+            let t = model_experiments::fig5(steps, &seeds)?;
+            t.print();
+            t.save_csv("fig5.csv")?;
+        }
+        "rates" => {
+            let noise = args.get_or("noise", "absolute");
+            let t = experiments::rates_table(&noise);
+            t.print();
+            t.save_csv(&format!("rates_{noise}.csv"))?;
+        }
+        "verify-variance" => {
+            let t = experiments::verify_variance();
+            t.print();
+            t.save_csv("verify_variance.csv")?;
+        }
+        "verify-codelen" => {
+            let t = experiments::verify_codelen();
+            t.print();
+            t.save_csv("verify_codelen.csv")?;
+        }
+        "verify-mqv" => {
+            let t = experiments::verify_mqv();
+            t.print();
+            t.save_csv("verify_mqv.csv")?;
+        }
+        "protocols" => {
+            let t = experiments::protocols_table();
+            t.print();
+            t.save_csv("protocols.csv")?;
+        }
+        "ablations" => {
+            let t = experiments::ablation_table();
+            t.print();
+            t.save_csv("ablations.csv")?;
+        }
+        "optimism" => {
+            let t = experiments::optimism_table();
+            t.print();
+            t.save_csv("optimism.csv")?;
+        }
+        "train-gan" => {
+            let rt = Runtime::cpu()?;
+            let model = WganModel::load(&rt)?;
+            let cfg = GanTrainConfig {
+                optimizer: match args.get_or("optimizer", "qoda").as_str() {
+                    "adam" => GanOptimizer::Adam,
+                    _ => GanOptimizer::OptimisticAdam,
+                },
+                compression: match args.get_or("compression", "layerwise").as_str() {
+                    "none" => GanCompression::None,
+                    "global" => GanCompression::Global {
+                        bits: args.usize_or("bits", 5) as u32,
+                        bucket: args.usize_or("bucket", 128),
+                    },
+                    _ => GanCompression::LayerwiseLGreco {
+                        bits: args.usize_or("bits", 5) as u32,
+                        bucket: args.usize_or("bucket", 128),
+                        every: args.usize_or("update-every", 50),
+                    },
+                },
+                k_nodes: args.usize_or("k", 4),
+                steps: args.usize_or("steps", 300),
+                lr: args.f64_or("lr", 5e-4),
+                clip: args.f64_or("clip", 0.1) as f32,
+                fid_every: args.usize_or("fid-every", 25),
+                seed: args.u64_or("seed", 1),
+                bandwidth_gbps: args.f64_or("bandwidth", 5.0),
+            };
+            println!("training WGAN: {cfg:?}");
+            let run = qoda::gan::trainer::train(&model, &cfg)?;
+            for m in run.metrics.steps.iter().step_by(10.max(cfg.steps / 30)) {
+                println!(
+                    "step {:>4}  g_loss {:+.4}  w_dist {:+.4}  step_ms {:.1}  KB/node {:.1}{}",
+                    m.step,
+                    m.scalar("g_loss").unwrap_or(f64::NAN),
+                    m.scalar("w_dist").unwrap_or(f64::NAN),
+                    m.total_s() * 1e3,
+                    m.bytes_per_node / 1e3,
+                    m.scalar("fid").map(|f| format!("  FID {f:.4}")).unwrap_or_default(),
+                );
+            }
+            println!("final FID: {:.4}", run.final_fid);
+        }
+        "train-lm" => {
+            let rt = Runtime::cpu()?;
+            let model = LmModel::load(&rt)?;
+            let cfg = LmTrainConfig {
+                rank: args.usize_or("rank", 16),
+                quant_bits: args.get("bits").map(|b| b.parse().unwrap()),
+                layerwise: args.bool_or("layerwise", true),
+                target: QuantTarget::All,
+                k_nodes: args.usize_or("k", 2),
+                steps: args.usize_or("steps", 120),
+                lr: args.f64_or("lr", 2e-3),
+                seed: args.u64_or("seed", 1),
+                eval_every: args.usize_or("eval-every", 20),
+            };
+            println!("training LM: {cfg:?}");
+            let run = qoda::lm::trainer::train(&model, &cfg)?;
+            for (s, l) in run.loss_curve.iter().step_by(10.max(cfg.steps / 20)) {
+                println!("step {s:>4}  train nll {l:.4}");
+            }
+            for (s, l) in &run.eval_curve {
+                println!("eval step {s:>4}  nll {l:.4}  ppl {:.2}", l.exp());
+            }
+            println!(
+                "final ppl {:.2}  compression rate {:.2}x",
+                run.final_ppl, run.compression_rate
+            );
+        }
+        "all" => {
+            for (name, t) in [
+                ("table1", experiments::table1()),
+                ("table2", experiments::table2()),
+                ("verify_variance", experiments::verify_variance()),
+                ("verify_codelen", experiments::verify_codelen()),
+                ("verify_mqv", experiments::verify_mqv()),
+                ("protocols", experiments::protocols_table()),
+                ("optimism", experiments::optimism_table()),
+            ] {
+                t.print();
+                t.save_csv(&format!("{name}.csv"))?;
+                println!();
+            }
+            for noise in ["absolute", "relative", "relative-alt"] {
+                let t = experiments::rates_table(noise);
+                t.print();
+                t.save_csv(&format!("rates_{noise}.csv"))?;
+                println!();
+            }
+        }
+        _ => {
+            println!(
+                "usage: qoda <table1|table2|fig4|table3|fig5|rates|verify-variance|\
+                 verify-codelen|verify-mqv|protocols|optimism|train-gan|train-lm|all> [flags]"
+            );
+        }
+    }
+    Ok(())
+}

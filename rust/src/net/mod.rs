@@ -1,0 +1,12 @@
+//! Network model for the multi-node Genesis-Cloud-style environment of the
+//! paper's Section 7.1 (4–16 single-GPU nodes, 1–5 Gbps inter-node links,
+//! OpenMPI for quantized payloads / NCCL ring-allreduce for fp32).
+//!
+//! The coder produces *real encoded byte counts*; this module converts them
+//! to wall-clock the way a bandwidth-bound cluster does, including the ring
+//! collectives, per-hop latency, jitter (Remark D.3) and the baseline's
+//! scaling degradation that Table 2 exhibits.
+
+pub mod simulator;
+
+pub use simulator::{Collective, JitterModel, NetworkModel};

@@ -1,0 +1,161 @@
+//! Non-VI baselines for the GAN experiments (Figure 4): Adam on the game's
+//! gradient field, and the optimistic-Adam variant that the paper's
+//! "QODA-based extension of Adam" corresponds to (optimistic extrapolation
+//! with Adam preconditioning of the averaged dual direction, as in
+//! Daskalakis et al., 2018).
+
+use super::compress::Compressor;
+use super::source::DualSource;
+
+/// Adam moment state over a flat vector.
+pub struct AdamState {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl AdamState {
+    pub fn new(dim: usize, lr: f64) -> Self {
+        AdamState {
+            lr,
+            beta1: 0.5, // the WGAN-recipe betas (Gidel et al. codebase)
+            beta2: 0.9,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+
+    /// Preconditioned update direction for gradient g (call once per step).
+    pub fn direction(&mut self, g: &[f64]) -> Vec<f64> {
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let mut out = vec![0.0; g.len()];
+        for i in 0..g.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g[i] * g[i];
+            let mh = self.m[i] / b1t;
+            let vh = self.v[i] / b2t;
+            out[i] = self.lr * mh / (vh.sqrt() + self.eps);
+        }
+        out
+    }
+}
+
+/// Plain (simultaneous) Adam descent on the operator: the Figure 4 "Adam"
+/// baseline. Returns the iterate trajectory bits like the VI solvers.
+pub struct AdamSolver<'s> {
+    pub source: &'s mut dyn DualSource,
+    pub compressors: Vec<Box<dyn Compressor>>,
+    pub adam: AdamState,
+    /// optimistic extrapolation on/off (the QODA-extension toggle)
+    pub optimistic: bool,
+    pub total_bits: u64,
+}
+
+impl<'s> AdamSolver<'s> {
+    pub fn new(
+        source: &'s mut dyn DualSource,
+        compressors: Vec<Box<dyn Compressor>>,
+        lr: f64,
+        optimistic: bool,
+    ) -> Self {
+        let dim = source.dim();
+        assert_eq!(compressors.len(), source.num_nodes());
+        AdamSolver {
+            source,
+            compressors,
+            adam: AdamState::new(dim, lr),
+            optimistic,
+            total_bits: 0,
+        }
+    }
+
+    /// One optimizer step in place; returns the mean compressed dual used.
+    pub fn step(&mut self, x: &mut [f64], prev_dir: &mut Vec<f64>) -> Vec<f64> {
+        let k = self.source.num_nodes();
+        let kf = k as f64;
+        let d = x.len();
+        // optimistic lookahead using the previous direction
+        let query: Vec<f64> = if self.optimistic {
+            x.iter().zip(prev_dir.iter()).map(|(xi, p)| xi - p).collect()
+        } else {
+            x.to_vec()
+        };
+        let duals = self.source.duals(&query);
+        let mut mean = vec![0.0; d];
+        for (kk, dual) in duals.iter().enumerate() {
+            let (hat, bits) = self.compressors[kk].compress(dual);
+            self.total_bits += bits as u64;
+            for (m, v) in mean.iter_mut().zip(&hat) {
+                *m += v / kf;
+            }
+        }
+        let dir = self.adam.direction(&mean);
+        for (xi, di) in x.iter_mut().zip(&dir) {
+            *xi -= di;
+        }
+        *prev_dir = dir;
+        mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oda::compress::{Compressor, IdentityCompressor};
+    use crate::oda::source::OracleSource;
+    use crate::stats::rng::Rng;
+    use crate::stats::vecops::{l2_norm64, sub};
+    use crate::vi::noise::NoiseModel;
+    use crate::vi::operator::QuadraticOperator;
+
+    fn identity_boxes(k: usize) -> Vec<Box<dyn Compressor>> {
+        (0..k).map(|_| Box::new(IdentityCompressor) as Box<dyn Compressor>).collect()
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut rng = Rng::new(1);
+        let op = QuadraticOperator::random(8, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.1 }, 2);
+        let mut solver = AdamSolver::new(&mut src, identity_boxes(2), 0.05, false);
+        let mut x = vec![0.0; 8];
+        let mut prev = vec![0.0; 8];
+        for _ in 0..600 {
+            solver.step(&mut x, &mut prev);
+        }
+        let err = l2_norm64(&sub(&x, &op.sol));
+        assert!(err < 0.3 * l2_norm64(&op.sol), "{err}");
+    }
+
+    #[test]
+    fn optimistic_variant_also_converges() {
+        let mut rng = Rng::new(3);
+        let op = QuadraticOperator::random(8, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 2, NoiseModel::None, 4);
+        let mut solver = AdamSolver::new(&mut src, identity_boxes(2), 0.05, true);
+        let mut x = vec![0.0; 8];
+        let mut prev = vec![0.0; 8];
+        for _ in 0..600 {
+            solver.step(&mut x, &mut prev);
+        }
+        let err = l2_norm64(&sub(&x, &op.sol));
+        assert!(err < 0.3 * l2_norm64(&op.sol), "{err}");
+    }
+
+    #[test]
+    fn adam_state_direction_bounded_by_lr() {
+        let mut a = AdamState::new(4, 0.01);
+        let dir = a.direction(&[1000.0, -1000.0, 0.0, 1.0]);
+        for d in &dir {
+            assert!(d.abs() <= 0.011, "{d}"); // |dir| ~ lr after bias correction
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Adaptive learning-rate schedules.
+//!
+//! Eq. (4):   eta_t = gamma_t = (1 + sum_{s<t} sum_k ||V̂_{k,s+1/2} -
+//! ```text
+//!            V̂_{k,s-1/2}||^2 / K^2)^{-1/2}
+//! ```
+//!
+//! (Alt):     lambda_t = sum_{s<=t} ||sum_k V̂_{k,s+1/2}||^2 / K^2,
+//! ```text
+//!            mu_t     = sum_{s<=t} ||X_s - X_{s+1}||^2,
+//!            gamma_t  = (1 + lambda_{t-2})^{q̂ - 1/2},
+//!            eta_t    = (1 + lambda_{t-2} + mu_{t-2})^{-1/2},  q̂ in (0, 1/4].
+//! ```
+
+
+pub trait LrSchedule: Send {
+    /// Called once per iteration after the new half-step dual vectors are
+    /// known. `avg_diff_sq` = sum_k ||V̂_{k,t+1/2} - V̂_{k,t-1/2}||^2 / K^2;
+    /// `avg_sum_sq` = ||sum_k V̂_{k,t+1/2}||^2 / K^2; `dx_sq` =
+    /// ||X_t - X_{t+1}||^2.
+    fn observe(&mut self, avg_diff_sq: f64, avg_sum_sq: f64, dx_sq: f64);
+
+    /// Extrapolation step size gamma_t for the *next* iteration.
+    fn gamma(&self) -> f64;
+
+    /// Averaging step size eta_t for the *next* iteration.
+    fn eta(&self) -> f64;
+}
+
+/// Constant step sizes (ablation baseline).
+pub struct ConstantLr {
+    pub gamma: f64,
+    pub eta: f64,
+}
+
+impl LrSchedule for ConstantLr {
+    fn observe(&mut self, _: f64, _: f64, _: f64) {}
+    fn gamma(&self) -> f64 {
+        self.gamma
+    }
+    fn eta(&self) -> f64 {
+        self.eta
+    }
+}
+
+/// The paper's main schedule (4).
+#[derive(Default)]
+pub struct AdaptiveLr {
+    sum: f64,
+}
+
+impl LrSchedule for AdaptiveLr {
+    fn observe(&mut self, avg_diff_sq: f64, _: f64, _: f64) {
+        self.sum += avg_diff_sq;
+    }
+
+    fn gamma(&self) -> f64 {
+        (1.0 + self.sum).powf(-0.5)
+    }
+
+    fn eta(&self) -> f64 {
+        self.gamma()
+    }
+}
+
+/// The (Alt) schedule of Section 6 with learning-rate separation.
+/// Histories are lagged by 2 as in the definition (t-2 sums).
+pub struct AltLr {
+    pub q_hat: f64,
+    lambda_hist: Vec<f64>,
+    mu_hist: Vec<f64>,
+}
+
+impl AltLr {
+    pub fn new(q_hat: f64) -> Self {
+        assert!(q_hat > 0.0 && q_hat <= 0.25, "q̂ in (0, 1/4]");
+        AltLr { q_hat, lambda_hist: vec![0.0], mu_hist: vec![0.0] }
+    }
+
+    fn lagged(&self, hist: &[f64]) -> f64 {
+        // value of the running sum two observations ago
+        let n = hist.len();
+        if n >= 3 {
+            hist[n - 3]
+        } else {
+            0.0
+        }
+    }
+}
+
+impl LrSchedule for AltLr {
+    fn observe(&mut self, _: f64, avg_sum_sq: f64, dx_sq: f64) {
+        let last_l = *self.lambda_hist.last().unwrap();
+        let last_m = *self.mu_hist.last().unwrap();
+        self.lambda_hist.push(last_l + avg_sum_sq);
+        self.mu_hist.push(last_m + dx_sq);
+    }
+
+    fn gamma(&self) -> f64 {
+        (1.0 + self.lagged(&self.lambda_hist)).powf(self.q_hat - 0.5)
+    }
+
+    fn eta(&self) -> f64 {
+        (1.0 + self.lagged(&self.lambda_hist) + self.lagged(&self.mu_hist)).powf(-0.5)
+    }
+}
+
+/// Helper: the observation quantities from per-node dual vectors.
+pub fn observe_from_duals(
+    duals: &[Vec<f64>],
+    prev_duals: &[Vec<f64>],
+    x_t: &[f64],
+    x_next: &[f64],
+) -> (f64, f64, f64) {
+    let k = duals.len() as f64;
+    let mut diff_sq = 0.0;
+    for (d, p) in duals.iter().zip(prev_duals) {
+        diff_sq += d
+            .iter()
+            .zip(p)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>();
+    }
+    let dim = duals[0].len();
+    let mut sum = vec![0.0; dim];
+    for d in duals {
+        for (s, v) in sum.iter_mut().zip(d) {
+            *s += v;
+        }
+    }
+    let sum_sq = sum.iter().map(|v| v * v).sum::<f64>();
+    let dx = x_t
+        .iter()
+        .zip(x_next)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>();
+    (diff_sq / (k * k), sum_sq / (k * k), dx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_is_nonincreasing_and_equal() {
+        let mut lr = AdaptiveLr::default();
+        assert_eq!(lr.gamma(), 1.0);
+        let mut prev = 1.0;
+        for i in 0..50 {
+            lr.observe(0.1 * (i % 3) as f64, 0.0, 0.0);
+            assert!(lr.gamma() <= prev + 1e-15);
+            assert_eq!(lr.gamma(), lr.eta());
+            prev = lr.gamma();
+        }
+    }
+
+    #[test]
+    fn adaptive_matches_formula() {
+        let mut lr = AdaptiveLr::default();
+        lr.observe(3.0, 0.0, 0.0);
+        assert!((lr.gamma() - (4.0f64).powf(-0.5)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn alt_gamma_geq_eta() {
+        let mut lr = AltLr::new(0.25);
+        for i in 0..30 {
+            lr.observe(0.0, 0.5 + (i % 5) as f64 * 0.1, 0.2);
+            assert!(lr.gamma() >= lr.eta() - 1e-15, "{} {}", lr.gamma(), lr.eta());
+        }
+    }
+
+    #[test]
+    fn alt_lags_by_two() {
+        let mut lr = AltLr::new(0.1);
+        // after one observation the t-2 sums are still empty
+        lr.observe(0.0, 10.0, 10.0);
+        assert_eq!(lr.gamma(), 1.0);
+        assert_eq!(lr.eta(), 1.0);
+        lr.observe(0.0, 10.0, 10.0);
+        assert_eq!(lr.gamma(), 1.0);
+        // third observation sees the first sum
+        lr.observe(0.0, 10.0, 10.0);
+        assert!(lr.gamma() < 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn alt_rejects_bad_qhat() {
+        AltLr::new(0.3);
+    }
+
+    #[test]
+    fn observe_from_duals_math() {
+        let duals = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let prev = vec![vec![0.0, 0.0], vec![0.0, 0.0]];
+        let (d, s, dx) =
+            observe_from_duals(&duals, &prev, &[0.0, 0.0], &[1.0, 1.0]);
+        // diff: (1 + 1) / 4
+        assert!((d - 0.5).abs() < 1e-15);
+        // sum = (1,1), ||.||^2 = 2, / 4
+        assert!((s - 0.5).abs() < 1e-15);
+        assert!((dx - 2.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,16 @@
+//! The distributed VI solvers: QODA (Algorithm 1), the Q-GenX extra-gradient
+//! baseline, Adam/optimistic-Adam baselines, the adaptive learning-rate
+//! schedules (Eq. 4 and Alt), and the compression pipeline they share.
+
+pub mod baseline;
+pub mod compress;
+pub mod lr;
+pub mod qgenx;
+pub mod qoda;
+pub mod source;
+
+pub use compress::{Adaptation, Compressor, IdentityCompressor, QuantCompressor};
+pub use lr::{AdaptiveLr, AltLr, ConstantLr, LrSchedule};
+pub use qgenx::QGenX;
+pub use qoda::{Qoda, QodaRun};
+pub use source::{DualSource, OracleSource};

@@ -1,0 +1,178 @@
+//! Q-GenX baseline (Ramezani-Kebrya et al., 2023): distributed *extra-
+//! gradient* with global quantization and an adaptive step size. Two oracle
+//! calls AND two compressed communications per iteration — the cost QODA's
+//! optimism halves (paper Section 4 / Appendix A.2).
+
+use super::compress::Compressor;
+use super::lr::LrSchedule;
+use super::qoda::{Checkpoint, QodaRun};
+use super::source::DualSource;
+
+pub struct QGenX<'s> {
+    pub source: &'s mut dyn DualSource,
+    /// one compressor per node (extrapolation and update messages share it)
+    pub compressors: Vec<Box<dyn Compressor>>,
+    pub lr: Box<dyn LrSchedule>,
+}
+
+impl<'s> QGenX<'s> {
+    pub fn new(
+        source: &'s mut dyn DualSource,
+        compressors: Vec<Box<dyn Compressor>>,
+        lr: Box<dyn LrSchedule>,
+    ) -> Self {
+        assert_eq!(compressors.len(), source.num_nodes());
+        QGenX { source, compressors, lr }
+    }
+
+    pub fn run(&mut self, x0: &[f64], steps: usize, checkpoints: &[usize]) -> QodaRun {
+        let d = self.source.dim();
+        let k = self.source.num_nodes();
+        let kf = k as f64;
+        let mut x = x0.to_vec();
+        let mut xbar_sum = vec![0.0; d];
+        let mut total_bits = 0u64;
+        let mut out_ckpts = Vec::new();
+        let mut ck_iter = checkpoints.iter().peekable();
+
+        for t in 1..=steps {
+            let gamma = self.lr.gamma();
+            // extrapolation: quantized oracle at X_t  (communication #1)
+            let duals0 = self.source.duals(&x);
+            let mut mean0 = vec![0.0; d];
+            for (kk, dual) in duals0.iter().enumerate() {
+                let (hat, bits) = self.compressors[kk].compress(dual);
+                total_bits += bits as u64;
+                for (m, v) in mean0.iter_mut().zip(&hat) {
+                    *m += v / kf;
+                }
+            }
+            let x_half: Vec<f64> =
+                x.iter().zip(&mean0).map(|(xi, g)| xi - gamma * g).collect();
+            // update: quantized oracle at X_{t+1/2}   (communication #2)
+            let duals1 = self.source.duals(&x_half);
+            let mut hats1: Vec<Vec<f64>> = Vec::with_capacity(k);
+            let mut mean1 = vec![0.0; d];
+            for (kk, dual) in duals1.iter().enumerate() {
+                let (hat, bits) = self.compressors[kk].compress(dual);
+                total_bits += bits as u64;
+                for (m, v) in mean1.iter_mut().zip(&hat) {
+                    *m += v / kf;
+                }
+                hats1.push(hat);
+            }
+            // adaptive step statistics: ||mean1 - mean0||^2 (the Q-GenX
+            // gradient-variation term)
+            let diff_sq: f64 = mean1
+                .iter()
+                .zip(&mean0)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            self.lr.observe(diff_sq, 0.0, 0.0);
+            for i in 0..d {
+                x[i] -= gamma * mean1[i];
+            }
+            for (s, v) in xbar_sum.iter_mut().zip(&x_half) {
+                *s += v;
+            }
+            if ck_iter.peek() == Some(&&t) {
+                ck_iter.next();
+                out_ckpts.push(Checkpoint {
+                    t,
+                    xbar: xbar_sum.iter().map(|s| s / t as f64).collect(),
+                    total_bits,
+                    oracle_calls: self.source.calls(),
+                });
+            }
+        }
+        let xbar: Vec<f64> = xbar_sum.iter().map(|s| s / steps as f64).collect();
+        QodaRun {
+            checkpoints: out_ckpts,
+            xbar,
+            x_last: x,
+            total_bits,
+            oracle_calls: self.source.calls(),
+            bits_per_iter_node: total_bits as f64 / (steps as f64 * kf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oda::compress::{Compressor, IdentityCompressor, QuantCompressor};
+    use crate::oda::lr::AdaptiveLr;
+    use crate::oda::source::OracleSource;
+    use crate::quant::layer_map::LayerMap;
+    use crate::stats::rng::Rng;
+    use crate::stats::vecops::{l2_norm64, sub};
+    use crate::vi::noise::NoiseModel;
+    use crate::vi::operator::{BilinearGame, Operator, QuadraticOperator};
+
+    fn identity_boxes(k: usize) -> Vec<Box<dyn Compressor>> {
+        (0..k).map(|_| Box::new(IdentityCompressor) as Box<dyn Compressor>).collect()
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut rng = Rng::new(1);
+        let op = QuadraticOperator::random(8, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 2, NoiseModel::None, 2);
+        let mut solver =
+            QGenX::new(&mut src, identity_boxes(2), Box::new(AdaptiveLr::default()));
+        let run = solver.run(&vec![0.0; 8], 800, &[]);
+        let err = l2_norm64(&sub(&run.xbar, &op.sol));
+        assert!(err < 0.25 * l2_norm64(&op.sol), "{err}");
+    }
+
+    #[test]
+    fn two_oracle_calls_per_iter() {
+        let mut rng = Rng::new(3);
+        let op = QuadraticOperator::random(4, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 3, NoiseModel::None, 4);
+        let mut solver =
+            QGenX::new(&mut src, identity_boxes(3), Box::new(AdaptiveLr::default()));
+        let run = solver.run(&vec![0.0; 4], 100, &[]);
+        assert_eq!(run.oracle_calls, 600, "extra-gradient pays 2 calls/iter");
+    }
+
+    #[test]
+    fn qgenx_communicates_twice_as_much_as_qoda() {
+        // same compressor, same steps: Q-GenX wire bits ≈ 2x QODA wire bits
+        let mut rng = Rng::new(5);
+        let op = QuadraticOperator::random(16, 0.5, &mut rng);
+        let map = LayerMap::single(16);
+        let mk = |seed| -> Vec<Box<dyn Compressor>> {
+            vec![Box::new(QuantCompressor::global_bits(&map, 5, 128, seed))
+                as Box<dyn Compressor>]
+        };
+        let mut src1 = OracleSource::new(&op, 1, NoiseModel::None, 6);
+        let bits_qgenx =
+            QGenX::new(&mut src1, mk(1), Box::new(AdaptiveLr::default()))
+                .run(&vec![0.0; 16], 200, &[])
+                .total_bits;
+        let mut src2 = OracleSource::new(&op, 1, NoiseModel::None, 6);
+        let bits_qoda = crate::oda::qoda::Qoda::new(
+            &mut src2,
+            mk(1),
+            Box::new(AdaptiveLr::default()),
+        )
+        .run(&vec![0.0; 16], 200, &[])
+        .total_bits;
+        let ratio = bits_qgenx as f64 / bits_qoda as f64;
+        assert!((ratio - 2.0).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn handles_bilinear() {
+        let mut rng = Rng::new(7);
+        let op = BilinearGame::random(4, &mut rng);
+        let mut src = OracleSource::new(&op, 1, NoiseModel::None, 8);
+        let mut solver =
+            QGenX::new(&mut src, identity_boxes(1), Box::new(AdaptiveLr::default()));
+        let x0 = vec![1.0; 8];
+        let run = solver.run(&x0, 1500, &[]);
+        let res = l2_norm64(&op.apply_vec(&run.xbar));
+        assert!(res < 0.2 * l2_norm64(&op.apply_vec(&x0)), "{res}");
+    }
+}

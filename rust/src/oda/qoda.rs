@@ -1,0 +1,253 @@
+//! QODA — Quantized Optimistic Dual Averaging (Algorithm 1).
+//!
+//! Per iteration (ODA):
+//!   X_{t+1/2} = X_t - gamma_t * (1/K) sum_k V̂_{k,t-1/2}     (optimism: the
+//! ```text
+//!              stored *previous* half-step duals — no extra oracle call)
+//! ```
+//!   V_{k,t+1/2} = g_k(X_{t+1/2})                       (one oracle call)
+//!   V̂_{k,t+1/2} = DEC(ENC(Q_{L^{t,M}}(V_{k,t+1/2})))   (compressed wire)
+//!   Y_{t+1} = Y_t - (1/K) sum_k V̂_{k,t+1/2}
+//!   X_{t+1} = X_1 + eta_{t+1} Y_{t+1}
+//!
+//! with the adaptive learning rates of Eq. (4) or (Alt). The candidate
+//! solution is the ergodic average X̄_{T+1/2}.
+
+use super::compress::Compressor;
+use super::lr::{observe_from_duals, LrSchedule};
+use super::source::DualSource;
+
+/// Per-checkpoint record for convergence curves.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub t: usize,
+    pub xbar: Vec<f64>,
+    pub total_bits: u64,
+    pub oracle_calls: u64,
+}
+
+pub struct QodaRun {
+    pub checkpoints: Vec<Checkpoint>,
+    pub xbar: Vec<f64>,
+    pub x_last: Vec<f64>,
+    pub total_bits: u64,
+    pub oracle_calls: u64,
+    /// average wire bits per node per iteration
+    pub bits_per_iter_node: f64,
+}
+
+pub struct Qoda<'s> {
+    pub source: &'s mut dyn DualSource,
+    pub compressors: Vec<Box<dyn Compressor>>,
+    pub lr: Box<dyn LrSchedule>,
+    /// Algorithm 1's update-step set U as a period (0 = never); forwarded to
+    /// the compressors' `update_levels`
+    pub update_every: usize,
+}
+
+impl<'s> Qoda<'s> {
+    pub fn new(
+        source: &'s mut dyn DualSource,
+        compressors: Vec<Box<dyn Compressor>>,
+        lr: Box<dyn LrSchedule>,
+    ) -> Self {
+        assert_eq!(compressors.len(), source.num_nodes());
+        Qoda { source, compressors, lr, update_every: 0 }
+    }
+
+    /// Run T iterations from X_1 = x0, recording checkpoints at the given
+    /// iteration numbers (sorted).
+    pub fn run(&mut self, x0: &[f64], steps: usize, checkpoints: &[usize]) -> QodaRun {
+        let d = self.source.dim();
+        let k = self.source.num_nodes();
+        let kf = k as f64;
+        let x1 = x0.to_vec();
+        let mut x = x0.to_vec();
+        let mut y = vec![0.0; d];
+        // V̂_{k,1/2} = 0 (the paper's initialization)
+        let mut prev_hat: Vec<Vec<f64>> = vec![vec![0.0; d]; k];
+        let mut xbar_sum = vec![0.0; d];
+        let mut total_bits = 0u64;
+        let mut out_ckpts = Vec::new();
+        let mut last_dx_sq = 0.0;
+        let mut ck_iter = checkpoints.iter().peekable();
+
+        for t in 1..=steps {
+            let gamma = self.lr.gamma();
+            // extrapolation with the stored previous duals (lines 9-10)
+            let mut x_half = x.clone();
+            for kk in 0..k {
+                for (xh, v) in x_half.iter_mut().zip(&prev_hat[kk]) {
+                    *xh -= gamma * v / kf;
+                }
+            }
+            // oracle + compression (lines 11-15)
+            let duals = self.source.duals(&x_half);
+            let mut hats: Vec<Vec<f64>> = Vec::with_capacity(k);
+            for (kk, dual) in duals.iter().enumerate() {
+                let (hat, bits) = self.compressors[kk].compress(dual);
+                total_bits += bits as u64;
+                hats.push(hat);
+            }
+            // learning-rate statistics (Eq. 4 / Alt); dx lagged one step
+            let (diff_sq, sum_sq, _) =
+                observe_from_duals(&hats, &prev_hat, &x, &x);
+            self.lr.observe(diff_sq, sum_sq, last_dx_sq);
+            // dual averaging (lines 17-18)
+            for kk in 0..k {
+                for (yi, v) in y.iter_mut().zip(&hats[kk]) {
+                    *yi -= v / kf;
+                }
+            }
+            let eta = self.lr.eta();
+            let mut x_next = vec![0.0; d];
+            for i in 0..d {
+                x_next[i] = x1[i] + eta * y[i];
+            }
+            last_dx_sq = x
+                .iter()
+                .zip(&x_next)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            x = x_next;
+            prev_hat = hats;
+            for (s, v) in xbar_sum.iter_mut().zip(&x_half) {
+                *s += v;
+            }
+            // explicit update-step set U (line 2): compressors may also
+            // self-schedule; this drives them at a fixed cadence
+            if self.update_every > 0 && t % self.update_every == 0 {
+                for c in &mut self.compressors {
+                    c.update_levels();
+                }
+            }
+            if ck_iter.peek() == Some(&&t) {
+                ck_iter.next();
+                out_ckpts.push(Checkpoint {
+                    t,
+                    xbar: xbar_sum.iter().map(|s| s / t as f64).collect(),
+                    total_bits,
+                    oracle_calls: self.source.calls(),
+                });
+            }
+        }
+        let xbar: Vec<f64> = xbar_sum.iter().map(|s| s / steps as f64).collect();
+        QodaRun {
+            checkpoints: out_ckpts,
+            xbar,
+            x_last: x,
+            total_bits,
+            oracle_calls: self.source.calls(),
+            bits_per_iter_node: total_bits as f64 / (steps as f64 * kf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oda::compress::{IdentityCompressor, QuantCompressor};
+    use crate::oda::lr::{AdaptiveLr, AltLr};
+    use crate::oda::source::OracleSource;
+    use crate::quant::layer_map::LayerMap;
+    use crate::stats::rng::Rng;
+    use crate::stats::vecops::{l2_norm64, sub};
+    use crate::vi::noise::NoiseModel;
+    use crate::vi::operator::{BilinearGame, Operator, QuadraticOperator};
+
+    fn identity_boxes(k: usize) -> Vec<Box<dyn Compressor>> {
+        (0..k).map(|_| Box::new(IdentityCompressor) as Box<dyn Compressor>).collect()
+    }
+
+    #[test]
+    fn converges_on_quadratic_no_noise() {
+        let mut rng = Rng::new(1);
+        let op = QuadraticOperator::random(8, 0.5, &mut rng);
+        let sol = op.sol.clone();
+        let mut src = OracleSource::new(&op, 2, NoiseModel::None, 2);
+        let mut solver =
+            Qoda::new(&mut src, identity_boxes(2), Box::new(AdaptiveLr::default()));
+        let run = solver.run(&vec![0.0; 8], 800, &[]);
+        let err = l2_norm64(&sub(&run.xbar, &sol));
+        let err0 = l2_norm64(&sol);
+        assert!(err < 0.2 * err0, "err {err} vs initial {err0}");
+    }
+
+    #[test]
+    fn converges_on_bilinear_game() {
+        // bilinear games cycle under naive gradient steps; optimism fixes it
+        let mut rng = Rng::new(3);
+        let op = BilinearGame::random(5, &mut rng);
+        let mut src = OracleSource::new(&op, 1, NoiseModel::None, 4);
+        let mut solver =
+            Qoda::new(&mut src, identity_boxes(1), Box::new(AdaptiveLr::default()));
+        let x0 = vec![1.0; 10];
+        let run = solver.run(&x0, 2000, &[]);
+        let res = l2_norm64(&op.apply_vec(&run.xbar));
+        let res0 = l2_norm64(&op.apply_vec(&x0));
+        assert!(res < 0.15 * res0, "residual {res} vs {res0}");
+    }
+
+    #[test]
+    fn converges_with_quantization() {
+        let mut rng = Rng::new(5);
+        let op = QuadraticOperator::random(16, 0.5, &mut rng);
+        let sol = op.sol.clone();
+        let mut src = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.2 }, 6);
+        let map = LayerMap::single(16);
+        let comps: Vec<Box<dyn Compressor>> = (0..2)
+            .map(|i| {
+                Box::new(QuantCompressor::global_bits(&map, 6, 128, 10 + i))
+                    as Box<dyn Compressor>
+            })
+            .collect();
+        let mut solver = Qoda::new(&mut src, comps, Box::new(AdaptiveLr::default()));
+        let run = solver.run(&vec![0.0; 16], 1500, &[]);
+        let err = l2_norm64(&sub(&run.xbar, &sol));
+        let err0 = l2_norm64(&sol);
+        assert!(err < 0.35 * err0, "err {err} vs {err0}");
+        assert!(run.total_bits > 0);
+        // compressed wire must be well below 32 bits/coord
+        assert!(run.bits_per_iter_node < 16.0 * 16.0, "{}", run.bits_per_iter_node);
+    }
+
+    #[test]
+    fn one_oracle_call_per_node_per_iter() {
+        // the optimism claim: T iterations => exactly T*K oracle calls
+        let mut rng = Rng::new(7);
+        let op = QuadraticOperator::random(4, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 3, NoiseModel::None, 8);
+        let mut solver =
+            Qoda::new(&mut src, identity_boxes(3), Box::new(AdaptiveLr::default()));
+        let run = solver.run(&vec![0.0; 4], 100, &[]);
+        assert_eq!(run.oracle_calls, 300);
+    }
+
+    #[test]
+    fn checkpoints_recorded_in_order() {
+        let mut rng = Rng::new(9);
+        let op = QuadraticOperator::random(4, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 1, NoiseModel::None, 10);
+        let mut solver =
+            Qoda::new(&mut src, identity_boxes(1), Box::new(AdaptiveLr::default()));
+        let run = solver.run(&vec![0.0; 4], 50, &[10, 20, 50]);
+        assert_eq!(run.checkpoints.len(), 3);
+        assert_eq!(run.checkpoints[0].t, 10);
+        assert_eq!(run.checkpoints[2].t, 50);
+        assert!(run.checkpoints[0].total_bits <= run.checkpoints[2].total_bits);
+    }
+
+    #[test]
+    fn alt_schedule_converges_under_relative_noise() {
+        let mut rng = Rng::new(11);
+        let op = QuadraticOperator::random(8, 1.0, &mut rng);
+        let sol = op.sol.clone();
+        let mut src = OracleSource::new(&op, 2, NoiseModel::Relative { sigma_r: 0.5 }, 12);
+        let mut solver =
+            Qoda::new(&mut src, identity_boxes(2), Box::new(AltLr::new(0.25)));
+        let run = solver.run(&vec![0.0; 8], 1500, &[]);
+        let err = l2_norm64(&sub(&run.x_last, &sol));
+        let err0 = l2_norm64(&sol);
+        assert!(err < 0.3 * err0, "err {err} vs {err0}");
+    }
+}

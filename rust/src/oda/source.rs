@@ -1,0 +1,97 @@
+//! Sources of per-node stochastic dual vectors. The VI rate harness uses
+//! `OracleSource` (K noisy oracles over an analytic operator); the GAN and
+//! LM drivers implement this trait over the PJRT-loaded L2 models.
+
+use crate::vi::noise::{NoiseModel, Oracle};
+use crate::vi::operator::Operator;
+
+/// K-node stochastic dual-vector source: duals(x)[k] = g_k(x; omega_{k,t}).
+pub trait DualSource {
+    fn dim(&self) -> usize;
+    fn num_nodes(&self) -> usize;
+    /// One oracle call per node at the query point.
+    fn duals(&mut self, x: &[f64]) -> Vec<Vec<f64>>;
+    /// Total oracle calls so far (gradient computations — the cost Q-GenX
+    /// pays twice per iteration).
+    fn calls(&self) -> u64;
+}
+
+/// K independent noisy oracles sharing one operator (the data-parallel
+/// homogeneous setting A_k = A of the paper's analysis).
+pub struct OracleSource<'a> {
+    oracles: Vec<Oracle<'a>>,
+    dim: usize,
+}
+
+impl<'a> OracleSource<'a> {
+    pub fn new(op: &'a dyn Operator, k: usize, noise: NoiseModel, seed: u64) -> Self {
+        let oracles = (0..k)
+            .map(|i| Oracle::new(op, noise, seed ^ (0x9E37 + i as u64 * 0x79B9)))
+            .collect();
+        OracleSource { oracles, dim: op.dim() }
+    }
+}
+
+impl<'a> DualSource for OracleSource<'a> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.oracles.len()
+    }
+
+    fn duals(&mut self, x: &[f64]) -> Vec<Vec<f64>> {
+        self.oracles.iter_mut().map(|o| o.sample(x)).collect()
+    }
+
+    fn calls(&self) -> u64 {
+        self.oracles.iter().map(|o| o.calls).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+    use crate::vi::operator::QuadraticOperator;
+
+    #[test]
+    fn nodes_draw_independent_noise() {
+        let mut rng = Rng::new(1);
+        let op = QuadraticOperator::random(6, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 4, NoiseModel::Absolute { sigma: 1.0 }, 7);
+        let x = vec![0.5; 6];
+        let ds = src.duals(&x);
+        assert_eq!(ds.len(), 4);
+        assert_ne!(ds[0], ds[1]);
+        assert_eq!(src.calls(), 4);
+    }
+
+    #[test]
+    fn averaging_reduces_variance() {
+        let mut rng = Rng::new(2);
+        let op = QuadraticOperator::random(4, 0.5, &mut rng);
+        let x = vec![1.0; 4];
+        let a = op.apply_vec(&x);
+        let err_of = |k: usize| {
+            let mut src = OracleSource::new(&op, k, NoiseModel::Absolute { sigma: 1.0 }, 3);
+            let mut acc = 0.0;
+            let reps = 2000;
+            for _ in 0..reps {
+                let ds = src.duals(&x);
+                let mut mean = vec![0.0; 4];
+                for d in &ds {
+                    for (m, v) in mean.iter_mut().zip(d) {
+                        *m += v / k as f64;
+                    }
+                }
+                acc += mean.iter().zip(&a).map(|(m, t)| (m - t).powi(2)).sum::<f64>();
+            }
+            acc / reps as f64
+        };
+        let e1 = err_of(1);
+        let e8 = err_of(8);
+        assert!(e8 < e1 / 4.0, "K=8 var {e8} should be ~1/8 of K=1 var {e1}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Adaptive level optimization (Section 3.2, Eq. (2)–(3)).
+//!
+//! Given the weighted empirical CDF F~^m of normalized type-m coordinates
+//! (collected from Z sampled dual vectors with weights lambda_z ∝ ||g_z||_q^2),
+//! choose the interior levels of the type-m sequence to minimize
+//!
+//! ```text
+//!     sum_i  ∫_{l_i}^{l_{i+1}} (l_{i+1} - u)(u - l_i) dF(u)        (MQV)
+//! ```
+//!
+//! First-order optimality for an interior level l_j balances the mass-moment
+//! of its two adjacent intervals:
+//!
+//! ```text
+//!     ∫_{l_{j-1}}^{l_j} (u - l_{j-1}) dF  =  ∫_{l_j}^{l_{j+1}} (l_{j+1} - u) dF
+//! ```
+//!
+//! We solve this by cyclic coordinate bisection (each step provably does not
+//! increase the objective on the piecewise-constant histogram density), the
+//! same fixed-point family as Lloyd–Max.
+
+use super::levels::LevelSequence;
+use crate::stats::histogram::NormalizedHistogram;
+use crate::stats::vecops::lq_norm;
+
+/// Accumulates the type-m statistics from sampled dual vectors.
+#[derive(Clone, Debug)]
+pub struct TypeStats {
+    pub hist: NormalizedHistogram,
+}
+
+impl Default for TypeStats {
+    fn default() -> Self {
+        TypeStats { hist: NormalizedHistogram::new(256) }
+    }
+}
+
+impl TypeStats {
+    /// Add one layer slice of one sampled dual vector; weight = ||slice||_q^2
+    /// per the paper's lambda_z (Eq. (3), applied at layer granularity).
+    pub fn add_layer_sample(&mut self, slice: &[f32], q: f64) {
+        let norm = lq_norm(slice, q);
+        if norm <= 0.0 {
+            return;
+        }
+        let inv = 1.0 / norm;
+        self.hist.add_sample(
+            slice.iter().map(|&x| ((x.abs() as f64) * inv).clamp(0.0, 1.0)),
+            norm * norm,
+        );
+    }
+
+    pub fn reset(&mut self) {
+        self.hist.reset();
+    }
+}
+
+/// MQV objective of a sequence against a histogram (per-coordinate expected
+/// quantization variance; the ||v||_q^2 weights are already in the CDF).
+pub fn objective(hist: &NormalizedHistogram, seq: &LevelSequence) -> f64 {
+    hist.expected_quant_variance(seq.as_slice())
+}
+
+/// ∫_a^b (u - a) dF via the histogram (bin midpoint rule).
+fn moment_above(hist: &NormalizedHistogram, a: f64, b: f64) -> f64 {
+    if b <= a {
+        return 0.0;
+    }
+    let m = hist.mass(a, b);
+    if m == 0.0 {
+        return 0.0;
+    }
+    m * (hist.conditional_mean(a, b) - a).max(0.0)
+}
+
+/// ∫_a^b (b - u) dF via the histogram.
+fn moment_below(hist: &NormalizedHistogram, a: f64, b: f64) -> f64 {
+    if b <= a {
+        return 0.0;
+    }
+    let m = hist.mass(a, b);
+    if m == 0.0 {
+        return 0.0;
+    }
+    m * (b - hist.conditional_mean(a, b)).max(0.0)
+}
+
+/// Optimize the interior levels of `seq` against `hist` (alpha fixed).
+/// Returns the optimized sequence and its objective value.
+pub fn optimize_levels(
+    hist: &NormalizedHistogram,
+    alpha: usize,
+    sweeps: usize,
+) -> (LevelSequence, f64) {
+    // start from uniform spacing
+    let mut ls: Vec<f64> = LevelSequence::uniform(alpha).as_slice().to_vec();
+    if hist.is_empty() {
+        let seq = LevelSequence::new(ls);
+        let obj = objective(hist, &seq);
+        return (seq, obj);
+    }
+    let n = ls.len();
+    for _ in 0..sweeps {
+        for j in 1..n - 1 {
+            let (left, right) = (ls[j - 1], ls[j + 1]);
+            // bisection on g(l) = moment_above(left, l) - moment_below(l, right),
+            // which is non-decreasing in l.
+            let (mut lo, mut hi) = (left, right);
+            for _ in 0..18 {
+                let mid = 0.5 * (lo + hi);
+                let g = moment_above(hist, left, mid) - moment_below(hist, mid, right);
+                if g < 0.0 {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            let cand = 0.5 * (lo + hi);
+            // keep strict ordering with a small guard band
+            let eps = 1e-9;
+            ls[j] = cand.clamp(left + eps, right - eps);
+        }
+    }
+    let seq = LevelSequence::new(ls);
+    let obj = objective(hist, &seq);
+    (seq, obj)
+}
+
+/// Full per-type adaptation: optimize each type's sequence keeping its
+/// current alpha. Returns (sequences, objective per type).
+pub fn adapt_all(
+    stats: &[TypeStats],
+    alphas: &[usize],
+    sweeps: usize,
+) -> (Vec<LevelSequence>, Vec<f64>) {
+    assert_eq!(stats.len(), alphas.len());
+    let mut seqs = Vec::with_capacity(stats.len());
+    let mut objs = Vec::with_capacity(stats.len());
+    for (st, &a) in stats.iter().zip(alphas) {
+        let (s, o) = optimize_levels(&st.hist, a, sweeps);
+        seqs.push(s);
+        objs.push(o);
+    }
+    (seqs, objs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    fn hist_from(vals: &[f64]) -> NormalizedHistogram {
+        let mut h = NormalizedHistogram::new(256);
+        h.add_sample(vals.iter().copied(), 1.0);
+        h
+    }
+
+    #[test]
+    fn optimized_no_worse_than_uniform() {
+        let mut rng = Rng::new(1);
+        // heavily skewed magnitudes (most mass near 0 — gradient-like)
+        let vals: Vec<f64> = (0..5000)
+            .map(|_| (rng.gaussian().abs() * 0.1).min(1.0))
+            .collect();
+        let h = hist_from(&vals);
+        for alpha in [1usize, 3, 7, 15] {
+            let uni = LevelSequence::uniform(alpha);
+            let (opt, obj_opt) = optimize_levels(&h, alpha, 8);
+            let obj_uni = objective(&h, &uni);
+            assert!(
+                obj_opt <= obj_uni * 1.001 + 1e-12,
+                "alpha={alpha}: opt {obj_opt} vs uniform {obj_uni}"
+            );
+            assert_eq!(opt.alpha(), alpha);
+        }
+    }
+
+    #[test]
+    fn skewed_distribution_pulls_levels_down() {
+        let mut rng = Rng::new(2);
+        let vals: Vec<f64> = (0..5000)
+            .map(|_| (rng.gaussian().abs() * 0.05).min(1.0))
+            .collect();
+        let h = hist_from(&vals);
+        let (opt, _) = optimize_levels(&h, 3, 8);
+        // all interior levels should sit well below uniform's positions
+        let uni = LevelSequence::uniform(3);
+        for (o, u) in opt.as_slice()[1..4].iter().zip(&uni.as_slice()[1..4]) {
+            assert!(o < u, "{o} !< {u}");
+        }
+    }
+
+    #[test]
+    fn empty_hist_falls_back_to_uniform() {
+        let h = NormalizedHistogram::new(32);
+        let (opt, _) = optimize_levels(&h, 4, 4);
+        assert_eq!(opt.as_slice(), LevelSequence::uniform(4).as_slice());
+    }
+
+    #[test]
+    fn type_stats_weighting() {
+        let mut st = TypeStats::default();
+        st.add_layer_sample(&[0.1, 0.1], 2.0);
+        st.add_layer_sample(&[10.0, 10.0], 2.0);
+        // the large-norm layer dominates the CDF weights (lambda_z)
+        assert!(st.hist.total_weight() > 100.0);
+    }
+
+    #[test]
+    fn objective_decreases_with_alpha() {
+        let mut rng = Rng::new(3);
+        let vals: Vec<f64> = (0..3000).map(|_| rng.uniform()).collect();
+        let h = hist_from(&vals);
+        let (_, o2) = optimize_levels(&h, 2, 6);
+        let (_, o8) = optimize_levels(&h, 8, 6);
+        assert!(o8 < o2);
+    }
+}

@@ -1,0 +1,282 @@
+//! Layer segmentation of the flat parameter/gradient vector.
+//!
+//! The L2 model exports `artifacts/<model>.meta` (plain text) describing how
+//! the flat vector decomposes into named layers with a semantic type
+//! (ff / bias / attention / embedding / norm). Layer types are the paper's
+//! "M types of sequences": every layer of type m is quantized with the
+//! type-m level sequence l^{t,m}, re-optimized over training.
+
+use std::collections::BTreeMap;
+
+/// Semantic layer categories exported by the L2 models.
+pub const KNOWN_TYPES: &[&str] = &["ff", "bias", "attention", "embedding", "norm"];
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+    /// index into `LayerMap::type_names`
+    pub type_id: usize,
+    /// matrix shape (rows, cols) when known; (len, 1) otherwise
+    pub rows: usize,
+    pub cols: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LayerMap {
+    pub dim: usize,
+    pub layers: Vec<Layer>,
+    pub type_names: Vec<String>,
+    /// free-form key/value pairs from the meta file (batch, vocab, ...)
+    pub extra: BTreeMap<String, String>,
+}
+
+impl LayerMap {
+    /// Build from (name, len, type) triples laid out contiguously.
+    pub fn from_spec(spec: &[(&str, usize, &str)]) -> Self {
+        let mut map = LayerMap::default();
+        let mut off = 0;
+        for &(name, len, ty) in spec {
+            let type_id = map.intern_type(ty);
+            map.layers.push(Layer {
+                name: name.to_string(),
+                offset: off,
+                len,
+                type_id,
+                rows: len,
+                cols: 1,
+            });
+            off += len;
+        }
+        map.dim = off;
+        map
+    }
+
+    /// A single-layer map covering the whole vector (global quantization).
+    pub fn single(dim: usize) -> Self {
+        Self::from_spec(&[("all", dim, "ff")])
+    }
+
+    fn intern_type(&mut self, ty: &str) -> usize {
+        if let Some(i) = self.type_names.iter().position(|t| t == ty) {
+            i
+        } else {
+            self.type_names.push(ty.to_string());
+            self.type_names.len() - 1
+        }
+    }
+
+    /// Number of distinct types M.
+    pub fn num_types(&self) -> usize {
+        self.type_names.len()
+    }
+
+    pub fn type_id(&self, name: &str) -> Option<usize> {
+        self.type_names.iter().position(|t| t == name)
+    }
+
+    /// Proportion mu^m of coordinates belonging to each type (Thm 5.3).
+    pub fn type_proportions(&self) -> Vec<f64> {
+        let mut counts = vec![0usize; self.num_types()];
+        for l in &self.layers {
+            counts[l.type_id] += l.len;
+        }
+        counts.iter().map(|&c| c as f64 / self.dim as f64).collect()
+    }
+
+    /// Parse the `.meta` format emitted by python/compile/aot.py:
+    /// `kind <k>` / `dim <d>` / `<key> <value>` / `layer <name> <off> <len> <type>`.
+    pub fn parse_meta(text: &str) -> Result<Self, String> {
+        let mut map = LayerMap::default();
+        let mut dim = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = it.next().unwrap();
+            match key {
+                "dim" => {
+                    dim = Some(
+                        it.next()
+                            .ok_or_else(|| format!("line {lineno}: dim needs value"))?
+                            .parse::<usize>()
+                            .map_err(|e| format!("line {lineno}: {e}"))?,
+                    );
+                }
+                "layer" => {
+                    let name = it.next().ok_or("layer: missing name")?.to_string();
+                    let off: usize = it
+                        .next()
+                        .ok_or("layer: missing offset")?
+                        .parse()
+                        .map_err(|e| format!("line {lineno}: {e}"))?;
+                    let len: usize = it
+                        .next()
+                        .ok_or("layer: missing len")?
+                        .parse()
+                        .map_err(|e| format!("line {lineno}: {e}"))?;
+                    let ty = it.next().ok_or("layer: missing type")?;
+                    let type_id = map.intern_type(ty);
+                    let rows: usize = it.next().and_then(|v| v.parse().ok()).unwrap_or(len);
+                    let cols: usize = it.next().and_then(|v| v.parse().ok()).unwrap_or(1);
+                    map.layers.push(Layer { name, offset: off, len, type_id, rows, cols });
+                }
+                other => {
+                    let val = it.collect::<Vec<_>>().join(" ");
+                    map.extra.insert(other.to_string(), val);
+                }
+            }
+        }
+        map.dim = dim.ok_or("meta missing dim")?;
+        map.validate()?;
+        Ok(map)
+    }
+
+    pub fn load_meta(path: &std::path::Path) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::parse_meta(&text)
+    }
+
+    /// Contiguity + coverage invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut off = 0;
+        for l in &self.layers {
+            if l.offset != off {
+                return Err(format!("layer {} offset {} != expected {off}", l.name, l.offset));
+            }
+            if l.len == 0 {
+                return Err(format!("layer {} empty", l.name));
+            }
+            off += l.len;
+        }
+        if off != self.dim {
+            return Err(format!("layers cover {off} of dim {}", self.dim));
+        }
+        Ok(())
+    }
+
+    pub fn extra_usize(&self, key: &str) -> Option<usize> {
+        self.extra.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn extra_f64(&self, key: &str) -> Option<f64> {
+        self.extra.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Layers of a given type id.
+    pub fn layers_of_type(&self, type_id: usize) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(move |l| l.type_id == type_id)
+    }
+
+    /// Collapse to a global (single-type) map with the same layer boundaries
+    /// — the Q-GenX baseline (one sequence for every layer) while keeping
+    /// per-layer norms bucketing identical for a fair comparison.
+    pub fn with_single_type(&self) -> Self {
+        let mut m = self.clone();
+        m.type_names = vec!["global".to_string()];
+        for l in &mut m.layers {
+            l.type_id = 0;
+        }
+        m
+    }
+
+    /// Re-bucket into fixed-size buckets (QSGD-style `bucket size` used by
+    /// the paper's experiments, e.g. 128): each layer is split into chunks
+    /// of at most `bucket` coordinates, preserving the type.
+    pub fn bucketed(&self, bucket: usize) -> Self {
+        assert!(bucket > 0);
+        let mut m = LayerMap {
+            dim: self.dim,
+            layers: Vec::new(),
+            type_names: self.type_names.clone(),
+            extra: self.extra.clone(),
+        };
+        for l in &self.layers {
+            let mut off = l.offset;
+            let end = l.offset + l.len;
+            let mut i = 0;
+            while off < end {
+                let len = bucket.min(end - off);
+                m.layers.push(Layer {
+                    name: format!("{}#{}", l.name, i),
+                    offset: off,
+                    len,
+                    type_id: l.type_id,
+                    rows: len,
+                    cols: 1,
+                });
+                off += len;
+                i += 1;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> LayerMap {
+        LayerMap::from_spec(&[
+            ("a.w", 100, "ff"),
+            ("a.b", 10, "bias"),
+            ("b.w", 50, "ff"),
+        ])
+    }
+
+    #[test]
+    fn spec_layout() {
+        let m = demo();
+        assert_eq!(m.dim, 160);
+        assert_eq!(m.num_types(), 2);
+        assert_eq!(m.layers[2].offset, 110);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn proportions_sum_to_one() {
+        let m = demo();
+        let p = m.type_proportions();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((p[0] - 150.0 / 160.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_meta_roundtrip() {
+        let txt = "kind wgan\ndim 160\nbatch 64\nlayer a.w 0 100 ff\nlayer a.b 100 10 bias\nlayer b.w 110 50 ff\n";
+        let m = LayerMap::parse_meta(txt).unwrap();
+        assert_eq!(m.dim, 160);
+        assert_eq!(m.layers.len(), 3);
+        assert_eq!(m.extra_usize("batch"), Some(64));
+        assert_eq!(m.type_names, vec!["ff", "bias"]);
+    }
+
+    #[test]
+    fn parse_meta_rejects_gap() {
+        let txt = "dim 100\nlayer a 0 40 ff\nlayer b 50 50 ff\n";
+        assert!(LayerMap::parse_meta(txt).is_err());
+    }
+
+    #[test]
+    fn single_type_collapse() {
+        let m = demo().with_single_type();
+        assert_eq!(m.num_types(), 1);
+        assert!(m.layers.iter().all(|l| l.type_id == 0));
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn bucketing_preserves_coverage() {
+        let m = demo().bucketed(32);
+        m.validate().unwrap();
+        assert_eq!(m.dim, 160);
+        assert!(m.layers.iter().all(|l| l.len <= 32));
+        // 100 -> 4 buckets, 10 -> 1, 50 -> 2
+        assert_eq!(m.layers.len(), 4 + 1 + 2);
+    }
+}

@@ -1,0 +1,226 @@
+//! Quantization level sequences (Section 3.1).
+//!
+//! A sequence of type m is `[l_0=0, l_1, ..., l_alpha, l_{alpha+1}=1]` with
+//! strictly increasing interior levels. The framework supports arbitrary
+//! sequences; constructors are provided for the two classical families the
+//! paper compares against (uniform/QSGD and exponential/NUQSGD spacing).
+
+/// A valid level sequence including both endpoints 0 and 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LevelSequence {
+    levels: Vec<f64>,
+    /// f32 copy for the hot loop (matches the Pallas kernel's precision)
+    levels_f32: Vec<f32>,
+    /// Some(1/step) when the levels are uniformly spaced — enables the
+    /// closed-form bracket (perf: EXPERIMENTS.md §Perf L3 iteration 1)
+    uniform_inv_step: Option<f64>,
+}
+
+impl LevelSequence {
+    /// From the full vector including endpoints; validates the invariants.
+    pub fn new(levels: Vec<f64>) -> Self {
+        assert!(levels.len() >= 2, "need at least [0, 1]");
+        assert_eq!(levels[0], 0.0, "l_0 must be 0");
+        assert_eq!(*levels.last().unwrap(), 1.0, "l_{{alpha+1}} must be 1");
+        for w in levels.windows(2) {
+            assert!(w[1] > w[0], "levels must be strictly increasing: {levels:?}");
+        }
+        let step = levels[1] - levels[0];
+        let uniform = levels
+            .windows(2)
+            .all(|w| ((w[1] - w[0]) - step).abs() < 1e-12 * step.max(1e-12));
+        let levels_f32 = levels.iter().map(|&x| x as f32).collect();
+        LevelSequence {
+            levels,
+            levels_f32,
+            uniform_inv_step: if uniform { Some(1.0 / step) } else { None },
+        }
+    }
+
+    /// From interior levels only.
+    pub fn from_inner(inner: &[f64]) -> Self {
+        let mut v = Vec::with_capacity(inner.len() + 2);
+        v.push(0.0);
+        v.extend_from_slice(inner);
+        v.push(1.0);
+        Self::new(v)
+    }
+
+    /// QSGD-style: s uniformly spaced interior levels (alpha = s).
+    /// `uniform(s)` has s+2 total levels: {0, 1/(s+1), ..., s/(s+1), 1}.
+    pub fn uniform(s: usize) -> Self {
+        let inner: Vec<f64> = (1..=s).map(|j| j as f64 / (s + 1) as f64).collect();
+        Self::from_inner(&inner)
+    }
+
+    /// NUQSGD-style exponential spacing: levels {0, p^s, ..., p^2, p, 1}
+    /// with ratio 1/p between consecutive nonzero levels (p in (0,1)).
+    pub fn exponential(s: usize, p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0);
+        let mut inner: Vec<f64> = (1..=s).map(|j| p.powi(j as i32)).collect();
+        inner.reverse();
+        Self::from_inner(&inner)
+    }
+
+    /// The standard "b-bit" sequence used for QODA5-style runs: 2^b - 2
+    /// interior levels, uniformly spaced (so indices fit in b bits together
+    /// with... the sign carried separately — matches torch_cgx convention).
+    pub fn bits(b: u32) -> Self {
+        assert!((1..=12).contains(&b));
+        Self::uniform((1usize << b) - 2)
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.levels
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        self.levels.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Number of interior levels (the paper's alpha).
+    pub fn alpha(&self) -> usize {
+        self.levels.len() - 2
+    }
+
+    /// Total number of symbols a coordinate can take (alpha + 2).
+    pub fn num_symbols(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Bits for a fixed-width index encoding of a symbol.
+    pub fn index_bits(&self) -> u32 {
+        (self.num_symbols() as f64).log2().ceil() as u32
+    }
+
+    /// max_j l_{j+1}/l_j over j >= 1 (the paper's bar-l; l_0 = 0 excluded).
+    pub fn max_ratio(&self) -> f64 {
+        self.levels
+            .windows(2)
+            .skip(1)
+            .map(|w| w[1] / w[0])
+            .fold(1.0f64, f64::max)
+    }
+
+    /// l_1 — the smallest nonzero level.
+    pub fn l1(&self) -> f64 {
+        self.levels[1]
+    }
+
+    /// f32 view of the levels (hot-loop table).
+    #[inline]
+    pub fn as_f32_slice(&self) -> &[f32] {
+        &self.levels_f32
+    }
+
+    /// Closed-form inverse step when the sequence is uniformly spaced.
+    #[inline]
+    pub fn uniform_inv_step(&self) -> Option<f64> {
+        self.uniform_inv_step
+    }
+
+    /// Bracket index tau(u): largest j with l_j <= u, clipped so that
+    /// [l_tau, l_{tau+1}] is always valid (u = 1 falls in the last interval).
+    #[inline]
+    pub fn bracket(&self, u: f64) -> usize {
+        if let Some(inv) = self.uniform_inv_step {
+            return ((u * inv) as usize).min(self.levels.len() - 2);
+        }
+        self.bracket_search(u)
+    }
+
+    /// Binary-search bracket (arbitrary sequences).
+    #[inline]
+    pub fn bracket_search(&self, u: f64) -> usize {
+        // binary search on the sorted levels
+        let ls = &self.levels;
+        let mut lo = 0usize;
+        let mut hi = ls.len() - 1; // invariant: ls[lo] <= u (lo may be 0), ls[hi] ... search
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if ls[mid] <= u {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo.min(ls.len() - 2)
+    }
+
+    /// Single-coordinate quantization variance sigma_Q^2(u) =
+    /// (l_{tau+1} - u)(u - l_tau).
+    pub fn coord_variance(&self, u: f64) -> f64 {
+        let t = self.bracket(u.clamp(0.0, 1.0));
+        (self.levels[t + 1] - u).max(0.0) * (u - self.levels[t]).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_structure() {
+        let l = LevelSequence::uniform(3);
+        assert_eq!(l.as_slice(), &[0.0, 0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(l.alpha(), 3);
+        assert_eq!(l.num_symbols(), 5);
+    }
+
+    #[test]
+    fn exponential_structure() {
+        let l = LevelSequence::exponential(3, 0.5);
+        assert_eq!(l.as_slice(), &[0.0, 0.125, 0.25, 0.5, 1.0]);
+        assert!((l.max_ratio() - 2.0).abs() < 1e-12);
+        assert_eq!(l.l1(), 0.125);
+    }
+
+    #[test]
+    fn bits_symbol_count() {
+        // 5-bit quantization: 2^5 = 32 symbols total
+        assert_eq!(LevelSequence::bits(5).num_symbols(), 32);
+        assert_eq!(LevelSequence::bits(1).num_symbols(), 2); // {0, 1}
+        assert_eq!(LevelSequence::bits(5).index_bits(), 5);
+    }
+
+    #[test]
+    fn bracket_all_intervals() {
+        let l = LevelSequence::uniform(3);
+        assert_eq!(l.bracket(0.0), 0);
+        assert_eq!(l.bracket(0.1), 0);
+        assert_eq!(l.bracket(0.25), 1);
+        assert_eq!(l.bracket(0.6), 2);
+        assert_eq!(l.bracket(0.99), 3);
+        assert_eq!(l.bracket(1.0), 3); // clipped into the final interval
+    }
+
+    #[test]
+    fn coord_variance_zero_at_levels() {
+        let l = LevelSequence::uniform(4);
+        for &u in l.as_slice() {
+            assert!(l.coord_variance(u) < 1e-15);
+        }
+        assert!(l.coord_variance(0.1) > 0.0);
+    }
+
+    #[test]
+    fn coord_variance_peak_at_midpoint() {
+        let l = LevelSequence::new(vec![0.0, 0.5, 1.0]);
+        let v_mid = l.coord_variance(0.25);
+        assert!((v_mid - 0.0625).abs() < 1e-12);
+        assert!(l.coord_variance(0.2) < v_mid);
+        assert!(l.coord_variance(0.3) < v_mid);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_unsorted() {
+        LevelSequence::new(vec![0.0, 0.5, 0.4, 1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_endpoints() {
+        LevelSequence::new(vec![0.1, 0.5, 1.0]);
+    }
+}

@@ -1,0 +1,262 @@
+//! L-GreCo (Markov et al., 2024): dynamic-programming allocation of
+//! per-layer compression parameters.
+//!
+//! Given per-layer error curves err[l][c] (expected quantization variance of
+//! layer l at candidate level-count c) and per-layer sizes, choose one
+//! candidate per layer minimizing total error subject to a total-bits budget:
+//!
+//! ```text
+//!     min sum_l err[l][c_l]   s.t.  sum_l size_l * bits(c_l) <= B
+//! ```
+//!
+//! This is the exact knapsack DP of the L-GreCo paper, run over a discretized
+//! budget axis. The coordinator calls it every `update_every` steps (the
+//! paper runs it every 10K optimization steps), feeding error curves from the
+//! per-type histograms, and maps the chosen alpha back into level sequences
+//! optimized by `adaptive::optimize_levels`.
+
+use super::adaptive;
+use crate::stats::histogram::NormalizedHistogram;
+
+/// One candidate setting for a layer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Candidate {
+    /// number of interior levels (alpha); symbols = alpha + 2
+    pub alpha: usize,
+    /// bits per coordinate on the wire for a fixed-width index (incl. sign)
+    pub bits: f64,
+    /// expected per-coordinate quantization variance under this layer's CDF
+    pub err: f64,
+}
+
+/// Per-layer inputs to the DP.
+#[derive(Clone, Debug)]
+pub struct LayerProblem {
+    pub size: usize,
+    pub candidates: Vec<Candidate>,
+}
+
+/// DP output.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// chosen candidate index per layer
+    pub choice: Vec<usize>,
+    pub total_bits: f64,
+    pub total_err: f64,
+}
+
+/// Budget resolution: the DP quantizes bit costs into this many units.
+const UNITS: usize = 2048;
+
+/// Solve the allocation problem. `budget_bits` is the total wire budget for
+/// one dual vector (excluding norms). Greedy-safe fallback: if even the
+/// cheapest choice per layer exceeds the budget, pick the cheapest anyway.
+pub fn allocate(layers: &[LayerProblem], budget_bits: f64) -> Allocation {
+    assert!(!layers.is_empty());
+    let cheapest_total: f64 = layers
+        .iter()
+        .map(|l| {
+            l.candidates
+                .iter()
+                .map(|c| c.bits * l.size as f64)
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum();
+    let budget = budget_bits.max(cheapest_total);
+    let unit = budget / UNITS as f64;
+
+    // dp[u] = (err, per-layer choices) best using <= u units; forward DP.
+    let neg = f64::INFINITY;
+    let mut dp = vec![neg; UNITS + 1];
+    let mut back: Vec<Vec<u16>> = vec![Vec::new(); UNITS + 1];
+    dp[0] = 0.0;
+    // layer-by-layer: dp2[u] = min over candidates of dp[u - cost] + err
+    for l in layers {
+        let mut dp2 = vec![neg; UNITS + 1];
+        let mut back2: Vec<Vec<u16>> = vec![Vec::new(); UNITS + 1];
+        for (ci, c) in l.candidates.iter().enumerate() {
+            let cost_units = ((c.bits * l.size as f64) / unit).round() as usize;
+            let err = c.err * l.size as f64;
+            for u in cost_units..=UNITS {
+                let prev = dp[u - cost_units];
+                if prev.is_finite() && prev + err < dp2[u] {
+                    dp2[u] = prev + err;
+                    let mut b = back[u - cost_units].clone();
+                    b.push(ci as u16);
+                    back2[u] = b;
+                }
+            }
+        }
+        dp = dp2;
+        back = back2;
+    }
+    // best over all u
+    let (mut best_u, mut best) = (UNITS, f64::INFINITY);
+    for (u, &e) in dp.iter().enumerate() {
+        if e < best {
+            best = e;
+            best_u = u;
+        }
+    }
+    if !best.is_finite() {
+        // degenerate fallback: cheapest everywhere
+        let choice: Vec<usize> = layers
+            .iter()
+            .map(|l| {
+                l.candidates
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.bits.partial_cmp(&b.1.bits).unwrap())
+                    .unwrap()
+                    .0
+            })
+            .collect();
+        let total_bits = layers
+            .iter()
+            .zip(&choice)
+            .map(|(l, &c)| l.candidates[c].bits * l.size as f64)
+            .sum();
+        let total_err = layers
+            .iter()
+            .zip(&choice)
+            .map(|(l, &c)| l.candidates[c].err * l.size as f64)
+            .sum();
+        return Allocation { choice, total_bits, total_err };
+    }
+    let choice: Vec<usize> = back[best_u].iter().map(|&c| c as usize).collect();
+    let total_bits = layers
+        .iter()
+        .zip(&choice)
+        .map(|(l, &c)| l.candidates[c].bits * l.size as f64)
+        .sum();
+    Allocation { choice, total_bits, total_err: best }
+}
+
+/// Build the candidate error curve of one layer from its normalized-magnitude
+/// histogram: for each alpha in `alphas`, optimize the levels against the CDF
+/// and record (bits, expected variance).
+pub fn error_curve(
+    hist: &NormalizedHistogram,
+    alphas: &[usize],
+    sweeps: usize,
+) -> Vec<Candidate> {
+    alphas
+        .iter()
+        .map(|&alpha| {
+            let (seq, err) = adaptive::optimize_levels(hist, alpha, sweeps);
+            let bits = (seq.num_symbols() as f64).log2().ceil() + 1.0; // + sign
+            Candidate { alpha, bits, err }
+        })
+        .collect()
+}
+
+/// Standard alpha ladder: level counts corresponding to 1..=max_bits wire bits.
+pub fn alpha_ladder(max_bits: u32) -> Vec<usize> {
+    (1..=max_bits).map(|b| (1usize << b) - 2).map(|a| a.max(1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    fn flat_candidates(errs: &[f64], bits: &[f64]) -> Vec<Candidate> {
+        errs.iter()
+            .zip(bits)
+            .enumerate()
+            .map(|(i, (&e, &b))| Candidate { alpha: i + 1, bits: b, err: e })
+            .collect()
+    }
+
+    #[test]
+    fn respects_budget() {
+        let layers = vec![
+            LayerProblem {
+                size: 1000,
+                candidates: flat_candidates(&[0.1, 0.01], &[2.0, 6.0]),
+            },
+            LayerProblem {
+                size: 1000,
+                candidates: flat_candidates(&[0.1, 0.01], &[2.0, 6.0]),
+            },
+        ];
+        // budget only allows one layer at 6 bits
+        let a = allocate(&layers, 8500.0);
+        assert!(a.total_bits <= 8500.0 * 1.01);
+        // it should upgrade exactly one layer
+        let upgraded = a.choice.iter().filter(|&&c| c == 1).count();
+        assert_eq!(upgraded, 1, "{:?}", a.choice);
+    }
+
+    #[test]
+    fn spends_budget_on_sensitive_layer() {
+        // layer 0 gains much more from extra bits than layer 1
+        let layers = vec![
+            LayerProblem {
+                size: 1000,
+                candidates: flat_candidates(&[1.0, 0.01], &[2.0, 5.0]),
+            },
+            LayerProblem {
+                size: 1000,
+                candidates: flat_candidates(&[0.02, 0.01], &[2.0, 5.0]),
+            },
+        ];
+        let a = allocate(&layers, 7000.0);
+        assert_eq!(a.choice[0], 1, "sensitive layer should get the bits");
+        assert_eq!(a.choice[1], 0);
+    }
+
+    #[test]
+    fn generous_budget_takes_best_everywhere() {
+        let layers = vec![LayerProblem {
+            size: 10,
+            candidates: flat_candidates(&[0.5, 0.2, 0.05], &[1.0, 3.0, 8.0]),
+        }];
+        let a = allocate(&layers, 1e9);
+        assert_eq!(a.choice, vec![2]);
+    }
+
+    #[test]
+    fn impossible_budget_falls_back_to_cheapest() {
+        let layers = vec![LayerProblem {
+            size: 1_000_000,
+            candidates: flat_candidates(&[0.5, 0.1], &[4.0, 8.0]),
+        }];
+        let a = allocate(&layers, 1.0);
+        assert_eq!(a.choice, vec![0]);
+    }
+
+    #[test]
+    fn error_curve_monotone() {
+        let mut rng = Rng::new(4);
+        let mut h = NormalizedHistogram::new(128);
+        h.add_sample((0..4000).map(|_| rng.uniform()), 1.0);
+        let curve = error_curve(&h, &alpha_ladder(6), 4);
+        for w in curve.windows(2) {
+            assert!(w[1].err <= w[0].err * 1.001, "{curve:?}");
+            assert!(w[1].bits >= w[0].bits);
+        }
+    }
+
+    #[test]
+    fn dp_beats_uniform_allocation_on_heterogeneous_layers() {
+        // Two layers, same size; one has near-zero error even at 2 bits.
+        // Uniform 4-bit spend: err = (0.001 + 0.3) * size.
+        // DP with the same total budget: 2 bits on easy + 6 bits on hard.
+        let layers = vec![
+            LayerProblem {
+                size: 100,
+                candidates: flat_candidates(&[0.001, 0.001, 0.001], &[2.0, 4.0, 6.0]),
+            },
+            LayerProblem {
+                size: 100,
+                candidates: flat_candidates(&[0.9, 0.3, 0.02], &[2.0, 4.0, 6.0]),
+            },
+        ];
+        let budget = 100.0 * 4.0 * 2.0;
+        let a = allocate(&layers, budget);
+        let uniform_err = (0.001 + 0.3) * 100.0;
+        assert!(a.total_err < uniform_err, "{} vs {uniform_err}", a.total_err);
+        assert!(a.total_bits <= budget * 1.01);
+    }
+}

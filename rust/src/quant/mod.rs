@@ -1,0 +1,17 @@
+//! Layer-wise quantization framework (paper Section 3):
+//! level sequences, the unbiased stochastic quantizer, layer maps, the
+//! Theorem 5.1 variance bound, adaptive level optimization (Eq. 2–3) and
+//! the L-GreCo dynamic-programming bit allocator.
+
+pub mod adaptive;
+pub mod layer_map;
+pub mod levels;
+pub mod lgreco;
+pub mod quantizer;
+pub mod variance;
+
+pub use layer_map::{Layer, LayerMap};
+pub use levels::LevelSequence;
+pub use quantizer::{
+    dequantize, quantize, quantize_dequantize, QuantConfig, QuantizedLayer, QuantizedVector,
+};

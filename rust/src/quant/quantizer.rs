@@ -1,0 +1,315 @@
+//! Unbiased stochastic layer-wise quantization Q_{L^M} (Section 3.1).
+//!
+//! The coordinator hot path: each layer (or bucket) is normalized by its own
+//! L^q norm and every coordinate is stochastically rounded to its type's
+//! level sequence. The output is the *wire form* — per-layer norm + per
+//! coordinate (sign, level index) — which the coding layer entropy-codes.
+//! Dequantization reconstructs `norm * sign * level[idx]`.
+//!
+//! Bit-exactness with the L1 Pallas kernel / jnp oracle is enforced by
+//! rust/tests/quant_crosscheck.rs on shared test vectors.
+
+use super::layer_map::LayerMap;
+use super::levels::LevelSequence;
+use crate::stats::rng::Rng;
+use crate::stats::vecops::lq_norm;
+
+/// Per-type configuration of the quantizer.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    /// level sequence for each type id of the LayerMap
+    pub sequences: Vec<LevelSequence>,
+    /// L^q normalization (2.0 for L2, 1.0 for L1, f64::INFINITY for Linf)
+    pub q: f64,
+}
+
+impl QuantConfig {
+    pub fn uniform_bits(num_types: usize, bits: u32, q: f64) -> Self {
+        QuantConfig {
+            sequences: (0..num_types).map(|_| LevelSequence::bits(bits)).collect(),
+            q,
+        }
+    }
+
+    pub fn same(num_types: usize, seq: LevelSequence, q: f64) -> Self {
+        QuantConfig { sequences: vec![seq; num_types], q }
+    }
+}
+
+/// Quantized layer in wire form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedLayer {
+    /// L^q norm of the raw layer slice
+    pub norm: f64,
+    /// level index per coordinate (fits u8 for <= 256 symbols)
+    pub indices: Vec<u8>,
+    /// sign bit per coordinate, packed (1 = negative)
+    pub signs: Vec<u64>,
+    /// type id (selects the codebook / level sequence)
+    pub type_id: usize,
+    pub len: usize,
+}
+
+impl QuantizedLayer {
+    #[inline]
+    pub fn sign(&self, i: usize) -> bool {
+        (self.signs[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    fn set_sign(signs: &mut [u64], i: usize) {
+        signs[i / 64] |= 1 << (i % 64);
+    }
+}
+
+/// Quantized flat vector: one entry per layer of the LayerMap.
+#[derive(Clone, Debug, Default)]
+pub struct QuantizedVector {
+    pub layers: Vec<QuantizedLayer>,
+    pub dim: usize,
+}
+
+/// Stochastically quantize one contiguous slice against `seq`.
+/// Uniform randoms are drawn from `rng` (one per coordinate), matching the
+/// Pallas kernel's semantics: round up iff u01 < xi.
+pub fn quantize_slice(
+    v: &[f32],
+    seq: &LevelSequence,
+    q: f64,
+    type_id: usize,
+    rng: &mut Rng,
+) -> QuantizedLayer {
+    assert!(seq.num_symbols() <= 256, "u8 index encoding");
+    // the wire header carries the norm as f32 (C_q = 32); round here so
+    // quantize -> encode -> decode -> dequantize is bit-exact
+    let norm = lq_norm(v, q) as f32 as f64;
+    let n = v.len();
+    let mut indices = vec![0u8; n];
+    let mut signs = vec![0u64; n.div_ceil(64)];
+    if norm > 0.0 {
+        let inv = 1.0 / norm;
+        let ls = seq.as_slice();
+        let nlev = ls.len();
+        if let Some(inv_step) = seq.uniform_inv_step() {
+            // fast path: uniformly spaced levels — closed-form bracket, no
+            // search, no per-interval division (xi = frac of u * inv_step)
+            for (i, &x) in v.iter().enumerate() {
+                if x < 0.0 {
+                    QuantizedLayer::set_sign(&mut signs, i);
+                }
+                let mag = ((x.abs() as f64) * inv).min(1.0);
+                let pos = mag * inv_step;
+                let mut tau = pos as usize;
+                let mut xi = pos - tau as f64;
+                if tau >= nlev - 1 {
+                    tau = nlev - 2;
+                    xi = 1.0;
+                }
+                let u01 = rng.uniform_f32() as f64;
+                indices[i] = if u01 < xi { (tau + 1) as u8 } else { tau as u8 };
+            }
+        } else {
+            for (i, &x) in v.iter().enumerate() {
+                if x < 0.0 {
+                    QuantizedLayer::set_sign(&mut signs, i);
+                }
+                let mag = ((x.abs() as f64) * inv).clamp(0.0, 1.0);
+                let tau = seq.bracket(mag);
+                let (lo, hi) = (ls[tau], ls[tau + 1]);
+                let xi = (mag - lo) / (hi - lo).max(1e-38);
+                let u01 = rng.uniform_f32() as f64;
+                indices[i] = if u01 < xi { (tau + 1) as u8 } else { tau as u8 };
+            }
+        }
+    }
+    QuantizedLayer { norm, indices, signs, type_id, len: n }
+}
+
+/// Quantize a full flat vector layer-by-layer per the map and config.
+pub fn quantize(
+    v: &[f32],
+    map: &LayerMap,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+) -> QuantizedVector {
+    assert_eq!(v.len(), map.dim);
+    let layers = map
+        .layers
+        .iter()
+        .map(|l| {
+            quantize_slice(
+                &v[l.offset..l.offset + l.len],
+                &cfg.sequences[l.type_id],
+                cfg.q,
+                l.type_id,
+                rng,
+            )
+        })
+        .collect();
+    QuantizedVector { layers, dim: map.dim }
+}
+
+/// Dequantize back into a flat f32 vector.
+pub fn dequantize(qv: &QuantizedVector, cfg: &QuantConfig) -> Vec<f32> {
+    let mut out = Vec::with_capacity(qv.dim);
+    for layer in &qv.layers {
+        dequantize_layer_into(layer, cfg, &mut out);
+    }
+    debug_assert_eq!(out.len(), qv.dim);
+    out
+}
+
+pub fn dequantize_layer_into(layer: &QuantizedLayer, cfg: &QuantConfig, out: &mut Vec<f32>) {
+    let ls = cfg.sequences[layer.type_id].as_slice();
+    for i in 0..layer.len {
+        let mag = layer.norm * ls[layer.indices[i] as usize];
+        out.push(if layer.sign(i) { -(mag as f32) } else { mag as f32 });
+    }
+}
+
+/// One-call quantize+dequantize (what a node applies to its own dual vector
+/// before local aggregation, ensuring every node sees identical values).
+pub fn quantize_dequantize(
+    v: &[f32],
+    map: &LayerMap,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    dequantize(&quantize(v, map, cfg, rng), cfg)
+}
+
+/// Exact wire size in bits of the *naive fixed-width* encoding: C_q bits for
+/// the norm + 1 sign bit per nonzero + ceil(log2(symbols)) per coordinate.
+/// The entropy coder (coding::protocol) beats this; used for compression-
+/// ratio accounting and as the torch_cgx-style "no extra coding" mode
+/// (paper footnote 6: no additional encoding on top of quantization).
+pub fn fixed_width_bits(qv: &QuantizedVector, cfg: &QuantConfig, norm_bits: usize) -> usize {
+    qv.layers
+        .iter()
+        .map(|l| {
+            let idx_bits = cfg.sequences[l.type_id].index_bits() as usize;
+            norm_bits + l.len * (idx_bits + 1)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    fn map3() -> LayerMap {
+        LayerMap::from_spec(&[("a", 64, "ff"), ("b", 32, "bias"), ("c", 100, "ff")])
+    }
+
+    #[test]
+    fn roundtrip_values_are_levels() {
+        let map = map3();
+        let cfg = QuantConfig::uniform_bits(map.num_types(), 3, 2.0);
+        let mut rng = Rng::new(1);
+        let v: Vec<f32> = (0..196).map(|i| ((i as f32) - 98.0) / 17.0).collect();
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        let dq = dequantize(&qv, &cfg);
+        assert_eq!(dq.len(), v.len());
+        // each dequantized magnitude equals norm * some level of its layer
+        for (li, l) in map.layers.iter().enumerate() {
+            let norm = qv.layers[li].norm;
+            let ls = cfg.sequences[l.type_id].as_slice();
+            for i in 0..l.len {
+                let mag = (dq[l.offset + i].abs() as f64) / norm.max(1e-30);
+                let close = ls.iter().any(|&x| (x - mag).abs() < 1e-5);
+                assert!(close, "mag {mag} not a level");
+            }
+        }
+    }
+
+    #[test]
+    fn signs_preserved() {
+        let map = LayerMap::single(50);
+        let cfg = QuantConfig::uniform_bits(1, 4, 2.0);
+        let mut rng = Rng::new(2);
+        let v: Vec<f32> = (0..50).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let dq = quantize_dequantize(&v, &map, &cfg, &mut rng);
+        for (x, y) in v.iter().zip(&dq) {
+            assert!(x * y >= 0.0, "sign flipped: {x} {y}");
+        }
+    }
+
+    #[test]
+    fn zero_vector_roundtrips_to_zero() {
+        let map = LayerMap::single(16);
+        let cfg = QuantConfig::uniform_bits(1, 3, 2.0);
+        let mut rng = Rng::new(3);
+        let dq = quantize_dequantize(&vec![0.0; 16], &map, &cfg, &mut rng);
+        assert!(dq.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn unbiasedness_statistical() {
+        // E[Q(v)] = v componentwise (the scheme's defining property)
+        let map = LayerMap::single(32);
+        let cfg = QuantConfig::uniform_bits(1, 2, 2.0);
+        let mut rng = Rng::new(4);
+        let v: Vec<f32> = (0..32).map(|i| ((i * 37 % 17) as f32 - 8.0) / 3.0).collect();
+        let reps = 4000;
+        let mut acc = vec![0.0f64; 32];
+        for _ in 0..reps {
+            let dq = quantize_dequantize(&v, &map, &cfg, &mut rng);
+            for (a, &x) in acc.iter_mut().zip(&dq) {
+                *a += x as f64;
+            }
+        }
+        let norm = lq_norm(&v, 2.0);
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / reps as f64;
+            // 5-sigma CLT bound with per-coord std <= norm/2
+            let tol = 5.0 * norm * 0.5 / (reps as f64).sqrt();
+            assert!((mean - v[i] as f64).abs() < tol, "coord {i}: {mean} vs {}", v[i]);
+        }
+    }
+
+    #[test]
+    fn layerwise_norms_are_per_layer() {
+        let map = LayerMap::from_spec(&[("small", 10, "ff"), ("big", 10, "ff")]);
+        let cfg = QuantConfig::uniform_bits(1, 4, 2.0);
+        let mut rng = Rng::new(5);
+        let mut v = vec![0.01f32; 10];
+        v.extend(vec![100.0f32; 10]);
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        assert!(qv.layers[0].norm < 1.0);
+        assert!(qv.layers[1].norm > 100.0);
+        // small layer still reconstructs to the right scale
+        let dq = dequantize(&qv, &cfg);
+        assert!(dq[..10].iter().all(|&x| x.abs() < 0.1));
+    }
+
+    #[test]
+    fn fixed_width_accounting() {
+        let map = LayerMap::single(100);
+        let cfg = QuantConfig::uniform_bits(1, 5, 2.0);
+        let mut rng = Rng::new(6);
+        let v = vec![1.0f32; 100];
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        // 32-bit norm + 100 * (5 idx + 1 sign)
+        assert_eq!(fixed_width_bits(&qv, &cfg, 32), 32 + 600);
+    }
+
+    #[test]
+    fn prop_roundtrip_sign_and_levelset() {
+        for_cases(40, 99, |g| {
+            let n = g.usize_in(1, 400);
+            let v = g.vec_f32(n, 3.0);
+            let full = g.level_sequence(10);
+            let seq = LevelSequence::new(full);
+            let map = LayerMap::single(n);
+            let cfg = QuantConfig::same(1, seq, 2.0);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let dq = quantize_dequantize(&v, &map, &cfg, &mut rng);
+            let norm = lq_norm(&v, 2.0);
+            for (x, y) in v.iter().zip(&dq) {
+                assert!(x * y >= 0.0);
+                assert!((y.abs() as f64) <= norm * (1.0 + 1e-5));
+            }
+        });
+    }
+}

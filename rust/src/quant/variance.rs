@@ -1,0 +1,179 @@
+//! Theorem 5.1: variance bound for layer-wise quantization, plus empirical
+//! variance measurement used by the verification harness (`qoda
+//! verify-variance`) and the convergence-rate constants.
+
+use super::layer_map::LayerMap;
+use super::levels::LevelSequence;
+use super::quantizer::{quantize_dequantize, QuantConfig};
+use crate::stats::rng::Rng;
+
+/// epsilon_Q of Theorem 5.1 for a set of per-type sequences, dimension d and
+/// L^q normalization:
+///
+///   eps_Q = (lbar - 1)^2 / (4 lbar)
+///         + (lbar_1 d^{1/min(q,2)} - 1)            if d >= d_th
+///         + (lbar_1^2 / 4) d^{2/min(q,2)}          if d <  d_th
+///
+/// where lbar = max_m max_j l^m_{j+1}/l^m_j (j >= 1), lbar_1 = max_m l^m_1,
+/// d_th = (2 / lbar_1)^{min(2,q)}.
+pub fn eps_q(sequences: &[LevelSequence], d: usize, q: f64) -> f64 {
+    assert!(!sequences.is_empty());
+    let lbar = sequences.iter().map(|s| s.max_ratio()).fold(1.0f64, f64::max);
+    let l1 = sequences.iter().map(|s| s.l1()).fold(0.0f64, f64::max);
+    let qm = q.min(2.0).max(1.0);
+    let d_th = (2.0 / l1).powf(qm);
+    let df = d as f64;
+    let mut eps = (lbar - 1.0).powi(2) / (4.0 * lbar);
+    if df >= d_th {
+        eps += l1 * df.powf(1.0 / qm) - 1.0;
+    } else {
+        eps += 0.25 * l1 * l1 * df.powf(2.0 / qm);
+    }
+    eps
+}
+
+/// eps_Q for a full quantizer configuration over a layer map. The bound
+/// applies per normalization unit (layer); taking d = max layer length is
+/// the worst case across layers.
+pub fn eps_q_for(map: &LayerMap, cfg: &QuantConfig) -> f64 {
+    let dmax = map.layers.iter().map(|l| l.len).max().unwrap_or(1);
+    eps_q(&cfg.sequences, dmax, cfg.q)
+}
+
+/// Monte-Carlo estimate of E ||Q(v) - v||^2 / ||v||^2 for a fixed v.
+pub fn empirical_variance_ratio(
+    v: &[f32],
+    map: &LayerMap,
+    cfg: &QuantConfig,
+    reps: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let norm2: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    if norm2 == 0.0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for _ in 0..reps {
+        let dq = quantize_dequantize(v, map, cfg, &mut rng);
+        acc += v
+            .iter()
+            .zip(&dq)
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum::<f64>();
+    }
+    acc / reps as f64 / norm2
+}
+
+/// Remark 3.2 / (MQV): expected quantization variance of a *set* of vectors
+/// under a configuration — the objective the adaptive optimizer minimizes.
+pub fn mqv_objective(
+    samples: &[Vec<f32>],
+    map: &LayerMap,
+    cfg: &QuantConfig,
+    reps: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut acc = 0.0;
+    for v in samples {
+        for _ in 0..reps {
+            let dq = quantize_dequantize(v, map, cfg, &mut rng);
+            acc += v
+                .iter()
+                .zip(&dq)
+                .map(|(&a, &b)| {
+                    let d = a as f64 - b as f64;
+                    d * d
+                })
+                .sum::<f64>();
+        }
+    }
+    acc / (samples.len() * reps) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn eps_matches_qsgd_regime() {
+        // M=1, L2 norm, s = sqrt(d) uniform levels: eps ~ O(sqrt(d)/s) small
+        let d = 1024;
+        let s = 32;
+        let seq = LevelSequence::uniform(s);
+        let e = eps_q(&[seq], d, 2.0);
+        assert!(e > 0.0 && e < 10.0, "{e}");
+    }
+
+    #[test]
+    fn eps_small_d_branch() {
+        let seq = LevelSequence::uniform(255);
+        // l1 = 1/256 => d_th = 512^2 huge => small-d branch
+        let e_small = eps_q(&[seq.clone()], 4, 2.0);
+        let expected = {
+            let lbar = seq.max_ratio();
+            (lbar - 1.0).powi(2) / (4.0 * lbar) + 0.25 * (1.0 / 256.0f64).powi(2) * 4.0
+        };
+        assert!((e_small - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eps_monotone_in_dimension() {
+        let seq = LevelSequence::uniform(3);
+        let e1 = eps_q(&[seq.clone()], 64, 2.0);
+        let e2 = eps_q(&[seq], 4096, 2.0);
+        assert!(e2 > e1);
+    }
+
+    #[test]
+    fn empirical_variance_below_bound() {
+        // Theorem 5.1: empirical ratio <= eps_Q, for several sequences
+        for_cases(10, 17, |g| {
+            let n = g.usize_in(8, 300);
+            let v = g.vec_f32(n, 1.0);
+            let seq = LevelSequence::new(g.level_sequence(8));
+            let map = LayerMap::single(n);
+            let cfg = QuantConfig::same(1, seq.clone(), 2.0);
+            let emp = empirical_variance_ratio(&v, &map, &cfg, 60, g.rng.next_u64());
+            let bound = eps_q(&[seq], n, 2.0);
+            assert!(
+                emp <= bound * 1.10 + 1e-9,
+                "empirical {emp} vs bound {bound} (n={n})"
+            );
+        });
+    }
+
+    #[test]
+    fn more_levels_less_variance() {
+        let n = 256;
+        let mut rng = Rng::new(5);
+        let v: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+        let map = LayerMap::single(n);
+        let coarse = QuantConfig::uniform_bits(1, 2, 2.0);
+        let fine = QuantConfig::uniform_bits(1, 6, 2.0);
+        let ec = empirical_variance_ratio(&v, &map, &coarse, 50, 1);
+        let ef = empirical_variance_ratio(&v, &map, &fine, 50, 1);
+        assert!(ef < ec, "{ef} vs {ec}");
+    }
+
+    #[test]
+    fn layerwise_beats_global_on_heterogeneous_layers() {
+        // Remark 3.2: per-layer norms + tuned sequences cannot do worse.
+        let mut rng = Rng::new(9);
+        // layer A ~ N(0, 1), layer B ~ N(0, 100): global normalization
+        // crushes layer A into the bottom interval.
+        let mut v: Vec<f32> = (0..256).map(|_| rng.gaussian() as f32).collect();
+        v.extend((0..256).map(|_| (rng.gaussian() * 100.0) as f32));
+        let layer_map = LayerMap::from_spec(&[("a", 256, "ff"), ("b", 256, "ff")]);
+        let global_map = LayerMap::single(512);
+        let cfg = QuantConfig::uniform_bits(1, 4, 2.0);
+        let lw = empirical_variance_ratio(&v, &layer_map, &cfg, 40, 2);
+        let gl = empirical_variance_ratio(&v, &global_map, &cfg, 40, 2);
+        assert!(lw <= gl, "layerwise {lw} vs global {gl}");
+    }
+}

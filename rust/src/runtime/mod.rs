@@ -1,0 +1,8 @@
+//! PJRT runtime (L3 <-> L2 boundary): loads `artifacts/*.hlo.txt` produced
+//! by `python -m compile.aot` and executes them on the CPU PJRT client.
+
+pub mod model;
+pub mod pjrt;
+
+pub use model::{LmModel, WganModel};
+pub use pjrt::{Executable, Runtime};

@@ -1,0 +1,91 @@
+//! PJRT runtime: load AOT-lowered HLO *text* artifacts and execute them on
+//! the CPU client. This is the only boundary between L3 (rust) and the
+//! L2/L1 graphs; Python never runs here.
+//!
+//! Interchange is HLO text — xla_extension 0.5.1 rejects jax>=0.5 protos
+//! with 64-bit instruction ids, while the text parser reassigns ids
+//! (see /opt/xla-example/README.md and DESIGN.md).
+
+use anyhow::{Context, Result};
+
+/// Thin wrapper over the PJRT CPU client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("create PJRT CPU client")? })
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Load an artifact by repo-relative name (e.g. "artifacts/wgan_op.hlo.txt").
+    pub fn load_artifact(&self, rel: &str) -> Result<Executable> {
+        let path = crate::util::repo_path(rel);
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {rel} not found — run `make artifacts` first"
+        );
+        self.load(&path)
+    }
+}
+
+/// A compiled computation plus marshalling helpers.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; jax lowers with return_tuple=True so the
+    /// single output is a tuple — returned here as a Vec of literals.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch result of {}", self.name))?;
+        lit.to_tuple().context("untuple result")
+    }
+}
+
+/// f32 vector -> rank-1 literal.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// i32 scalar literal.
+pub fn lit_i32_scalar(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// i32 matrix literal [rows, cols] from row-major data.
+pub fn lit_i32_matrix(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// literal -> Vec<f32> (any shape, flattened).
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// scalar literal -> f32.
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,194 @@
+//! Histogram / empirical-CDF machinery for the adaptive level optimizer.
+//!
+//! The paper (Section 3.2, Eq. (2)–(3)) estimates the weighted marginal CDF
+//! `F~^m(u)` of *normalized* coordinates of each layer type `m` from Z
+//! sampled dual vectors, weighting sample z by `||g_z||_q^2`. We accumulate
+//! these into a fixed-bin histogram over [0, 1]; the adaptive optimizer and
+//! the L-GreCo DP both consume the resulting empirical CDF.
+
+/// Fixed-bin weighted histogram over normalized magnitudes in [0, 1].
+#[derive(Clone, Debug)]
+pub struct NormalizedHistogram {
+    bins: Vec<f64>,
+    total: f64,
+}
+
+impl NormalizedHistogram {
+    pub fn new(n_bins: usize) -> Self {
+        assert!(n_bins >= 2);
+        NormalizedHistogram { bins: vec![0.0; n_bins], total: 0.0 }
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// Accumulate one sample's normalized magnitudes with weight `w`
+    /// (the paper's lambda_z numerator ||g_z||_q^2).
+    pub fn add_sample(&mut self, normalized: impl Iterator<Item = f64>, w: f64) {
+        let nb = self.bins.len() as f64;
+        for u in normalized {
+            let u = u.clamp(0.0, 1.0);
+            let idx = ((u * nb) as usize).min(self.bins.len() - 1);
+            self.bins[idx] += w;
+            self.total += w;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0.0
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.total
+    }
+
+    /// Empirical CDF evaluated at `u` (piecewise-linear within bins).
+    pub fn cdf(&self, u: f64) -> f64 {
+        if self.total == 0.0 {
+            return u.clamp(0.0, 1.0); // degenerate: pretend uniform
+        }
+        let u = u.clamp(0.0, 1.0);
+        let nb = self.bins.len() as f64;
+        let pos = u * nb;
+        let idx = (pos as usize).min(self.bins.len() - 1);
+        let frac = pos - idx as f64;
+        let below: f64 = self.bins[..idx].iter().sum();
+        (below + frac * self.bins[idx]) / self.total
+    }
+
+    /// Probability mass in [a, b).
+    pub fn mass(&self, a: f64, b: f64) -> f64 {
+        (self.cdf(b) - self.cdf(a)).max(0.0)
+    }
+
+    /// Mean of u restricted to [a, b) (bin-midpoint approximation),
+    /// used by the Lloyd–Max style level refinement.
+    pub fn conditional_mean(&self, a: f64, b: f64) -> f64 {
+        let nb = self.bins.len();
+        let (mut num, mut den) = (0.0, 0.0);
+        for (i, &w) in self.bins.iter().enumerate() {
+            let lo = i as f64 / nb as f64;
+            let hi = (i + 1) as f64 / nb as f64;
+            let il = lo.max(a);
+            let ih = hi.min(b);
+            if ih <= il {
+                continue;
+            }
+            let frac = (ih - il) / (hi - lo);
+            let mid = 0.5 * (il + ih);
+            num += w * frac * mid;
+            den += w * frac;
+        }
+        if den == 0.0 {
+            0.5 * (a + b)
+        } else {
+            num / den
+        }
+    }
+
+    /// Expected single-coordinate quantization variance
+    /// ∫ sigma_Q^2(u; levels) dF(u) for the interval structure of `levels`
+    /// (Eq. (2) integrand, bin-midpoint rule).
+    pub fn expected_quant_variance(&self, levels: &[f64]) -> f64 {
+        if self.total == 0.0 {
+            return 0.0;
+        }
+        let nb = self.bins.len();
+        let mut acc = 0.0;
+        for (i, &w) in self.bins.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let mid = (i as f64 + 0.5) / nb as f64;
+            // find bracket
+            let mut tau = 0usize;
+            while tau + 2 < levels.len() && levels[tau + 1] <= mid {
+                tau += 1;
+            }
+            let (lo, hi) = (levels[tau], levels[tau + 1]);
+            acc += w * (hi - mid).max(0.0) * (mid - lo).max(0.0);
+        }
+        acc / self.total
+    }
+
+    pub fn merge(&mut self, other: &NormalizedHistogram) {
+        assert_eq!(self.bins.len(), other.bins.len());
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    pub fn reset(&mut self) {
+        self.bins.iter_mut().for_each(|b| *b = 0.0);
+        self.total = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_monotone_and_bounded() {
+        let mut h = NormalizedHistogram::new(64);
+        h.add_sample([0.1, 0.2, 0.2, 0.9].into_iter(), 1.0);
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let u = i as f64 / 100.0;
+            let c = h.cdf(u);
+            assert!(c >= prev - 1e-12);
+            assert!((0.0..=1.0 + 1e-12).contains(&c));
+            prev = c;
+        }
+        assert!(h.cdf(1.0) > 0.999);
+    }
+
+    #[test]
+    fn mass_splits() {
+        let mut h = NormalizedHistogram::new(100);
+        h.add_sample((0..1000).map(|i| i as f64 / 1000.0), 1.0);
+        let m = h.mass(0.25, 0.75);
+        assert!((m - 0.5).abs() < 0.02, "{m}");
+    }
+
+    #[test]
+    fn weighting_matters() {
+        let mut h = NormalizedHistogram::new(10);
+        h.add_sample([0.05].into_iter(), 9.0);
+        h.add_sample([0.95].into_iter(), 1.0);
+        assert!((h.cdf(0.5) - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn conditional_mean_uniform() {
+        let mut h = NormalizedHistogram::new(200);
+        h.add_sample((0..10_000).map(|i| (i as f64 + 0.5) / 10_000.0), 1.0);
+        let m = h.conditional_mean(0.2, 0.6);
+        assert!((m - 0.4).abs() < 0.01, "{m}");
+    }
+
+    #[test]
+    fn expected_variance_zero_when_levels_dense() {
+        let mut h = NormalizedHistogram::new(50);
+        h.add_sample([0.0, 0.5, 1.0].into_iter(), 1.0);
+        // levels exactly on a fine uniform grid ⇒ tiny variance
+        let levels: Vec<f64> = (0..=100).map(|i| i as f64 / 100.0).collect();
+        let fine = h.expected_quant_variance(&levels);
+        let coarse = h.expected_quant_variance(&[0.0, 1.0]);
+        assert!(fine < coarse);
+        assert!(coarse > 0.0);
+    }
+
+    #[test]
+    fn merge_adds_mass() {
+        let mut a = NormalizedHistogram::new(10);
+        let mut b = NormalizedHistogram::new(10);
+        a.add_sample([0.1].into_iter(), 1.0);
+        b.add_sample([0.9].into_iter(), 1.0);
+        a.merge(&b);
+        assert!((a.total_weight() - 2.0).abs() < 1e-12);
+        assert!((a.cdf(0.5) - 0.5).abs() < 1e-9);
+    }
+}

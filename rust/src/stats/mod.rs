@@ -1,0 +1,67 @@
+//! Statistical substrates: deterministic RNG, histograms / empirical CDFs,
+//! truncated-normal sufficient statistics (Remark 4.1 density estimation).
+
+pub mod histogram;
+pub mod rng;
+pub mod truncnorm;
+
+pub use histogram::NormalizedHistogram;
+pub use rng::Rng;
+pub use truncnorm::{Moments, TruncNorm};
+
+/// Vector helpers shared across the crate (f64 host math).
+pub mod vecops {
+    /// L^q norm for q in {1, 2} or +inf (q <= 0 means inf).
+    pub fn lq_norm(v: &[f32], q: f64) -> f64 {
+        if q <= 0.0 || q.is_infinite() {
+            v.iter().fold(0.0f64, |m, &x| m.max(x.abs() as f64))
+        } else if q == 2.0 {
+            v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+        } else if q == 1.0 {
+            v.iter().map(|&x| x.abs() as f64).sum()
+        } else {
+            v.iter()
+                .map(|&x| (x.abs() as f64).powf(q))
+                .sum::<f64>()
+                .powf(1.0 / q)
+        }
+    }
+
+    pub fn l2_norm64(v: &[f64]) -> f64 {
+        v.iter().map(|&x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn dot64(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    pub fn axpy(y: &mut [f64], alpha: f64, x: &[f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+        a.iter().zip(b).map(|(x, y)| x - y).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::vecops::*;
+
+    #[test]
+    fn lq_norms() {
+        let v = [3.0f32, -4.0];
+        assert!((lq_norm(&v, 2.0) - 5.0).abs() < 1e-9);
+        assert!((lq_norm(&v, 1.0) - 7.0).abs() < 1e-9);
+        assert!((lq_norm(&v, f64::INFINITY) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0]);
+        assert_eq!(y, vec![21.0, 42.0]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Truncated-normal parametric density estimation (Remark 4.1).
+//!
+//! Faghri et al. (2020) model normalized gradient magnitudes with a
+//! truncated normal on [0, 1] and fit it from cheap sufficient statistics
+//! (first two moments). The coordinator uses this as the parametric
+//! alternative to the histogram CDF when choosing the update-step set U:
+//! a large shift in fitted (mu, sigma) triggers a level re-optimization.
+
+/// Standard normal pdf.
+#[inline]
+pub fn phi(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via erf (Abramowitz–Stegun 7.1.26, |err| < 1.5e-7).
+pub fn norm_cdf(x: f64) -> f64 {
+    let t = 1.0 / (1.0 + 0.2316419 * x.abs());
+    let poly = t
+        * (0.319381530
+            + t * (-0.356563782 + t * (1.781477937 + t * (-1.821255978 + t * 1.330274429))));
+    let tail = phi(x.abs()) * poly;
+    if x >= 0.0 {
+        1.0 - tail
+    } else {
+        tail
+    }
+}
+
+/// Normal distribution truncated to [a, b].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TruncNorm {
+    pub mu: f64,
+    pub sigma: f64,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl TruncNorm {
+    pub fn new(mu: f64, sigma: f64, a: f64, b: f64) -> Self {
+        assert!(b > a && sigma > 0.0);
+        TruncNorm { mu, sigma, a, b }
+    }
+
+    fn alpha(&self) -> f64 {
+        (self.a - self.mu) / self.sigma
+    }
+
+    fn beta(&self) -> f64 {
+        (self.b - self.mu) / self.sigma
+    }
+
+    fn z(&self) -> f64 {
+        (norm_cdf(self.beta()) - norm_cdf(self.alpha())).max(1e-300)
+    }
+
+    pub fn cdf(&self, x: f64) -> f64 {
+        if x <= self.a {
+            return 0.0;
+        }
+        if x >= self.b {
+            return 1.0;
+        }
+        let xi = (x - self.mu) / self.sigma;
+        ((norm_cdf(xi) - norm_cdf(self.alpha())) / self.z()).clamp(0.0, 1.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let (al, be) = (self.alpha(), self.beta());
+        self.mu + self.sigma * (phi(al) - phi(be)) / self.z()
+    }
+
+    pub fn var(&self) -> f64 {
+        let (al, be) = (self.alpha(), self.beta());
+        let z = self.z();
+        let t1 = (al * phi(al) - be * phi(be)) / z;
+        let t2 = (phi(al) - phi(be)) / z;
+        (self.sigma * self.sigma) * (1.0 + t1 - t2 * t2)
+    }
+
+    /// Moment-match a truncated normal on [0,1] to sample mean/variance of
+    /// normalized magnitudes. Crude two-pass fixed-point on (mu, sigma) —
+    /// this is the "efficiently computing sufficient statistics" estimator;
+    /// it only needs to be good enough to *detect distribution drift*.
+    pub fn fit_unit(sample_mean: f64, sample_var: f64) -> TruncNorm {
+        let mut mu = sample_mean.clamp(1e-4, 1.0 - 1e-4);
+        let mut sigma = sample_var.max(1e-8).sqrt();
+        for _ in 0..32 {
+            let t = TruncNorm::new(mu, sigma, 0.0, 1.0);
+            let (m, v) = (t.mean(), t.var());
+            mu += 0.7 * (sample_mean - m);
+            sigma *= ((sample_var / v.max(1e-12)).sqrt()).clamp(0.5, 2.0).powf(0.5);
+            mu = mu.clamp(-2.0, 2.0);
+            sigma = sigma.clamp(1e-6, 10.0);
+        }
+        TruncNorm::new(mu, sigma, 0.0, 1.0)
+    }
+
+    /// Symmetric drift measure between two fits (used to decide whether a
+    /// step belongs to the update set U).
+    pub fn drift(&self, other: &TruncNorm) -> f64 {
+        let dm = (self.mean() - other.mean()).abs();
+        let dv = (self.var().sqrt() - other.var().sqrt()).abs();
+        dm + dv
+    }
+}
+
+/// Streaming sufficient statistics (count, mean, M2) — Welford.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Moments {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+}
+
+impl Moments {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &Moments) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *o;
+            return;
+        }
+        let n = (self.n + o.n) as f64;
+        let d = o.mean - self.mean;
+        self.mean += d * o.n as f64 / n;
+        self.m2 += o.m2 + d * d * (self.n as f64) * (o.n as f64) / n;
+        self.n += o.n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    #[test]
+    fn norm_cdf_reference_values() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.0) - 0.8413447).abs() < 1e-5);
+        assert!((norm_cdf(-1.96) - 0.0249979).abs() < 1e-5);
+        assert!((norm_cdf(3.0) - 0.9986501).abs() < 1e-5);
+    }
+
+    #[test]
+    fn truncnorm_cdf_endpoints() {
+        let t = TruncNorm::new(0.3, 0.2, 0.0, 1.0);
+        assert_eq!(t.cdf(-0.1), 0.0);
+        assert_eq!(t.cdf(1.1), 1.0);
+        assert!(t.cdf(0.3) > 0.3 && t.cdf(0.3) < 0.7);
+    }
+
+    #[test]
+    fn truncnorm_mean_inside_support() {
+        let t = TruncNorm::new(-0.5, 0.4, 0.0, 1.0);
+        let m = t.mean();
+        assert!(m > 0.0 && m < 1.0, "{m}");
+    }
+
+    #[test]
+    fn fit_recovers_moments_roughly() {
+        let t0 = TruncNorm::new(0.35, 0.15, 0.0, 1.0);
+        let (m, v) = (t0.mean(), t0.var());
+        let fit = TruncNorm::fit_unit(m, v);
+        assert!((fit.mean() - m).abs() < 0.02, "{} vs {}", fit.mean(), m);
+        assert!((fit.var() - v).abs() < 0.01);
+    }
+
+    #[test]
+    fn moments_welford_matches_naive() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..1000).map(|_| r.uniform() * 3.0).collect();
+        let mut mo = Moments::default();
+        xs.iter().for_each(|&x| mo.push(x));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((mo.mean - mean).abs() < 1e-10);
+        assert!((mo.var() - var).abs() < 1e-10);
+    }
+
+    #[test]
+    fn moments_merge_equals_bulk() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f64> = (0..500).map(|_| r.gaussian()).collect();
+        let mut all = Moments::default();
+        xs.iter().for_each(|&x| all.push(x));
+        let mut a = Moments::default();
+        let mut b = Moments::default();
+        xs[..200].iter().for_each(|&x| a.push(x));
+        xs[200..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert!((a.mean - all.mean).abs() < 1e-10);
+        assert!((a.var() - all.var()).abs() < 1e-10);
+        assert_eq!(a.n, all.n);
+    }
+
+    #[test]
+    fn drift_detects_change() {
+        let a = TruncNorm::fit_unit(0.2, 0.01);
+        let b = TruncNorm::fit_unit(0.5, 0.04);
+        let c = TruncNorm::fit_unit(0.2001, 0.0101);
+        assert!(a.drift(&b) > 10.0 * a.drift(&c));
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal CLI argument parsing (offline environment: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects usize, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects u64, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects f64, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["cmd", "--steps", "100", "--fast", "--k=4", "pos2"]);
+        assert_eq!(a.positional, vec!["cmd", "pos2"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!(a.has("fast"));
+        assert!(a.bool_or("fast", false));
+        assert_eq!(a.usize_or("k", 0), 4);
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn floats_and_strings() {
+        let a = parse(&["--lr", "0.5", "--name", "abc"]);
+        assert_eq!(a.f64_or("lr", 0.0), 0.5);
+        assert_eq!(a.get_or("name", ""), "abc");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--verbose"]);
+        assert!(a.has("verbose"));
+    }
+}

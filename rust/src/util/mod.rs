@@ -1,0 +1,79 @@
+//! In-tree infrastructure (the environment is offline; see Cargo.toml).
+
+pub mod cli;
+pub mod prop;
+pub mod table;
+
+use std::time::Instant;
+
+/// Measure wall-clock of a closure in seconds.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Median of a slice (copies; fine for small stat vectors).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Repo-root-relative path resolution: works from the crate root or any
+/// subdirectory cargo runs us from (benches/tests/examples share this).
+pub fn repo_path(rel: &str) -> std::path::PathBuf {
+    let direct = std::path::PathBuf::from(rel);
+    if direct.exists() {
+        return direct;
+    }
+    if let Ok(mut dir) = std::env::current_dir() {
+        loop {
+            let cand = dir.join(rel);
+            if cand.exists() {
+                return cand;
+            }
+            if !dir.pop() {
+                break;
+            }
+        }
+    }
+    if let Ok(manifest) = std::env::var("CARGO_MANIFEST_DIR") {
+        let cand = std::path::Path::new(&manifest).join(rel);
+        if cand.exists() {
+            return cand;
+        }
+    }
+    direct
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn stddev_zero_for_constant() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal property-based testing helper (offline environment: no proptest).
+//!
+//! `for_cases(n, seed, |gen| ...)` runs a property over `n` randomized cases
+//! with a deterministic, reported seed per case — on failure the panic
+//! message names the case index and seed so it can be replayed with
+//! `Gen::new(seed)`.
+
+use crate::stats::rng::Rng;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed) }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| (self.rng.gaussian() as f32) * scale).collect()
+    }
+
+    pub fn vec_f64(&mut self, n: usize, scale: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.gaussian() * scale).collect()
+    }
+
+    /// Strictly increasing inner levels in (0,1): a valid level sequence
+    /// [0, l_1 < .. < l_alpha, 1].
+    pub fn level_sequence(&mut self, max_inner: usize) -> Vec<f64> {
+        let alpha = self.usize_in(1, max_inner);
+        let mut inner: Vec<f64> = (0..alpha).map(|_| self.f64_in(0.01, 0.99)).collect();
+        inner.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        inner.dedup_by(|a, b| (*a - *b).abs() < 1e-6);
+        let mut seq = vec![0.0];
+        seq.extend(inner);
+        seq.push(1.0);
+        seq
+    }
+
+    pub fn uniforms_f32(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.uniform_f32()).collect()
+    }
+}
+
+/// Run `prop` over `n` deterministic random cases derived from `seed`.
+pub fn for_cases(n: usize, seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..n {
+        let case_seed = seed
+            .wrapping_mul(0x100000001B3)
+            .wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut g = Gen::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {case} (Gen seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut firsts = Vec::new();
+        for _ in 0..2 {
+            let mut v = Vec::new();
+            for_cases(3, 42, |g| v.push(g.rng.next_u64()));
+            firsts.push(v);
+        }
+        assert_eq!(firsts[0], firsts[1]);
+    }
+
+    #[test]
+    fn level_sequence_valid() {
+        for_cases(50, 7, |g| {
+            let seq = g.level_sequence(12);
+            assert_eq!(seq[0], 0.0);
+            assert_eq!(*seq.last().unwrap(), 1.0);
+            for w in seq.windows(2) {
+                assert!(w[1] > w[0], "{seq:?}");
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failure_reports_case() {
+        for_cases(5, 1, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x < 100); // passes
+            if x % 1 == 0 {
+                // always; force failure on case 0
+                panic!("boom");
+            }
+        });
+    }
+}

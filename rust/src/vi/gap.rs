@@ -1,0 +1,171 @@
+//! Restricted gap function (GAP): GAP_X(x̂) = sup_{x in X} <A(x), x̂ - x>
+//! over the compact test domain X = B(center, radius).
+//!
+//! For the affine operators of the rate harness this is a (possibly
+//! indefinite) quadratic maximization over a ball; we solve it with
+//! multi-restart projected gradient ascent and verify against closed forms
+//! where they exist (constant operator: GAP = <A, x̂ - c> + R ||A||).
+
+use super::operator::Operator;
+use crate::stats::rng::Rng;
+use crate::stats::vecops::{dot64, l2_norm64, sub};
+
+pub struct GapEvaluator<'a> {
+    pub op: &'a dyn Operator,
+    pub center: Vec<f64>,
+    pub radius: f64,
+    pub restarts: usize,
+    pub iters: usize,
+}
+
+impl<'a> GapEvaluator<'a> {
+    pub fn new(op: &'a dyn Operator, center: Vec<f64>, radius: f64) -> Self {
+        GapEvaluator { op, center, radius, restarts: 6, iters: 200 }
+    }
+
+    fn project(&self, x: &mut [f64]) {
+        let diff = sub(x, &self.center);
+        let n = l2_norm64(&diff);
+        if n > self.radius {
+            let s = self.radius / n;
+            for (xi, (ci, di)) in x.iter_mut().zip(self.center.iter().zip(&diff)) {
+                *xi = ci + s * di;
+            }
+        }
+    }
+
+    /// phi(x) = <A(x), x_hat - x> (the objective being maximized over x).
+    fn phi(&self, x: &[f64], x_hat: &[f64]) -> f64 {
+        let a = self.op.apply_vec(x);
+        dot64(&a, &sub(x_hat, x))
+    }
+
+    /// Numerical gradient of phi at x (central differences). Operators here
+    /// are cheap (affine); this keeps the evaluator operator-agnostic.
+    fn grad_phi(&self, x: &[f64], x_hat: &[f64], out: &mut [f64]) {
+        let h = 1e-5;
+        let mut xp = x.to_vec();
+        for i in 0..x.len() {
+            let x0 = xp[i];
+            xp[i] = x0 + h;
+            let fp = self.phi(&xp, x_hat);
+            xp[i] = x0 - h;
+            let fm = self.phi(&xp, x_hat);
+            xp[i] = x0;
+            out[i] = (fp - fm) / (2.0 * h);
+        }
+    }
+
+    /// Evaluate GAP_X(x_hat) >= 0 (0 iff x_hat solves the VI when X contains
+    /// a neighbourhood of it — Prop B.1).
+    pub fn eval(&self, x_hat: &[f64]) -> f64 {
+        let d = self.op.dim();
+        let mut rng = Rng::new(0xA5A5);
+        let mut best = f64::NEG_INFINITY;
+        for restart in 0..self.restarts {
+            let mut x: Vec<f64> = match restart {
+                0 => self.center.clone(),
+                1 => x_hat.to_vec(),
+                _ => {
+                    let dir: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+                    let n = l2_norm64(&dir).max(1e-12);
+                    self.center
+                        .iter()
+                        .zip(&dir)
+                        .map(|(c, g)| c + self.radius * g / n)
+                        .collect()
+                }
+            };
+            self.project(&mut x);
+            let mut grad = vec![0.0; d];
+            let mut step = self.radius * 0.2;
+            let mut fx = self.phi(&x, x_hat);
+            for _ in 0..self.iters {
+                self.grad_phi(&x, x_hat, &mut grad);
+                let gn = l2_norm64(&grad);
+                if gn < 1e-12 {
+                    break;
+                }
+                let mut cand = x.clone();
+                for (ci, gi) in cand.iter_mut().zip(&grad) {
+                    *ci += step * gi / gn;
+                }
+                self.project(&mut cand);
+                let fc = self.phi(&cand, x_hat);
+                if fc > fx {
+                    x = cand;
+                    fx = fc;
+                    step *= 1.1;
+                } else {
+                    step *= 0.5;
+                    if step < 1e-10 {
+                        break;
+                    }
+                }
+            }
+            best = best.max(fx);
+        }
+        best.max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+    use crate::vi::operator::{BilinearGame, QuadraticOperator};
+
+    struct ConstOp {
+        a: Vec<f64>,
+    }
+    impl Operator for ConstOp {
+        fn dim(&self) -> usize {
+            self.a.len()
+        }
+        fn apply(&self, _x: &[f64], out: &mut [f64]) {
+            out.copy_from_slice(&self.a);
+        }
+    }
+
+    #[test]
+    fn matches_closed_form_for_constant_operator() {
+        // GAP = sup_{x in B(c,R)} <a, x̂ - x> = <a, x̂ - c> + R||a||
+        let a = vec![1.0, -2.0, 0.5];
+        let op = ConstOp { a: a.clone() };
+        let center = vec![0.1, 0.2, -0.3];
+        let radius = 1.5;
+        let gap = GapEvaluator::new(&op, center.clone(), radius);
+        let x_hat = vec![0.5, 0.5, 0.5];
+        let want = dot64(&a, &sub(&x_hat, &center)) + radius * l2_norm64(&a);
+        let got = gap.eval(&x_hat);
+        assert!((got - want).abs() < 1e-3 * want.abs().max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn gap_nonnegative_and_zero_at_solution() {
+        let mut rng = Rng::new(1);
+        let op = QuadraticOperator::random(6, 0.5, &mut rng);
+        let sol = op.sol.clone();
+        let gap = GapEvaluator::new(&op, sol.clone(), 1.0);
+        let g_at_sol = gap.eval(&sol);
+        assert!(g_at_sol >= 0.0);
+        assert!(g_at_sol < 1e-4, "{g_at_sol}");
+        // a far point has positive gap
+        let far: Vec<f64> = sol.iter().map(|s| s + 2.0).collect();
+        assert!(gap.eval(&far) > 0.1);
+    }
+
+    #[test]
+    fn gap_decreases_toward_solution_bilinear() {
+        let mut rng = Rng::new(2);
+        let op = BilinearGame::random(4, &mut rng);
+        let sol = op.solution().unwrap();
+        let gap = GapEvaluator::new(&op, sol.clone(), 2.0);
+        let far: Vec<f64> = sol.iter().map(|_| 1.5).collect();
+        let near: Vec<f64> = sol.iter().map(|_| 0.1).collect();
+        let gf = gap.eval(&far);
+        let gn = gap.eval(&near);
+        assert!(gn < gf, "{gn} vs {gf}");
+        assert!(gap.eval(&sol) < 1e-4);
+    }
+}

@@ -1,0 +1,11 @@
+//! Variational-inequality substrate (Section 2): operators and canonical
+//! monotone test problems, stochastic oracles with the paper's three noise
+//! models, and the restricted gap function evaluator.
+
+pub mod gap;
+pub mod noise;
+pub mod operator;
+
+pub use gap::GapEvaluator;
+pub use noise::{NoiseModel, Oracle};
+pub use operator::{BilinearGame, Operator, QuadraticOperator};

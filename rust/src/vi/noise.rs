@@ -1,0 +1,147 @@
+//! Stochastic first-order oracles (Section 2.4): absolute noise
+//! (Assumption 2.4), relative noise (Assumption 2.5), and the
+//! almost-surely-bounded variant (Assumption 6.1).
+
+use super::operator::Operator;
+use crate::stats::rng::Rng;
+use crate::stats::vecops::l2_norm64;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NoiseModel {
+    /// E||U||^2 <= sigma^2 (i.i.d. Gaussian per coordinate)
+    Absolute { sigma: f64 },
+    /// E||U||^2 <= sigma_R ||A(x)||^2 (Gaussian scaled by operator norm)
+    Relative { sigma_r: f64 },
+    /// absolute noise truncated so ||g|| <= j_bound a.s. (Assumption 6.1)
+    BoundedAbsolute { sigma: f64, j_bound: f64 },
+    None,
+}
+
+/// A stochastic oracle g(x; omega) = A(x) + U(x; omega) for one node.
+pub struct Oracle<'a> {
+    pub op: &'a dyn Operator,
+    pub noise: NoiseModel,
+    pub rng: Rng,
+    /// count of oracle calls (gradient computations) for cost accounting
+    pub calls: u64,
+}
+
+impl<'a> Oracle<'a> {
+    pub fn new(op: &'a dyn Operator, noise: NoiseModel, seed: u64) -> Self {
+        Oracle { op, noise, rng: Rng::new(seed), calls: 0 }
+    }
+
+    /// Draw g(x; omega).
+    pub fn sample(&mut self, x: &[f64]) -> Vec<f64> {
+        self.calls += 1;
+        let mut g = self.op.apply_vec(x);
+        let d = g.len() as f64;
+        match self.noise {
+            NoiseModel::None => {}
+            NoiseModel::Absolute { sigma } => {
+                // per-coordinate std sigma/sqrt(d) so E||U||^2 = sigma^2
+                let s = sigma / d.sqrt();
+                for v in g.iter_mut() {
+                    *v += s * self.rng.gaussian();
+                }
+            }
+            NoiseModel::Relative { sigma_r } => {
+                let an = l2_norm64(&g);
+                let s = (sigma_r.sqrt() * an) / d.sqrt();
+                for v in g.iter_mut() {
+                    *v += s * self.rng.gaussian();
+                }
+            }
+            NoiseModel::BoundedAbsolute { sigma, j_bound } => {
+                let s = sigma / d.sqrt();
+                for v in g.iter_mut() {
+                    *v += s * self.rng.gaussian();
+                }
+                let n = l2_norm64(&g);
+                if n > j_bound {
+                    let scale = j_bound / n;
+                    for v in g.iter_mut() {
+                        *v *= scale;
+                    }
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+    use crate::vi::operator::QuadraticOperator;
+
+    fn op() -> QuadraticOperator {
+        let mut rng = Rng::new(1);
+        QuadraticOperator::random(8, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn unbiasedness() {
+        let q = op();
+        let x = vec![0.3; 8];
+        let mean_a = q.apply_vec(&x);
+        let mut oracle = Oracle::new(&q, NoiseModel::Absolute { sigma: 1.0 }, 2);
+        let reps = 20_000;
+        let mut acc = vec![0.0; 8];
+        for _ in 0..reps {
+            let g = oracle.sample(&x);
+            for (a, v) in acc.iter_mut().zip(&g) {
+                *a += v;
+            }
+        }
+        for (a, m) in acc.iter().zip(&mean_a) {
+            assert!((a / reps as f64 - m).abs() < 0.02);
+        }
+        assert_eq!(oracle.calls, reps);
+    }
+
+    #[test]
+    fn absolute_variance_calibrated() {
+        let q = op();
+        let x = vec![1.0; 8];
+        let a = q.apply_vec(&x);
+        let sigma = 0.7;
+        let mut oracle = Oracle::new(&q, NoiseModel::Absolute { sigma }, 3);
+        let reps = 20_000;
+        let mut acc = 0.0;
+        for _ in 0..reps {
+            let g = oracle.sample(&x);
+            acc += g.iter().zip(&a).map(|(gi, ai)| (gi - ai).powi(2)).sum::<f64>();
+        }
+        let emp = acc / reps as f64;
+        assert!((emp - sigma * sigma).abs() < 0.05 * sigma * sigma, "{emp}");
+    }
+
+    #[test]
+    fn relative_noise_vanishes_at_solution() {
+        let q = op();
+        let sol = q.sol.clone();
+        let mut oracle = Oracle::new(&q, NoiseModel::Relative { sigma_r: 1.0 }, 4);
+        let g = oracle.sample(&sol);
+        // A(x*) = 0 => relative noise = 0 => g = 0
+        assert!(l2_norm64(&g) < 1e-9, "{g:?}");
+        // far from the solution the noise is nonzero
+        let far = vec![5.0; 8];
+        let g1 = oracle.sample(&far);
+        let g2 = oracle.sample(&far);
+        assert!(l2_norm64(&crate::stats::vecops::sub(&g1, &g2)) > 1e-6);
+    }
+
+    #[test]
+    fn bounded_oracle_respects_bound() {
+        let q = op();
+        let mut oracle =
+            Oracle::new(&q, NoiseModel::BoundedAbsolute { sigma: 10.0, j_bound: 3.0 }, 5);
+        for i in 0..200 {
+            let x = vec![i as f64 / 10.0; 8];
+            let g = oracle.sample(&x);
+            assert!(l2_norm64(&g) <= 3.0 + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! VI operators (Section 2.3): the deterministic mean operator A and the
+//! canonical monotone test problems used by the rate-verification harness
+//! (bilinear saddle games, strongly-monotone quadratics, co-coercive
+//! gradient fields).
+
+/// A deterministic operator A: R^d -> R^d.
+pub trait Operator: Send + Sync {
+    fn dim(&self) -> usize;
+
+    /// y = A(x)
+    fn apply(&self, x: &[f64], out: &mut [f64]);
+
+    fn apply_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.apply(x, &mut out);
+        out
+    }
+
+    /// A known solution x* (for GAP test-domain placement), if available.
+    fn solution(&self) -> Option<Vec<f64>> {
+        None
+    }
+
+    /// Lipschitz constant, if known.
+    fn lipschitz(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Bilinear saddle game: min_x max_y x^T B y (+ b^T x - c^T y).
+/// Operator A(x, y) = (B y + b, -B^T x + c) — monotone, *not* co-coercive
+/// (the Section 6 motivating class).
+pub struct BilinearGame {
+    pub n: usize,
+    /// row-major n x n matrix B
+    pub b_mat: Vec<f64>,
+    pub b: Vec<f64>,
+    pub c: Vec<f64>,
+}
+
+impl BilinearGame {
+    /// Random well-conditioned instance with solution at the origin.
+    pub fn random(n: usize, rng: &mut crate::stats::rng::Rng) -> Self {
+        let mut b_mat = vec![0.0; n * n];
+        for v in b_mat.iter_mut() {
+            *v = rng.gaussian() / (n as f64).sqrt();
+        }
+        // strengthen the diagonal so B is nonsingular (unique saddle at 0)
+        for i in 0..n {
+            b_mat[i * n + i] += 1.0;
+        }
+        BilinearGame { n, b_mat, b: vec![0.0; n], c: vec![0.0; n] }
+    }
+
+    fn bx(&self, y: &[f64], out: &mut [f64]) {
+        for i in 0..self.n {
+            let row = &self.b_mat[i * self.n..(i + 1) * self.n];
+            out[i] = row.iter().zip(y).map(|(a, b)| a * b).sum::<f64>();
+        }
+    }
+
+    fn btx(&self, x: &[f64], out: &mut [f64]) {
+        for j in 0..self.n {
+            out[j] = (0..self.n).map(|i| self.b_mat[i * self.n + j] * x[i]).sum();
+        }
+    }
+
+    /// Operator 2-norm of B (power iteration) — the Lipschitz constant.
+    pub fn spectral_norm(&self) -> f64 {
+        let mut v = vec![1.0 / (self.n as f64).sqrt(); self.n];
+        let mut tmp = vec![0.0; self.n];
+        let mut tmp2 = vec![0.0; self.n];
+        let mut sigma = 0.0;
+        for _ in 0..100 {
+            self.bx(&v, &mut tmp); // B v
+            self.btx(&tmp, &mut tmp2); // B^T B v
+            let norm = crate::stats::vecops::l2_norm64(&tmp2);
+            if norm == 0.0 {
+                return 0.0;
+            }
+            for (vi, ti) in v.iter_mut().zip(&tmp2) {
+                *vi = ti / norm;
+            }
+            sigma = norm.sqrt();
+        }
+        sigma
+    }
+}
+
+impl Operator for BilinearGame {
+    fn dim(&self) -> usize {
+        2 * self.n
+    }
+
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        let (xs, ys) = x.split_at(self.n);
+        let (ox, oy) = out.split_at_mut(self.n);
+        self.bx(ys, ox);
+        for (o, b) in ox.iter_mut().zip(&self.b) {
+            *o += b;
+        }
+        self.btx(xs, oy);
+        for (o, c) in oy.iter_mut().zip(&self.c) {
+            *o = -*o + c;
+        }
+    }
+
+    fn solution(&self) -> Option<Vec<f64>> {
+        // with b = c = 0 and B nonsingular the unique solution is 0
+        if self.b.iter().all(|&v| v == 0.0) && self.c.iter().all(|&v| v == 0.0) {
+            Some(vec![0.0; 2 * self.n])
+        } else {
+            None
+        }
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.spectral_norm())
+    }
+}
+
+/// Strongly monotone quadratic operator A(x) = M x - r with M = S + mu I,
+/// S = G^T G / n PSD: the gradient field of a strongly convex quadratic —
+/// monotone, Lipschitz AND co-coercive with beta = 1/L.
+pub struct QuadraticOperator {
+    pub d: usize,
+    /// row-major d x d SPD matrix
+    pub m: Vec<f64>,
+    pub r: Vec<f64>,
+    pub sol: Vec<f64>,
+    lip: f64,
+    pub mu: f64,
+}
+
+impl QuadraticOperator {
+    pub fn random(d: usize, mu: f64, rng: &mut crate::stats::rng::Rng) -> Self {
+        // M = G^T G / d + mu I
+        let mut g = vec![0.0; d * d];
+        for v in g.iter_mut() {
+            *v = rng.gaussian();
+        }
+        let mut m = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let mut acc = 0.0;
+                for k in 0..d {
+                    acc += g[k * d + i] * g[k * d + j];
+                }
+                m[i * d + j] = acc / d as f64 + if i == j { mu } else { 0.0 };
+            }
+        }
+        // solution x* random, r = M x*
+        let sol: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+        let mut r = vec![0.0; d];
+        for i in 0..d {
+            r[i] = m[i * d..(i + 1) * d].iter().zip(&sol).map(|(a, b)| a * b).sum();
+        }
+        // power iteration for the Lipschitz constant
+        let mut v = vec![1.0 / (d as f64).sqrt(); d];
+        let mut lip = 0.0;
+        for _ in 0..100 {
+            let mut t = vec![0.0; d];
+            for i in 0..d {
+                t[i] = m[i * d..(i + 1) * d].iter().zip(&v).map(|(a, b)| a * b).sum();
+            }
+            let norm = crate::stats::vecops::l2_norm64(&t);
+            for (vi, ti) in v.iter_mut().zip(&t) {
+                *vi = ti / norm;
+            }
+            lip = norm;
+        }
+        QuadraticOperator { d, m, r, sol, lip, mu }
+    }
+
+    /// Co-coercivity modulus beta = 1 / L for gradient fields.
+    pub fn beta(&self) -> f64 {
+        1.0 / self.lip
+    }
+}
+
+impl Operator for QuadraticOperator {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        for i in 0..self.d {
+            let row = &self.m[i * self.d..(i + 1) * self.d];
+            out[i] = row.iter().zip(x).map(|(a, b)| a * b).sum::<f64>() - self.r[i];
+        }
+    }
+
+    fn solution(&self) -> Option<Vec<f64>> {
+        Some(self.sol.clone())
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.lip)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+    use crate::stats::vecops::{dot64, sub};
+    use crate::util::prop::for_cases;
+
+    #[test]
+    fn bilinear_is_monotone() {
+        // <A(x) - A(x'), x - x'> >= 0 (equals 0 exactly for bilinear)
+        for_cases(20, 3, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let op = BilinearGame::random(6, &mut rng);
+            let x = g.vec_f64(12, 2.0);
+            let y = g.vec_f64(12, 2.0);
+            let d = dot64(&sub(&op.apply_vec(&x), &op.apply_vec(&y)), &sub(&x, &y));
+            assert!(d >= -1e-9, "{d}");
+        });
+    }
+
+    #[test]
+    fn bilinear_solution_is_zero_of_operator() {
+        let mut rng = Rng::new(1);
+        let op = BilinearGame::random(8, &mut rng);
+        let sol = op.solution().unwrap();
+        let a = op.apply_vec(&sol);
+        assert!(crate::stats::vecops::l2_norm64(&a) < 1e-12);
+    }
+
+    #[test]
+    fn quadratic_strongly_monotone_and_cocoercive() {
+        for_cases(10, 5, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let op = QuadraticOperator::random(8, 0.5, &mut rng);
+            let x = g.vec_f64(8, 2.0);
+            let y = g.vec_f64(8, 2.0);
+            let ax = op.apply_vec(&x);
+            let ay = op.apply_vec(&y);
+            let inner = dot64(&sub(&ax, &ay), &sub(&x, &y));
+            let dxy2: f64 = sub(&x, &y).iter().map(|v| v * v).sum();
+            let da2: f64 = sub(&ax, &ay).iter().map(|v| v * v).sum();
+            // strong monotonicity with mu = 0.5
+            assert!(inner >= 0.5 * dxy2 - 1e-9);
+            // co-coercivity with beta = 1/L
+            assert!(inner >= op.beta() * da2 - 1e-6, "{inner} vs {}", op.beta() * da2);
+        });
+    }
+
+    #[test]
+    fn quadratic_solution_zeroes_operator() {
+        let mut rng = Rng::new(2);
+        let op = QuadraticOperator::random(10, 0.1, &mut rng);
+        let a = op.apply_vec(&op.solution().unwrap());
+        assert!(crate::stats::vecops::l2_norm64(&a) < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn lipschitz_bound_holds() {
+        for_cases(10, 7, |g| {
+            let mut rng = Rng::new(g.rng.next_u64());
+            let op = QuadraticOperator::random(8, 0.3, &mut rng);
+            let l = op.lipschitz().unwrap();
+            let x = g.vec_f64(8, 1.0);
+            let y = g.vec_f64(8, 1.0);
+            let da = crate::stats::vecops::l2_norm64(&sub(
+                &op.apply_vec(&x),
+                &op.apply_vec(&y),
+            ));
+            let dx = crate::stats::vecops::l2_norm64(&sub(&x, &y));
+            assert!(da <= l * dx * (1.0 + 1e-6) + 1e-9);
+        });
+    }
+
+    #[test]
+    fn bilinear_not_cocoercive() {
+        // For pure bilinear (skew) parts, <A(x)-A(y), x-y> = 0 while
+        // ||A(x)-A(y)|| > 0 — co-coercivity fails for any beta > 0.
+        let op = BilinearGame {
+            n: 1,
+            b_mat: vec![1.0],
+            b: vec![0.0],
+            c: vec![0.0],
+        };
+        let x = vec![1.0, 0.0];
+        let y = vec![0.0, 0.0];
+        let inner = dot64(&sub(&op.apply_vec(&x), &op.apply_vec(&y)), &sub(&x, &y));
+        let da2: f64 = sub(&op.apply_vec(&x), &op.apply_vec(&y))
+            .iter()
+            .map(|v| v * v)
+            .sum();
+        assert!(inner.abs() < 1e-12);
+        assert!(da2 > 0.5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration: the paper's convergence theory holds on the implementation.
+//!
+//! Theorem 5.5 — GAP = O(1/sqrt(TK)) under absolute noise;
+//! Theorem 5.7/6.2 — faster decay under relative noise;
+//! Remark 5.8 — more nodes help;
+//! Section 4 — QODA halves Q-GenX's oracle calls at comparable GAP.
+
+use qoda::bench_harness::experiments::rate_sweep;
+use qoda::vi::noise::NoiseModel;
+
+fn decay_slope(points: &[(usize, f64)]) -> f64 {
+    let (t0, g0) = points[0];
+    let (t1, g1) = *points.last().unwrap();
+    (g1.max(1e-12) / g0.max(1e-12)).ln() / ((t1 as f64) / (t0 as f64)).ln()
+}
+
+fn averaged_gaps(
+    kind: &str,
+    k: usize,
+    noise: NoiseModel,
+    horizons: &[usize],
+    use_alt: bool,
+    seeds: u64,
+) -> Vec<(usize, f64)> {
+    let mut acc = vec![0.0; horizons.len()];
+    for s in 0..seeds {
+        let pts = rate_sweep(kind, k, noise, Some(6), horizons, 300 + s, use_alt);
+        for (a, p) in acc.iter_mut().zip(&pts) {
+            *a += p.gap / seeds as f64;
+        }
+    }
+    horizons.iter().copied().zip(acc).collect()
+}
+
+#[test]
+fn gap_decays_under_absolute_noise() {
+    let horizons = [64usize, 512, 4096];
+    let pts = averaged_gaps(
+        "quadratic",
+        2,
+        NoiseModel::Absolute { sigma: 0.5 },
+        &horizons,
+        false,
+        3,
+    );
+    let slope = decay_slope(&pts);
+    // Theorem 5.5 predicts ~ -0.5; allow a generous band on a finite run
+    assert!(slope < -0.25, "slope {slope}, gaps {pts:?}");
+    assert!(pts.last().unwrap().1 < pts[0].1, "{pts:?}");
+}
+
+#[test]
+fn relative_noise_decays_faster_than_absolute() {
+    let horizons = [64usize, 512, 4096];
+    let abs = averaged_gaps(
+        "quadratic",
+        2,
+        NoiseModel::Absolute { sigma: 0.5 },
+        &horizons,
+        false,
+        3,
+    );
+    let rel = averaged_gaps(
+        "quadratic",
+        2,
+        NoiseModel::Relative { sigma_r: 0.5 },
+        &horizons,
+        false,
+        3,
+    );
+    let s_abs = decay_slope(&abs);
+    let s_rel = decay_slope(&rel);
+    // Theorem 5.7: O(1/T) vs O(1/sqrt(T)) — the relative-noise slope must be
+    // clearly steeper
+    assert!(s_rel < s_abs - 0.15, "rel {s_rel} vs abs {s_abs}");
+}
+
+#[test]
+fn more_nodes_reduce_gap_under_absolute_noise() {
+    // Remark 5.8: K in the denominator
+    let horizons = [1024usize];
+    let g1 = averaged_gaps(
+        "quadratic",
+        1,
+        NoiseModel::Absolute { sigma: 1.0 },
+        &horizons,
+        false,
+        4,
+    )[0]
+        .1;
+    let g8 = averaged_gaps(
+        "quadratic",
+        8,
+        NoiseModel::Absolute { sigma: 1.0 },
+        &horizons,
+        false,
+        4,
+    )[0]
+        .1;
+    assert!(g8 < g1, "K=8 gap {g8} should beat K=1 gap {g1}");
+}
+
+#[test]
+fn alt_schedule_handles_bilinear_without_cocoercivity() {
+    // Theorem 6.2: bilinear games are NOT co-coercive; the (Alt) schedule
+    // must still drive the gap down under relative noise
+    let horizons = [128usize, 1024, 4096];
+    let pts = averaged_gaps(
+        "bilinear",
+        2,
+        NoiseModel::Relative { sigma_r: 0.3 },
+        &horizons,
+        true,
+        3,
+    );
+    assert!(
+        pts.last().unwrap().1 < 0.5 * pts[0].1,
+        "no progress on bilinear: {pts:?}"
+    );
+}
+
+#[test]
+fn quantized_matches_uncompressed_rate_shape() {
+    // unbiased quantization must not change the decay exponent, only the
+    // constant (Theorem 5.5's eps_Q factor)
+    let horizons = [64usize, 512, 4096];
+    let mut q = vec![0.0; horizons.len()];
+    let mut u = vec![0.0; horizons.len()];
+    for s in 0..3 {
+        let pq = rate_sweep(
+            "quadratic",
+            2,
+            NoiseModel::Absolute { sigma: 0.5 },
+            Some(5),
+            &horizons,
+            500 + s,
+            false,
+        );
+        let pu = rate_sweep(
+            "quadratic",
+            2,
+            NoiseModel::Absolute { sigma: 0.5 },
+            None,
+            &horizons,
+            500 + s,
+            false,
+        );
+        for i in 0..horizons.len() {
+            q[i] += pq[i].gap / 3.0;
+            u[i] += pu[i].gap / 3.0;
+        }
+    }
+    let sq = decay_slope(&horizons.iter().copied().zip(q.clone()).collect::<Vec<_>>());
+    let su = decay_slope(&horizons.iter().copied().zip(u.clone()).collect::<Vec<_>>());
+    assert!((sq - su).abs() < 0.35, "slopes diverge: quant {sq} vs raw {su}");
+    // constant-factor penalty bounded (eps_Q at 5 bits is small)
+    assert!(q.last().unwrap() < &(u.last().unwrap() * 6.0 + 1e-6));
+}

@@ -1,0 +1,181 @@
+//! Integration: the AOT bridge end-to-end — load every artifact, execute,
+//! check shapes/numerics, and cross-validate the rust quantizer against the
+//! L1 Pallas kernel running under PJRT.
+
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::LevelSequence;
+use qoda::runtime::{pjrt, LmModel, Runtime, WganModel};
+use qoda::stats::rng::Rng;
+
+fn runtime() -> Runtime {
+    Runtime::cpu().expect("PJRT CPU client")
+}
+
+#[test]
+fn wgan_artifacts_load_and_run() {
+    let rt = runtime();
+    let model = WganModel::load(&rt).expect("load wgan artifacts");
+    assert!(model.dim > 1000);
+    let params = model.init_params(0).unwrap();
+    assert_eq!(params.len(), model.dim);
+    assert!(params.iter().all(|x| x.is_finite()));
+
+    let (dual, g_loss, w_dist) = model.dual(&params, 1).unwrap();
+    assert_eq!(dual.len(), model.dim);
+    assert!(dual.iter().all(|x| x.is_finite()));
+    assert!(g_loss.is_finite() && w_dist.is_finite());
+
+    // determinism: same seed, same dual
+    let (dual2, _, _) = model.dual(&params, 1).unwrap();
+    assert_eq!(dual, dual2);
+    // different seed, different minibatch
+    let (dual3, _, _) = model.dual(&params, 2).unwrap();
+    assert_ne!(dual, dual3);
+
+    let (fake, real) = model.samples(&params, 3).unwrap();
+    assert_eq!(fake.len(), model.sample_n * 2);
+    assert_eq!(real.len(), model.sample_n * 2);
+    // real data lives near the radius-2 mode circle
+    for chunk in real.chunks(2) {
+        let r = (chunk[0] * chunk[0] + chunk[1] * chunk[1]).sqrt();
+        assert!((r - 2.0).abs() < 0.5, "real point off-circle: {chunk:?}");
+    }
+}
+
+#[test]
+fn lm_artifacts_load_and_run() {
+    let rt = runtime();
+    let model = LmModel::load(&rt).expect("load lm artifacts");
+    let params = model.init_params(0).unwrap();
+    assert_eq!(params.len(), model.dim);
+
+    let mut rng = Rng::new(7);
+    let tokens: Vec<i32> = (0..model.batch * (model.seq + 1))
+        .map(|_| rng.below(model.vocab as u64) as i32)
+        .collect();
+    let (grads, loss) = model.grad(&params, &tokens).unwrap();
+    assert_eq!(grads.len(), model.dim);
+    assert!(loss.is_finite());
+    // at random init, loss ~ log(vocab)
+    assert!((loss - (model.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+
+    // one SGD step on the same batch reduces the loss
+    let stepped: Vec<f32> =
+        params.iter().zip(&grads).map(|(p, g)| p - 0.5 * g).collect();
+    let loss2 = model.eval(&stepped, &tokens).unwrap();
+    assert!(loss2 < loss, "{loss2} vs {loss}");
+
+    // layer map types cover the figure-5 ablation categories
+    let types: std::collections::BTreeSet<_> =
+        model.meta.type_names.iter().cloned().collect();
+    for t in ["embedding", "attention", "ff", "norm", "bias"] {
+        assert!(types.contains(t), "missing type {t}");
+    }
+}
+
+#[test]
+fn pallas_quantize_kernel_matches_rust_quantizer() {
+    // The standalone L1 kernel artifact quantizes f32[4096] against an
+    // 8-level table with explicit uniforms; the rust quantizer must agree
+    // bit-for-bit when driven with the same uniforms.
+    let rt = runtime();
+    let exe = rt
+        .load_artifact("artifacts/quantize_k8.hlo.txt")
+        .expect("load quantize kernel");
+    let n = 4096;
+    let mut rng = Rng::new(42);
+    let v: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+    let levels_f32: Vec<f32> = vec![0.0, 0.05, 0.12, 0.25, 0.45, 0.7, 0.88, 1.0];
+    let uniforms: Vec<f32> = (0..n).map(|_| rng.uniform_f32()).collect();
+
+    let out = exe
+        .run(&[pjrt::lit_f32(&v), pjrt::lit_f32(&levels_f32), pjrt::lit_f32(&uniforms)])
+        .unwrap();
+    let kernel_out = pjrt::to_f32(&out[0]).unwrap();
+
+    // rust-side quantization with the same uniforms (norm rounded to f32 to
+    // match the wire convention; the kernel normalizes by the f64->f32 norm)
+    let seq = LevelSequence::new(levels_f32.iter().map(|&x| x as f64).collect());
+    let norm = qoda::stats::vecops::lq_norm(&v, 2.0);
+    let ls = seq.as_slice();
+    let mut rust_out = vec![0.0f32; n];
+    for i in 0..n {
+        let mag = ((v[i].abs() as f64) / norm).clamp(0.0, 1.0);
+        let tau = seq.bracket(mag);
+        let xi = (mag - ls[tau]) / (ls[tau + 1] - ls[tau]).max(1e-38);
+        let pick_hi = (uniforms[i] as f64) < xi;
+        let level = if pick_hi { ls[tau + 1] } else { ls[tau] };
+        rust_out[i] = (norm * level) as f32 * v[i].signum();
+    }
+    let mut mismatches = 0;
+    for i in 0..n {
+        if (kernel_out[i] - rust_out[i]).abs() > 1e-4 * norm as f32 {
+            mismatches += 1;
+        }
+    }
+    // tiny tolerance for f32-vs-f64 normalization boundary flips
+    assert!(mismatches <= n / 500, "{mismatches} mismatches of {n}");
+}
+
+#[test]
+fn python_testvectors_match_rust_quantizer() {
+    // Shared vectors emitted by aot.py (kernel == ref asserted python-side);
+    // here: rust bracket/rounding reproduces the ref outputs exactly.
+    let path = qoda::util::repo_path("artifacts/testvectors/quant_cases.txt");
+    let text = std::fs::read_to_string(&path).expect("testvectors (run make artifacts)");
+    let mut lines = text.lines();
+    let ncases: usize = lines
+        .next()
+        .unwrap()
+        .strip_prefix("ncases ")
+        .unwrap()
+        .parse()
+        .unwrap();
+    let parse_vec = |line: &str, tag: &str| -> Vec<f32> {
+        let rest = line.strip_prefix(tag).unwrap_or_else(|| panic!("want {tag}"));
+        rest.split_whitespace().map(|t| t.parse::<f32>().unwrap()).collect()
+    };
+    for _ in 0..ncases {
+        let hdr = lines.next().unwrap();
+        let toks: Vec<&str> = hdr.split_whitespace().collect();
+        assert_eq!(toks[0], "case");
+        let q: f64 = toks[7].parse().unwrap();
+        let v = parse_vec(lines.next().unwrap(), "v ");
+        let levels = parse_vec(lines.next().unwrap(), "levels ");
+        let u = parse_vec(lines.next().unwrap(), "u ");
+        let expected = parse_vec(lines.next().unwrap(), "expected ");
+
+        let seq = LevelSequence::new(levels.iter().map(|&x| x as f64).collect());
+        let norm = qoda::stats::vecops::lq_norm(&v, q) as f32 as f64;
+        let ls = seq.as_slice();
+        for i in 0..v.len() {
+            let mag = if norm > 0.0 {
+                ((v[i].abs() as f64) / norm).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            let tau = seq.bracket(mag);
+            let xi = (mag - ls[tau]) / (ls[tau + 1] - ls[tau]).max(1e-38);
+            let level = if (u[i] as f64) < xi { ls[tau + 1] } else { ls[tau] };
+            let got = (norm * level) as f32 * if v[i] < 0.0 { -1.0 } else { 1.0 };
+            assert!(
+                (got - expected[i]).abs() <= 2e-5 * norm as f32,
+                "case coord {i}: got {got} want {}",
+                expected[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn meta_layer_maps_are_valid() {
+    for name in ["artifacts/wgan.meta", "artifacts/lm.meta"] {
+        let m = LayerMap::load_meta(&qoda::util::repo_path(name)).unwrap();
+        m.validate().unwrap();
+        assert!(m.num_types() >= 2, "{name} should be heterogeneous");
+        // shapes fill the dim
+        for l in &m.layers {
+            assert_eq!(l.rows * l.cols, l.len, "{}", l.name);
+        }
+    }
+}
