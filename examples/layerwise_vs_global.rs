@@ -8,7 +8,7 @@ use qoda::bench_harness::model_experiments::fig4;
 use qoda::util::cli::Args;
 use qoda::util::table::save_series_csv;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> qoda::util::error::Result<()> {
     let args = Args::from_env();
     let steps = args.usize_or("steps", 240);
     let nseeds = args.usize_or("seeds", 2);

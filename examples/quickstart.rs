@@ -33,7 +33,7 @@ fn main() {
     let qv = quantize(&grad, &map, &cfg, &mut rng);
     let books = Codebooks::uniform(ProtocolKind::Main, &cfg, &map.type_proportions());
     let wire = encode_vector(&qv, &books);
-    let decoded = dequantize(&decode_vector(&wire, &map, &books), &cfg);
+    let decoded = dequantize(&decode_vector(&wire, &map, &books).expect("decode"), &cfg);
 
     println!(
         "quantized {} coords: {} -> {} bytes ({:.1}x), eps_Q bound = {:.3}",

@@ -11,7 +11,7 @@ use qoda::runtime::{Runtime, WganModel};
 use qoda::util::cli::Args;
 use qoda::util::table::save_series_csv;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> qoda::util::error::Result<()> {
     let args = Args::from_env();
     let steps = args.usize_or("steps", 300);
     let rt = Runtime::cpu()?;

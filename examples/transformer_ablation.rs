@@ -7,7 +7,7 @@
 use qoda::bench_harness::model_experiments::{fig5, table3};
 use qoda::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> qoda::util::error::Result<()> {
     let args = Args::from_env();
     let steps = args.usize_or("steps", 120);
     let nseeds = args.usize_or("seeds", 2);

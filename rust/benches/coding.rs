@@ -56,7 +56,7 @@ fn main() {
         let mut r = hbuf.reader();
         let mut acc = 0usize;
         for _ in 0..n {
-            acc = acc.wrapping_add(h.decode(&mut r));
+            acc = acc.wrapping_add(h.decode(&mut r).unwrap());
         }
         acc
     });

@@ -1,0 +1,73 @@
+//! Perf baseline for the unified `comm` pipeline: ns/coordinate and
+//! bytes/step for the full encode+decode path — identity vs quantized,
+//! both wire protocols, sequential vs per-layer-parallel entropy coding.
+//! Future transport PRs (sharded/async allgather, multi-backend) measure
+//! against these numbers.
+
+use qoda::bench_harness::bench;
+use qoda::coding::protocol::ProtocolKind;
+use qoda::comm::{
+    Adaptation, CommEndpoint, Compressor, IdentityCompressor, QuantCompressor,
+};
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::QuantConfig;
+use qoda::stats::rng::Rng;
+
+fn grad(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| rng.gaussian() * if i % 61 == 0 { 20.0 } else { 0.3 })
+        .collect()
+}
+
+fn bench_endpoint(name: &str, codec: Box<dyn Compressor>, v: &[f64]) {
+    let mut ep = CommEndpoint::new(codec);
+    let mut out = Vec::with_capacity(v.len());
+    // one warm roundtrip so the report shows the packet's steady-state size
+    ep.roundtrip_into(v, &mut out).expect("roundtrip");
+    let bytes = ep.packet().len_bytes();
+    bench(
+        &format!("{name}/encode+decode"),
+        Some(v.len() as u64),
+        || ep.roundtrip_into(v, &mut out).expect("roundtrip"),
+    );
+    println!("{name:<46} bytes/step: {bytes} ({:.3} bytes/coord)", bytes as f64 / v.len() as f64);
+}
+
+fn main() {
+    let n = 1usize << 16;
+    let v = grad(n, 3);
+    let map = LayerMap::single(n);
+
+    bench_endpoint("comm/identity/64k", Box::new(IdentityCompressor), &v);
+
+    for (kind, name) in [
+        (ProtocolKind::Main, "main"),
+        (ProtocolKind::Alternating, "alternating"),
+    ] {
+        let codec = QuantCompressor::new(
+            map.bucketed(128).with_single_type(),
+            QuantConfig::uniform_bits(1, 5, 2.0),
+            kind,
+            Adaptation::Fixed,
+            7,
+        );
+        bench_endpoint(&format!("comm/quant5/{name}/64k"), Box::new(codec), &v);
+    }
+
+    // per-layer encode parallelism (same wire bits, more threads)
+    for threads in [1usize, 2, 4] {
+        let mut codec = QuantCompressor::global_bits(&map, 5, 128, 9);
+        codec.encode_threads = threads;
+        bench_endpoint(&format!("comm/quant5/main/64k/threads={threads}"), Box::new(codec), &v);
+    }
+
+    // layer-wise adaptive configuration (the paper's QODA5 layerwise mode)
+    let het = LayerMap::from_spec(&[
+        ("ff", n / 2, "ff"),
+        ("emb", n / 4, "embedding"),
+        ("attn", n / 4, "attention"),
+    ]);
+    let codec = QuantCompressor::layerwise(&het, 5, 128, 0, 11);
+    bench_endpoint("comm/quant5-layerwise/main/64k", Box::new(codec), &v);
+}

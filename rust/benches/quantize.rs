@@ -28,7 +28,7 @@ fn main() {
         });
         let buf = encode_vector(&qv, &books);
         bench(&format!("decode/main/n={n}"), Some(n as u64), || {
-            decode_vector(&buf, &map, &books)
+            decode_vector(&buf, &map, &books).unwrap()
         });
     }
 }

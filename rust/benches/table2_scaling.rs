@@ -26,7 +26,7 @@ fn main() {
         let duals: Vec<Vec<f64>> =
             (0..k).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect();
         bench(&format!("cluster_exchange/K={k}/d=64k"), Some((k * d) as u64), || {
-            sim.exchange(&duals)
+            sim.exchange(&duals).unwrap()
         });
     }
 }

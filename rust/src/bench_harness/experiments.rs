@@ -6,8 +6,8 @@ use crate::coding::huffman::normalize;
 use crate::coding::protocol::{
     encoded_bits, symbol_counts, Codebooks, ProtocolKind,
 };
+use crate::comm::{Compressor, IdentityCompressor, QuantCompressor};
 use crate::net::{Collective, NetworkModel};
-use crate::oda::compress::{Compressor, IdentityCompressor, QuantCompressor};
 use crate::oda::lr::{AdaptiveLr, AltLr};
 use crate::oda::qgenx::QGenX;
 use crate::oda::qoda::Qoda;
@@ -43,14 +43,16 @@ pub const BASELINE_SYNC_MS_PER_PEER: f64 = 13.0;
 pub const QODA_CODEC_MS: f64 = 4.0;
 
 /// Real encoded bytes/coordinate for a gradient-shaped vector under the
-/// QODA5 configuration (5-bit, bucket 128, entropy-coded): measured by
-/// running the actual quantizer + coder once on `n` synthetic coordinates.
+/// QODA5 configuration (5-bit, bucket 128, entropy-coded): measured through
+/// the unified comm pipeline — one warm-up encode gathers statistics, the
+/// codebooks retune, and the reported figure is the second packet's actual
+/// payload size.
 pub fn measure_qoda5_bytes_per_coord(n: usize, seed: u64) -> f64 {
     let mut rng = Rng::new(seed);
     // heavy-tailed gradient: a few coordinates dominate each bucket's norm
-    let v: Vec<f32> = (0..n)
+    let v: Vec<f64> = (0..n)
         .map(|i| {
-            let base = rng.gaussian() as f32;
+            let base = rng.gaussian();
             if i % 61 == 0 {
                 base * 20.0
             } else {
@@ -58,14 +60,15 @@ pub fn measure_qoda5_bytes_per_coord(n: usize, seed: u64) -> f64 {
             }
         })
         .collect();
-    let map = LayerMap::single(n).bucketed(128);
-    let cfg = QuantConfig::uniform_bits(1, 5, 2.0);
-    let qv = quantize(&v, &map, &cfg, &mut rng);
-    let sizes = vec![cfg.sequences[0].num_symbols()];
-    let probs: Vec<Vec<f64>> =
-        symbol_counts(&qv, 1, &sizes).iter().map(|c| normalize(c)).collect();
-    let books = Codebooks::build(ProtocolKind::Main, &probs, &map.type_proportions());
-    encoded_bits(&qv, &books) as f64 / 8.0 / n as f64
+    let map = LayerMap::single(n);
+    let mut codec = QuantCompressor::global_bits(&map, 5, 128, seed ^ 0x51);
+    // pass 1: cold (uniform books) — gathers the per-type statistics
+    let _ = codec.encode(&v);
+    // tune the entropy coder to the observed level distribution (Prop D.1)
+    codec.retune_books();
+    // pass 2: the measured wire packet
+    let packet = codec.encode(&v);
+    packet.len_bits() as f64 / 8.0 / n as f64
 }
 
 /// Step time (ms) for one configuration of the Tables 1–2 testbed.
@@ -628,19 +631,20 @@ pub fn ablation_table() -> Table {
     let mut static_bits = 0.0f64;
     for (name, adaptation) in configs {
         let cfg = QuantConfig::uniform_bits(map.num_types(), 5, 2.0);
-        let mut comp = QuantCompressor::new(
+        let mut ep = crate::comm::CommEndpoint::new(Box::new(QuantCompressor::new(
             map.clone(),
             cfg,
             ProtocolKind::Main,
             adaptation,
             9,
-        );
+        )));
         let mut rng = Rng::new(31);
+        let mut out: Vec<f64> = Vec::new();
         let (mut bits_acc, mut err_acc, mut norm_acc) = (0.0f64, 0.0, 0.0);
         let steps = 400;
         for _ in 0..steps {
             let g = mk_grad(&mut rng);
-            let (out, bits) = crate::oda::compress::Compressor::compress(&mut comp, &g);
+            let bits = ep.roundtrip_into(&g, &mut out).expect("comm roundtrip");
             bits_acc += bits as f64;
             err_acc += g.iter().zip(&out).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
             norm_acc += g.iter().map(|a| a * a).sum::<f64>();

@@ -2,9 +2,8 @@
 //! (Transformer compression rates at matched perplexity) and Figure 5
 //! (per-layer-type quantization ablation).
 
-use anyhow::Result;
-
 use crate::gan::trainer::{self as gan_trainer, GanCompression, GanOptimizer, GanTrainConfig};
+use crate::util::error::Result;
 use crate::lm::trainer::{self as lm_trainer, LmTrainConfig, QuantTarget};
 use crate::runtime::{LmModel, Runtime, WganModel};
 use crate::util::table::Table;

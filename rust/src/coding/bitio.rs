@@ -67,16 +67,48 @@ impl BitWriter {
         let bits = self.len_bits();
         BitBuf { words: self.words, bits }
     }
+
+    /// Reset to empty, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.words.clear();
+        self.bits = 0;
+    }
+
+    /// Move the written bits into `buf` (reusing `buf`'s allocation for the
+    /// next round); the writer is left empty with `buf`'s old capacity.
+    pub fn finish_into(&mut self, buf: &mut BitBuf) {
+        std::mem::swap(&mut self.words, &mut buf.words);
+        buf.bits = self.bits;
+        self.words.clear();
+        self.bits = 0;
+    }
+
+    /// Append a finished buffer bit-for-bit (stream concatenation — used by
+    /// the per-layer parallel encoder to splice chunk streams in order).
+    pub fn append(&mut self, buf: &BitBuf) {
+        let mut left = buf.bits;
+        let mut i = 0;
+        while left > 0 {
+            let n = left.min(64) as u32;
+            self.write_bits(buf.words[i], n);
+            left -= n as usize;
+            i += 1;
+        }
+    }
 }
 
 /// Finished bit buffer.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct BitBuf {
     words: Vec<u64>,
     bits: usize,
 }
 
 impl BitBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
     pub fn len_bits(&self) -> usize {
         self.bits
     }
@@ -87,6 +119,16 @@ impl BitBuf {
 
     pub fn reader(&self) -> BitReader<'_> {
         BitReader { words: &self.words, pos: 0, bits: self.bits }
+    }
+
+    /// Hand this buffer's allocation to `w` for reuse and leave the buffer
+    /// empty (the scratch-recycling counterpart of `finish_into`).
+    pub fn recycle_into(&mut self, w: &mut BitWriter) {
+        std::mem::swap(&mut self.words, &mut w.words);
+        self.words.clear();
+        self.bits = 0;
+        w.words.clear();
+        w.bits = 0;
     }
 }
 
@@ -102,6 +144,22 @@ impl<'a> BitReader<'a> {
     #[inline]
     pub fn remaining(&self) -> usize {
         self.bits - self.pos
+    }
+
+    /// Current bit position (for decode-error reporting).
+    #[inline]
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Checked read for untrusted (wire) streams: `None` past the end.
+    #[inline]
+    pub fn try_read_bits(&mut self, n: u32) -> Option<u64> {
+        if n as usize > self.remaining() {
+            None
+        } else {
+            Some(self.read_bits(n))
+        }
     }
 
     /// Read `n` bits (n <= 64); panics past the end (protocol bugs are bugs).
@@ -259,6 +317,50 @@ mod tests {
         let buf = w.finish();
         let r = buf.reader();
         assert_eq!(r.peek_bits(8), 0b11);
+    }
+
+    #[test]
+    fn append_concatenates_streams() {
+        let mut a = BitWriter::new();
+        a.write_bits(0b101, 3);
+        let mut b = BitWriter::new();
+        b.write_bits(0xABCD, 16);
+        b.write_bits(0xFFFF_FFFF_FFFF_FFFF, 64);
+        let bb = b.finish();
+        a.append(&bb);
+        let buf = a.finish();
+        assert_eq!(buf.len_bits(), 3 + 16 + 64);
+        let mut r = buf.reader();
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_bits(16), 0xABCD);
+        assert_eq!(r.read_bits(64), u64::MAX);
+    }
+
+    #[test]
+    fn finish_into_and_recycle_reuse_buffers() {
+        let mut w = BitWriter::new();
+        let mut buf = BitBuf::new();
+        for round in 0..3u64 {
+            buf.recycle_into(&mut w);
+            w.write_bits(round, 7);
+            w.write_f32(round as f32);
+            w.finish_into(&mut buf);
+            assert_eq!(buf.len_bits(), 39);
+            let mut r = buf.reader();
+            assert_eq!(r.read_bits(7), round);
+            assert_eq!(r.read_f32(), round as f32);
+        }
+    }
+
+    #[test]
+    fn try_read_bits_checks_bounds() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        let buf = w.finish();
+        let mut r = buf.reader();
+        assert_eq!(r.try_read_bits(3), None);
+        assert_eq!(r.try_read_bits(2), Some(0b11));
+        assert_eq!(r.try_read_bits(1), None);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! entropy — exactly the guarantee Theorem 5.3 builds on.
 
 use super::bitio::{BitReader, BitWriter};
+use super::DecodeError;
 
 /// A built canonical Huffman code over symbols 0..n.
 #[derive(Clone, Debug)]
@@ -183,33 +184,41 @@ impl Huffman {
         w.write_bits(self.rev_codes[sym], len);
     }
 
+    /// Decode one symbol. Never panics: a stream that ends mid-symbol or
+    /// whose bits match no codeword yields a [`DecodeError`] instead.
     #[inline]
-    pub fn decode(&self, r: &mut BitReader) -> usize {
+    pub fn decode(&self, r: &mut BitReader) -> Result<usize, DecodeError> {
         // fast path: one peek + table lookup covers codes up to table_bits
+        // (peek zero-pads past the end, so a hit is only trusted when the
+        // full codeword actually fits in the remaining stream)
         let peek = r.peek_bits(self.table_bits) as usize;
         let (sym, len) = self.table[peek];
-        if sym != u16::MAX {
+        if sym != u16::MAX && len as usize <= r.remaining() {
             r.skip(len as u32);
-            return sym as usize;
+            return Ok(sym as usize);
         }
         self.decode_slow(r)
     }
 
     #[cold]
-    fn decode_slow(&self, r: &mut BitReader) -> usize {
+    fn decode_slow(&self, r: &mut BitReader) -> Result<usize, DecodeError> {
+        let start = r.bit_pos();
         let mut code = 0u64;
         for len in 1..=self.max_len as usize {
-            code = (code << 1) | r.read_bit() as u64;
+            match r.try_read_bits(1) {
+                None => return Err(DecodeError::Truncated { bit_pos: start }),
+                Some(b) => code = (code << 1) | b,
+            }
             let c = self.count[len];
             if c > 0 {
                 let fc = self.first_code[len];
                 if code >= fc && code < fc + c as u64 {
-                    return self.sorted_syms[self.offset[len] + (code - fc) as usize]
-                        as usize;
+                    return Ok(self.sorted_syms[self.offset[len] + (code - fc) as usize]
+                        as usize);
                 }
             }
         }
-        panic!("corrupt huffman stream");
+        Err(DecodeError::InvalidCode { bit_pos: start })
     }
 
     /// Expected code length under `probs` (bits/symbol).
@@ -282,7 +291,7 @@ mod tests {
         let buf = w.finish();
         let mut r = buf.reader();
         for &s in &syms {
-            assert_eq!(h.decode(&mut r), s);
+            assert_eq!(h.decode(&mut r).unwrap(), s);
         }
         assert_eq!(r.remaining(), 0);
     }
@@ -315,8 +324,8 @@ mod tests {
         let buf = w.finish();
         assert_eq!(buf.len_bits(), 2);
         let mut r = buf.reader();
-        assert_eq!(h.decode(&mut r), 0);
-        assert_eq!(h.decode(&mut r), 0);
+        assert_eq!(h.decode(&mut r).unwrap(), 0);
+        assert_eq!(h.decode(&mut r).unwrap(), 0);
     }
 
     #[test]
@@ -348,9 +357,32 @@ mod tests {
             let buf = w.finish();
             let mut r = buf.reader();
             for &s in &syms {
-                assert_eq!(h.decode(&mut r), s);
+                assert_eq!(h.decode(&mut r).unwrap(), s);
             }
         });
+    }
+
+    #[test]
+    fn corrupt_stream_errors_instead_of_panicking() {
+        // deliberately incomplete canonical code: '00' and '01' assigned,
+        // '1x' codeword space unassigned
+        let h = Huffman::from_lengths(vec![2, 2]);
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        let buf = w.finish();
+        let mut r = buf.reader();
+        assert!(matches!(h.decode(&mut r), Err(DecodeError::InvalidCode { .. })));
+    }
+
+    #[test]
+    fn truncated_stream_errors_instead_of_panicking() {
+        let h = Huffman::from_weights(&[8.0, 4.0, 2.0, 1.0]);
+        // a single '1' bit is a strict prefix of every >=2-bit codeword
+        let mut w = BitWriter::new();
+        w.write_bit(true);
+        let buf = w.finish();
+        let mut r = buf.reader();
+        assert!(matches!(h.decode(&mut r), Err(DecodeError::Truncated { .. })));
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! Entropy coding stack (Section 3.2, Appendix D): bit I/O, Elias universal
 //! codes, canonical Huffman, the Main and Alternating wire protocols, and
 //! the Theorem 5.3 / D.5 code-length bounds.
+//!
+//! Decoding operates on *wire* data and therefore never panics on malformed
+//! input: every decode entry point returns [`DecodeError`], which the
+//! `crate::comm` pipeline surfaces as `comm::CommError`.
 
 pub mod bitio;
 pub mod elias;
@@ -11,3 +15,27 @@ pub mod protocol;
 pub use bitio::{BitBuf, BitReader, BitWriter};
 pub use huffman::{entropy, Huffman};
 pub use protocol::{decode_vector, encode_vector, Codebooks, ProtocolKind, NORM_BITS};
+
+/// Decode-side failure on an untrusted / wire bitstream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The stream ended in the middle of a symbol or header.
+    Truncated { bit_pos: usize },
+    /// No codeword of the active codebook matches the upcoming bits.
+    InvalidCode { bit_pos: usize },
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated { bit_pos } => {
+                write!(f, "bitstream truncated at bit {bit_pos}")
+            }
+            DecodeError::InvalidCode { bit_pos } => {
+                write!(f, "corrupt huffman stream: no codeword matches at bit {bit_pos}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}

@@ -13,9 +13,14 @@
 //! Wire layout per layer: `f32` L^q norm (C_q = 32 bits), then per
 //! coordinate the entropy-coded symbol followed by one sign bit iff the
 //! symbol is a nonzero level (Appendix D.1: signs of *nonzero* entries).
+//!
+//! All decoding is fallible ([`DecodeError`]) — malformed wire bytes must
+//! never panic the coordinator. The `crate::comm` pipeline is the only
+//! production caller; it wraps these primitives in `WirePacket` framing.
 
 use super::bitio::{BitBuf, BitReader, BitWriter};
 use super::huffman::{normalize, Huffman};
+use super::DecodeError;
 use crate::quant::layer_map::LayerMap;
 use crate::quant::quantizer::{QuantizedLayer, QuantizedVector};
 use crate::quant::QuantConfig;
@@ -102,17 +107,20 @@ impl Codebooks {
     }
 
     #[inline]
-    fn decode_symbol(&self, r: &mut BitReader, type_id: usize) -> usize {
+    fn decode_symbol(&self, r: &mut BitReader, type_id: usize) -> Result<usize, DecodeError> {
         match self.kind {
             ProtocolKind::Main => self.main.as_ref().unwrap().decode(r),
             ProtocolKind::Alternating => {
-                let joint = self.alt.as_ref().unwrap().decode(r);
-                debug_assert!(
-                    joint >= self.offsets[type_id]
-                        && joint < self.offsets[type_id] + self.sizes[type_id],
-                    "alternating symbol decodes to wrong type"
-                );
-                joint - self.offsets[type_id]
+                let bit_pos = r.bit_pos();
+                let joint = self.alt.as_ref().unwrap().decode(r)?;
+                if joint < self.offsets[type_id]
+                    || joint >= self.offsets[type_id] + self.sizes[type_id]
+                {
+                    // a decodable codeword of the *wrong* type: the stream
+                    // desynchronized (or the layer map disagrees)
+                    return Err(DecodeError::InvalidCode { bit_pos });
+                }
+                Ok(joint - self.offsets[type_id])
             }
         }
     }
@@ -133,42 +141,90 @@ impl Codebooks {
     }
 }
 
+/// ENC one quantized layer: norm header, then entropy-coded symbols with
+/// sign bits on nonzero levels. The layer segments are independent, which
+/// is what lets `comm` encode layers on worker threads and splice streams.
+pub fn encode_layer(layer: &QuantizedLayer, books: &Codebooks, w: &mut BitWriter) {
+    w.write_f32(layer.norm as f32);
+    for i in 0..layer.len {
+        let sym = layer.indices[i] as usize;
+        books.encode_symbol(w, layer.type_id, sym);
+        if sym != 0 {
+            w.write_bit(layer.sign(i));
+        }
+    }
+}
+
 /// ENC: entropy-code a quantized vector into a bit buffer.
 pub fn encode_vector(qv: &QuantizedVector, books: &Codebooks) -> BitBuf {
     // rough capacity guess: 6 bits/coord
     let mut w = BitWriter::with_capacity_bits(qv.dim * 6 + qv.layers.len() * NORM_BITS);
     for layer in &qv.layers {
-        w.write_f32(layer.norm as f32);
-        for i in 0..layer.len {
-            let sym = layer.indices[i] as usize;
-            books.encode_symbol(&mut w, layer.type_id, sym);
-            if sym != 0 {
-                w.write_bit(layer.sign(i));
-            }
-        }
+        encode_layer(layer, books, &mut w);
     }
     w.finish()
 }
 
-/// DEC: reconstruct the wire form given the shared layer map.
-pub fn decode_vector(buf: &BitBuf, map: &LayerMap, books: &Codebooks) -> QuantizedVector {
-    let mut r = buf.reader();
-    let mut layers = Vec::with_capacity(map.layers.len());
-    for l in &map.layers {
-        let norm = r.read_f32() as f64;
-        let mut indices = vec![0u8; l.len];
-        let mut signs = vec![0u64; l.len.div_ceil(64)];
-        for i in 0..l.len {
-            let sym = books.decode_symbol(&mut r, l.type_id);
-            indices[i] = sym as u8;
-            if sym != 0 && r.read_bit() {
-                signs[i / 64] |= 1 << (i % 64);
+/// DEC one layer of `len` coordinates of `type_id` into `out` (scratch
+/// buffers inside `out` are reused).
+pub fn decode_layer_into(
+    r: &mut BitReader,
+    type_id: usize,
+    len: usize,
+    books: &Codebooks,
+    out: &mut QuantizedLayer,
+) -> Result<(), DecodeError> {
+    let norm = match r.try_read_bits(32) {
+        Some(bits) => f32::from_bits(bits as u32) as f64,
+        None => return Err(DecodeError::Truncated { bit_pos: r.bit_pos() }),
+    };
+    out.norm = norm;
+    out.type_id = type_id;
+    out.len = len;
+    out.indices.clear();
+    out.indices.resize(len, 0);
+    out.signs.clear();
+    out.signs.resize(len.div_ceil(64), 0);
+    for i in 0..len {
+        let sym = books.decode_symbol(r, type_id)?;
+        out.indices[i] = sym as u8;
+        if sym != 0 {
+            match r.try_read_bits(1) {
+                Some(1) => out.signs[i / 64] |= 1 << (i % 64),
+                Some(_) => {}
+                None => return Err(DecodeError::Truncated { bit_pos: r.bit_pos() }),
             }
         }
-        layers.push(QuantizedLayer { norm, indices, signs, type_id: l.type_id, len: l.len });
     }
+    Ok(())
+}
+
+/// DEC a full vector given the shared layer map, reusing `qv`'s buffers.
+pub fn decode_vector_into(
+    r: &mut BitReader,
+    map: &LayerMap,
+    books: &Codebooks,
+    qv: &mut QuantizedVector,
+) -> Result<(), DecodeError> {
+    qv.dim = map.dim;
+    qv.layers.resize_with(map.layers.len(), Default::default);
+    for (l, out) in map.layers.iter().zip(&mut qv.layers) {
+        decode_layer_into(r, l.type_id, l.len, books, out)?;
+    }
+    Ok(())
+}
+
+/// DEC: reconstruct the wire form given the shared layer map.
+pub fn decode_vector(
+    buf: &BitBuf,
+    map: &LayerMap,
+    books: &Codebooks,
+) -> Result<QuantizedVector, DecodeError> {
+    let mut r = buf.reader();
+    let mut qv = QuantizedVector::default();
+    decode_vector_into(&mut r, map, books, &mut qv)?;
     debug_assert_eq!(r.remaining(), 0, "trailing bits");
-    QuantizedVector { layers, dim: map.dim }
+    Ok(qv)
 }
 
 /// Convenience: measured wire size in bits for a quantized vector.
@@ -219,7 +275,7 @@ mod tests {
         let qv = quantize(&v, &map, &cfg, &mut rng);
         let books = Codebooks::uniform(ProtocolKind::Main, &cfg, &map.type_proportions());
         let buf = encode_vector(&qv, &books);
-        let back = decode_vector(&buf, &map, &books);
+        let back = decode_vector(&buf, &map, &books).unwrap();
         assert_eq!(dequantize(&back, &cfg), dequantize(&qv, &cfg));
     }
 
@@ -231,8 +287,27 @@ mod tests {
         let books =
             Codebooks::uniform(ProtocolKind::Alternating, &cfg, &map.type_proportions());
         let buf = encode_vector(&qv, &books);
-        let back = decode_vector(&buf, &map, &books);
+        let back = decode_vector(&buf, &map, &books).unwrap();
         assert_eq!(dequantize(&back, &cfg), dequantize(&qv, &cfg));
+    }
+
+    #[test]
+    fn truncated_stream_surfaces_decode_error() {
+        let (map, cfg, v) = setup();
+        let mut rng = Rng::new(9);
+        let qv = quantize(&v, &map, &cfg, &mut rng);
+        let books = Codebooks::uniform(ProtocolKind::Main, &cfg, &map.type_proportions());
+        let buf = encode_vector(&qv, &books);
+        // cut the stream hard: keep only the first 40 bits
+        let mut w = crate::coding::bitio::BitWriter::new();
+        let mut r = buf.reader();
+        w.write_bits(r.read_bits(40), 40);
+        let cut = w.finish();
+        let err = decode_vector(&cut, &map, &books);
+        assert!(
+            matches!(err, Err(DecodeError::Truncated { .. })),
+            "want Truncated, got {err:?}"
+        );
     }
 
     #[test]
@@ -250,7 +325,7 @@ mod tests {
         assert!(b_tuned <= b_uniform, "{b_tuned} vs {b_uniform}");
         // roundtrip still exact with the tuned codebook
         let buf = encode_vector(&qv, &tuned);
-        let back = decode_vector(&buf, &map, &tuned);
+        let back = decode_vector(&buf, &map, &tuned).unwrap();
         assert_eq!(dequantize(&back, &cfg), dequantize(&qv, &cfg));
     }
 
@@ -272,7 +347,7 @@ mod tests {
     }
 
     #[test]
-    fn compresses_below_fixed_width_on_skewed_gradients(){
+    fn compresses_below_fixed_width_on_skewed_gradients() {
         // gradient-like vectors: most mass at the zero level with a tuned book
         let map = LayerMap::single(4096);
         let cfg = QuantConfig::uniform_bits(1, 5, 2.0);
@@ -310,7 +385,7 @@ mod tests {
             for kind in [ProtocolKind::Main, ProtocolKind::Alternating] {
                 let books = Codebooks::uniform(kind, &cfg, &map.type_proportions());
                 let buf = encode_vector(&qv, &books);
-                let back = decode_vector(&buf, &map, &books);
+                let back = decode_vector(&buf, &map, &books).unwrap();
                 assert_eq!(dequantize(&back, &cfg), dequantize(&qv, &cfg));
             }
         });

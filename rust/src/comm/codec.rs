@@ -1,0 +1,603 @@
+//! Node-side codecs: quantize → entropy-code into a [`WirePacket`] (ENC)
+//! and packet → flat `f64` vector (DEC), with exact bit accounting and the
+//! L-GreCo-style adaptive re-optimization of levels at update steps
+//! (Algorithm 1, lines 2–7).
+//!
+//! Codecs keep every intermediate buffer (`f32` cast, quantized wire form,
+//! bit writer, decode scratch) alive across calls, so the per-step hot path
+//! allocates nothing once warm. Entropy coding of the (already quantized)
+//! layers can optionally fan out across worker threads — the stream is
+//! spliced back in layer order and is bit-identical to a sequential encode.
+
+use super::packet::WirePacket;
+use super::CommError;
+use crate::coding::bitio::{BitBuf, BitWriter};
+use crate::coding::protocol::{
+    decode_vector_into, encode_layer, Codebooks, ProtocolKind,
+};
+use crate::quant::adaptive::TypeStats;
+use crate::quant::layer_map::LayerMap;
+use crate::quant::lgreco;
+use crate::quant::quantizer::{
+    dequantize_into, quantize_into, QuantizedLayer, QuantizedVector,
+};
+use crate::quant::{LevelSequence, QuantConfig};
+use crate::stats::rng::Rng;
+
+/// What a node applies to its dual vector before "broadcasting": ENC into a
+/// wire packet, and DEC of a received packet back to the flat vector.
+///
+/// Both directions reuse internal scratch; `decode_into` clears and fills
+/// the caller's output buffer so the caller controls its lifetime (the
+/// engines keep one per node).
+pub trait Compressor: Send {
+    /// ENC: encode `v` into `packet`, reusing the packet's allocation.
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket);
+
+    /// DEC: reconstruct the receiver-side vector from an encoded packet.
+    fn decode_into(&mut self, packet: &WirePacket, out: &mut Vec<f64>)
+        -> Result<(), CommError>;
+
+    /// Hook for Algorithm 1's update steps (t in U): re-estimate level
+    /// sequences / codebooks from the statistics gathered since the last
+    /// update. Default: no-op. Must only be called between exchanges —
+    /// packets encoded before an update decode with the pre-update books.
+    fn update_levels(&mut self) {}
+
+    fn name(&self) -> &'static str;
+
+    /// Allocating convenience ENC.
+    fn encode(&mut self, v: &[f64]) -> WirePacket {
+        let mut packet = WirePacket::new();
+        self.encode_into(v, &mut packet);
+        packet
+    }
+
+    /// Allocating convenience DEC.
+    fn decode(&mut self, packet: &WirePacket) -> Result<Vec<f64>, CommError> {
+        let mut out = Vec::with_capacity(packet.dim());
+        self.decode_into(packet, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// No compression: raw f32 on the wire (the uncompressed fp32 baseline —
+/// 32 bits/coordinate of *real* payload, not an accounting fiction).
+pub struct IdentityCompressor;
+
+impl Compressor for IdentityCompressor {
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket) {
+        let mut w = BitWriter::new();
+        packet.begin_encode(v.len(), &mut w);
+        packet.mark_layer(0);
+        for &x in v {
+            w.write_f32(x as f32);
+        }
+        packet.finish_encode(&mut w);
+    }
+
+    fn decode_into(
+        &mut self,
+        packet: &WirePacket,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        let dim = packet.dim();
+        let mut r = packet.payload().reader();
+        out.clear();
+        out.reserve(dim);
+        for _ in 0..dim {
+            match r.try_read_bits(32) {
+                Some(bits) => out.push(f32::from_bits(bits as u32) as f64),
+                None => {
+                    return Err(CommError::Decode(crate::coding::DecodeError::Truncated {
+                        bit_pos: r.bit_pos(),
+                    }))
+                }
+            }
+        }
+        if r.remaining() != 0 {
+            return Err(CommError::TrailingBits { bits: r.remaining() });
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "uncompressed"
+    }
+}
+
+/// Adaptation policy of the quantized compressor.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Adaptation {
+    /// fixed sequences forever (Q-GenX-style static global quantization)
+    Fixed,
+    /// re-optimize each type's levels at its current alpha (Eq. 2 fixed
+    /// point) every `every` compressions
+    Levels { every: usize },
+    /// full L-GreCo: re-allocate per-type alphas under a total bit budget
+    /// (bits/coordinate) *and* re-optimize levels every `every` compressions
+    LGreco { every: usize, budget_bits_per_coord: f64, max_bits: u32 },
+}
+
+/// Quantize + entropy-code codec (the paper's scheme).
+pub struct QuantCompressor {
+    pub map: LayerMap,
+    pub cfg: QuantConfig,
+    pub protocol: ProtocolKind,
+    pub adaptation: Adaptation,
+    /// worker threads for the per-layer entropy-coding stage (1 = inline);
+    /// the emitted stream is bit-identical either way
+    pub encode_threads: usize,
+    books: Codebooks,
+    stats: Vec<TypeStats>,
+    rng: Rng,
+    calls: usize,
+    last_scheduled_update: usize,
+    /// running totals for reporting
+    pub total_bits: u64,
+    pub total_coords: u64,
+    /// eps_Q of the *current* configuration (refreshed on update)
+    pub current_eps_q: f64,
+    // ---- reusable scratch (the no-churn hot path) ----
+    v32: Vec<f32>,
+    qv: QuantizedVector,
+    dec_qv: QuantizedVector,
+    out32: Vec<f32>,
+}
+
+impl QuantCompressor {
+    pub fn new(
+        map: LayerMap,
+        cfg: QuantConfig,
+        protocol: ProtocolKind,
+        adaptation: Adaptation,
+        seed: u64,
+    ) -> Self {
+        let books = Codebooks::uniform(protocol, &cfg, &map.type_proportions());
+        let stats = (0..map.num_types()).map(|_| TypeStats::default()).collect();
+        let eps = crate::quant::variance::eps_q_for(&map, &cfg);
+        QuantCompressor {
+            map,
+            cfg,
+            protocol,
+            adaptation,
+            encode_threads: 1,
+            books,
+            stats,
+            rng: Rng::new(seed),
+            calls: 0,
+            last_scheduled_update: 0,
+            total_bits: 0,
+            total_coords: 0,
+            current_eps_q: eps,
+            v32: Vec::new(),
+            qv: QuantizedVector::default(),
+            dec_qv: QuantizedVector::default(),
+            out32: Vec::new(),
+        }
+    }
+
+    /// Convenience: b-bit global quantization with bucketing (the paper's
+    /// "QODA5 (bucket size 128)" configuration collapses types).
+    pub fn global_bits(map: &LayerMap, bits: u32, bucket: usize, seed: u64) -> Self {
+        let m = map.bucketed(bucket).with_single_type();
+        let cfg = QuantConfig::uniform_bits(1, bits, 2.0);
+        Self::new(m, cfg, ProtocolKind::Main, Adaptation::Fixed, seed)
+    }
+
+    /// Layer-wise adaptive compressor: per-type sequences starting at
+    /// `bits`, L-GreCo reallocation every `every` steps at the same average
+    /// bit budget.
+    pub fn layerwise(map: &LayerMap, bits: u32, bucket: usize, every: usize, seed: u64) -> Self {
+        let m = map.bucketed(bucket);
+        let cfg = QuantConfig::uniform_bits(m.num_types(), bits, 2.0);
+        Self::new(
+            m,
+            cfg,
+            ProtocolKind::Main,
+            Adaptation::LGreco {
+                every,
+                budget_bits_per_coord: (bits + 1) as f64,
+                // candidates above 6 bits are never selected at a ~6-bit
+                // budget but dominate the DP's level-optimization cost
+                // (alpha = 254); capping is a pure perf win (§Perf iter 5)
+                max_bits: 6,
+            },
+            seed,
+        )
+    }
+
+    /// Rebuild the entropy codebooks from the statistics gathered since the
+    /// last reset, *without* moving the level sequences — the lightweight
+    /// half of an update step (Prop D.1 codebook synchronization).
+    pub fn retune_books(&mut self) {
+        self.refresh_codebooks();
+    }
+
+    fn refresh_codebooks(&mut self) {
+        let probs: Vec<Vec<f64>> = self
+            .cfg
+            .sequences
+            .iter()
+            .enumerate()
+            .map(|(m, seq)| {
+                crate::coding::length::level_probabilities(&self.stats[m].hist, seq)
+            })
+            .collect();
+        self.books = Codebooks::build(self.protocol, &probs, &self.map.type_proportions());
+    }
+
+    /// The self-scheduled cadence of Algorithm 1's update set U, applied at
+    /// the *start* of an encode so that packets already in flight keep
+    /// decoding with the books they were encoded under.
+    fn maybe_scheduled_update(&mut self) {
+        let every = match self.adaptation {
+            Adaptation::Levels { every } | Adaptation::LGreco { every, .. } => every,
+            Adaptation::Fixed => 0,
+        };
+        if every > 0
+            && self.calls > 0
+            && self.calls % every == 0
+            && self.last_scheduled_update != self.calls
+        {
+            self.last_scheduled_update = self.calls;
+            self.update_levels();
+        }
+    }
+}
+
+impl Compressor for QuantCompressor {
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket) {
+        self.maybe_scheduled_update();
+        self.v32.clear();
+        self.v32.extend(v.iter().map(|&x| x as f32));
+        {
+            // per-type statistics for the next update step
+            let (stats, map, cfg, v32) =
+                (&mut self.stats, &self.map, &self.cfg, &self.v32);
+            for l in &map.layers {
+                stats[l.type_id]
+                    .add_layer_sample(&v32[l.offset..l.offset + l.len], cfg.q);
+            }
+        }
+        quantize_into(&self.v32, &self.map, &self.cfg, &mut self.rng, &mut self.qv);
+
+        let mut w = BitWriter::new();
+        packet.begin_encode(v.len(), &mut w);
+        let threads = self.encode_threads;
+        if threads > 1 && self.qv.layers.len() >= 2 * threads {
+            encode_layers_parallel(&self.qv.layers, &self.books, threads, &mut w, packet);
+        } else {
+            for layer in &self.qv.layers {
+                packet.mark_layer(w.len_bits());
+                encode_layer(layer, &self.books, &mut w);
+            }
+        }
+        packet.finish_encode(&mut w);
+
+        self.total_bits += packet.len_bits() as u64;
+        self.total_coords += v.len() as u64;
+        self.calls += 1;
+    }
+
+    fn decode_into(
+        &mut self,
+        packet: &WirePacket,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        if packet.dim() != self.map.dim {
+            return Err(CommError::DimMismatch { want: self.map.dim, got: packet.dim() });
+        }
+        let mut r = packet.payload().reader();
+        decode_vector_into(&mut r, &self.map, &self.books, &mut self.dec_qv)?;
+        if r.remaining() != 0 {
+            return Err(CommError::TrailingBits { bits: r.remaining() });
+        }
+        dequantize_into(&self.dec_qv, &self.cfg, &mut self.out32);
+        out.clear();
+        out.extend(self.out32.iter().map(|&x| x as f64));
+        Ok(())
+    }
+
+    fn update_levels(&mut self) {
+        match self.adaptation {
+            Adaptation::Fixed => {}
+            Adaptation::Levels { .. } => {
+                let alphas: Vec<usize> =
+                    self.cfg.sequences.iter().map(|s| s.alpha()).collect();
+                let (seqs, _) = crate::quant::adaptive::adapt_all(&self.stats, &alphas, 6);
+                self.cfg.sequences = seqs;
+            }
+            Adaptation::LGreco { budget_bits_per_coord, max_bits, .. } => {
+                // error curves per *type* (types share statistics), sizes
+                // aggregated over layers of that type
+                let ladder = lgreco::alpha_ladder(max_bits);
+                let problems: Vec<lgreco::LayerProblem> = (0..self.map.num_types())
+                    .map(|m| {
+                        let size: usize =
+                            self.map.layers_of_type(m).map(|l| l.len).sum();
+                        lgreco::LayerProblem {
+                            size: size.max(1),
+                            candidates: lgreco::error_curve(&self.stats[m].hist, &ladder, 4),
+                        }
+                    })
+                    .collect();
+                let budget = budget_bits_per_coord * self.map.dim as f64;
+                let alloc = lgreco::allocate(&problems, budget);
+                // adopt the chosen alphas with optimized levels
+                let alphas: Vec<usize> = alloc
+                    .choice
+                    .iter()
+                    .map(|&c| ladder[c.min(ladder.len() - 1)])
+                    .collect();
+                let (seqs, _) = crate::quant::adaptive::adapt_all(&self.stats, &alphas, 6);
+                self.cfg.sequences = seqs;
+            }
+        }
+        self.refresh_codebooks();
+        self.current_eps_q = crate::quant::variance::eps_q_for(&self.map, &self.cfg);
+        for s in &mut self.stats {
+            s.reset();
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self.adaptation {
+            Adaptation::Fixed => "quantized-global",
+            Adaptation::Levels { .. } => "quantized-adaptive",
+            Adaptation::LGreco { .. } => "quantized-lgreco",
+        }
+    }
+}
+
+/// Entropy-code the layers on `threads` scoped worker threads and splice
+/// the chunk streams back in layer order. Bit-identical to the sequential
+/// path: concatenating per-layer segments IS the sequential stream.
+fn encode_layers_parallel(
+    layers: &[QuantizedLayer],
+    books: &Codebooks,
+    threads: usize,
+    w: &mut BitWriter,
+    packet: &mut WirePacket,
+) {
+    let chunk = layers.len().div_ceil(threads);
+    let mut parts: Vec<(Vec<usize>, BitBuf)> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = layers
+            .chunks(chunk)
+            .map(|chunk_layers| {
+                scope.spawn(move || {
+                    let mut lw = BitWriter::new();
+                    let mut offs = Vec::with_capacity(chunk_layers.len());
+                    for layer in chunk_layers {
+                        offs.push(lw.len_bits());
+                        encode_layer(layer, books, &mut lw);
+                    }
+                    (offs, lw.finish())
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("encode worker"));
+        }
+    });
+    for (offs, buf) in &parts {
+        let base = w.len_bits();
+        for &o in offs {
+            packet.mark_layer(base + o);
+        }
+        w.append(buf);
+    }
+}
+
+/// Build a default level sequence set for an adaptive start.
+pub fn default_sequences(num_types: usize, bits: u32) -> Vec<LevelSequence> {
+    (0..num_types).map(|_| LevelSequence::bits(bits)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::DecodeError;
+
+    fn grad_like(map: &LayerMap, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..map.dim)
+            .map(|i| rng.gaussian() * if i % 3 == 0 { 2.0 } else { 0.05 })
+            .collect()
+    }
+
+    /// encode + self-decode, as a loopback node would.
+    fn roundtrip(c: &mut dyn Compressor, v: &[f64]) -> (Vec<f64>, usize) {
+        let packet = c.encode(v);
+        let out = c.decode(&packet).expect("loopback decode");
+        (out, packet.len_bits())
+    }
+
+    #[test]
+    fn identity_costs_32_bits_per_coord() {
+        let mut c = IdentityCompressor;
+        let (out, bits) = roundtrip(&mut c, &[1.0, 2.0, 3.0]);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        assert_eq!(bits, 96);
+    }
+
+    #[test]
+    fn identity_wire_is_f32_rounded() {
+        let mut c = IdentityCompressor;
+        let v = [std::f64::consts::PI];
+        let (out, _) = roundtrip(&mut c, &v);
+        assert_eq!(out[0], std::f64::consts::PI as f32 as f64);
+    }
+
+    #[test]
+    fn quantized_reduces_bits() {
+        let map = LayerMap::from_spec(&[("a", 1000, "ff"), ("b", 500, "bias")]);
+        let mut c = QuantCompressor::global_bits(&map, 5, 128, 1);
+        let v = grad_like(&map, 2);
+        let (out, bits) = roundtrip(&mut c, &v);
+        assert_eq!(out.len(), v.len());
+        assert!(bits < 1500 * 32, "{bits}");
+        assert!(bits > 0);
+    }
+
+    #[test]
+    fn packet_layer_offsets_frame_the_stream() {
+        let map = LayerMap::from_spec(&[("a", 64, "ff"), ("b", 32, "bias")]).bucketed(16);
+        let mut c = QuantCompressor::new(
+            map.clone(),
+            QuantConfig::uniform_bits(2, 4, 2.0),
+            ProtocolKind::Main,
+            Adaptation::Fixed,
+            3,
+        );
+        let packet = c.encode(&grad_like(&map, 4));
+        assert_eq!(packet.layer_offsets().len(), map.layers.len());
+        assert_eq!(packet.layer_offsets()[0], 0);
+        // offsets strictly increase and stay inside the payload
+        for w in packet.layer_offsets().windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(*packet.layer_offsets().last().unwrap() < packet.len_bits());
+        assert_eq!(packet.dim(), map.dim);
+    }
+
+    #[test]
+    fn parallel_layer_encode_is_bit_identical() {
+        let map = LayerMap::single(4096).bucketed(128);
+        let v = grad_like(&map, 7);
+        let mk = |threads| {
+            let mut c = QuantCompressor::global_bits(&map, 5, 128, 11);
+            c.encode_threads = threads;
+            c.encode(&v)
+        };
+        let seq = mk(1);
+        for threads in [2, 4] {
+            let par = mk(threads);
+            assert_eq!(par.payload(), seq.payload(), "threads={threads}");
+            assert_eq!(par.layer_offsets(), seq.layer_offsets());
+            assert_eq!(par.len_bits(), seq.len_bits());
+        }
+    }
+
+    #[test]
+    fn corrupt_packet_surfaces_comm_error() {
+        let map = LayerMap::single(256);
+        let mut c = QuantCompressor::global_bits(&map, 5, 128, 5);
+        let packet = c.encode(&grad_like(&map, 6));
+        // truncate the payload to its first 50 bits
+        let mut w = BitWriter::new();
+        let mut r = packet.payload().reader();
+        w.write_bits(r.read_bits(50), 50);
+        let cut = WirePacket::from_raw(w.finish(), packet.layer_offsets().to_vec(), map.dim);
+        let err = c.decode(&cut);
+        assert!(
+            matches!(err, Err(CommError::Decode(DecodeError::Truncated { .. }))),
+            "want Truncated, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn trailing_bits_are_an_error() {
+        let map = LayerMap::single(128);
+        let mut c = QuantCompressor::global_bits(&map, 4, 128, 13);
+        let packet = c.encode(&grad_like(&map, 14));
+        // append garbage past the legitimate stream
+        let mut w = BitWriter::new();
+        let mut r = packet.payload().reader();
+        let n = packet.len_bits();
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(64) as u32;
+            w.write_bits(r.read_bits(take), take);
+            left -= take as usize;
+        }
+        w.write_bits(0x5A5A, 16);
+        let long =
+            WirePacket::from_raw(w.finish(), packet.layer_offsets().to_vec(), map.dim);
+        assert!(matches!(c.decode(&long), Err(CommError::TrailingBits { bits: 16 })));
+    }
+
+    #[test]
+    fn dim_mismatch_is_an_error() {
+        let map = LayerMap::single(64);
+        let mut c = QuantCompressor::global_bits(&map, 4, 128, 9);
+        let packet = c.encode(&grad_like(&map, 10));
+        let wrong = WirePacket::from_raw(
+            packet.payload().clone(),
+            packet.layer_offsets().to_vec(),
+            63,
+        );
+        assert!(matches!(c.decode(&wrong), Err(CommError::DimMismatch { .. })));
+    }
+
+    #[test]
+    fn compression_error_bounded_by_eps() {
+        let map = LayerMap::from_spec(&[("a", 512, "ff")]);
+        let mut c = QuantCompressor::global_bits(&map, 5, 128, 3);
+        let v = grad_like(&map, 4);
+        let norm2: f64 = v.iter().map(|x| x * x).sum();
+        let mut err_acc = 0.0;
+        let reps = 30;
+        for _ in 0..reps {
+            let (out, _) = roundtrip(&mut c, &v);
+            err_acc += v.iter().zip(&out).map(|(a, b)| (a - b).powi(2)).sum::<f64>();
+        }
+        let ratio = err_acc / reps as f64 / norm2;
+        assert!(ratio <= c.current_eps_q * 1.1, "{ratio} vs {}", c.current_eps_q);
+    }
+
+    #[test]
+    fn adaptation_reduces_bits_or_error() {
+        let map = LayerMap::from_spec(&[("a", 2048, "ff"), ("e", 512, "embedding")]);
+        let mut c = QuantCompressor::layerwise(&map, 5, 1 << 30, 10, 5);
+        let mut bits_before = 0usize;
+        let mut bits_after = 0usize;
+        for i in 0..30 {
+            let v = grad_like(&map, 100 + i);
+            let (_, b) = roundtrip(&mut c, &v);
+            if i < 10 {
+                bits_before += b;
+            }
+            if i >= 20 {
+                bits_after += b;
+            }
+        }
+        // after two L-GreCo updates the entropy coder + level placement must
+        // not be worse than the cold-start uniform configuration
+        assert!(
+            bits_after as f64 <= bits_before as f64 * 1.05,
+            "{bits_after} vs {bits_before}"
+        );
+    }
+
+    #[test]
+    fn retuned_books_do_not_grow_the_stream() {
+        let map = LayerMap::single(4096).bucketed(128);
+        let mut c = QuantCompressor::global_bits(&map, 5, 128, 21);
+        let v = grad_like(&map, 22);
+        let (_, cold) = roundtrip(&mut c, &v);
+        c.retune_books();
+        let (_, tuned) = roundtrip(&mut c, &v);
+        assert!(tuned as f64 <= cold as f64 * 1.01, "{tuned} vs {cold}");
+    }
+
+    #[test]
+    fn update_levels_keeps_roundtrip_consistent() {
+        let map = LayerMap::from_spec(&[("a", 300, "ff")]);
+        let mut c = QuantCompressor::new(
+            map.clone(),
+            QuantConfig::uniform_bits(1, 4, 2.0),
+            ProtocolKind::Alternating,
+            Adaptation::Levels { every: 3 },
+            7,
+        );
+        for i in 0..12 {
+            let v = grad_like(&map, 50 + i);
+            let (out, _) = roundtrip(&mut c, &v);
+            // unbiased-ish: reconstruction correlates positively
+            let dot: f64 = v.iter().zip(&out).map(|(a, b)| a * b).sum();
+            assert!(dot > 0.0);
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! One node's end of the broadcast: a codec plus its packet scratch.
+
+use super::codec::Compressor;
+use super::packet::WirePacket;
+use super::CommError;
+
+/// A node-side comm endpoint. Both coordinator engines hold one per node;
+/// the packet buffer is owned here so repeated exchanges recycle the same
+/// allocation, and the *engine* reads the authoritative wire size off the
+/// packet rather than trusting the codec's self-report.
+pub struct CommEndpoint {
+    codec: Box<dyn Compressor>,
+    packet: WirePacket,
+}
+
+impl CommEndpoint {
+    pub fn new(codec: Box<dyn Compressor>) -> Self {
+        CommEndpoint { codec, packet: WirePacket::new() }
+    }
+
+    /// ENC the node's dual vector into the endpoint's packet; returns the
+    /// actual encoded payload size in bits.
+    pub fn send(&mut self, v: &[f64]) -> usize {
+        self.codec.encode_into(v, &mut self.packet);
+        self.packet.len_bits()
+    }
+
+    /// DEC the last sent packet into `out`, exactly as a receiving node
+    /// would decode it off the wire.
+    pub fn recv_into(&mut self, out: &mut Vec<f64>) -> Result<(), CommError> {
+        self.codec.decode_into(&self.packet, out)
+    }
+
+    /// ENC + loopback DEC in one call: the self-decode every node performs
+    /// so that all K nodes apply identical values. Returns the wire bits.
+    pub fn roundtrip_into(&mut self, v: &[f64], out: &mut Vec<f64>) -> Result<usize, CommError> {
+        let bits = self.send(v);
+        self.recv_into(out)?;
+        Ok(bits)
+    }
+
+    /// The last encoded packet (what actually travels).
+    pub fn packet(&self) -> &WirePacket {
+        &self.packet
+    }
+
+    pub fn codec(&self) -> &dyn Compressor {
+        self.codec.as_ref()
+    }
+
+    pub fn codec_mut(&mut self) -> &mut dyn Compressor {
+        self.codec.as_mut()
+    }
+
+    pub fn update_levels(&mut self) {
+        self.codec.update_levels();
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.codec.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::codec::IdentityCompressor;
+
+    #[test]
+    fn endpoint_roundtrip_reports_real_bits() {
+        let mut ep = CommEndpoint::new(Box::new(IdentityCompressor));
+        let mut out = Vec::new();
+        let bits = ep.roundtrip_into(&[1.0, -2.0], &mut out).unwrap();
+        assert_eq!(bits, 64);
+        assert_eq!(ep.packet().len_bits(), 64);
+        assert_eq!(out, vec![1.0, -2.0]);
+        assert_eq!(ep.name(), "uncompressed");
+    }
+}

@@ -1,0 +1,79 @@
+//! The real-wire communication pipeline — the single artifact both
+//! coordinator engines (and the analytic timing model) measure.
+//!
+//! Historically the repo carried two divergent copies of the
+//! quantize → entropy-code → wire → decode path: `coordinator/sim` trusted
+//! each compressor's *self-reported* bit count, while `coordinator/parallel`
+//! hand-rolled its own `encode_vector`/`decode_vector` plumbing. This module
+//! unifies them: a [`Compressor`] produces a [`WirePacket`] — the actual
+//! encoded payload, with per-layer bit offsets and an exact bit count — and
+//! every engine charges, times and ships that packet. Wire-size accounting
+//! can no longer drift from protocol semantics because there is only one
+//! encoder, and the engines differ only in transport (simulated clock vs
+//! real threads + channels).
+//!
+//! Layout:
+//! * [`packet`] — `WirePacket`: encoded `BitBuf` + layer offsets + bit count;
+//! * [`codec`] — the `Compressor` trait (packet production with reusable
+//!   scratch buffers, optional per-layer encode parallelism) and its two
+//!   implementations, [`IdentityCompressor`] (fp32 on the wire) and
+//!   [`QuantCompressor`] (the paper's quantize + entropy-code scheme with
+//!   L-GreCo-style adaptation);
+//! * [`endpoint`] — `CommEndpoint`: one node's codec + packet scratch, the
+//!   unit both engines hold per node.
+//!
+//! Decode is fallible end to end: corrupt or truncated wire bytes surface
+//! as [`CommError`], never a panic. Future transports (sharded allgather,
+//! async collectives, multi-backend) drop in as new packet consumers
+//! without forking the engines.
+
+pub mod codec;
+pub mod endpoint;
+pub mod packet;
+
+pub use codec::{default_sequences, Adaptation, Compressor, IdentityCompressor, QuantCompressor};
+pub use endpoint::CommEndpoint;
+pub use packet::WirePacket;
+
+use crate::coding::DecodeError;
+
+/// Failure while decoding a [`WirePacket`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// The entropy-coded payload is corrupt or truncated.
+    Decode(DecodeError),
+    /// The packet reconstructs a different dimensionality than the codec's
+    /// synchronized layer map expects.
+    DimMismatch { want: usize, got: usize },
+    /// The payload decoded cleanly but left unconsumed bits — the framing
+    /// disagrees with the synchronized state (mis-spliced segments).
+    TrailingBits { bits: usize },
+}
+
+impl From<DecodeError> for CommError {
+    fn from(e: DecodeError) -> Self {
+        CommError::Decode(e)
+    }
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Decode(e) => write!(f, "wire decode failed: {e}"),
+            CommError::DimMismatch { want, got } => {
+                write!(f, "packet dim {got} does not match codec dim {want}")
+            }
+            CommError::TrailingBits { bits } => {
+                write!(f, "packet payload has {bits} unconsumed trailing bits")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+impl From<CommError> for crate::util::error::Error {
+    fn from(e: CommError) -> Self {
+        crate::util::error::Error::wrap(e.to_string(), e)
+    }
+}

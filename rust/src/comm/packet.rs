@@ -1,0 +1,99 @@
+//! The wire packet: one node's fully encoded broadcast payload.
+
+use crate::coding::bitio::{BitBuf, BitWriter};
+
+/// An encoded dual vector as it travels between nodes: the entropy-coded
+/// payload, the bit offset of every layer segment, and the flat coordinate
+/// count it reconstructs to.
+///
+/// The layer offsets let receivers (and future sharded transports) locate
+/// and decode layer segments independently — each segment starts with its
+/// f32 norm header and is self-contained given the shared codebooks.
+///
+/// The packet owns its buffers and is recycled by the codecs: re-encoding
+/// into an existing packet reuses the payload allocation, so the steady
+/// state of the hot loop allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct WirePacket {
+    payload: BitBuf,
+    layer_offsets: Vec<usize>,
+    dim: usize,
+}
+
+impl WirePacket {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Assemble from raw parts (custom transports, corruption tests).
+    pub fn from_raw(payload: BitBuf, layer_offsets: Vec<usize>, dim: usize) -> Self {
+        WirePacket { payload, layer_offsets, dim }
+    }
+
+    /// Exact size of the encoded payload in bits — the number every engine
+    /// charges to the network model.
+    pub fn len_bits(&self) -> usize {
+        self.payload.len_bits()
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.payload.len_bytes()
+    }
+
+    /// Flat coordinate count the packet decodes to.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Bit offset of each layer segment within the payload.
+    pub fn layer_offsets(&self) -> &[usize] {
+        &self.layer_offsets
+    }
+
+    pub fn payload(&self) -> &BitBuf {
+        &self.payload
+    }
+
+    /// Start a fresh encode: hand the payload allocation to `w` and reset
+    /// the framing metadata.
+    pub(crate) fn begin_encode(&mut self, dim: usize, w: &mut BitWriter) {
+        self.payload.recycle_into(w);
+        self.layer_offsets.clear();
+        self.dim = dim;
+    }
+
+    /// Record the next layer segment's starting bit offset.
+    pub(crate) fn mark_layer(&mut self, bit_offset: usize) {
+        self.layer_offsets.push(bit_offset);
+    }
+
+    /// Finish an encode: move the written bits into the payload.
+    pub(crate) fn finish_encode(&mut self, w: &mut BitWriter) {
+        w.finish_into(&mut self.payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_cycle_reuses_and_frames() {
+        let mut p = WirePacket::new();
+        for round in 1..=3u64 {
+            let mut w = BitWriter::new();
+            p.begin_encode(8, &mut w);
+            p.mark_layer(w.len_bits());
+            w.write_bits(round, 5);
+            p.mark_layer(w.len_bits());
+            w.write_bits(round + 1, 9);
+            p.finish_encode(&mut w);
+            assert_eq!(p.len_bits(), 14);
+            assert_eq!(p.dim(), 8);
+            assert_eq!(p.layer_offsets(), &[0, 5]);
+            let mut r = p.payload().reader();
+            assert_eq!(r.read_bits(5), round);
+            assert_eq!(r.read_bits(9), round + 1);
+        }
+    }
+}

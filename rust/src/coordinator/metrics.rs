@@ -12,6 +12,9 @@ pub struct StepMetrics {
     pub comm_s: f64,
     /// encoded payload bytes per node this step
     pub bytes_per_node: f64,
+    /// exact total wire bits across all nodes this step (summed off the
+    /// actual `WirePacket` payloads)
+    pub wire_bits: u64,
     /// workload-specific scalars (losses, w-dist, fid...)
     pub scalars: Vec<(String, f64)>,
 }
@@ -75,6 +78,7 @@ mod tests {
                 codec_s: 0.01,
                 comm_s: 0.04,
                 bytes_per_node: 100.0,
+                wire_bits: 800,
                 scalars: vec![],
             };
             m.push_scalar("loss", i as f64);

@@ -4,15 +4,30 @@
 //! vector, broadcasts it, decodes the others and applies the identical
 //! (ODA) update.
 //!
-//! Two engines share the same step math:
+//! All wire traffic flows through the `crate::comm` subsystem: each node's
+//! [`comm::CommEndpoint`](crate::comm::CommEndpoint) encodes its dual into a
+//! real [`comm::WirePacket`](crate::comm::WirePacket) (entropy-coded
+//! payload + per-layer bit offsets + exact bit count), and decodes received
+//! packets through the same codec. The engines here are *thin transports*
+//! over that shared pipeline — they never re-implement encode/decode and
+//! they charge the network model with the packet's actual byte count, so
+//! wire-size accounting cannot drift from protocol semantics.
+//!
+//! Two engines share the same step math and the same packets:
 //!  * `sim`      — deterministic in-process engine with a simulated network
 //!                 clock (drives the Table 1/2 harnesses and the GAN/LM
-//!                 trainers; PJRT executables are not Sync so model-backed
-//!                 sources run here);
-//!  * `parallel` — real `std::thread` workers exchanging encoded `BitBuf`s
-//!                 over channels (exercises the actual concurrency for
-//!                 VI-operator sources; integration-tested for bit-identical
-//!                 agreement with `sim`).
+//!                 trainers backed by the native model runtime);
+//!  * `parallel` — real `std::thread` workers shipping `WirePacket`s over
+//!                 channels, with the leader decoding in node order
+//!                 (exercises the actual concurrency for VI-operator
+//!                 sources; integration-tested for bit-identical aggregates
+//!                 *and identical wire bit counts* against `sim` across
+//!                 both protocols and multiple seeds).
+//!
+//! Decode failures surface as `comm::CommError` from both engines — corrupt
+//! wire bytes can never panic the coordinator. Future transports (sharded /
+//! async allgather, multi-backend collectives) slot in as new consumers of
+//! the same packets rather than engine forks.
 
 pub mod metrics;
 pub mod parallel;

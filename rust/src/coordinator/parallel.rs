@@ -1,18 +1,19 @@
-//! Threaded coordinator: real `std::thread` workers, real encoded `BitBuf`s
-//! over channels. Each worker owns its oracle + quantizer + encoder; the
-//! leader decodes every payload exactly as a receiving node would.
+//! Threaded coordinator: real `std::thread` workers shipping encoded
+//! [`WirePacket`]s over channels. Each worker owns its oracle plus a
+//! `crate::comm` codec; the leader decodes every payload through the same
+//! pipeline, exactly as a receiving node would — there is no engine-local
+//! copy of the encode/decode plumbing.
 //!
-//! Used by the VI-operator workloads (operators are `Sync`); the PJRT-backed
-//! models run on the `sim` engine instead (executables are not `Sync`).
-//! Integration tests assert bit-identical aggregates between both engines
-//! under the same seeds.
+//! Used by the VI-operator workloads (operators are `Sync`); the model-
+//! backed sources run on the `sim` engine instead. Integration tests assert
+//! bit-identical aggregates *and identical wire bit counts* between both
+//! engines under the same seeds — replies are therefore aggregated in node
+//! order, not arrival order.
 
-use crate::coding::bitio::BitBuf;
-use crate::coding::protocol::{decode_vector, encode_vector, Codebooks, ProtocolKind};
+use crate::coding::protocol::ProtocolKind;
+use crate::comm::{Adaptation, CommError, Compressor, QuantCompressor, WirePacket};
 use crate::quant::layer_map::LayerMap;
-use crate::quant::quantizer::{dequantize, quantize};
 use crate::quant::QuantConfig;
-use crate::stats::rng::Rng;
 use crate::vi::noise::{NoiseModel, Oracle};
 use crate::vi::operator::Operator;
 use std::sync::mpsc;
@@ -23,10 +24,10 @@ enum Cmd {
     Stop,
 }
 
-/// Worker reply: the encoded dual vector.
+/// Worker reply: the node id plus its encoded wire packet.
 struct Reply {
     node: usize,
-    payload: BitBuf,
+    packet: WirePacket,
 }
 
 /// Configuration shared by all nodes (the synchronized quantization state).
@@ -38,15 +39,36 @@ pub struct SharedQuantState {
 }
 
 impl SharedQuantState {
-    pub fn books(&self) -> Codebooks {
-        Codebooks::uniform(self.protocol, &self.cfg, &self.map.type_proportions())
+    /// Build the node codec for this synchronized state: fixed (non-
+    /// adaptive) quantization, uniform codebooks — identical on every node,
+    /// so codebooks never travel on the wire.
+    pub fn codec(&self, seed: u64) -> QuantCompressor {
+        QuantCompressor::new(
+            self.map.clone(),
+            self.cfg.clone(),
+            self.protocol,
+            Adaptation::Fixed,
+            seed,
+        )
     }
+}
+
+/// Oracle seed for `node` (shared with the sim engine so the two can be
+/// compared bit-for-bit under the same run seed).
+pub fn worker_oracle_seed(seed: u64, node: usize) -> u64 {
+    seed ^ (0x9E37 + node as u64 * 0x79B9)
+}
+
+/// Quantizer RNG seed for `node` (ditto).
+pub fn worker_codec_seed(seed: u64, node: usize) -> u64 {
+    seed.wrapping_add(node as u64 * 7919 + 13)
 }
 
 /// Run `steps` rounds of the distributed exchange with `k` worker threads:
 /// at each round the leader broadcasts the query point, every worker samples
-/// its oracle, quantizes, encodes; the leader decodes all payloads, averages
-/// and applies `update` to produce the next query point.
+/// its oracle and encodes a wire packet via the shared comm pipeline; the
+/// leader decodes all payloads (in node order), averages and applies
+/// `update` to produce the next query point.
 ///
 /// Returns (final x, total wire bits, mean decoded vector of the last round).
 pub fn run_rounds(
@@ -58,35 +80,35 @@ pub fn run_rounds(
     steps: usize,
     seed: u64,
     mut update: impl FnMut(&mut Vec<f64>, &[f64], usize),
-) -> (Vec<f64>, u64, Vec<f64>) {
+) -> Result<(Vec<f64>, u64, Vec<f64>), CommError> {
     let d = op.dim();
     assert_eq!(x0.len(), d);
-    let books = state.books();
+    // the leader decodes with the same synchronized state (its RNG seed is
+    // irrelevant: decode draws no randomness)
+    let mut decoder = state.codec(0);
+    let mut decoded = Vec::with_capacity(d);
 
-    let mut to_workers: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(k);
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
 
     let mut x = x0;
     let mut total_bits = 0u64;
     let mut last_mean = vec![0.0; d];
 
-    std::thread::scope(|scope| {
+    let result: Result<(), CommError> = std::thread::scope(|scope| {
+        // the senders live inside the scope: any exit path (including a
+        // decode error) drops them, which unblocks and terminates workers
+        let mut to_workers: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(k);
         for node in 0..k {
             let (tx, rx) = mpsc::channel::<Cmd>();
             to_workers.push(tx);
             let reply_tx = reply_tx.clone();
-            let state = state.clone();
-            let books = state.books();
+            let mut codec = state.codec(worker_codec_seed(seed, node));
             scope.spawn(move || {
-                let mut oracle =
-                    Oracle::new(op, noise, seed ^ (0x9E37 + node as u64 * 0x79B9));
-                let mut qrng = Rng::new(seed.wrapping_add(node as u64 * 7919 + 13));
+                let mut oracle = Oracle::new(op, noise, worker_oracle_seed(seed, node));
                 while let Ok(Cmd::Eval(xq)) = rx.recv() {
                     let dual = oracle.sample(&xq);
-                    let v32: Vec<f32> = dual.iter().map(|&v| v as f32).collect();
-                    let qv = quantize(&v32, &state.map, &state.cfg, &mut qrng);
-                    let payload = encode_vector(&qv, &books);
-                    if reply_tx.send(Reply { node, payload }).is_err() {
+                    let packet = codec.encode(&dual);
+                    if reply_tx.send(Reply { node, packet }).is_err() {
                         break;
                     }
                 }
@@ -98,15 +120,20 @@ pub fn run_rounds(
             for tx in &to_workers {
                 tx.send(Cmd::Eval(x.clone())).expect("worker alive");
             }
-            let mut mean = vec![0.0; d];
+            // collect all k packets, then aggregate in node order so the
+            // float accumulation matches the sim engine bit-for-bit
+            let mut slots: Vec<Option<WirePacket>> = (0..k).map(|_| None).collect();
             for _ in 0..k {
                 let r = reply_rx.recv().expect("reply");
-                total_bits += r.payload.len_bits() as u64;
-                let qv = decode_vector(&r.payload, &state.map, &books);
-                let hat = dequantize(&qv, &state.cfg);
-                let _ = r.node;
-                for (m, v) in mean.iter_mut().zip(&hat) {
-                    *m += *v as f64 / k as f64;
+                slots[r.node] = Some(r.packet);
+            }
+            let mut mean = vec![0.0; d];
+            for slot in &slots {
+                let packet = slot.as_ref().expect("one packet per node");
+                total_bits += packet.len_bits() as u64;
+                decoder.decode_into(packet, &mut decoded)?;
+                for (m, v) in mean.iter_mut().zip(&decoded) {
+                    *m += v / k as f64;
                 }
             }
             update(&mut x, &mean, t);
@@ -115,9 +142,11 @@ pub fn run_rounds(
         for tx in &to_workers {
             let _ = tx.send(Cmd::Stop);
         }
+        Ok(())
     });
+    result?;
 
-    (x, total_bits, last_mean)
+    Ok((x, total_bits, last_mean))
 }
 
 #[cfg(test)]
@@ -154,7 +183,8 @@ mod tests {
                     *xi -= 0.08 * g;
                 }
             },
-        );
+        )
+        .unwrap();
         let err = l2_norm64(&sub(&x, &op.sol));
         assert!(err < 0.3 * l2_norm64(&op.sol), "{err}");
         assert!(bits > 0);
@@ -162,30 +192,29 @@ mod tests {
 
     #[test]
     fn threaded_matches_sequential_given_seeds() {
-        // same oracle + quantizer seeds => identical aggregate per round
+        // same oracle + codec seeds => identical aggregate per round
         let mut rng = Rng::new(2);
         let op = QuadraticOperator::random(8, 0.5, &mut rng);
         let st = state(8, 5);
-        let books = st.books();
         let seed = 42u64;
         let k = 3;
         let x0 = vec![0.25; 8];
 
-        // sequential reference for one round
+        // sequential reference for one round, through the same comm pipeline
         let mut seq_mean = vec![0.0; 8];
+        let mut decoded = Vec::new();
         for node in 0..k {
             let mut oracle = Oracle::new(
                 &op,
                 NoiseModel::Absolute { sigma: 0.2 },
-                seed ^ (0x9E37 + node as u64 * 0x79B9),
+                worker_oracle_seed(seed, node),
             );
-            let mut qrng = Rng::new(seed.wrapping_add(node as u64 * 7919 + 13));
+            let mut codec = st.codec(worker_codec_seed(seed, node));
             let dual = oracle.sample(&x0);
-            let v32: Vec<f32> = dual.iter().map(|&v| v as f32).collect();
-            let qv = quantize(&v32, &st.map, &st.cfg, &mut qrng);
-            let hat = dequantize(&decode_vector(&encode_vector(&qv, &books), &st.map, &books), &st.cfg);
-            for (m, v) in seq_mean.iter_mut().zip(&hat) {
-                *m += *v as f64 / k as f64;
+            let packet = codec.encode(&dual);
+            codec.decode_into(&packet, &mut decoded).unwrap();
+            for (m, v) in seq_mean.iter_mut().zip(&decoded) {
+                *m += v / k as f64;
             }
         }
 
@@ -198,10 +227,9 @@ mod tests {
             1,
             seed,
             |_x, _mean, _| {},
-        );
-        for (a, b) in par_mean.iter().zip(&seq_mean) {
-            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
-        }
+        )
+        .unwrap();
+        assert_eq!(par_mean, seq_mean, "aggregates must be bit-identical");
     }
 
     #[test]
@@ -213,7 +241,7 @@ mod tests {
         let x0 = vec![1.0; 4];
         let a = op.apply_vec(&x0);
         let (_, _, mean) =
-            run_rounds(&op, NoiseModel::None, 5, &st, x0, 1, 9, |_, _, _| {});
+            run_rounds(&op, NoiseModel::None, 5, &st, x0, 1, 9, |_, _, _| {}).unwrap();
         for (m, t) in mean.iter().zip(&a) {
             assert!((m - t).abs() < 0.05 * t.abs().max(1.0), "{m} vs {t}");
         }

@@ -1,12 +1,16 @@
 //! Deterministic cluster engine with a simulated network clock.
 //!
-//! The engine owns the *communication* semantics (quantize -> encode ->
-//! broadcast -> decode -> aggregate) and its timing; the optimizer logic
-//! (ODA / Adam / SGD) lives in the drivers that call `exchange` each step.
+//! The engine is a thin transport over the shared `crate::comm` pipeline:
+//! each node's [`CommEndpoint`] encodes its dual vector into a real
+//! [`WirePacket`](crate::comm::WirePacket), the engine charges the network
+//! model with the packet's *actual* byte count (never a codec self-report),
+//! decodes it exactly as a receiving node would, and aggregates. The
+//! optimizer logic (ODA / Adam / SGD) lives in the drivers that call
+//! `exchange` each step.
 
 use super::metrics::StepMetrics;
+use crate::comm::{CommEndpoint, CommError, Compressor};
 use crate::net::{Collective, NetworkModel};
-use crate::oda::compress::Compressor;
 use crate::stats::rng::Rng;
 use std::time::Instant;
 
@@ -20,7 +24,7 @@ pub enum StepTimeModel {
 }
 
 pub struct ClusterSim {
-    pub compressors: Vec<Box<dyn Compressor>>,
+    endpoints: Vec<CommEndpoint>,
     pub net: NetworkModel,
     /// true => payloads are uniform fp32 and in-network reduction applies
     /// (NCCL ring allreduce); false => entropy-coded allgather (OpenMPI)
@@ -28,41 +32,54 @@ pub struct ClusterSim {
     /// Main (shared-codeword) vs Alternating protocol for jitter accounting
     pub main_protocol: bool,
     rng: Rng,
+    /// decode scratch, reused across nodes and steps
+    decoded: Vec<f64>,
 }
 
 impl ClusterSim {
     pub fn new(
-        compressors: Vec<Box<dyn Compressor>>,
+        codecs: Vec<Box<dyn Compressor>>,
         net: NetworkModel,
         uncompressed_collective: bool,
     ) -> Self {
         ClusterSim {
-            compressors,
+            endpoints: codecs.into_iter().map(CommEndpoint::new).collect(),
             net,
             uncompressed_collective,
             main_protocol: true,
             rng: Rng::new(0xC0FFEE),
+            decoded: Vec::new(),
         }
     }
 
     pub fn k(&self) -> usize {
-        self.compressors.len()
+        self.endpoints.len()
     }
 
-    /// One synchronous exchange: every node compresses its dual vector,
-    /// "broadcasts" it, everyone decodes and averages. Returns the mean
-    /// decoded vector plus codec/wire timing on real byte counts.
-    pub fn exchange(&mut self, duals: &[Vec<f64>]) -> (Vec<f64>, StepMetrics) {
-        assert_eq!(duals.len(), self.compressors.len());
+    pub fn endpoints(&self) -> &[CommEndpoint] {
+        &self.endpoints
+    }
+
+    /// One synchronous exchange: every node encodes its dual vector into a
+    /// wire packet, "broadcasts" it, everyone decodes and averages. Returns
+    /// the mean decoded vector plus codec/wire timing on the real encoded
+    /// byte counts.
+    pub fn exchange(&mut self, duals: &[Vec<f64>]) -> Result<(Vec<f64>, StepMetrics), CommError> {
+        assert_eq!(duals.len(), self.endpoints.len());
         let k = duals.len();
         let d = duals[0].len();
         let t0 = Instant::now();
         let mut mean = vec![0.0; d];
         let mut bytes = Vec::with_capacity(k);
-        for (kk, dual) in duals.iter().enumerate() {
-            let (hat, bits) = self.compressors[kk].compress(dual);
+        let mut wire_bits = 0u64;
+        for (ep, dual) in self.endpoints.iter_mut().zip(duals) {
+            // ENC onto the wire; the packet's bit count is the one truth
+            let bits = ep.send(dual);
+            wire_bits += bits as u64;
             bytes.push(bits as f64 / 8.0);
-            for (m, v) in mean.iter_mut().zip(&hat) {
+            // DEC as every receiving node would
+            ep.recv_into(&mut self.decoded)?;
+            for (m, v) in mean.iter_mut().zip(&self.decoded) {
                 *m += v / k as f64;
             }
         }
@@ -84,15 +101,18 @@ impl ClusterSim {
             codec_s,
             comm_s,
             bytes_per_node: bytes.iter().sum::<f64>() / k as f64,
+            wire_bits,
             scalars: Vec::new(),
         };
-        (mean, metrics)
+        Ok((mean, metrics))
     }
 
-    /// Trigger Algorithm 1's level update (lines 2-7) on every node.
+    /// Trigger Algorithm 1's level update (lines 2-7) on every node. Must be
+    /// called between exchanges (in-flight packets decode with the books
+    /// they were encoded under).
     pub fn update_levels(&mut self) {
-        for c in &mut self.compressors {
-            c.update_levels();
+        for ep in &mut self.endpoints {
+            ep.update_levels();
         }
     }
 }
@@ -100,8 +120,8 @@ impl ClusterSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::{IdentityCompressor, QuantCompressor};
     use crate::net::NetworkModel;
-    use crate::oda::compress::{IdentityCompressor, QuantCompressor};
     use crate::quant::layer_map::LayerMap;
     use crate::stats::rng::Rng;
 
@@ -111,17 +131,20 @@ mod tests {
     }
 
     #[test]
-    fn identity_exchange_is_exact_mean() {
+    fn identity_exchange_is_exact_mean_of_f32_wire() {
         let comps: Vec<Box<dyn Compressor>> =
             (0..4).map(|_| Box::new(IdentityCompressor) as _).collect();
         let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), true);
         let ds = duals(4, 32, 1);
-        let (mean, m) = sim.exchange(&ds);
+        let (mean, m) = sim.exchange(&ds).unwrap();
         for i in 0..32 {
-            let want: f64 = ds.iter().map(|d| d[i]).sum::<f64>() / 4.0;
+            // fp32 travels on the wire, so the reference mean is over the
+            // f32-rounded duals
+            let want: f64 = ds.iter().map(|d| d[i] as f32 as f64).sum::<f64>() / 4.0;
             assert!((mean[i] - want).abs() < 1e-12);
         }
         assert_eq!(m.bytes_per_node, 32.0 * 4.0);
+        assert_eq!(m.wire_bits, 4 * 32 * 32);
         assert!(m.comm_s > 0.0);
     }
 
@@ -137,10 +160,25 @@ mod tests {
         let mut sim_raw = ClusterSim::new(idc, net.clone(), true);
         let mut sim_q = ClusterSim::new(qc, net, false);
         let ds = duals(4, 4096, 2);
-        let (_, mr) = sim_raw.exchange(&ds);
-        let (_, mq) = sim_q.exchange(&ds);
+        let (_, mr) = sim_raw.exchange(&ds).unwrap();
+        let (_, mq) = sim_q.exchange(&ds).unwrap();
         assert!(mq.bytes_per_node < mr.bytes_per_node / 3.0);
         assert!(mq.comm_s < mr.comm_s);
+    }
+
+    #[test]
+    fn charged_bytes_match_packet_payloads() {
+        let map = LayerMap::single(512);
+        let qc: Vec<Box<dyn Compressor>> = (0..2)
+            .map(|i| Box::new(QuantCompressor::global_bits(&map, 4, 128, i as u64)) as _)
+            .collect();
+        let mut sim = ClusterSim::new(qc, NetworkModel::genesis_cloud(5.0), false);
+        let ds = duals(2, 512, 7);
+        let (_, m) = sim.exchange(&ds).unwrap();
+        let packet_bits: u64 =
+            sim.endpoints().iter().map(|e| e.packet().len_bits() as u64).sum();
+        assert_eq!(m.wire_bits, packet_bits);
+        assert!((m.bytes_per_node - packet_bits as f64 / 8.0 / 2.0).abs() < 1e-9);
     }
 
     #[test]
@@ -156,8 +194,8 @@ mod tests {
         };
         let net = NetworkModel::genesis_cloud(5.0);
         let ds = duals(2, 256, 3);
-        let (m1, _) = ClusterSim::new(mk(), net.clone(), false).exchange(&ds);
-        let (m2, _) = ClusterSim::new(mk(), net, false).exchange(&ds);
+        let (m1, _) = ClusterSim::new(mk(), net.clone(), false).exchange(&ds).unwrap();
+        let (m2, _) = ClusterSim::new(mk(), net, false).exchange(&ds).unwrap();
         assert_eq!(m1, m2);
     }
 }

@@ -8,15 +8,14 @@
 //!   * QODA-Adam + global quantization   — the Q-GenX-style configuration
 //!   * QODA-Adam + layer-wise (L-GreCo)  — the paper's method
 
-use anyhow::Result;
-
 use super::fid::fid;
+use crate::comm::{Compressor, IdentityCompressor, QuantCompressor};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::sim::ClusterSim;
 use crate::net::NetworkModel;
 use crate::oda::baseline::AdamState;
-use crate::oda::compress::{Compressor, IdentityCompressor, QuantCompressor};
 use crate::runtime::WganModel;
+use crate::util::error::Result;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum GanOptimizer {
@@ -139,7 +138,7 @@ pub fn train(model: &WganModel, cfg: &GanTrainConfig) -> Result<GanRunResult> {
         }
         let compute_s = t0.elapsed().as_secs_f64();
 
-        let (mean, mut metrics) = cluster.exchange(&duals);
+        let (mean, mut metrics) = cluster.exchange(&duals)?;
         let dir = adam.direction(&mean);
         for (p, di) in params.iter_mut().zip(&dir) {
             *p -= *di as f32;

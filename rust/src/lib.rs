@@ -1,16 +1,39 @@
 //! # qoda — Layer-wise Quantization for Quantized Optimistic Dual Averaging
 //!
-//! Production reproduction of the ICML 2025 paper: a three-layer
-//! rust + JAX + Pallas stack where rust owns the distributed training loop
-//! (L3), JAX defines the models (L2, AOT-lowered to HLO text) and Pallas
-//! provides the quantization / matmul kernels (L1). Python never runs on
-//! the request path — the rust binary executes `artifacts/*.hlo.txt` via
-//! PJRT (the `xla` crate).
+//! Production reproduction of the ICML 2025 paper, built as a fully
+//! self-contained rust system (the environment is offline: every substrate
+//! is in-tree, no external crates).
 //!
-//! Top-level modules mirror DESIGN.md's system inventory.
+//! The architecture centers on the **`comm` pipeline**: one real-bytes
+//! quantize → entropy-code → wire → decode path. Node codecs
+//! ([`comm::Compressor`]) produce [`comm::WirePacket`]s — the actual
+//! encoded payload with per-layer bit offsets and an exact bit count — and
+//! everything downstream consumes those packets:
+//!
+//! * [`coordinator`] — the two cluster engines (deterministic `sim` with a
+//!   calibrated network clock, threaded `parallel` shipping packets over
+//!   channels) are thin transports over `comm`; they charge the network
+//!   model with measured packet bytes and are integration-tested for
+//!   bit-identical agreement;
+//! * [`oda`] — the QODA solver (Algorithm 1), the Q-GenX extra-gradient
+//!   baseline and the Adam baselines, all communicating through per-node
+//!   [`comm::CommEndpoint`]s;
+//! * [`quant`] + [`coding`] — the layer-wise quantizer, level-sequence
+//!   adaptation (Eq. 2 / L-GreCo) and the Main/Alternating entropy-coding
+//!   protocols the codecs compose;
+//! * [`runtime`] — the native model backend (WGAN game + transformer-LM
+//!   stand-in) driving the Section 7 workloads via [`gan`], [`lm`] and
+//!   [`powersgd`];
+//! * [`bench_harness`], [`net`], [`vi`], [`stats`], [`util`] — experiment
+//!   harnesses, the analytic cluster network model, VI substrate and shared
+//!   infrastructure.
+//!
+//! Wire decoding is fallible end to end (`comm::CommError`); malformed
+//! bytes never panic the coordinator.
 
 pub mod bench_harness;
 pub mod coding;
+pub mod comm;
 pub mod coordinator;
 pub mod gan;
 pub mod lm;

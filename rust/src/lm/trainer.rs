@@ -1,15 +1,16 @@
 //! Transformer-LM training driver (Section 7.2): PowerSGD + {global,
 //! layer-wise} quantization of the factors, with per-layer-type masks for
 //! the Figure 5 ablation, K-node data parallelism and compression-rate
-//! accounting identical to Table 3's.
+//! accounting read off the actual `comm` wire packets (identical to
+//! Table 3's).
 
-use anyhow::Result;
-
+use crate::comm::{CommEndpoint, Compressor, IdentityCompressor};
 use crate::lm::corpus::Corpus;
 use crate::oda::baseline::AdamState;
-use crate::powersgd::{FactorQuantMode, PowerSgd};
+use crate::powersgd::{FactorQuantMode, PowerSgdCodec};
 use crate::quant::layer_map::LayerMap;
 use crate::runtime::LmModel;
+use crate::util::error::Result;
 
 /// Which layers get quantized (Figure 5 masks; `All` is Table 3).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -42,7 +43,10 @@ impl Default for LmTrainConfig {
             target: QuantTarget::All,
             k_nodes: 2,
             steps: 120,
-            lr: 2e-3,
+            // retuned (2e-3 -> 1e-2) for the native LM backend: the Markov
+            // corpus + MLP stand-in needs the larger step to clear the
+            // Table 3 perplexity thresholds in ~40-120 steps
+            lr: 1e-2,
             seed: 1,
             eval_every: 20,
         }
@@ -104,12 +108,29 @@ fn quant_mode(map: &LayerMap, cfg: &LmTrainConfig) -> FactorQuantMode {
 }
 
 /// Train the LM; reports perplexity + compression rate (Table 3 columns).
+/// Every node's gradient travels through a `comm` endpoint — PowerSGD
+/// factors as real wire packets, or raw fp32 for the uncompressed baseline
+/// — so `total_wire_bits` is the sum of actual encoded payload sizes.
 pub fn train(model: &LmModel, cfg: &LmTrainConfig) -> Result<LmRunResult> {
     let mut params = model.init_params(cfg.seed as i32)?;
     let mut adam = AdamState::new(model.dim, cfg.lr);
     let mode = quant_mode(&model.meta, cfg);
-    let mut compressors: Vec<PowerSgd> = (0..cfg.k_nodes)
-        .map(|i| PowerSgd::new(&model.meta, cfg.rank, cfg.seed * 31 + i as u64))
+    // rank 0 sentinel = fully uncompressed fp32 baseline
+    let uncompressed = cfg.quant_bits.is_none() && cfg.rank == 0;
+    let mut endpoints: Vec<CommEndpoint> = (0..cfg.k_nodes)
+        .map(|i| {
+            let codec: Box<dyn Compressor> = if uncompressed {
+                Box::new(IdentityCompressor)
+            } else {
+                Box::new(PowerSgdCodec::new(
+                    &model.meta,
+                    cfg.rank,
+                    mode.clone(),
+                    cfg.seed * 31 + i as u64,
+                ))
+            };
+            CommEndpoint::new(codec)
+        })
         .collect();
     let mut corpora: Vec<Corpus> = (0..cfg.k_nodes)
         .map(|i| Corpus::new(model.vocab, cfg.seed * 1009 + i as u64))
@@ -120,6 +141,7 @@ pub fn train(model: &LmModel, cfg: &LmTrainConfig) -> Result<LmRunResult> {
     let mut eval_curve = Vec::new();
     let mut total_wire_bits = 0u64;
     let mut raw_bits_total = 0u64;
+    let mut dec: Vec<f64> = Vec::with_capacity(model.dim);
 
     for step in 1..=cfg.steps {
         let mut mean = vec![0.0f64; model.dim];
@@ -129,11 +151,7 @@ pub fn train(model: &LmModel, cfg: &LmTrainConfig) -> Result<LmRunResult> {
             let (grads, loss) = model.grad(&params, &tokens)?;
             loss_acc += loss as f64 / cfg.k_nodes as f64;
             let g64: Vec<f64> = grads.iter().map(|&x| x as f64).collect();
-            let (dec, bits) = match cfg.quant_bits.is_none() && cfg.rank == 0 {
-                // rank 0 sentinel = fully uncompressed baseline
-                true => (g64.clone(), 32 * model.dim),
-                false => compressors[node].compress_with_quant(&g64, &mode),
-            };
+            let bits = endpoints[node].roundtrip_into(&g64, &mut dec)?;
             total_wire_bits += bits as u64;
             raw_bits_total += (32 * model.dim) as u64;
             for (m, v) in mean.iter_mut().zip(&dec) {
@@ -187,9 +205,10 @@ mod tests {
             target: QuantTarget::OnlyType("embedding"),
             ..Default::default()
         };
-        match quant_mode(&map, &cfg) {
-            FactorQuantMode::PerLayer { bits } => assert_eq!(bits, vec![2, 8, 8]),
-            _ => panic!("expected per-layer"),
-        }
+        let mode = quant_mode(&map, &cfg);
+        assert!(
+            matches!(&mode, FactorQuantMode::PerLayer { bits } if bits == &vec![2, 8, 8]),
+            "expected per-layer mask, got {mode:?}"
+        );
     }
 }

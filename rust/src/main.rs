@@ -17,7 +17,7 @@
 //!   train-lm          single transformer-LM training run
 //!   all               run the non-PJRT suite (writes results/*.csv)
 
-use anyhow::Result;
+use qoda::util::error::Result;
 use qoda::bench_harness::{experiments, model_experiments};
 use qoda::gan::trainer::{GanCompression, GanOptimizer, GanTrainConfig};
 use qoda::lm::trainer::{LmTrainConfig, QuantTarget};
@@ -159,7 +159,7 @@ fn main() -> Result<()> {
                 target: QuantTarget::All,
                 k_nodes: args.usize_or("k", 2),
                 steps: args.usize_or("steps", 120),
-                lr: args.f64_or("lr", 2e-3),
+                lr: args.f64_or("lr", 1e-2),
                 seed: args.u64_or("seed", 1),
                 eval_every: args.usize_or("eval-every", 20),
             };

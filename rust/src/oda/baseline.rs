@@ -4,8 +4,8 @@
 //! with Adam preconditioning of the averaged dual direction, as in
 //! Daskalakis et al., 2018).
 
-use super::compress::Compressor;
 use super::source::DualSource;
+use crate::comm::{CommEndpoint, Compressor};
 
 /// Adam moment state over a flat vector.
 pub struct AdamState {
@@ -52,11 +52,13 @@ impl AdamState {
 /// baseline. Returns the iterate trajectory bits like the VI solvers.
 pub struct AdamSolver<'s> {
     pub source: &'s mut dyn DualSource,
-    pub compressors: Vec<Box<dyn Compressor>>,
+    pub endpoints: Vec<CommEndpoint>,
     pub adam: AdamState,
     /// optimistic extrapolation on/off (the QODA-extension toggle)
     pub optimistic: bool,
     pub total_bits: u64,
+    /// decoded-dual scratch
+    hat: Vec<f64>,
 }
 
 impl<'s> AdamSolver<'s> {
@@ -70,10 +72,11 @@ impl<'s> AdamSolver<'s> {
         assert_eq!(compressors.len(), source.num_nodes());
         AdamSolver {
             source,
-            compressors,
+            endpoints: compressors.into_iter().map(CommEndpoint::new).collect(),
             adam: AdamState::new(dim, lr),
             optimistic,
             total_bits: 0,
+            hat: Vec::new(),
         }
     }
 
@@ -91,9 +94,11 @@ impl<'s> AdamSolver<'s> {
         let duals = self.source.duals(&query);
         let mut mean = vec![0.0; d];
         for (kk, dual) in duals.iter().enumerate() {
-            let (hat, bits) = self.compressors[kk].compress(dual);
+            let bits = self.endpoints[kk]
+                .roundtrip_into(dual, &mut self.hat)
+                .expect("comm loopback roundtrip");
             self.total_bits += bits as u64;
-            for (m, v) in mean.iter_mut().zip(&hat) {
+            for (m, v) in mean.iter_mut().zip(&self.hat) {
                 *m += v / kf;
             }
         }

@@ -1,318 +1,8 @@
-//! Compression pipeline used inside the solvers: quantize -> entropy-code ->
-//! (wire) -> decode -> dequantize, with exact bit accounting and the
-//! L-GreCo-style adaptive re-optimization of levels at update steps
-//! (Algorithm 1, lines 2–7).
+//! Back-compat shim: the compression pipeline moved to [`crate::comm`],
+//! where it is shared (as real wire packets) by both coordinator engines.
+//! Import from `crate::comm` in new code.
 
-use crate::coding::protocol::{
-    decode_vector, encode_vector, Codebooks, ProtocolKind,
+pub use crate::comm::{
+    default_sequences, Adaptation, CommEndpoint, CommError, Compressor, IdentityCompressor,
+    QuantCompressor, WirePacket,
 };
-use crate::quant::adaptive::TypeStats;
-use crate::quant::layer_map::LayerMap;
-use crate::quant::lgreco;
-use crate::quant::quantizer::{dequantize, quantize};
-use crate::quant::{LevelSequence, QuantConfig};
-use crate::stats::rng::Rng;
-
-/// What a node applies to its dual vector before "broadcasting".
-pub trait Compressor: Send {
-    /// Returns the decoded (receiver-side) vector and the wire size in bits.
-    fn compress(&mut self, v: &[f64]) -> (Vec<f64>, usize);
-
-    /// Hook for Algorithm 1's update steps (t in U): re-estimate level
-    /// sequences / codebooks from the statistics gathered since the last
-    /// update. Default: no-op.
-    fn update_levels(&mut self) {}
-
-    fn name(&self) -> &'static str;
-}
-
-/// No compression: f32 on the wire (the uncompressed baseline).
-pub struct IdentityCompressor;
-
-impl Compressor for IdentityCompressor {
-    fn compress(&mut self, v: &[f64]) -> (Vec<f64>, usize) {
-        (v.to_vec(), v.len() * 32)
-    }
-
-    fn name(&self) -> &'static str {
-        "uncompressed"
-    }
-}
-
-/// Adaptation policy of the quantized compressor.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Adaptation {
-    /// fixed sequences forever (Q-GenX-style static global quantization)
-    Fixed,
-    /// re-optimize each type's levels at its current alpha (Eq. 2 fixed
-    /// point) every `every` compressions
-    Levels { every: usize },
-    /// full L-GreCo: re-allocate per-type alphas under a total bit budget
-    /// (bits/coordinate) *and* re-optimize levels every `every` compressions
-    LGreco { every: usize, budget_bits_per_coord: f64, max_bits: u32 },
-}
-
-/// Quantize + entropy-code compressor (the paper's scheme).
-pub struct QuantCompressor {
-    pub map: LayerMap,
-    pub cfg: QuantConfig,
-    pub protocol: ProtocolKind,
-    pub adaptation: Adaptation,
-    books: Codebooks,
-    stats: Vec<TypeStats>,
-    rng: Rng,
-    calls: usize,
-    /// running totals for reporting
-    pub total_bits: u64,
-    pub total_coords: u64,
-    /// eps_Q of the *current* configuration (refreshed on update)
-    pub current_eps_q: f64,
-}
-
-impl QuantCompressor {
-    pub fn new(
-        map: LayerMap,
-        cfg: QuantConfig,
-        protocol: ProtocolKind,
-        adaptation: Adaptation,
-        seed: u64,
-    ) -> Self {
-        let books = Codebooks::uniform(protocol, &cfg, &map.type_proportions());
-        let stats = (0..map.num_types()).map(|_| TypeStats::default()).collect();
-        let eps = crate::quant::variance::eps_q_for(&map, &cfg);
-        QuantCompressor {
-            map,
-            cfg,
-            protocol,
-            adaptation,
-            books,
-            stats,
-            rng: Rng::new(seed),
-            calls: 0,
-            total_bits: 0,
-            total_coords: 0,
-            current_eps_q: eps,
-        }
-    }
-
-    /// Convenience: b-bit global quantization with bucketing (the paper's
-    /// "QODA5 (bucket size 128)" configuration collapses types).
-    pub fn global_bits(map: &LayerMap, bits: u32, bucket: usize, seed: u64) -> Self {
-        let m = map.bucketed(bucket).with_single_type();
-        let cfg = QuantConfig::uniform_bits(1, bits, 2.0);
-        Self::new(m, cfg, ProtocolKind::Main, Adaptation::Fixed, seed)
-    }
-
-    /// Layer-wise adaptive compressor: per-type sequences starting at
-    /// `bits`, L-GreCo reallocation every `every` steps at the same average
-    /// bit budget.
-    pub fn layerwise(map: &LayerMap, bits: u32, bucket: usize, every: usize, seed: u64) -> Self {
-        let m = map.bucketed(bucket);
-        let cfg = QuantConfig::uniform_bits(m.num_types(), bits, 2.0);
-        Self::new(
-            m,
-            cfg,
-            ProtocolKind::Main,
-            Adaptation::LGreco {
-                every,
-                budget_bits_per_coord: (bits + 1) as f64,
-                // candidates above 6 bits are never selected at a ~6-bit
-                // budget but dominate the DP's level-optimization cost
-                // (alpha = 254); capping is a pure perf win (§Perf iter 5)
-                max_bits: 6,
-            },
-            seed,
-        )
-    }
-
-    fn gather_stats(&mut self, v32: &[f32]) {
-        for l in &self.map.layers {
-            self.stats[l.type_id]
-                .add_layer_sample(&v32[l.offset..l.offset + l.len], self.cfg.q);
-        }
-    }
-
-    fn refresh_codebooks(&mut self) {
-        let probs: Vec<Vec<f64>> = self
-            .cfg
-            .sequences
-            .iter()
-            .enumerate()
-            .map(|(m, seq)| {
-                crate::coding::length::level_probabilities(&self.stats[m].hist, seq)
-            })
-            .collect();
-        self.books = Codebooks::build(self.protocol, &probs, &self.map.type_proportions());
-    }
-}
-
-impl Compressor for QuantCompressor {
-    fn compress(&mut self, v: &[f64]) -> (Vec<f64>, usize) {
-        let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
-        self.gather_stats(&v32);
-        let qv = quantize(&v32, &self.map, &self.cfg, &mut self.rng);
-        let buf = encode_vector(&qv, &self.books);
-        let bits = buf.len_bits();
-        // receiver path (exactness asserted in tests; skip re-decode cost on
-        // the stats: decode is what the *other* nodes do)
-        let back = decode_vector(&buf, &self.map, &self.books);
-        let out32 = dequantize(&back, &self.cfg);
-        self.total_bits += bits as u64;
-        self.total_coords += v.len() as u64;
-        self.calls += 1;
-
-        let every = match self.adaptation {
-            Adaptation::Levels { every } | Adaptation::LGreco { every, .. } => every,
-            Adaptation::Fixed => 0,
-        };
-        if every > 0 && self.calls % every == 0 {
-            self.update_levels();
-        }
-        (out32.iter().map(|&x| x as f64).collect(), bits)
-    }
-
-    fn update_levels(&mut self) {
-        match self.adaptation {
-            Adaptation::Fixed => {}
-            Adaptation::Levels { .. } => {
-                let alphas: Vec<usize> =
-                    self.cfg.sequences.iter().map(|s| s.alpha()).collect();
-                let (seqs, _) = crate::quant::adaptive::adapt_all(&self.stats, &alphas, 6);
-                self.cfg.sequences = seqs;
-            }
-            Adaptation::LGreco { budget_bits_per_coord, max_bits, .. } => {
-                // error curves per *type* (types share statistics), sizes
-                // aggregated over layers of that type
-                let ladder = lgreco::alpha_ladder(max_bits);
-                let problems: Vec<lgreco::LayerProblem> = (0..self.map.num_types())
-                    .map(|m| {
-                        let size: usize =
-                            self.map.layers_of_type(m).map(|l| l.len).sum();
-                        lgreco::LayerProblem {
-                            size: size.max(1),
-                            candidates: lgreco::error_curve(&self.stats[m].hist, &ladder, 4),
-                        }
-                    })
-                    .collect();
-                let budget = budget_bits_per_coord * self.map.dim as f64;
-                let alloc = lgreco::allocate(&problems, budget);
-                // adopt the chosen alphas with optimized levels
-                let alphas: Vec<usize> = alloc
-                    .choice
-                    .iter()
-                    .map(|&c| ladder[c.min(ladder.len() - 1)])
-                    .collect();
-                let (seqs, _) = crate::quant::adaptive::adapt_all(&self.stats, &alphas, 6);
-                self.cfg.sequences = seqs;
-            }
-        }
-        self.refresh_codebooks();
-        self.current_eps_q = crate::quant::variance::eps_q_for(&self.map, &self.cfg);
-        for s in &mut self.stats {
-            s.reset();
-        }
-    }
-
-    fn name(&self) -> &'static str {
-        match self.adaptation {
-            Adaptation::Fixed => "quantized-global",
-            Adaptation::Levels { .. } => "quantized-adaptive",
-            Adaptation::LGreco { .. } => "quantized-lgreco",
-        }
-    }
-}
-
-/// Build a default level sequence set for an adaptive start.
-pub fn default_sequences(num_types: usize, bits: u32) -> Vec<LevelSequence> {
-    (0..num_types).map(|_| LevelSequence::bits(bits)).collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn grad_like(map: &LayerMap, seed: u64) -> Vec<f64> {
-        let mut rng = Rng::new(seed);
-        (0..map.dim)
-            .map(|i| rng.gaussian() * if i % 3 == 0 { 2.0 } else { 0.05 })
-            .collect()
-    }
-
-    #[test]
-    fn identity_costs_32_bits_per_coord() {
-        let mut c = IdentityCompressor;
-        let (out, bits) = c.compress(&[1.0, 2.0, 3.0]);
-        assert_eq!(out, vec![1.0, 2.0, 3.0]);
-        assert_eq!(bits, 96);
-    }
-
-    #[test]
-    fn quantized_reduces_bits() {
-        let map = LayerMap::from_spec(&[("a", 1000, "ff"), ("b", 500, "bias")]);
-        let mut c = QuantCompressor::global_bits(&map, 5, 128, 1);
-        let v = grad_like(&map, 2);
-        let (out, bits) = c.compress(&v);
-        assert_eq!(out.len(), v.len());
-        assert!(bits < 1500 * 32, "{bits}");
-        assert!(bits > 0);
-    }
-
-    #[test]
-    fn compression_error_bounded_by_eps() {
-        let map = LayerMap::from_spec(&[("a", 512, "ff")]);
-        let mut c = QuantCompressor::global_bits(&map, 5, 128, 3);
-        let v = grad_like(&map, 4);
-        let norm2: f64 = v.iter().map(|x| x * x).sum();
-        let mut err_acc = 0.0;
-        let reps = 30;
-        for _ in 0..reps {
-            let (out, _) = c.compress(&v);
-            err_acc += v.iter().zip(&out).map(|(a, b)| (a - b).powi(2)).sum::<f64>();
-        }
-        let ratio = err_acc / reps as f64 / norm2;
-        assert!(ratio <= c.current_eps_q * 1.1, "{ratio} vs {}", c.current_eps_q);
-    }
-
-    #[test]
-    fn adaptation_reduces_bits_or_error() {
-        let map = LayerMap::from_spec(&[("a", 2048, "ff"), ("e", 512, "embedding")]);
-        let mut c = QuantCompressor::layerwise(&map, 5, 1 << 30, 10, 5);
-        let mut bits_before = 0usize;
-        let mut bits_after = 0usize;
-        for i in 0..30 {
-            let v = grad_like(&map, 100 + i);
-            let (_, b) = c.compress(&v);
-            if i < 10 {
-                bits_before += b;
-            }
-            if i >= 20 {
-                bits_after += b;
-            }
-        }
-        // after two L-GreCo updates the entropy coder + level placement must
-        // not be worse than the cold-start uniform configuration
-        assert!(
-            bits_after as f64 <= bits_before as f64 * 1.05,
-            "{bits_after} vs {bits_before}"
-        );
-    }
-
-    #[test]
-    fn update_levels_keeps_roundtrip_consistent() {
-        let map = LayerMap::from_spec(&[("a", 300, "ff")]);
-        let mut c = QuantCompressor::new(
-            map.clone(),
-            QuantConfig::uniform_bits(1, 4, 2.0),
-            ProtocolKind::Alternating,
-            Adaptation::Levels { every: 3 },
-            7,
-        );
-        for i in 0..12 {
-            let v = grad_like(&map, 50 + i);
-            let (out, _) = c.compress(&v);
-            // unbiased-ish: reconstruction correlates positively
-            let dot: f64 = v.iter().zip(&out).map(|(a, b)| a * b).sum();
-            assert!(dot > 0.0);
-        }
-    }
-}

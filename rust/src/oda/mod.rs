@@ -1,6 +1,7 @@
 //! The distributed VI solvers: QODA (Algorithm 1), the Q-GenX extra-gradient
-//! baseline, Adam/optimistic-Adam baselines, the adaptive learning-rate
-//! schedules (Eq. 4 and Alt), and the compression pipeline they share.
+//! baseline, Adam/optimistic-Adam baselines and the adaptive learning-rate
+//! schedules (Eq. 4 and Alt). All solvers communicate through the shared
+//! `crate::comm` wire pipeline (re-exported here for compatibility).
 
 pub mod baseline;
 pub mod compress;
@@ -10,6 +11,7 @@ pub mod qoda;
 pub mod source;
 
 pub use compress::{Adaptation, Compressor, IdentityCompressor, QuantCompressor};
+pub use crate::comm::{CommEndpoint, CommError, WirePacket};
 pub use lr::{AdaptiveLr, AltLr, ConstantLr, LrSchedule};
 pub use qgenx::QGenX;
 pub use qoda::{Qoda, QodaRun};

@@ -3,15 +3,16 @@
 //! calls AND two compressed communications per iteration — the cost QODA's
 //! optimism halves (paper Section 4 / Appendix A.2).
 
-use super::compress::Compressor;
 use super::lr::LrSchedule;
 use super::qoda::{Checkpoint, QodaRun};
 use super::source::DualSource;
+use crate::comm::{CommEndpoint, Compressor};
 
 pub struct QGenX<'s> {
     pub source: &'s mut dyn DualSource,
-    /// one compressor per node (extrapolation and update messages share it)
-    pub compressors: Vec<Box<dyn Compressor>>,
+    /// one comm endpoint per node (extrapolation and update messages share
+    /// its codec and packet scratch)
+    pub endpoints: Vec<CommEndpoint>,
     pub lr: Box<dyn LrSchedule>,
 }
 
@@ -22,7 +23,8 @@ impl<'s> QGenX<'s> {
         lr: Box<dyn LrSchedule>,
     ) -> Self {
         assert_eq!(compressors.len(), source.num_nodes());
-        QGenX { source, compressors, lr }
+        let endpoints = compressors.into_iter().map(CommEndpoint::new).collect();
+        QGenX { source, endpoints, lr }
     }
 
     pub fn run(&mut self, x0: &[f64], steps: usize, checkpoints: &[usize]) -> QodaRun {
@@ -34,6 +36,8 @@ impl<'s> QGenX<'s> {
         let mut total_bits = 0u64;
         let mut out_ckpts = Vec::new();
         let mut ck_iter = checkpoints.iter().peekable();
+        // decoded-dual scratch, reused across nodes and steps
+        let mut hat: Vec<f64> = Vec::with_capacity(d);
 
         for t in 1..=steps {
             let gamma = self.lr.gamma();
@@ -41,7 +45,9 @@ impl<'s> QGenX<'s> {
             let duals0 = self.source.duals(&x);
             let mut mean0 = vec![0.0; d];
             for (kk, dual) in duals0.iter().enumerate() {
-                let (hat, bits) = self.compressors[kk].compress(dual);
+                let bits = self.endpoints[kk]
+                    .roundtrip_into(dual, &mut hat)
+                    .expect("comm loopback roundtrip");
                 total_bits += bits as u64;
                 for (m, v) in mean0.iter_mut().zip(&hat) {
                     *m += v / kf;
@@ -51,15 +57,15 @@ impl<'s> QGenX<'s> {
                 x.iter().zip(&mean0).map(|(xi, g)| xi - gamma * g).collect();
             // update: quantized oracle at X_{t+1/2}   (communication #2)
             let duals1 = self.source.duals(&x_half);
-            let mut hats1: Vec<Vec<f64>> = Vec::with_capacity(k);
             let mut mean1 = vec![0.0; d];
             for (kk, dual) in duals1.iter().enumerate() {
-                let (hat, bits) = self.compressors[kk].compress(dual);
+                let bits = self.endpoints[kk]
+                    .roundtrip_into(dual, &mut hat)
+                    .expect("comm loopback roundtrip");
                 total_bits += bits as u64;
                 for (m, v) in mean1.iter_mut().zip(&hat) {
                     *m += v / kf;
                 }
-                hats1.push(hat);
             }
             // adaptive step statistics: ||mean1 - mean0||^2 (the Q-GenX
             // gradient-variation term)

@@ -13,9 +13,9 @@
 //! with the adaptive learning rates of Eq. (4) or (Alt). The candidate
 //! solution is the ergodic average X̄_{T+1/2}.
 
-use super::compress::Compressor;
 use super::lr::{observe_from_duals, LrSchedule};
 use super::source::DualSource;
+use crate::comm::{CommEndpoint, Compressor};
 
 /// Per-checkpoint record for convergence curves.
 #[derive(Clone, Debug)]
@@ -38,10 +38,11 @@ pub struct QodaRun {
 
 pub struct Qoda<'s> {
     pub source: &'s mut dyn DualSource,
-    pub compressors: Vec<Box<dyn Compressor>>,
+    /// one comm endpoint (codec + packet scratch) per node
+    pub endpoints: Vec<CommEndpoint>,
     pub lr: Box<dyn LrSchedule>,
     /// Algorithm 1's update-step set U as a period (0 = never); forwarded to
-    /// the compressors' `update_levels`
+    /// the codecs' `update_levels`
     pub update_every: usize,
 }
 
@@ -52,7 +53,8 @@ impl<'s> Qoda<'s> {
         lr: Box<dyn LrSchedule>,
     ) -> Self {
         assert_eq!(compressors.len(), source.num_nodes());
-        Qoda { source, compressors, lr, update_every: 0 }
+        let endpoints = compressors.into_iter().map(CommEndpoint::new).collect();
+        Qoda { source, endpoints, lr, update_every: 0 }
     }
 
     /// Run T iterations from X_1 = x0, recording checkpoints at the given
@@ -66,6 +68,9 @@ impl<'s> Qoda<'s> {
         let mut y = vec![0.0; d];
         // V̂_{k,1/2} = 0 (the paper's initialization)
         let mut prev_hat: Vec<Vec<f64>> = vec![vec![0.0; d]; k];
+        // decoded-dual buffers, swapped with prev_hat each step (no per-step
+        // allocation: the comm endpoints recycle their packet scratch too)
+        let mut hats: Vec<Vec<f64>> = vec![vec![0.0; d]; k];
         let mut xbar_sum = vec![0.0; d];
         let mut total_bits = 0u64;
         let mut out_ckpts = Vec::new();
@@ -81,13 +86,15 @@ impl<'s> Qoda<'s> {
                     *xh -= gamma * v / kf;
                 }
             }
-            // oracle + compression (lines 11-15)
+            // oracle + comm pipeline roundtrip (lines 11-15): ENC to a wire
+            // packet, loopback DEC of the same packet — the bits charged are
+            // the packet's actual payload size
             let duals = self.source.duals(&x_half);
-            let mut hats: Vec<Vec<f64>> = Vec::with_capacity(k);
             for (kk, dual) in duals.iter().enumerate() {
-                let (hat, bits) = self.compressors[kk].compress(dual);
+                let bits = self.endpoints[kk]
+                    .roundtrip_into(dual, &mut hats[kk])
+                    .expect("comm loopback roundtrip");
                 total_bits += bits as u64;
-                hats.push(hat);
             }
             // learning-rate statistics (Eq. 4 / Alt); dx lagged one step
             let (diff_sq, sum_sq, _) =
@@ -110,15 +117,15 @@ impl<'s> Qoda<'s> {
                 .map(|(a, b)| (a - b) * (a - b))
                 .sum();
             x = x_next;
-            prev_hat = hats;
+            std::mem::swap(&mut prev_hat, &mut hats);
             for (s, v) in xbar_sum.iter_mut().zip(&x_half) {
                 *s += v;
             }
-            // explicit update-step set U (line 2): compressors may also
+            // explicit update-step set U (line 2): codecs may also
             // self-schedule; this drives them at a fixed cadence
             if self.update_every > 0 && t % self.update_every == 0 {
-                for c in &mut self.compressors {
-                    c.update_levels();
+                for ep in &mut self.endpoints {
+                    ep.update_levels();
                 }
             }
             if ck_iter.peek() == Some(&&t) {

@@ -3,13 +3,22 @@
 //! M (n x m) is approximated as P Q^T with rank r via one warm-started power
 //! iteration per step; the factors P, Q are what travels on the wire, and
 //! the paper applies {global, layer-wise} *quantization on top of the
-//! factors* — exactly what `compress_with_quant` does here.
+//! factors*.
+//!
+//! The factors travel as real wire bits: [`PowerSgdCodec`] implements the
+//! `crate::comm::Compressor` trait, encoding every layer segment (raw f32
+//! pass-through for 1-D layers, fixed-width quantized or raw factors for
+//! matrices) into a [`WirePacket`], so the LM trainer's compression-rate
+//! accounting reads actual payload sizes like every other workload.
 //!
 //! Error feedback (the residual memory) keeps the compression unbiased in
 //! the long run, matching the reference implementation.
 
-use crate::quant::layer_map::{Layer, LayerMap};
-use crate::quant::quantizer::{quantize_slice, QuantizedLayer};
+use crate::coding::bitio::{BitReader, BitWriter};
+use crate::coding::DecodeError;
+use crate::comm::{CommError, Compressor, WirePacket};
+use crate::quant::layer_map::LayerMap;
+use crate::quant::quantizer::quantize_slice;
 use crate::quant::LevelSequence;
 use crate::stats::rng::Rng;
 
@@ -143,21 +152,78 @@ pub fn decompress(p: &[f32], q: &[f32], n: usize, m: usize, r: usize) -> Vec<f32
     out
 }
 
-/// Quantize a factor buffer (one bucket) and dequantize — (values, bits).
-pub fn quantize_factor(
-    buf: &[f32],
-    seq: &LevelSequence,
-    rng: &mut Rng,
-) -> (Vec<f32>, usize) {
-    let ql: QuantizedLayer = quantize_slice(buf, seq, 2.0, 0, rng);
-    let bits = 32 + buf.len() * (seq.index_bits() as usize + 1);
-    let ls = seq.as_slice();
-    let mut out = Vec::with_capacity(buf.len());
-    for i in 0..buf.len() {
-        let mag = ql.norm * ls[ql.indices[i] as usize];
-        out.push(if ql.sign(i) { -(mag as f32) } else { mag as f32 });
+/// `decompress` straight into an f64 output slice (the decode hot path —
+/// no intermediate matrix allocation).
+fn decompress_into(p: &[f32], q: &[f32], n: usize, m: usize, r: usize, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), n * m);
+    for i in 0..n {
+        for j in 0..m {
+            let mut acc = 0.0f32;
+            for rr in 0..r {
+                acc += p[i * r + rr] * q[j * r + rr];
+            }
+            out[i * m + j] = acc as f64;
+        }
     }
-    (out, bits)
+}
+
+/// ENC one factor buffer as a single quantization bucket: f32 norm header,
+/// then per element a fixed-width level index plus a sign bit (torch_cgx-
+/// style "no extra coding" format, footnote 6).
+fn write_quantized_factor(buf: &[f32], seq: &LevelSequence, rng: &mut Rng, w: &mut BitWriter) {
+    let ql = quantize_slice(buf, seq, 2.0, 0, rng);
+    w.write_f32(ql.norm as f32);
+    let ib = seq.index_bits();
+    for i in 0..buf.len() {
+        w.write_bits(ql.indices[i] as u64, ib);
+        w.write_bit(ql.sign(i));
+    }
+}
+
+/// DEC the factor format written by `write_quantized_factor`.
+fn read_quantized_factor(
+    n: usize,
+    seq: &LevelSequence,
+    r: &mut BitReader,
+    out: &mut Vec<f32>,
+) -> Result<(), DecodeError> {
+    out.clear();
+    out.reserve(n);
+    let norm = match r.try_read_bits(32) {
+        Some(bits) => f32::from_bits(bits as u32) as f64,
+        None => return Err(DecodeError::Truncated { bit_pos: r.bit_pos() }),
+    };
+    let ib = seq.index_bits();
+    let ls = seq.as_slice();
+    for _ in 0..n {
+        let idx = match r.try_read_bits(ib) {
+            Some(i) => i as usize,
+            None => return Err(DecodeError::Truncated { bit_pos: r.bit_pos() }),
+        };
+        if idx >= ls.len() {
+            return Err(DecodeError::InvalidCode { bit_pos: r.bit_pos() });
+        }
+        let neg = match r.try_read_bits(1) {
+            Some(b) => b == 1,
+            None => return Err(DecodeError::Truncated { bit_pos: r.bit_pos() }),
+        };
+        let mag = (norm * ls[idx]) as f32;
+        out.push(if neg { -mag } else { mag });
+    }
+    Ok(())
+}
+
+/// DEC `n` raw f32 values.
+fn read_raw_f32(n: usize, r: &mut BitReader, out: &mut Vec<f32>) -> Result<(), DecodeError> {
+    out.clear();
+    out.reserve(n);
+    for _ in 0..n {
+        match r.try_read_bits(32) {
+            Some(bits) => out.push(f32::from_bits(bits as u32)),
+            None => return Err(DecodeError::Truncated { bit_pos: r.bit_pos() }),
+        }
+    }
+    Ok(())
 }
 
 /// Per-layer quantization assignment on top of PowerSGD.
@@ -179,6 +245,8 @@ pub struct PowerSgd {
     pub states: Vec<Option<MatrixState>>,
     pub map: LayerMap,
     rng: Rng,
+    /// per-layer f32 cast scratch, reused every encode
+    g32: Vec<f32>,
 }
 
 impl PowerSgd {
@@ -195,62 +263,167 @@ impl PowerSgd {
                 }
             })
             .collect();
-        PowerSgd { rank, states, map: map.clone(), rng }
+        PowerSgd { rank, states, map: map.clone(), rng, g32: Vec::new() }
+    }
+
+    fn layer_bits(mode: &FactorQuantMode, li: usize) -> Option<u32> {
+        match mode {
+            FactorQuantMode::None => None,
+            FactorQuantMode::Global { bits } => Some(*bits),
+            FactorQuantMode::PerLayer { bits } => Some(bits[li]),
+        }
+    }
+
+    /// ENC: one PowerSGD round into a wire packet — runs the warm-started
+    /// power iteration, updates the error-feedback residual, and writes the
+    /// (optionally quantized) factors plus 1-D pass-through layers as real
+    /// wire bits with per-layer offsets.
+    pub fn encode_into_with_mode(
+        &mut self,
+        grad: &[f64],
+        mode: &FactorQuantMode,
+        packet: &mut WirePacket,
+    ) {
+        assert_eq!(grad.len(), self.map.dim);
+        let mut w = BitWriter::new();
+        packet.begin_encode(grad.len(), &mut w);
+        for (li, l) in self.map.layers.iter().enumerate() {
+            packet.mark_layer(w.len_bits());
+            self.g32.clear();
+            self.g32.extend(grad[l.offset..l.offset + l.len].iter().map(|&x| x as f32));
+            match &mut self.states[li] {
+                None => {
+                    for &v in &self.g32 {
+                        w.write_f32(v);
+                    }
+                }
+                Some(st) => {
+                    let (p, q) = compress_matrix(st, &self.g32);
+                    match Self::layer_bits(mode, li) {
+                        None => {
+                            for &v in p.iter().chain(q.iter()) {
+                                w.write_f32(v);
+                            }
+                        }
+                        Some(nb) => {
+                            let seq = LevelSequence::bits(nb);
+                            write_quantized_factor(&p, &seq, &mut self.rng, &mut w);
+                            write_quantized_factor(&q, &seq, &mut self.rng, &mut w);
+                        }
+                    }
+                }
+            }
+        }
+        packet.finish_encode(&mut w);
+    }
+
+    /// DEC: reconstruct the decoded gradient (P Q^T per matrix, raw values
+    /// for 1-D layers) from a wire packet.
+    pub fn decode_packet(
+        &self,
+        mode: &FactorQuantMode,
+        packet: &WirePacket,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        if packet.dim() != self.map.dim {
+            return Err(CommError::DimMismatch { want: self.map.dim, got: packet.dim() });
+        }
+        let mut r = packet.payload().reader();
+        out.clear();
+        out.resize(self.map.dim, 0.0);
+        let mut pbuf: Vec<f32> = Vec::new();
+        let mut qbuf: Vec<f32> = Vec::new();
+        for (li, l) in self.map.layers.iter().enumerate() {
+            match &self.states[li] {
+                None => {
+                    read_raw_f32(l.len, &mut r, &mut pbuf)?;
+                    for (o, v) in out[l.offset..l.offset + l.len].iter_mut().zip(&pbuf) {
+                        *o = *v as f64;
+                    }
+                }
+                Some(st) => {
+                    let (n, m, rk) = (st.rows, st.cols, st.rank);
+                    match Self::layer_bits(mode, li) {
+                        None => {
+                            read_raw_f32(n * rk, &mut r, &mut pbuf)?;
+                            read_raw_f32(m * rk, &mut r, &mut qbuf)?;
+                        }
+                        Some(nb) => {
+                            let seq = LevelSequence::bits(nb);
+                            read_quantized_factor(n * rk, &seq, &mut r, &mut pbuf)?;
+                            read_quantized_factor(m * rk, &seq, &mut r, &mut qbuf)?;
+                        }
+                    }
+                    decompress_into(
+                        &pbuf,
+                        &qbuf,
+                        n,
+                        m,
+                        rk,
+                        &mut out[l.offset..l.offset + l.len],
+                    );
+                }
+            }
+        }
+        if r.remaining() != 0 {
+            return Err(CommError::TrailingBits { bits: r.remaining() });
+        }
+        Ok(())
     }
 
     /// Compress a flat gradient; returns (decoded gradient, wire bits).
+    /// Convenience wrapper over the packet path — the bits reported are the
+    /// actual encoded payload size.
     pub fn compress_with_quant(
         &mut self,
         grad: &[f64],
         mode: &FactorQuantMode,
     ) -> (Vec<f64>, usize) {
-        assert_eq!(grad.len(), self.map.dim);
-        let mut out = vec![0.0f64; grad.len()];
-        let mut bits = 0usize;
-        let layers: Vec<Layer> = self.map.layers.clone();
-        for (li, l) in layers.iter().enumerate() {
-            let g32: Vec<f32> =
-                grad[l.offset..l.offset + l.len].iter().map(|&x| x as f32).collect();
-            match &mut self.states[li] {
-                None => {
-                    bits += 32 * l.len;
-                    for (o, v) in out[l.offset..l.offset + l.len].iter_mut().zip(&g32) {
-                        *o = *v as f64;
-                    }
-                }
-                Some(st) => {
-                    let (p, q) = compress_matrix(st, &g32);
-                    let layer_bits = match mode {
-                        FactorQuantMode::None => None,
-                        FactorQuantMode::Global { bits } => Some(*bits),
-                        FactorQuantMode::PerLayer { bits } => Some(bits[li]),
-                    };
-                    let (pd, qd, b) = match layer_bits {
-                        None => {
-                            let b = 32 * (p.len() + q.len());
-                            (p, q, b)
-                        }
-                        Some(nb) => {
-                            let seq = LevelSequence::bits(nb);
-                            let (pd, pb) = quantize_factor(&p, &seq, &mut self.rng);
-                            let (qd, qb) = quantize_factor(&q, &seq, &mut self.rng);
-                            (pd, qd, pb + qb)
-                        }
-                    };
-                    bits += b;
-                    let dec = decompress(&pd, &qd, st.rows, st.cols, st.rank);
-                    for (o, v) in out[l.offset..l.offset + l.len].iter_mut().zip(&dec) {
-                        *o = *v as f64;
-                    }
-                }
-            }
-        }
-        (out, bits)
+        let mut packet = WirePacket::new();
+        self.encode_into_with_mode(grad, mode, &mut packet);
+        let mut out = Vec::with_capacity(grad.len());
+        self.decode_packet(mode, &packet, &mut out).expect("powersgd loopback decode");
+        (out, packet.len_bits())
     }
 
     /// fp32 bits of the uncompressed gradient (compression-rate denominator).
     pub fn raw_bits(&self) -> usize {
         32 * self.map.dim
+    }
+}
+
+/// PowerSGD as a `comm` codec: one node's low-rank + quantized factor
+/// pipeline producing real wire packets (what the LM trainer ships).
+pub struct PowerSgdCodec {
+    pub ps: PowerSgd,
+    pub mode: FactorQuantMode,
+}
+
+impl PowerSgdCodec {
+    pub fn new(map: &LayerMap, rank: usize, mode: FactorQuantMode, seed: u64) -> Self {
+        PowerSgdCodec { ps: PowerSgd::new(map, rank, seed), mode }
+    }
+}
+
+impl Compressor for PowerSgdCodec {
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket) {
+        self.ps.encode_into_with_mode(v, &self.mode, packet);
+    }
+
+    fn decode_into(
+        &mut self,
+        packet: &WirePacket,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        self.ps.decode_packet(&self.mode, packet, out)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.mode {
+            FactorQuantMode::None => "powersgd",
+            FactorQuantMode::Global { .. } => "powersgd-quantized",
+            FactorQuantMode::PerLayer { .. } => "powersgd-layerwise",
+        }
     }
 }
 
@@ -346,6 +519,52 @@ mod tests {
         let (dec, q4) = ps2.compress_with_quant(&grad, &FactorQuantMode::Global { bits: 4 });
         assert!(q4 < raw / 4, "{q4} vs {raw}");
         assert!(dec.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn codec_packet_matches_inline_roundtrip() {
+        let map = LayerMap::parse_meta(
+            "dim 1056\nlayer w 0 1024 ff 32 32\nlayer b 1024 32 bias 32 1\n",
+        )
+        .unwrap();
+        let grad: Vec<f64> = (0..1056).map(|i| ((i * 13 % 97) as f64 - 48.0) / 50.0).collect();
+        let mode = FactorQuantMode::Global { bits: 4 };
+        let mut ps = PowerSgd::new(&map, 4, 7);
+        let (dec_inline, bits_inline) = ps.compress_with_quant(&grad, &mode);
+        let mut codec = PowerSgdCodec::new(&map, 4, mode, 7);
+        let mut packet = WirePacket::new();
+        codec.encode_into(&grad, &mut packet);
+        let mut dec = Vec::new();
+        codec.decode_into(&packet, &mut dec).unwrap();
+        assert_eq!(dec, dec_inline);
+        assert_eq!(packet.len_bits(), bits_inline);
+        // per-factor format: 32-bit norm + (idx_bits + sign) per element
+        let seq = LevelSequence::bits(4);
+        let per_factor = |elems: usize| 32 + elems * (seq.index_bits() as usize + 1);
+        let want = per_factor(32 * 4) + per_factor(32 * 4) + 32 * 32;
+        assert_eq!(packet.len_bits(), want);
+        // layer offsets frame both segments
+        assert_eq!(packet.layer_offsets().len(), 2);
+        assert_eq!(packet.layer_offsets()[0], 0);
+    }
+
+    #[test]
+    fn truncated_powersgd_packet_errors() {
+        let map = LayerMap::parse_meta("dim 64\nlayer w 0 64 ff 8 8\n").unwrap();
+        let mut codec =
+            PowerSgdCodec::new(&map, 2, FactorQuantMode::Global { bits: 4 }, 3);
+        let grad: Vec<f64> = (0..64).map(|i| i as f64 / 64.0).collect();
+        let mut packet = WirePacket::new();
+        codec.encode_into(&grad, &mut packet);
+        let mut w = BitWriter::new();
+        let mut r = packet.payload().reader();
+        w.write_bits(r.read_bits(40), 40);
+        let cut = WirePacket::from_raw(w.finish(), packet.layer_offsets().to_vec(), 64);
+        let mut dec = Vec::new();
+        assert!(matches!(
+            codec.decode_into(&cut, &mut dec),
+            Err(CommError::Decode(DecodeError::Truncated { .. }))
+        ));
     }
 
     #[test]

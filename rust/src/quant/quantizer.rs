@@ -37,7 +37,7 @@ impl QuantConfig {
 }
 
 /// Quantized layer in wire form.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct QuantizedLayer {
     /// L^q norm of the raw layer slice
     pub norm: f64,
@@ -79,13 +79,35 @@ pub fn quantize_slice(
     type_id: usize,
     rng: &mut Rng,
 ) -> QuantizedLayer {
+    let mut out = QuantizedLayer::default();
+    quantize_slice_into(v, seq, q, type_id, rng, &mut out);
+    out
+}
+
+/// `quantize_slice` into a reusable layer buffer (the comm hot path — no
+/// per-step allocation once `out` has warmed up).
+pub fn quantize_slice_into(
+    v: &[f32],
+    seq: &LevelSequence,
+    q: f64,
+    type_id: usize,
+    rng: &mut Rng,
+    out: &mut QuantizedLayer,
+) {
     assert!(seq.num_symbols() <= 256, "u8 index encoding");
     // the wire header carries the norm as f32 (C_q = 32); round here so
     // quantize -> encode -> decode -> dequantize is bit-exact
     let norm = lq_norm(v, q) as f32 as f64;
     let n = v.len();
-    let mut indices = vec![0u8; n];
-    let mut signs = vec![0u64; n.div_ceil(64)];
+    out.indices.clear();
+    out.indices.resize(n, 0);
+    out.signs.clear();
+    out.signs.resize(n.div_ceil(64), 0);
+    out.norm = norm;
+    out.type_id = type_id;
+    out.len = n;
+    let indices = &mut out.indices;
+    let signs = &mut out.signs;
     if norm > 0.0 {
         let inv = 1.0 / norm;
         let ls = seq.as_slice();
@@ -95,7 +117,7 @@ pub fn quantize_slice(
             // search, no per-interval division (xi = frac of u * inv_step)
             for (i, &x) in v.iter().enumerate() {
                 if x < 0.0 {
-                    QuantizedLayer::set_sign(&mut signs, i);
+                    QuantizedLayer::set_sign(signs, i);
                 }
                 let mag = ((x.abs() as f64) * inv).min(1.0);
                 let pos = mag * inv_step;
@@ -111,7 +133,7 @@ pub fn quantize_slice(
         } else {
             for (i, &x) in v.iter().enumerate() {
                 if x < 0.0 {
-                    QuantizedLayer::set_sign(&mut signs, i);
+                    QuantizedLayer::set_sign(signs, i);
                 }
                 let mag = ((x.abs() as f64) * inv).clamp(0.0, 1.0);
                 let tau = seq.bracket(mag);
@@ -122,7 +144,6 @@ pub fn quantize_slice(
             }
         }
     }
-    QuantizedLayer { norm, indices, signs, type_id, len: n }
 }
 
 /// Quantize a full flat vector layer-by-layer per the map and config.
@@ -132,31 +153,50 @@ pub fn quantize(
     cfg: &QuantConfig,
     rng: &mut Rng,
 ) -> QuantizedVector {
+    let mut qv = QuantizedVector::default();
+    quantize_into(v, map, cfg, rng, &mut qv);
+    qv
+}
+
+/// `quantize` into a reusable `QuantizedVector` (per-layer index/sign
+/// buffers are recycled across calls).
+pub fn quantize_into(
+    v: &[f32],
+    map: &LayerMap,
+    cfg: &QuantConfig,
+    rng: &mut Rng,
+    qv: &mut QuantizedVector,
+) {
     assert_eq!(v.len(), map.dim);
-    let layers = map
-        .layers
-        .iter()
-        .map(|l| {
-            quantize_slice(
-                &v[l.offset..l.offset + l.len],
-                &cfg.sequences[l.type_id],
-                cfg.q,
-                l.type_id,
-                rng,
-            )
-        })
-        .collect();
-    QuantizedVector { layers, dim: map.dim }
+    qv.dim = map.dim;
+    qv.layers.resize_with(map.layers.len(), Default::default);
+    for (l, out) in map.layers.iter().zip(&mut qv.layers) {
+        quantize_slice_into(
+            &v[l.offset..l.offset + l.len],
+            &cfg.sequences[l.type_id],
+            cfg.q,
+            l.type_id,
+            rng,
+            out,
+        );
+    }
 }
 
 /// Dequantize back into a flat f32 vector.
 pub fn dequantize(qv: &QuantizedVector, cfg: &QuantConfig) -> Vec<f32> {
     let mut out = Vec::with_capacity(qv.dim);
+    dequantize_into(qv, cfg, &mut out);
+    out
+}
+
+/// `dequantize` into a reusable output buffer (cleared first).
+pub fn dequantize_into(qv: &QuantizedVector, cfg: &QuantConfig, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(qv.dim);
     for layer in &qv.layers {
-        dequantize_layer_into(layer, cfg, &mut out);
+        dequantize_layer_into(layer, cfg, out);
     }
     debug_assert_eq!(out.len(), qv.dim);
-    out
 }
 
 pub fn dequantize_layer_into(layer: &QuantizedLayer, cfg: &QuantConfig, out: &mut Vec<f32>) {

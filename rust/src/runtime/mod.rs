@@ -1,8 +1,10 @@
-//! PJRT runtime (L3 <-> L2 boundary): loads `artifacts/*.hlo.txt` produced
-//! by `python -m compile.aot` and executes them on the CPU PJRT client.
+//! Model runtime (L3 <-> model boundary): the native pure-rust WGAN and
+//! transformer-LM backends behind backend-agnostic wrappers. The original
+//! PJRT/HLO-artifact path needs the external `xla` crate, which the offline
+//! environment cannot provide; `Runtime` keeps the handle shape so such a
+//! backend can return without driver changes.
 
 pub mod model;
-pub mod pjrt;
+pub mod native;
 
-pub use model::{LmModel, WganModel};
-pub use pjrt::{Executable, Runtime};
+pub use model::{LmModel, Runtime, WganModel};

@@ -1,17 +1,27 @@
-//! Model-level wrappers over the AOT artifacts: the WGAN VI operator and
-//! sampler, and the transformer LM gradient/eval entry points. These are
-//! the request-path interfaces the drivers (gan::trainer, lm::trainer) use.
+//! Model-level wrappers: the WGAN VI operator and sampler, and the
+//! transformer-LM gradient/eval entry points. These are the request-path
+//! interfaces the drivers (gan::trainer, lm::trainer) use.
+//!
+//! Backed by the in-tree [`native`](super::native) implementations (the
+//! offline environment has no PJRT/XLA runtime); the interfaces mirror the
+//! original AOT-artifact wrappers so drivers are backend-agnostic.
 
-use anyhow::{Context, Result};
-
-use super::pjrt::{lit_f32, lit_i32_matrix, lit_i32_scalar, to_f32, to_f32_scalar, Executable, Runtime};
+use super::native;
 use crate::quant::layer_map::LayerMap;
+use crate::util::error::Result;
 
-/// WGAN operator + sampler + init (artifacts/wgan_*.hlo.txt).
+/// Device/runtime handle. The native backend is CPU-only; the struct exists
+/// so that a future PJRT-style backend can slot in without driver changes.
+pub struct Runtime;
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime)
+    }
+}
+
+/// WGAN operator + sampler + init.
 pub struct WganModel {
-    op: Executable,
-    sample: Executable,
-    init: Executable,
     pub meta: LayerMap,
     pub dim: usize,
     pub gen_dim: usize,
@@ -19,50 +29,38 @@ pub struct WganModel {
 }
 
 impl WganModel {
-    pub fn load(rt: &Runtime) -> Result<Self> {
-        let meta = LayerMap::load_meta(&crate::util::repo_path("artifacts/wgan.meta"))
-            .map_err(anyhow::Error::msg)
-            .context("load wgan.meta")?;
-        let dim = meta.dim;
-        let gen_dim = meta.extra_usize("gen_dim").context("gen_dim in meta")?;
-        let sample_n = meta.extra_usize("sample_n").context("sample_n in meta")?;
+    pub fn load(_rt: &Runtime) -> Result<Self> {
+        let meta = native::wgan_layer_map();
+        meta.validate().map_err(crate::util::error::Error::msg)?;
         Ok(WganModel {
-            op: rt.load_artifact("artifacts/wgan_op.hlo.txt")?,
-            sample: rt.load_artifact("artifacts/wgan_sample.hlo.txt")?,
-            init: rt.load_artifact("artifacts/wgan_init.hlo.txt")?,
+            dim: meta.dim,
+            gen_dim: native::wgan_gen_dim(),
+            sample_n: native::WGAN_SAMPLE_N,
             meta,
-            dim,
-            gen_dim,
-            sample_n,
         })
     }
 
-    /// Initial parameter vector (lowered from the jax initializer).
+    /// Initial parameter vector.
     pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
-        let out = self.init.run(&[lit_i32_scalar(seed)])?;
-        to_f32(&out[0])
+        Ok(native::wgan_init_params(seed))
     }
 
     /// The stochastic dual vector A(theta) + minibatch noise:
     /// (dual, g_loss, w_dist).
     pub fn dual(&self, params: &[f32], seed: i32) -> Result<(Vec<f32>, f32, f32)> {
-        anyhow::ensure!(params.len() == self.dim);
-        let out = self.op.run(&[lit_f32(params), lit_i32_scalar(seed)])?;
-        Ok((to_f32(&out[0])?, to_f32_scalar(&out[1])?, to_f32_scalar(&out[2])?))
+        crate::ensure!(params.len() == self.dim, "params len != model dim");
+        Ok(native::wgan_dual(params, seed))
     }
 
     /// (fake, real) samples, each sample_n x 2 row-major.
     pub fn samples(&self, params: &[f32], seed: i32) -> Result<(Vec<f32>, Vec<f32>)> {
-        let out = self.sample.run(&[lit_f32(params), lit_i32_scalar(seed)])?;
-        Ok((to_f32(&out[0])?, to_f32(&out[1])?))
+        crate::ensure!(params.len() == self.dim, "params len != model dim");
+        Ok(native::wgan_samples(params, seed))
     }
 }
 
-/// Transformer LM (artifacts/lm_*.hlo.txt).
+/// Transformer-LM stand-in.
 pub struct LmModel {
-    grad: Executable,
-    eval: Executable,
-    init: Executable,
     pub meta: LayerMap,
     pub dim: usize,
     pub vocab: usize,
@@ -71,44 +69,37 @@ pub struct LmModel {
 }
 
 impl LmModel {
-    pub fn load(rt: &Runtime) -> Result<Self> {
-        let meta = LayerMap::load_meta(&crate::util::repo_path("artifacts/lm.meta"))
-            .map_err(anyhow::Error::msg)
-            .context("load lm.meta")?;
-        let dim = meta.dim;
-        let vocab = meta.extra_usize("vocab").context("vocab")?;
-        let seq = meta.extra_usize("seq").context("seq")?;
-        let batch = meta.extra_usize("batch").context("batch")?;
+    pub fn load(_rt: &Runtime) -> Result<Self> {
+        let meta = native::lm_layer_map();
+        meta.validate().map_err(crate::util::error::Error::msg)?;
         Ok(LmModel {
-            grad: rt.load_artifact("artifacts/lm_grad.hlo.txt")?,
-            eval: rt.load_artifact("artifacts/lm_eval.hlo.txt")?,
-            init: rt.load_artifact("artifacts/lm_init.hlo.txt")?,
+            dim: meta.dim,
+            vocab: native::LM_VOCAB,
+            seq: native::LM_SEQ,
+            batch: native::LM_BATCH,
             meta,
-            dim,
-            vocab,
-            seq,
-            batch,
         })
     }
 
     pub fn init_params(&self, seed: i32) -> Result<Vec<f32>> {
-        let out = self.init.run(&[lit_i32_scalar(seed)])?;
-        to_f32(&out[0])
+        Ok(native::lm_init_params(seed))
     }
 
     /// tokens: batch x (seq+1) row-major -> (grads, loss)
     pub fn grad(&self, params: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
-        anyhow::ensure!(params.len() == self.dim);
-        anyhow::ensure!(tokens.len() == self.batch * (self.seq + 1));
-        let toks = lit_i32_matrix(tokens, self.batch, self.seq + 1)?;
-        let out = self.grad.run(&[lit_f32(params), toks])?;
-        Ok((to_f32(&out[0])?, to_f32_scalar(&out[1])?))
+        crate::ensure!(params.len() == self.dim, "params len != model dim");
+        crate::ensure!(
+            tokens.len() == self.batch * (self.seq + 1),
+            "tokens must be batch x (seq+1)"
+        );
+        let mut g = vec![0.0f64; self.dim];
+        let loss = native::lm_loss_grad(params, tokens, Some(g.as_mut_slice()));
+        Ok((g.iter().map(|&x| x as f32).collect(), loss as f32))
     }
 
     /// mean NLL on a batch (perplexity = exp).
     pub fn eval(&self, params: &[f32], tokens: &[i32]) -> Result<f32> {
-        let toks = lit_i32_matrix(tokens, self.batch, self.seq + 1)?;
-        let out = self.eval.run(&[lit_f32(params), toks])?;
-        to_f32_scalar(&out[0])
+        crate::ensure!(params.len() == self.dim, "params len != model dim");
+        Ok(native::lm_loss_grad(params, tokens, None) as f32)
     }
 }

@@ -1,0 +1,148 @@
+//! Minimal in-tree error handling (offline environment: no `anyhow`).
+//!
+//! `Error` is a message-chain error; `Context` adds `.context()` /
+//! `.with_context()` on `Result` and `Option`; the crate-level `ensure!` /
+//! `bail!` macros mirror the usual idiom.
+
+use std::fmt;
+
+/// A human-readable error with an optional source.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into(), source: None }
+    }
+
+    pub fn wrap(
+        m: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Self {
+        Error { msg: m.into(), source: Some(Box::new(source)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|s| s as _)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error::msg(s)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::wrap(e.to_string(), e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context("...")` / `.with_context(|| ...)` on results and options.
+pub trait Context<T> {
+    fn context<C: Into<String>>(self, msg: C) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: Into<String>>(self, msg: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Into<String>>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.into()))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with an `Err(Error)` when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            ))
+            .into());
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)+)).into());
+        }
+    };
+}
+
+/// Return early with an `Err(Error)`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)+)).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> std::result::Result<u32, std::num::ParseIntError> {
+        "x".parse::<u32>()
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let e = fails().context("parse knob").unwrap_err();
+        assert!(e.to_string().starts_with("parse knob: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                crate::bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+    }
+}

@@ -1,6 +1,7 @@
 //! In-tree infrastructure (the environment is offline; see Cargo.toml).
 
 pub mod cli;
+pub mod error;
 pub mod prop;
 pub mod table;
 

@@ -1,19 +1,23 @@
 //! Integration: the full distributed stack — threaded coordinator vs
-//! deterministic sim engine, PJRT-backed WGAN/LM short training runs,
-//! and the wire protocol crossing module boundaries.
+//! deterministic sim engine driving the *same* `comm` wire pipeline
+//! (bit-identical aggregates and identical wire bit counts across both
+//! protocols and multiple seeds), plus native-model WGAN/LM short training
+//! runs.
 
 use qoda::coding::protocol::ProtocolKind;
-use qoda::coordinator::parallel::{run_rounds, SharedQuantState};
+use qoda::comm::Compressor;
+use qoda::coordinator::parallel::{
+    run_rounds, worker_codec_seed, worker_oracle_seed, SharedQuantState,
+};
 use qoda::coordinator::sim::ClusterSim;
 use qoda::gan::trainer::{self as gan_trainer, GanCompression, GanOptimizer, GanTrainConfig};
 use qoda::lm::trainer::{self as lm_trainer, LmTrainConfig};
 use qoda::net::NetworkModel;
-use qoda::oda::compress::{Compressor, QuantCompressor};
 use qoda::quant::layer_map::LayerMap;
 use qoda::quant::{LevelSequence, QuantConfig};
 use qoda::runtime::{LmModel, Runtime, WganModel};
 use qoda::stats::rng::Rng;
-use qoda::vi::noise::NoiseModel;
+use qoda::vi::noise::{NoiseModel, Oracle};
 use qoda::vi::operator::QuadraticOperator;
 
 #[test]
@@ -38,7 +42,8 @@ fn threaded_coordinator_trains_distributed_sgd() {
                 *xi -= 0.05 * g;
             }
         },
-    );
+    )
+    .expect("run_rounds");
     let err: f64 = x
         .iter()
         .zip(&op.sol)
@@ -52,6 +57,86 @@ fn threaded_coordinator_trains_distributed_sgd() {
     assert!(bits_per_coord < 12.0, "{bits_per_coord}");
 }
 
+/// The acceptance test of the unified pipeline: the threaded engine and the
+/// sim engine, driven by the same seeds through the same `comm` codecs,
+/// must produce bit-identical aggregates, identical final iterates AND
+/// identical total wire bit counts — for both coding protocols and several
+/// seeds.
+#[test]
+fn sim_and_parallel_agree_bitwise_across_protocols_and_seeds() {
+    let d = 24;
+    let k = 3;
+    let steps = 4;
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let mut op_rng = Rng::new(99);
+    let op = QuadraticOperator::random(d, 0.5, &mut op_rng);
+    let lr = 0.07;
+
+    for protocol in [ProtocolKind::Main, ProtocolKind::Alternating] {
+        for seed in [11u64, 29, 47] {
+            let st = SharedQuantState {
+                map: LayerMap::from_spec(&[("a", 16, "ff"), ("b", 8, "emb")]).bucketed(8),
+                cfg: QuantConfig {
+                    sequences: vec![LevelSequence::bits(4), LevelSequence::bits(6)],
+                    q: 2.0,
+                },
+                protocol,
+            };
+            let x0 = vec![0.3; d];
+
+            // threaded engine
+            let (x_par, bits_par, mean_par) = run_rounds(
+                &op,
+                noise,
+                k,
+                &st,
+                x0.clone(),
+                steps,
+                seed,
+                |x, mean, _| {
+                    for (xi, g) in x.iter_mut().zip(mean) {
+                        *xi -= lr * g;
+                    }
+                },
+            )
+            .expect("run_rounds");
+
+            // sim engine with the same per-node codec + oracle seeds
+            let codecs: Vec<Box<dyn Compressor>> = (0..k)
+                .map(|n| Box::new(st.codec(worker_codec_seed(seed, n))) as _)
+                .collect();
+            let mut sim = ClusterSim::new(codecs, NetworkModel::genesis_cloud(5.0), false);
+            let mut oracles: Vec<Oracle> = (0..k)
+                .map(|n| Oracle::new(&op, noise, worker_oracle_seed(seed, n)))
+                .collect();
+            let mut x = x0;
+            let mut bits_sim = 0u64;
+            let mut last_mean = vec![0.0; d];
+            for _ in 0..steps {
+                let duals: Vec<Vec<f64>> =
+                    oracles.iter_mut().map(|o| o.sample(&x)).collect();
+                let (mean, m) = sim.exchange(&duals).expect("exchange");
+                bits_sim += m.wire_bits;
+                for (xi, g) in x.iter_mut().zip(&mean) {
+                    *xi -= lr * g;
+                }
+                last_mean = mean;
+            }
+
+            assert_eq!(
+                mean_par, last_mean,
+                "aggregate mismatch ({protocol:?}, seed {seed})"
+            );
+            assert_eq!(x_par, x, "iterate mismatch ({protocol:?}, seed {seed})");
+            assert_eq!(
+                bits_par, bits_sim,
+                "wire bit count mismatch ({protocol:?}, seed {seed})"
+            );
+            assert!(bits_par > 0);
+        }
+    }
+}
+
 #[test]
 fn sim_engine_full_gan_loop_runs_and_improves_fid() {
     let rt = Runtime::cpu().unwrap();
@@ -60,13 +145,13 @@ fn sim_engine_full_gan_loop_runs_and_improves_fid() {
         optimizer: GanOptimizer::OptimisticAdam,
         compression: GanCompression::LayerwiseLGreco { bits: 5, bucket: 128, every: 30 },
         k_nodes: 2,
-        steps: 60,
+        steps: 80,
         fid_every: 20,
         seed: 3,
         ..Default::default()
     };
     let run = gan_trainer::train(&model, &cfg).unwrap();
-    assert_eq!(run.fid_curve.len(), 3);
+    assert_eq!(run.fid_curve.len(), 4);
     let first = run.fid_curve[0].1;
     assert!(
         run.final_fid < first,
@@ -143,7 +228,7 @@ fn lm_training_reduces_perplexity_vs_init() {
 fn cluster_sim_level_updates_do_not_break_training() {
     let map = LayerMap::from_spec(&[("a", 512, "ff"), ("b", 256, "embedding")]);
     let comps: Vec<Box<dyn Compressor>> = (0..3)
-        .map(|i| Box::new(QuantCompressor::layerwise(&map, 4, 1 << 20, 7, 50 + i)) as _)
+        .map(|i| Box::new(qoda::comm::QuantCompressor::layerwise(&map, 4, 1 << 20, 7, 50 + i)) as _)
         .collect();
     let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), false);
     let mut rng = Rng::new(9);
@@ -155,9 +240,10 @@ fn cluster_sim_level_updates_do_not_break_training() {
                     .collect()
             })
             .collect();
-        let (mean, m) = sim.exchange(&duals);
+        let (mean, m) = sim.exchange(&duals).unwrap();
         assert!(mean.iter().all(|x| x.is_finite()), "step {step}");
         assert!(m.bytes_per_node > 0.0);
+        assert_eq!(m.wire_bits as f64, m.bytes_per_node * 3.0 * 8.0);
         if step == 10 {
             sim.update_levels();
         }
