@@ -1,23 +1,19 @@
 //! Quickstart: the library in ~60 lines.
 //!
 //! 1. quantize a gradient layer-wise, entropy-code it, decode it back;
-//! 2. solve a monotone VI with QODA under quantized communication;
-//! 3. check the Theorem 5.1 variance bound on the fly.
+//! 2. solve a monotone VI with QODA under quantized communication, built
+//!    declaratively with `RunSpec` and driven by the shared `RunDriver`;
+//! 3. read the restricted gap straight off the run report.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use qoda::coding::protocol::{decode_vector, encode_vector, Codebooks, ProtocolKind};
-use qoda::oda::compress::{Compressor, QuantCompressor};
-use qoda::oda::lr::AdaptiveLr;
-use qoda::oda::qoda::Qoda;
-use qoda::oda::source::OracleSource;
+use qoda::oda::{CompressionSpec, GapMode, OperatorSpec, RunSpec, SolverKind};
 use qoda::quant::layer_map::LayerMap;
 use qoda::quant::quantizer::{dequantize, quantize};
 use qoda::quant::{variance, QuantConfig};
 use qoda::stats::rng::Rng;
-use qoda::vi::gap::GapEvaluator;
 use qoda::vi::noise::NoiseModel;
-use qoda::vi::operator::{Operator, QuadraticOperator};
 
 fn main() {
     // ---- 1. layer-wise quantization + coding round trip -------------------
@@ -52,24 +48,26 @@ fn main() {
     println!("relative reconstruction error: {err:.4}");
 
     // ---- 2. QODA on a monotone VI with 4 quantized nodes ------------------
-    let mut op_rng = Rng::new(1);
-    let op = QuadraticOperator::random(16, 0.5, &mut op_rng);
-    let mut src = OracleSource::new(&op, 4, NoiseModel::Absolute { sigma: 0.2 }, 3);
-    let vmap = LayerMap::single(16);
-    let comps: Vec<Box<dyn Compressor>> = (0..4)
-        .map(|i| Box::new(QuantCompressor::global_bits(&vmap, 5, 128, i as u64)) as _)
-        .collect();
-    let mut solver = Qoda::new(&mut src, comps, Box::new(AdaptiveLr::default()));
-    let run = solver.run(&vec![0.0; 16], 1000, &[]);
+    // one declarative spec: operator / noise / nodes / compression / steps;
+    // the driver owns checkpoints, averaging, accounting and gap evaluation
+    let report = RunSpec::new(
+        SolverKind::Qoda,
+        OperatorSpec::Quadratic { dim: 16, mu: 0.5, seed: 1 },
+    )
+    .nodes(4)
+    .noise(NoiseModel::Absolute { sigma: 0.2 })
+    .compression(CompressionSpec::Global { bits: 5, bucket: 128 })
+    .steps(1000)
+    .checkpoints(&[1000])
+    .seed(3)
+    .gap(GapMode::AtCheckpoints)
+    .run();
 
-    // ---- 3. evaluate the restricted gap ------------------------------------
-    let sol = op.solution().unwrap();
-    let radius = 1.0
-        + qoda::stats::vecops::l2_norm64(&qoda::stats::vecops::sub(&vec![0.0; 16], &sol));
-    let gap = GapEvaluator::new(&op, sol, radius).eval(&run.xbar);
+    // ---- 3. read the restricted gap off the report -------------------------
+    let gap = report.final_gap().expect("gap evaluated at the horizon");
     println!(
         "QODA: 1000 iters x 4 nodes, {:.1} bits/coord on the wire, GAP(x-bar) = {gap:.5}",
-        run.bits_per_iter_node / 16.0
+        report.bits_per_iter_node / 16.0
     );
     assert!(gap < 0.05, "quickstart should converge");
     println!("quickstart OK");

@@ -1,12 +1,10 @@
 //! Solver-step benches: QODA vs Q-GenX per-iteration cost (the optimism
-//! saving), identity vs quantized compression.
+//! saving), identity vs quantized compression — all through the shared
+//! `RunDriver` outer loop.
 
 use qoda::bench_harness::bench;
-use qoda::oda::compress::{Compressor, IdentityCompressor, QuantCompressor};
-use qoda::oda::lr::AdaptiveLr;
-use qoda::oda::qgenx::QGenX;
-use qoda::oda::qoda::Qoda;
-use qoda::oda::source::OracleSource;
+use qoda::comm::{Compressor, IdentityCompressor, QuantCompressor};
+use qoda::oda::{AdaptiveLr, OracleSource, QGenX, Qoda, RunDriver};
 use qoda::quant::layer_map::LayerMap;
 use qoda::stats::rng::Rng;
 use qoda::vi::noise::NoiseModel;
@@ -31,17 +29,17 @@ fn main() {
 
     bench(&format!("qoda/identity/{steps}steps/K{k}/d{d}"), Some(steps as u64), || {
         let mut src = OracleSource::new(&op, k, NoiseModel::Absolute { sigma: 0.2 }, 2);
-        Qoda::new(&mut src, mk_id(), Box::new(AdaptiveLr::default()))
-            .run(&vec![0.0; d], steps, &[])
+        let mut solver = Qoda::new(&mut src, mk_id(), Box::new(AdaptiveLr::default()));
+        RunDriver::new().run(&mut solver, &vec![0.0; d], steps)
     });
     bench(&format!("qoda/quant5/{steps}steps/K{k}/d{d}"), Some(steps as u64), || {
         let mut src = OracleSource::new(&op, k, NoiseModel::Absolute { sigma: 0.2 }, 2);
-        Qoda::new(&mut src, mk_q(7), Box::new(AdaptiveLr::default()))
-            .run(&vec![0.0; d], steps, &[])
+        let mut solver = Qoda::new(&mut src, mk_q(7), Box::new(AdaptiveLr::default()));
+        RunDriver::new().run(&mut solver, &vec![0.0; d], steps)
     });
     bench(&format!("qgenx/quant5/{steps}steps/K{k}/d{d}"), Some(steps as u64), || {
         let mut src = OracleSource::new(&op, k, NoiseModel::Absolute { sigma: 0.2 }, 2);
-        QGenX::new(&mut src, mk_q(7), Box::new(AdaptiveLr::default()))
-            .run(&vec![0.0; d], steps, &[])
+        let mut solver = QGenX::new(&mut src, mk_q(7), Box::new(AdaptiveLr::default()));
+        RunDriver::new().run(&mut solver, &vec![0.0; d], steps)
     });
 }

@@ -5,7 +5,7 @@ use qoda::bench_harness::bench;
 use qoda::bench_harness::experiments::table2;
 use qoda::coordinator::sim::ClusterSim;
 use qoda::net::NetworkModel;
-use qoda::oda::compress::{Compressor, QuantCompressor};
+use qoda::comm::{Compressor, QuantCompressor};
 use qoda::quant::layer_map::LayerMap;
 use qoda::stats::rng::Rng;
 

@@ -180,21 +180,45 @@ impl QuantCompressor {
     /// Convenience: b-bit global quantization with bucketing (the paper's
     /// "QODA5 (bucket size 128)" configuration collapses types).
     pub fn global_bits(map: &LayerMap, bits: u32, bucket: usize, seed: u64) -> Self {
+        Self::global_bits_proto(map, bits, bucket, ProtocolKind::Main, seed)
+    }
+
+    /// [`Self::global_bits`] under an explicit coding protocol (the
+    /// `RunSpec` construction path parameterizes it).
+    pub fn global_bits_proto(
+        map: &LayerMap,
+        bits: u32,
+        bucket: usize,
+        protocol: ProtocolKind,
+        seed: u64,
+    ) -> Self {
         let m = map.bucketed(bucket).with_single_type();
         let cfg = QuantConfig::uniform_bits(1, bits, 2.0);
-        Self::new(m, cfg, ProtocolKind::Main, Adaptation::Fixed, seed)
+        Self::new(m, cfg, protocol, Adaptation::Fixed, seed)
     }
 
     /// Layer-wise adaptive compressor: per-type sequences starting at
     /// `bits`, L-GreCo reallocation every `every` steps at the same average
     /// bit budget.
     pub fn layerwise(map: &LayerMap, bits: u32, bucket: usize, every: usize, seed: u64) -> Self {
+        Self::layerwise_proto(map, bits, bucket, every, ProtocolKind::Main, seed)
+    }
+
+    /// [`Self::layerwise`] under an explicit coding protocol.
+    pub fn layerwise_proto(
+        map: &LayerMap,
+        bits: u32,
+        bucket: usize,
+        every: usize,
+        protocol: ProtocolKind,
+        seed: u64,
+    ) -> Self {
         let m = map.bucketed(bucket);
         let cfg = QuantConfig::uniform_bits(m.num_types(), bits, 2.0);
         Self::new(
             m,
             cfg,
-            ProtocolKind::Main,
+            protocol,
             Adaptation::LGreco {
                 every,
                 budget_bits_per_coord: (bits + 1) as f64,

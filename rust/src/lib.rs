@@ -4,20 +4,33 @@
 //! self-contained rust system (the environment is offline: every substrate
 //! is in-tree, no external crates).
 //!
-//! The architecture centers on the **`comm` pipeline**: one real-bytes
-//! quantize → entropy-code → wire → decode path. Node codecs
-//! ([`comm::Compressor`]) produce [`comm::WirePacket`]s — the actual
-//! encoded payload with per-layer bit offsets and an exact bit count — and
-//! everything downstream consumes those packets:
+//! The architecture rests on two unifications:
+//!
+//! **The `comm` pipeline** — one real-bytes quantize → entropy-code →
+//! wire → decode path. Node codecs ([`comm::Compressor`]) produce
+//! [`comm::WirePacket`]s — the actual encoded payload with per-layer bit
+//! offsets and an exact bit count — and everything downstream consumes
+//! those packets. Wire decoding is fallible end to end
+//! (`comm::CommError`); malformed bytes never panic the coordinator.
+//!
+//! **The `oda` solver layer** — every solver (QODA/Algorithm 1, the
+//! Q-GenX extra-gradient baseline, the Adam baselines) is a step-wise
+//! [`oda::Solver`] state machine (`init` / `step` / `state`) driven by one
+//! shared [`oda::RunDriver`] outer loop that owns checkpointing, ergodic
+//! averaging, wire-bit/oracle accounting, gap evaluation with early
+//! stopping and streaming [`oda::MetricsSink`]s. Runs are constructed
+//! declaratively through the [`oda::RunSpec`] builder
+//! (operator / noise / nodes / compression / lr / protocol / steps) — the
+//! CLI's `run` subcommand, the bench harnesses and the examples all go
+//! through it.
+//!
+//! Around those:
 //!
 //! * [`coordinator`] — the two cluster engines (deterministic `sim` with a
 //!   calibrated network clock, threaded `parallel` shipping packets over
 //!   channels) are thin transports over `comm`; they charge the network
 //!   model with measured packet bytes and are integration-tested for
 //!   bit-identical agreement;
-//! * [`oda`] — the QODA solver (Algorithm 1), the Q-GenX extra-gradient
-//!   baseline and the Adam baselines, all communicating through per-node
-//!   [`comm::CommEndpoint`]s;
 //! * [`quant`] + [`coding`] — the layer-wise quantizer, level-sequence
 //!   adaptation (Eq. 2 / L-GreCo) and the Main/Alternating entropy-coding
 //!   protocols the codecs compose;
@@ -27,9 +40,6 @@
 //! * [`bench_harness`], [`net`], [`vi`], [`stats`], [`util`] — experiment
 //!   harnesses, the analytic cluster network model, VI substrate and shared
 //!   infrastructure.
-//!
-//! Wire decoding is fallible end to end (`comm::CommError`); malformed
-//! bytes never panic the coordinator.
 
 pub mod bench_harness;
 pub mod coding;

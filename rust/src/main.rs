@@ -1,6 +1,7 @@
 //! `qoda` — the leader entrypoint / experiment CLI.
 //!
 //! Subcommands (every paper table & figure + theory verifications):
+//!   run               drive an arbitrary solver RunSpec from flags
 //!   table1            step time vs bandwidth (Table 1)
 //!   table2            weak scaling (Table 2)
 //!   fig4              WGAN FID curves: Adam vs QODA global vs layerwise
@@ -16,19 +17,157 @@
 //!   train-gan         single WGAN training run
 //!   train-lm          single transformer-LM training run
 //!   all               run the non-PJRT suite (writes results/*.csv)
+//!
+//! `run` flags (all optional):
+//!   --solver qoda|qgenx|adam|oadam    --op quadratic|bilinear  --dim N --mu F
+//!   --noise none|absolute|relative    --sigma F                --k N
+//!   --bits B (omit = fp32 wire)       --bucket N               --seed S
+//!   --lr adaptive|alt|constant        --qhat F --gamma F --eta F
+//!   --protocol main|alternating       --steps T
+//!   --checkpoints t1,t2,...           --update-every N
+//!   --gap true|false                  --gap-every N --gap-stop THRESH
 
-use qoda::util::error::Result;
 use qoda::bench_harness::{experiments, model_experiments};
+use qoda::coding::protocol::ProtocolKind;
 use qoda::gan::trainer::{GanCompression, GanOptimizer, GanTrainConfig};
 use qoda::lm::trainer::{LmTrainConfig, QuantTarget};
+use qoda::oda::{
+    CompressionSpec, GapMode, LrSpec, OperatorSpec, RunSpec, SolverKind,
+};
 use qoda::runtime::{LmModel, Runtime, WganModel};
 use qoda::util::cli::Args;
-use qoda::util::table::save_series_csv;
+use qoda::util::error::Result;
+use qoda::util::table::{save_series_csv, Table};
+use qoda::vi::noise::NoiseModel;
+
+/// Assemble a [`RunSpec`] from `qoda run` flags — the CLI face of the
+/// declarative builder.
+fn run_spec_from_args(args: &Args) -> RunSpec {
+    let solver = match args.get_or("solver", "qoda").as_str() {
+        "qoda" => SolverKind::Qoda,
+        "qgenx" => SolverKind::QGenX,
+        "adam" => SolverKind::Adam { lr: args.f64_or("adam-lr", 0.05) },
+        "oadam" | "optimistic-adam" => {
+            SolverKind::OptimisticAdam { lr: args.f64_or("adam-lr", 0.05) }
+        }
+        other => panic!("--solver expects qoda|qgenx|adam|oadam, got {other}"),
+    };
+    let seed = args.u64_or("seed", 1);
+    let operator = match args.get_or("op", "quadratic").as_str() {
+        "quadratic" => OperatorSpec::Quadratic {
+            dim: args.usize_or("dim", 16),
+            mu: args.f64_or("mu", 0.5),
+            seed,
+        },
+        "bilinear" => OperatorSpec::Bilinear { n: args.usize_or("dim", 16) / 2, seed },
+        other => panic!("--op expects quadratic|bilinear, got {other}"),
+    };
+    let noise = match args.get_or("noise", "absolute").as_str() {
+        "none" => NoiseModel::None,
+        "absolute" => NoiseModel::Absolute { sigma: args.f64_or("sigma", 0.5) },
+        "relative" => NoiseModel::Relative { sigma_r: args.f64_or("sigma", 0.5) },
+        other => panic!("--noise expects none|absolute|relative, got {other}"),
+    };
+    let compression = match args.get("bits") {
+        None => CompressionSpec::None,
+        Some(b) => CompressionSpec::Global {
+            bits: b.parse().expect("--bits expects a small integer"),
+            bucket: args.usize_or("bucket", 128),
+        },
+    };
+    let lr = match args.get_or("lr", "adaptive").as_str() {
+        "adaptive" => LrSpec::Adaptive,
+        "alt" => LrSpec::Alt { q_hat: args.f64_or("qhat", 0.25) },
+        "constant" => LrSpec::Constant {
+            gamma: args.f64_or("gamma", 0.1),
+            eta: args.f64_or("eta", 0.1),
+        },
+        other => panic!("--lr expects adaptive|alt|constant, got {other}"),
+    };
+    let protocol = match args.get_or("protocol", "main").as_str() {
+        "main" => ProtocolKind::Main,
+        "alternating" => ProtocolKind::Alternating,
+        other => panic!("--protocol expects main|alternating, got {other}"),
+    };
+    let steps = args.usize_or("steps", 1000);
+    let checkpoints: Vec<usize> = match args.get("checkpoints") {
+        Some(list) => list
+            .split(',')
+            .map(|v| v.trim().parse().expect("--checkpoints expects t1,t2,..."))
+            .collect(),
+        // default: log-spaced quarters plus the horizon (driver normalizes)
+        None => vec![steps / 8, steps / 4, steps / 2, steps],
+    };
+    let gap = if args.has("gap-stop") {
+        GapMode::EarlyStop {
+            every: args.usize_or("gap-every", 100),
+            threshold: args.f64_or("gap-stop", 1e-3),
+        }
+    } else if args.bool_or("gap", true) {
+        GapMode::AtCheckpoints
+    } else {
+        GapMode::Off
+    };
+    RunSpec::new(solver, operator)
+        .noise(noise)
+        .nodes(args.usize_or("k", 4))
+        .compression(compression)
+        .lr(lr)
+        .protocol(protocol)
+        .steps(steps)
+        .checkpoints(&checkpoints)
+        .seed(seed)
+        .update_every(args.usize_or("update-every", 0))
+        .gap(gap)
+}
+
+fn run_cmd(args: &Args) -> Result<()> {
+    let spec = run_spec_from_args(args);
+    println!("driving: {spec:?}\n");
+    let report = spec.run();
+    let mut t = Table::new(
+        "run — checkpoints",
+        &["t", "wire Mbits", "oracle calls", "GAP"],
+    );
+    for ck in &report.checkpoints {
+        let gap = report
+            .gap_trace
+            .iter()
+            .find(|&&(gt, _)| gt == ck.t)
+            .map(|&(_, g)| format!("{g:.6}"))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            format!("{}", ck.t),
+            format!("{:.3}", ck.total_bits as f64 / 1e6),
+            format!("{}", ck.oracle_calls),
+            gap,
+        ]);
+    }
+    t.print();
+    t.save_csv("run.csv")?;
+    println!(
+        "\n{} steps ({}), {} oracle calls, {:.3} Mbits on the wire, \
+         {:.2} bits/iter/node, rel. quant error {:.2e}",
+        report.steps_run,
+        if report.stopped_early { "stopped early on gap threshold" } else { "full horizon" },
+        report.oracle_calls,
+        report.total_bits as f64 / 1e6,
+        report.bits_per_iter_node,
+        report.rel_quant_error(),
+    );
+    if let Some(g) = report.final_gap() {
+        println!("final GAP(x-bar) = {g:.6}");
+    }
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
+        "run" => {
+            run_cmd(&args)?;
+        }
         "table1" => {
             let t = experiments::table1();
             t.print();
@@ -199,7 +338,7 @@ fn main() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: qoda <table1|table2|fig4|table3|fig5|rates|verify-variance|\
+                "usage: qoda <run|table1|table2|fig4|table3|fig5|rates|verify-variance|\
                  verify-codelen|verify-mqv|protocols|optimism|train-gan|train-lm|all> [flags]"
             );
         }

@@ -2,8 +2,10 @@
 //! gradient field, and the optimistic-Adam variant that the paper's
 //! "QODA-based extension of Adam" corresponds to (optimistic extrapolation
 //! with Adam preconditioning of the averaged dual direction, as in
-//! Daskalakis et al., 2018).
+//! Daskalakis et al., 2018). Both are step-wise [`Solver`]s driven by the
+//! same [`super::driver::RunDriver`] as the VI solvers.
 
+use super::driver::{exchange_mean, Solver, SolverState, StepStats};
 use super::source::DualSource;
 use crate::comm::{CommEndpoint, Compressor};
 
@@ -31,6 +33,13 @@ impl AdamState {
         }
     }
 
+    /// Zero the moment estimates and the step counter (a fresh run).
+    pub fn reset(&mut self) {
+        self.m.fill(0.0);
+        self.v.fill(0.0);
+        self.t = 0;
+    }
+
     /// Preconditioned update direction for gradient g (call once per step).
     pub fn direction(&mut self, g: &[f64]) -> Vec<f64> {
         self.t += 1;
@@ -49,14 +58,20 @@ impl AdamState {
 }
 
 /// Plain (simultaneous) Adam descent on the operator: the Figure 4 "Adam"
-/// baseline. Returns the iterate trajectory bits like the VI solvers.
+/// baseline. With `optimistic` set, queries the oracle at the lookahead
+/// point `X_t - dir_{t-1}` instead (the QODA-extension toggle) — prefer
+/// constructing that variant as [`OptimisticAdam`].
 pub struct AdamSolver<'s> {
     pub source: &'s mut dyn DualSource,
     pub endpoints: Vec<CommEndpoint>,
     pub adam: AdamState,
-    /// optimistic extrapolation on/off (the QODA-extension toggle)
+    /// optimistic extrapolation on/off
     pub optimistic: bool,
-    pub total_bits: u64,
+    // —— step-wise run state, established by `init` ——
+    x: Vec<f64>,
+    prev_dir: Vec<f64>,
+    query: Vec<f64>,
+    mean: Vec<f64>,
     /// decoded-dual scratch
     hat: Vec<f64>,
 }
@@ -66,7 +81,6 @@ impl<'s> AdamSolver<'s> {
         source: &'s mut dyn DualSource,
         compressors: Vec<Box<dyn Compressor>>,
         lr: f64,
-        optimistic: bool,
     ) -> Self {
         let dim = source.dim();
         assert_eq!(compressors.len(), source.num_nodes());
@@ -74,47 +88,132 @@ impl<'s> AdamSolver<'s> {
             source,
             endpoints: compressors.into_iter().map(CommEndpoint::new).collect(),
             adam: AdamState::new(dim, lr),
-            optimistic,
-            total_bits: 0,
+            optimistic: false,
+            x: Vec::new(),
+            prev_dir: Vec::new(),
+            query: Vec::new(),
+            mean: Vec::new(),
             hat: Vec::new(),
         }
     }
+}
 
-    /// One optimizer step in place; returns the mean compressed dual used.
-    pub fn step(&mut self, x: &mut [f64], prev_dir: &mut Vec<f64>) -> Vec<f64> {
-        let k = self.source.num_nodes();
-        let kf = k as f64;
-        let d = x.len();
-        // optimistic lookahead using the previous direction
-        let query: Vec<f64> = if self.optimistic {
-            x.iter().zip(prev_dir.iter()).map(|(xi, p)| xi - p).collect()
+impl Solver for AdamSolver<'_> {
+    fn name(&self) -> &'static str {
+        if self.optimistic {
+            "optimistic-adam"
         } else {
-            x.to_vec()
-        };
-        let duals = self.source.duals(&query);
-        let mut mean = vec![0.0; d];
-        for (kk, dual) in duals.iter().enumerate() {
-            let bits = self.endpoints[kk]
-                .roundtrip_into(dual, &mut self.hat)
-                .expect("comm loopback roundtrip");
-            self.total_bits += bits as u64;
-            for (m, v) in mean.iter_mut().zip(&self.hat) {
-                *m += v / kf;
-            }
+            "adam"
         }
-        let dir = self.adam.direction(&mean);
-        for (xi, di) in x.iter_mut().zip(&dir) {
+    }
+
+    fn dim(&self) -> usize {
+        self.source.dim()
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.source.num_nodes()
+    }
+
+    fn init(&mut self, x0: &[f64]) {
+        let d = self.source.dim();
+        assert_eq!(x0.len(), d);
+        self.x = x0.to_vec();
+        self.prev_dir = vec![0.0; d];
+        self.query = vec![0.0; d];
+        self.mean = vec![0.0; d];
+        self.adam.reset();
+    }
+
+    fn step(&mut self, _t: usize) -> StepStats {
+        // optimistic lookahead using the previous direction
+        self.query.clear();
+        if self.optimistic {
+            self.query
+                .extend(self.x.iter().zip(&self.prev_dir).map(|(xi, p)| xi - p));
+        } else {
+            self.query.extend_from_slice(&self.x);
+        }
+        let duals = self.source.duals(&self.query);
+        let mut stats = StepStats::default();
+        exchange_mean(
+            &mut self.endpoints,
+            &duals,
+            &mut self.hat,
+            &mut self.mean,
+            &mut stats,
+        );
+        let dir = self.adam.direction(&self.mean);
+        for (xi, di) in self.x.iter_mut().zip(&dir) {
             *xi -= di;
         }
-        *prev_dir = dir;
-        mean
+        self.prev_dir = dir;
+        stats
+    }
+
+    fn state(&self) -> SolverState<'_> {
+        // no half-step: the ergodic average runs over the iterates
+        SolverState { x: &self.x, avg_point: &self.x }
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.source.calls()
+    }
+}
+
+/// The optimistic-Adam variant as its own solver type (Figure 4's
+/// "QODA-based extension of Adam").
+pub struct OptimisticAdam<'s> {
+    pub inner: AdamSolver<'s>,
+}
+
+impl<'s> OptimisticAdam<'s> {
+    pub fn new(
+        source: &'s mut dyn DualSource,
+        compressors: Vec<Box<dyn Compressor>>,
+        lr: f64,
+    ) -> Self {
+        let mut inner = AdamSolver::new(source, compressors, lr);
+        inner.optimistic = true;
+        OptimisticAdam { inner }
+    }
+}
+
+impl Solver for OptimisticAdam<'_> {
+    fn name(&self) -> &'static str {
+        "optimistic-adam"
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.inner.num_nodes()
+    }
+
+    fn init(&mut self, x0: &[f64]) {
+        self.inner.init(x0);
+    }
+
+    fn step(&mut self, t: usize) -> StepStats {
+        self.inner.step(t)
+    }
+
+    fn state(&self) -> SolverState<'_> {
+        self.inner.state()
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.inner.oracle_calls()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::oda::compress::{Compressor, IdentityCompressor};
+    use crate::comm::IdentityCompressor;
+    use crate::oda::driver::RunDriver;
     use crate::oda::source::OracleSource;
     use crate::stats::rng::Rng;
     use crate::stats::vecops::{l2_norm64, sub};
@@ -130,13 +229,9 @@ mod tests {
         let mut rng = Rng::new(1);
         let op = QuadraticOperator::random(8, 0.5, &mut rng);
         let mut src = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.1 }, 2);
-        let mut solver = AdamSolver::new(&mut src, identity_boxes(2), 0.05, false);
-        let mut x = vec![0.0; 8];
-        let mut prev = vec![0.0; 8];
-        for _ in 0..600 {
-            solver.step(&mut x, &mut prev);
-        }
-        let err = l2_norm64(&sub(&x, &op.sol));
+        let mut solver = AdamSolver::new(&mut src, identity_boxes(2), 0.05);
+        let run = RunDriver::new().run(&mut solver, &vec![0.0; 8], 600);
+        let err = l2_norm64(&sub(&run.x_last, &op.sol));
         assert!(err < 0.3 * l2_norm64(&op.sol), "{err}");
     }
 
@@ -145,14 +240,27 @@ mod tests {
         let mut rng = Rng::new(3);
         let op = QuadraticOperator::random(8, 0.5, &mut rng);
         let mut src = OracleSource::new(&op, 2, NoiseModel::None, 4);
-        let mut solver = AdamSolver::new(&mut src, identity_boxes(2), 0.05, true);
-        let mut x = vec![0.0; 8];
-        let mut prev = vec![0.0; 8];
-        for _ in 0..600 {
-            solver.step(&mut x, &mut prev);
-        }
-        let err = l2_norm64(&sub(&x, &op.sol));
+        let mut solver = OptimisticAdam::new(&mut src, identity_boxes(2), 0.05);
+        assert_eq!(solver.name(), "optimistic-adam");
+        let run = RunDriver::new().run(&mut solver, &vec![0.0; 8], 600);
+        let err = l2_norm64(&sub(&run.x_last, &op.sol));
         assert!(err < 0.3 * l2_norm64(&op.sol), "{err}");
+    }
+
+    #[test]
+    fn init_resets_the_moments() {
+        // two driven runs from the same solver object are identical: init
+        // must clear the Adam moment state between them
+        let mut rng = Rng::new(5);
+        let op = QuadraticOperator::random(6, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 1, NoiseModel::None, 6);
+        let mut solver = AdamSolver::new(&mut src, identity_boxes(1), 0.05);
+        let a = RunDriver::new().run(&mut solver, &vec![0.0; 6], 100);
+        let b = RunDriver::new().run(&mut solver, &vec![0.0; 6], 100);
+        assert_eq!(a.x_last, b.x_last);
+        // the driver baselines the cumulative oracle counter per run
+        assert_eq!(a.oracle_calls, 100);
+        assert_eq!(b.oracle_calls, 100);
     }
 
     #[test]

@@ -1,0 +1,883 @@
+//! The step-wise solver API and the one outer loop every run goes through.
+//!
+//! Historically each solver (`Qoda`, `QGenX`, the Adam baselines) owned a
+//! private monolithic `run()` with copy-pasted checkpointing, ergodic
+//! averaging, bits accounting and scratch management. This module splits
+//! that into:
+//!
+//! * [`Solver`] — a resumable state machine: `init` establishes the run
+//!   state from `X_1 = x0`, `step` advances exactly one iteration and
+//!   returns its wire/fidelity accounting ([`StepStats`]), `state` exposes
+//!   the current iterate and the point entering the ergodic average;
+//! * [`RunDriver`] — the shared outer loop: checkpoint scheduling
+//!   (sorted + deduped + clamped, never silently dropped), ergodic
+//!   averaging, wire-bit and oracle-call accounting, optional restricted-gap
+//!   evaluation with early stopping ([`GapPolicy`]), and streaming
+//!   per-step records to pluggable [`MetricsSink`] observers;
+//! * [`RunSpec`] — the declarative builder
+//!   (operator / noise / nodes / compression / lr / protocol / steps) that
+//!   is the one way oracle-backed runs are constructed by the CLI, the
+//!   bench harness and the examples.
+//!
+//! Because solvers are stepped externally, scenarios the monolithic loops
+//! forbade become plain library code: mid-run compressor-adaptation audits,
+//! interleaved solver races under a shared wire budget
+//! (`examples/solver_race.rs`), or driving a solver over a coordinator
+//! transport.
+
+use super::baseline::{AdamSolver, OptimisticAdam};
+use super::lr::{AdaptiveLr, AltLr, ConstantLr, LrSchedule};
+use super::qgenx::QGenX;
+use super::qoda::Qoda;
+use super::source::OracleSource;
+use crate::coding::protocol::ProtocolKind;
+use crate::comm::{Adaptation, CommEndpoint, Compressor, IdentityCompressor, QuantCompressor};
+use crate::quant::layer_map::LayerMap;
+use crate::quant::QuantConfig;
+use crate::stats::rng::Rng;
+use crate::stats::vecops::{l2_norm64, sub};
+use crate::vi::gap::GapEvaluator;
+use crate::vi::noise::NoiseModel;
+use crate::vi::operator::{BilinearGame, Operator, QuadraticOperator};
+
+// ---------------------------------------------------------------------------
+// The step-wise solver contract
+// ---------------------------------------------------------------------------
+
+/// Per-step accounting returned by [`Solver::step`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// actual wire bits charged across all nodes this step
+    pub bits: u64,
+    /// sum over nodes of ||V - V̂||² — the quantization error injected on
+    /// the wire this step
+    pub quant_err_sq: f64,
+    /// sum over nodes of ||V||² — the dual energy this step
+    pub dual_norm_sq: f64,
+}
+
+/// Read-only view of a solver's state after a `step`.
+pub struct SolverState<'a> {
+    /// the full iterate X_{t+1}
+    pub x: &'a [f64],
+    /// the point the ergodic average X̄ accumulates this step
+    /// (X_{t+1/2} for the optimistic / extra-gradient solvers, the plain
+    /// iterate for Adam)
+    pub avg_point: &'a [f64],
+}
+
+/// A distributed VI solver as a resumable state machine. The driver — or
+/// any custom harness, e.g. an interleaved solver race — owns the outer
+/// loop; the solver owns exactly one iteration of algorithmic state.
+pub trait Solver {
+    /// Short identifier for tables and metrics streams.
+    fn name(&self) -> &'static str;
+
+    fn dim(&self) -> usize;
+
+    fn num_nodes(&self) -> usize;
+
+    /// Establish the run state from `X_1 = x0`. Must be called before the
+    /// first `step`; the driver calls it once per run. Iterate and scratch
+    /// state is reset; learning-rate schedules keep their accumulated
+    /// statistics (pass a fresh schedule for a fresh run).
+    fn init(&mut self, x0: &[f64]);
+
+    /// Advance one iteration (`t` = 1, 2, ... as the driver counts them)
+    /// and return its wire/fidelity accounting.
+    fn step(&mut self, t: usize) -> StepStats;
+
+    /// The iterate and averaging point after the last `step`.
+    fn state(&self) -> SolverState<'_>;
+
+    /// Total oracle calls so far — cumulative over the solver's lifetime
+    /// (the cost extra-gradient pays twice). The driver snapshots this at
+    /// `init` and reports per-run deltas.
+    fn oracle_calls(&self) -> u64;
+}
+
+/// Roundtrip every node's dual vector through its comm endpoint, averaging
+/// the decoded values into `mean` and accumulating wire/fidelity accounting
+/// into `stats` — the shared exchange kernel of the mean-based solvers
+/// (Q-GenX's two communications per step, Adam's one).
+pub fn exchange_mean(
+    endpoints: &mut [CommEndpoint],
+    duals: &[Vec<f64>],
+    hat: &mut Vec<f64>,
+    mean: &mut [f64],
+    stats: &mut StepStats,
+) {
+    let kf = endpoints.len() as f64;
+    mean.fill(0.0);
+    for (kk, dual) in duals.iter().enumerate() {
+        let bits = endpoints[kk]
+            .roundtrip_into(dual, hat)
+            .expect("comm loopback roundtrip");
+        stats.bits += bits as u64;
+        for (v, h) in dual.iter().zip(hat.iter()) {
+            stats.quant_err_sq += (v - h) * (v - h);
+            stats.dual_norm_sq += v * v;
+        }
+        for (m, v) in mean.iter_mut().zip(hat.iter()) {
+            *m += v / kf;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run artifacts
+// ---------------------------------------------------------------------------
+
+/// Per-checkpoint record for convergence curves.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub t: usize,
+    pub xbar: Vec<f64>,
+    pub total_bits: u64,
+    pub oracle_calls: u64,
+}
+
+/// The result of one driven run — solver-neutral (QODA, Q-GenX and the
+/// Adam baselines all produce it).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub checkpoints: Vec<Checkpoint>,
+    /// ergodic average X̄ over the steps actually run
+    pub xbar: Vec<f64>,
+    pub x_last: Vec<f64>,
+    pub total_bits: u64,
+    pub oracle_calls: u64,
+    /// average wire bits per node per iteration
+    pub bits_per_iter_node: f64,
+    /// iterations actually executed (< the horizon on early stop)
+    pub steps_run: usize,
+    /// true iff a [`GapPolicy`] threshold ended the run early
+    pub stopped_early: bool,
+    /// (t, GAP(X̄_t)) at every gap evaluation the driver performed
+    pub gap_trace: Vec<(usize, f64)>,
+    /// accumulated sum over steps/nodes of ||V - V̂||²
+    pub quant_err_sq: f64,
+    /// accumulated sum over steps/nodes of ||V||²
+    pub dual_norm_sq: f64,
+}
+
+impl RunReport {
+    /// Relative wire-quantization error of the whole run:
+    /// sum ||V - V̂||² / sum ||V||².
+    pub fn rel_quant_error(&self) -> f64 {
+        if self.dual_norm_sq == 0.0 {
+            0.0
+        } else {
+            self.quant_err_sq / self.dual_norm_sq
+        }
+    }
+
+    /// The last gap the driver evaluated, if a [`GapPolicy`] was active.
+    pub fn final_gap(&self) -> Option<f64> {
+        self.gap_trace.last().map(|&(_, g)| g)
+    }
+}
+
+/// Pre-PR-2 name of [`RunReport`], kept for one release.
+#[deprecated(note = "renamed to `RunReport`: the struct was never QODA-specific")]
+pub type QodaRun = RunReport;
+
+// ---------------------------------------------------------------------------
+// Metrics sinks
+// ---------------------------------------------------------------------------
+
+/// One per-step record streamed to [`MetricsSink`]s while a run is live —
+/// no waiting for the post-hoc [`RunReport`].
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub t: usize,
+    pub stats: StepStats,
+    /// cumulative wire bits through this step
+    pub total_bits: u64,
+    /// oracle calls so far in this run (baselined at `init`)
+    pub oracle_calls: u64,
+    /// the gap evaluated at this step, when the driver's [`GapPolicy`]
+    /// scheduled one
+    pub gap: Option<f64>,
+}
+
+/// Observer of a live run. All hooks default to no-ops except `on_step`.
+pub trait MetricsSink {
+    fn on_step(&mut self, rec: &StepRecord);
+
+    fn on_checkpoint(&mut self, _ck: &Checkpoint) {}
+
+    fn on_finish(&mut self, _report: &RunReport) {}
+}
+
+/// Buffers every [`StepRecord`] in memory — tests and small runs.
+#[derive(Default)]
+pub struct MemorySink {
+    pub records: Vec<StepRecord>,
+}
+
+impl MetricsSink for MemorySink {
+    fn on_step(&mut self, rec: &StepRecord) {
+        self.records.push(rec.clone());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The driver
+// ---------------------------------------------------------------------------
+
+/// Restricted-gap evaluation schedule for a driven run.
+pub struct GapPolicy<'a> {
+    pub eval: GapEvaluator<'a>,
+    /// evaluate every `every` steps (0 = only at checkpoints)
+    pub every: usize,
+    /// end the run once an evaluated gap falls to or below this threshold
+    pub stop_below: Option<f64>,
+}
+
+/// Sort, dedup and clamp a requested checkpoint list against the horizon.
+/// The legacy `run()` loops walked the raw list with an exact-match peek and
+/// silently dropped unsorted, duplicate or out-of-range entries; the driver
+/// normalizes instead so every requested checkpoint produces a record.
+pub fn normalize_checkpoints(requested: &[usize], steps: usize) -> Vec<usize> {
+    let mut cks: Vec<usize> = requested
+        .iter()
+        .map(|&t| t.min(steps))
+        .filter(|&t| t >= 1)
+        .collect();
+    cks.sort_unstable();
+    cks.dedup();
+    cks
+}
+
+/// The shared outer loop. Owns everything the solvers used to copy-paste:
+/// checkpoint scheduling, ergodic averaging, bits/oracle accounting, gap
+/// evaluation with early stopping, and metrics streaming.
+pub struct RunDriver<'a> {
+    checkpoints: Vec<usize>,
+    gap: Option<GapPolicy<'a>>,
+}
+
+impl Default for RunDriver<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'a> RunDriver<'a> {
+    pub fn new() -> Self {
+        RunDriver { checkpoints: Vec::new(), gap: None }
+    }
+
+    /// Record a [`Checkpoint`] at each of these iteration numbers (any
+    /// order; duplicates and overshoots are normalized, not dropped).
+    pub fn checkpoints(mut self, at: &[usize]) -> Self {
+        self.checkpoints = at.to_vec();
+        self
+    }
+
+    /// Attach a gap-evaluation schedule (and optional early stopping).
+    pub fn gap(mut self, policy: GapPolicy<'a>) -> Self {
+        self.gap = Some(policy);
+        self
+    }
+
+    /// Drive `solver` for `steps` iterations from `x0`.
+    pub fn run(&mut self, solver: &mut dyn Solver, x0: &[f64], steps: usize) -> RunReport {
+        self.run_observed(solver, x0, steps, &mut [])
+    }
+
+    /// Drive `solver`, streaming per-step records to the given sinks.
+    pub fn run_observed(
+        &mut self,
+        solver: &mut dyn Solver,
+        x0: &[f64],
+        steps: usize,
+        sinks: &mut [&mut dyn MetricsSink],
+    ) -> RunReport {
+        let d = solver.dim();
+        let kf = solver.num_nodes() as f64;
+        let cks = normalize_checkpoints(&self.checkpoints, steps);
+        let mut ck_iter = cks.iter().peekable();
+        solver.init(x0);
+        // baseline the cumulative counter so reused solvers report per-run
+        // deltas, not lifetime totals
+        let calls0 = solver.oracle_calls();
+        let mut xbar_sum = vec![0.0; d];
+        let mut total_bits = 0u64;
+        let mut quant_err_sq = 0.0f64;
+        let mut dual_norm_sq = 0.0f64;
+        let mut out_ckpts = Vec::new();
+        let mut gap_trace = Vec::new();
+        let mut stopped_early = false;
+        let mut steps_run = 0usize;
+
+        for t in 1..=steps {
+            let stats = solver.step(t);
+            steps_run = t;
+            total_bits += stats.bits;
+            quant_err_sq += stats.quant_err_sq;
+            dual_norm_sq += stats.dual_norm_sq;
+            {
+                let st = solver.state();
+                for (s, v) in xbar_sum.iter_mut().zip(st.avg_point) {
+                    *s += v;
+                }
+            }
+            let at_checkpoint = ck_iter.peek() == Some(&&t);
+            let gap_due = self
+                .gap
+                .as_ref()
+                .is_some_and(|g| (g.every > 0 && t % g.every == 0) || at_checkpoint);
+            // X̄_t materialized once per step, shared by gap eval + checkpoint
+            let mut xbar_t: Option<Vec<f64>> = if at_checkpoint || gap_due {
+                Some(xbar_sum.iter().map(|s| s / t as f64).collect())
+            } else {
+                None
+            };
+            let mut gap_now = None;
+            if gap_due {
+                if let (Some(g), Some(xb)) = (&self.gap, xbar_t.as_ref()) {
+                    let gv = g.eval.eval(xb);
+                    gap_trace.push((t, gv));
+                    gap_now = Some(gv);
+                }
+            }
+            let rec = StepRecord {
+                t,
+                stats,
+                total_bits,
+                oracle_calls: solver.oracle_calls() - calls0,
+                gap: gap_now,
+            };
+            for sink in sinks.iter_mut() {
+                sink.on_step(&rec);
+            }
+            if at_checkpoint {
+                ck_iter.next();
+                let ck = Checkpoint {
+                    t,
+                    xbar: xbar_t.take().expect("materialized at checkpoint"),
+                    total_bits,
+                    oracle_calls: solver.oracle_calls() - calls0,
+                };
+                for sink in sinks.iter_mut() {
+                    sink.on_checkpoint(&ck);
+                }
+                out_ckpts.push(ck);
+            }
+            if let (Some(g), Some(gv)) = (&self.gap, gap_now) {
+                if g.stop_below.is_some_and(|th| gv <= th) {
+                    stopped_early = true;
+                    break;
+                }
+            }
+        }
+
+        let denom = steps_run.max(1) as f64;
+        let report = RunReport {
+            checkpoints: out_ckpts,
+            xbar: xbar_sum.iter().map(|s| s / denom).collect(),
+            x_last: solver.state().x.to_vec(),
+            total_bits,
+            oracle_calls: solver.oracle_calls() - calls0,
+            bits_per_iter_node: total_bits as f64 / (denom * kf),
+            steps_run,
+            stopped_early,
+            gap_trace,
+            quant_err_sq,
+            dual_norm_sq,
+        };
+        for sink in sinks.iter_mut() {
+            sink.on_finish(&report);
+        }
+        report
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Declarative run construction
+// ---------------------------------------------------------------------------
+
+/// Which solver a [`RunSpec`] drives.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SolverKind {
+    Qoda,
+    QGenX,
+    Adam { lr: f64 },
+    OptimisticAdam { lr: f64 },
+}
+
+/// The analytic operator behind the run's oracles (seeded, so a spec
+/// rebuilds the identical instance every time).
+#[derive(Clone, Debug)]
+pub enum OperatorSpec {
+    /// strongly monotone quadratic `QuadraticOperator::random(dim, mu, ..)`
+    Quadratic { dim: usize, mu: f64, seed: u64 },
+    /// bilinear saddle game over `R^n x R^n` (dim = 2n)
+    Bilinear { n: usize, seed: u64 },
+}
+
+impl OperatorSpec {
+    pub fn build(&self) -> Box<dyn Operator> {
+        match *self {
+            OperatorSpec::Quadratic { dim, mu, seed } => {
+                let mut rng = Rng::new(seed);
+                Box::new(QuadraticOperator::random(dim, mu, &mut rng))
+            }
+            OperatorSpec::Bilinear { n, seed } => {
+                let mut rng = Rng::new(seed);
+                Box::new(BilinearGame::random(n, &mut rng))
+            }
+        }
+    }
+}
+
+/// Per-node compression for a [`RunSpec`].
+#[derive(Clone, Debug)]
+pub enum CompressionSpec {
+    /// fp32 on the wire
+    None,
+    /// single-type (global) quantization at `bits` over `bucket`-sized
+    /// buckets, static levels
+    Global { bits: u32, bucket: usize },
+    /// layer-wise L-GreCo adaptation over an explicit layer map
+    Layerwise { map: LayerMap, bits: u32, bucket: usize, every: usize },
+    /// full control: explicit map, uniform per-type bits and an explicit
+    /// [`Adaptation`] policy (the ablation harness)
+    Quantized { map: LayerMap, bits: u32, adaptation: Adaptation },
+}
+
+impl CompressionSpec {
+    /// Build one node's compressor for a `dim`-dimensional dual stream.
+    pub fn build(
+        &self,
+        dim: usize,
+        protocol: ProtocolKind,
+        seed: u64,
+    ) -> Box<dyn Compressor> {
+        match self {
+            CompressionSpec::None => Box::new(IdentityCompressor),
+            CompressionSpec::Global { bits, bucket } => {
+                Box::new(QuantCompressor::global_bits_proto(
+                    &LayerMap::single(dim),
+                    *bits,
+                    *bucket,
+                    protocol,
+                    seed,
+                ))
+            }
+            CompressionSpec::Layerwise { map, bits, bucket, every } => {
+                Box::new(QuantCompressor::layerwise_proto(
+                    map, *bits, *bucket, *every, protocol, seed,
+                ))
+            }
+            CompressionSpec::Quantized { map, bits, adaptation } => {
+                let cfg = QuantConfig::uniform_bits(map.num_types(), *bits, 2.0);
+                Box::new(QuantCompressor::new(
+                    map.clone(),
+                    cfg,
+                    protocol,
+                    adaptation.clone(),
+                    seed,
+                ))
+            }
+        }
+    }
+}
+
+/// Learning-rate schedule for a [`RunSpec`] (ignored by the Adam solvers,
+/// which carry their own scalar rate).
+#[derive(Clone, Copy, Debug)]
+pub enum LrSpec {
+    /// the paper's Eq. (4) schedule
+    Adaptive,
+    /// the (Alt) schedule of Section 6
+    Alt { q_hat: f64 },
+    /// fixed step sizes (ablation baseline)
+    Constant { gamma: f64, eta: f64 },
+}
+
+impl LrSpec {
+    pub fn build(&self) -> Box<dyn LrSchedule> {
+        match *self {
+            LrSpec::Adaptive => Box::new(AdaptiveLr::default()),
+            LrSpec::Alt { q_hat } => Box::new(AltLr::new(q_hat)),
+            LrSpec::Constant { gamma, eta } => Box::new(ConstantLr { gamma, eta }),
+        }
+    }
+}
+
+/// Gap-evaluation mode of a [`RunSpec`] run.
+#[derive(Clone, Copy, Debug)]
+pub enum GapMode {
+    Off,
+    /// evaluate GAP(X̄_t) at every checkpoint
+    AtCheckpoints,
+    /// evaluate every `every` steps (and at checkpoints) and stop early
+    /// once GAP ≤ `threshold`
+    EarlyStop { every: usize, threshold: f64 },
+}
+
+/// Declarative description of one solver run — the single construction
+/// path the CLI (`qoda run`), the bench harnesses and the examples share.
+///
+/// ```
+/// use qoda::oda::{CompressionSpec, GapMode, OperatorSpec, RunSpec, SolverKind};
+/// use qoda::vi::noise::NoiseModel;
+///
+/// let report = RunSpec::new(
+///     SolverKind::Qoda,
+///     OperatorSpec::Quadratic { dim: 8, mu: 0.5, seed: 1 },
+/// )
+/// .nodes(2)
+/// .noise(NoiseModel::Absolute { sigma: 0.2 })
+/// .compression(CompressionSpec::Global { bits: 5, bucket: 128 })
+/// .steps(400)
+/// .checkpoints(&[100, 400])
+/// .gap(GapMode::AtCheckpoints)
+/// .run();
+/// assert_eq!(report.checkpoints.len(), 2);
+/// ```
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub solver: SolverKind,
+    pub operator: OperatorSpec,
+    pub noise: NoiseModel,
+    pub nodes: usize,
+    pub compression: CompressionSpec,
+    pub lr: LrSpec,
+    pub protocol: ProtocolKind,
+    pub steps: usize,
+    pub checkpoints: Vec<usize>,
+    pub seed: u64,
+    /// Algorithm 1's explicit update-step period (0 = codec self-scheduled)
+    pub update_every: usize,
+    /// starting point X_1 (default: the origin)
+    pub x0: Option<Vec<f64>>,
+    pub gap: GapMode,
+}
+
+impl RunSpec {
+    pub fn new(solver: SolverKind, operator: OperatorSpec) -> Self {
+        RunSpec {
+            solver,
+            operator,
+            noise: NoiseModel::None,
+            nodes: 1,
+            compression: CompressionSpec::None,
+            lr: LrSpec::Adaptive,
+            protocol: ProtocolKind::Main,
+            steps: 1000,
+            checkpoints: Vec::new(),
+            seed: 1,
+            update_every: 0,
+            x0: None,
+            gap: GapMode::Off,
+        }
+    }
+
+    pub fn noise(mut self, noise: NoiseModel) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    pub fn nodes(mut self, k: usize) -> Self {
+        self.nodes = k;
+        self
+    }
+
+    pub fn compression(mut self, c: CompressionSpec) -> Self {
+        self.compression = c;
+        self
+    }
+
+    pub fn lr(mut self, lr: LrSpec) -> Self {
+        self.lr = lr;
+        self
+    }
+
+    pub fn protocol(mut self, p: ProtocolKind) -> Self {
+        self.protocol = p;
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = steps;
+        self
+    }
+
+    pub fn checkpoints(mut self, at: &[usize]) -> Self {
+        self.checkpoints = at.to_vec();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn update_every(mut self, every: usize) -> Self {
+        self.update_every = every;
+        self
+    }
+
+    pub fn x0(mut self, x0: Vec<f64>) -> Self {
+        self.x0 = Some(x0);
+        self
+    }
+
+    pub fn gap(mut self, mode: GapMode) -> Self {
+        self.gap = mode;
+        self
+    }
+
+    /// The operator instance this spec's oracles wrap (rebuilt from the
+    /// seed — identical every call), for external gap evaluation.
+    pub fn operator_instance(&self) -> Box<dyn Operator> {
+        self.operator.build()
+    }
+
+    /// Build everything and drive the run.
+    pub fn run(&self) -> RunReport {
+        self.run_observed(&mut [])
+    }
+
+    /// Build everything and drive the run, streaming to the given sinks.
+    pub fn run_observed(&self, sinks: &mut [&mut dyn MetricsSink]) -> RunReport {
+        let op = self.operator.build();
+        let d = op.dim();
+        let x0 = self.x0.clone().unwrap_or_else(|| vec![0.0; d]);
+        assert_eq!(x0.len(), d, "x0 dimension must match the operator");
+        let mut src =
+            OracleSource::new(op.as_ref(), self.nodes, self.noise, self.seed ^ 0xABCD);
+        let comps: Vec<Box<dyn Compressor>> = (0..self.nodes)
+            .map(|i| self.compression.build(d, self.protocol, self.seed + i as u64))
+            .collect();
+        let mut driver = RunDriver::new().checkpoints(&self.checkpoints);
+        if !matches!(self.gap, GapMode::Off) {
+            let sol = op
+                .solution()
+                .expect("gap evaluation needs an operator with a known solution");
+            let radius = 1.0 + l2_norm64(&sub(&x0, &sol));
+            let eval = GapEvaluator::new(op.as_ref(), sol, radius);
+            let policy = match self.gap {
+                GapMode::AtCheckpoints => {
+                    GapPolicy { eval, every: 0, stop_below: None }
+                }
+                GapMode::EarlyStop { every, threshold } => GapPolicy {
+                    // scheduled in-run evaluations run on a reduced budget
+                    // so the stopping check stays cheap per step
+                    eval: eval.budget(3, 120),
+                    every,
+                    stop_below: Some(threshold),
+                },
+                GapMode::Off => unreachable!(),
+            };
+            driver = driver.gap(policy);
+        }
+        match self.solver {
+            SolverKind::Qoda => {
+                let mut solver = Qoda::new(&mut src, comps, self.lr.build());
+                solver.update_every = self.update_every;
+                driver.run_observed(&mut solver, &x0, self.steps, sinks)
+            }
+            SolverKind::QGenX => {
+                let mut solver = QGenX::new(&mut src, comps, self.lr.build());
+                driver.run_observed(&mut solver, &x0, self.steps, sinks)
+            }
+            SolverKind::Adam { lr } => {
+                let mut solver = AdamSolver::new(&mut src, comps, lr);
+                driver.run_observed(&mut solver, &x0, self.steps, sinks)
+            }
+            SolverKind::OptimisticAdam { lr } => {
+                let mut solver = OptimisticAdam::new(&mut src, comps, lr);
+                driver.run_observed(&mut solver, &x0, self.steps, sinks)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oda::source::OracleSource;
+    use crate::stats::vecops::{l2_norm64, sub};
+    use crate::vi::noise::NoiseModel;
+
+    fn identity_boxes(k: usize) -> Vec<Box<dyn Compressor>> {
+        (0..k).map(|_| Box::new(IdentityCompressor) as Box<dyn Compressor>).collect()
+    }
+
+    #[test]
+    fn normalize_sorts_dedups_and_clamps() {
+        // unsorted, duplicated, zero and overshooting entries all survive
+        // normalization instead of being silently dropped
+        assert_eq!(normalize_checkpoints(&[50, 10, 10, 999, 0], 100), vec![10, 50, 100]);
+        assert_eq!(normalize_checkpoints(&[100, 999], 100), vec![100]);
+        assert_eq!(normalize_checkpoints(&[], 100), Vec::<usize>::new());
+        assert_eq!(normalize_checkpoints(&[5], 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn driver_records_normalized_checkpoints() {
+        let mut rng = Rng::new(9);
+        let op = QuadraticOperator::random(4, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 1, NoiseModel::None, 10);
+        let mut solver =
+            Qoda::new(&mut src, identity_boxes(1), Box::new(AdaptiveLr::default()));
+        // legacy run() would have recorded nothing from this list (unsorted
+        // + out of range); the driver records t = 10, 20, 50
+        let run = RunDriver::new()
+            .checkpoints(&[20, 10, 80, 20])
+            .run(&mut solver, &vec![0.0; 4], 50);
+        let ts: Vec<usize> = run.checkpoints.iter().map(|c| c.t).collect();
+        assert_eq!(ts, vec![10, 20, 50]);
+        assert!(run.checkpoints[0].total_bits <= run.checkpoints[2].total_bits);
+        assert_eq!(run.steps_run, 50);
+        assert!(!run.stopped_early);
+    }
+
+    #[test]
+    fn memory_sink_streams_every_step() {
+        let mut rng = Rng::new(3);
+        let op = QuadraticOperator::random(4, 0.5, &mut rng);
+        let mut src = OracleSource::new(&op, 2, NoiseModel::None, 4);
+        let mut solver =
+            Qoda::new(&mut src, identity_boxes(2), Box::new(AdaptiveLr::default()));
+        let mut sink = MemorySink::default();
+        let run = RunDriver::new().run_observed(
+            &mut solver,
+            &vec![0.0; 4],
+            30,
+            &mut [&mut sink],
+        );
+        assert_eq!(sink.records.len(), 30);
+        let last = sink.records.last().unwrap();
+        assert_eq!(last.t, 30);
+        assert_eq!(last.total_bits, run.total_bits);
+        assert_eq!(last.oracle_calls, run.oracle_calls);
+        // identity wire: 32 bits/coord/node, monotone accumulation
+        assert!(sink.records.windows(2).all(|w| w[0].total_bits < w[1].total_bits));
+    }
+
+    #[test]
+    fn gap_early_stop_ends_run() {
+        let mut rng = Rng::new(5);
+        let op = QuadraticOperator::random(6, 1.0, &mut rng);
+        let sol = op.sol.clone();
+        let x0 = vec![0.0; 6];
+        let radius = 1.0 + l2_norm64(&sub(&x0, &sol));
+        let mut src = OracleSource::new(&op, 2, NoiseModel::None, 6);
+        let mut solver =
+            Qoda::new(&mut src, identity_boxes(2), Box::new(AdaptiveLr::default()));
+        let policy = GapPolicy {
+            eval: GapEvaluator::new(&op, sol, radius),
+            every: 50,
+            stop_below: Some(1e3), // any evaluation passes: stop at t = 50
+        };
+        let run = RunDriver::new().gap(policy).run(&mut solver, &x0, 5000);
+        assert!(run.stopped_early);
+        assert_eq!(run.steps_run, 50);
+        assert_eq!(run.gap_trace.len(), 1);
+        assert_eq!(run.gap_trace[0].0, 50);
+        // the report's averages are over the 50 steps actually run
+        assert!((run.bits_per_iter_node
+            - run.total_bits as f64 / (50.0 * 2.0))
+            .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn runspec_reproduces_manual_construction() {
+        // the declarative path must build byte-identical runs to manual
+        // solver construction with the same seeds
+        let spec = RunSpec::new(
+            SolverKind::Qoda,
+            OperatorSpec::Quadratic { dim: 8, mu: 0.5, seed: 21 },
+        )
+        .nodes(2)
+        .noise(NoiseModel::Absolute { sigma: 0.2 })
+        .compression(CompressionSpec::Global { bits: 5, bucket: 128 })
+        .steps(200)
+        .seed(7);
+        let a = spec.run();
+
+        let op = spec.operator_instance();
+        let mut src = OracleSource::new(
+            op.as_ref(),
+            2,
+            NoiseModel::Absolute { sigma: 0.2 },
+            7 ^ 0xABCD,
+        );
+        let comps: Vec<Box<dyn Compressor>> = (0..2)
+            .map(|i| {
+                spec.compression.build(8, ProtocolKind::Main, 7 + i as u64)
+            })
+            .collect();
+        let mut solver = Qoda::new(&mut src, comps, Box::new(AdaptiveLr::default()));
+        let b = RunDriver::new().run(&mut solver, &vec![0.0; 8], 200);
+
+        assert_eq!(a.total_bits, b.total_bits);
+        assert_eq!(a.oracle_calls, b.oracle_calls);
+        assert_eq!(a.xbar, b.xbar);
+        assert_eq!(a.x_last, b.x_last);
+    }
+
+    #[test]
+    fn runspec_gap_at_checkpoints_converges() {
+        let report = RunSpec::new(
+            SolverKind::Qoda,
+            OperatorSpec::Quadratic { dim: 8, mu: 0.5, seed: 1 },
+        )
+        .nodes(2)
+        .noise(NoiseModel::Absolute { sigma: 0.3 })
+        .steps(800)
+        .checkpoints(&[100, 800])
+        .gap(GapMode::AtCheckpoints)
+        .run();
+        assert_eq!(report.gap_trace.len(), 2);
+        let (t0, g0) = report.gap_trace[0];
+        let (t1, g1) = report.gap_trace[1];
+        assert_eq!((t0, t1), (100, 800));
+        assert!(g1 < g0, "gap should shrink: {g0} -> {g1}");
+    }
+
+    #[test]
+    fn solver_kinds_all_drive() {
+        for kind in [
+            SolverKind::Qoda,
+            SolverKind::QGenX,
+            SolverKind::Adam { lr: 0.05 },
+            SolverKind::OptimisticAdam { lr: 0.05 },
+        ] {
+            let report = RunSpec::new(
+                kind,
+                OperatorSpec::Quadratic { dim: 6, mu: 0.5, seed: 3 },
+            )
+            .nodes(2)
+            .steps(50)
+            .run();
+            assert_eq!(report.steps_run, 50, "{kind:?}");
+            assert!(report.total_bits > 0, "{kind:?}");
+            // extra-gradient pays two oracle calls per node per iteration
+            let expect = if matches!(kind, SolverKind::QGenX) { 200 } else { 100 };
+            assert_eq!(report.oracle_calls, expect, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn deprecated_alias_still_names_the_report() {
+        #[allow(deprecated)]
+        fn takes_legacy(run: &super::QodaRun) -> u64 {
+            run.total_bits
+        }
+        let report = RunSpec::new(
+            SolverKind::Qoda,
+            OperatorSpec::Quadratic { dim: 4, mu: 0.5, seed: 2 },
+        )
+        .steps(10)
+        .run();
+        assert_eq!(takes_legacy(&report), report.total_bits);
+    }
+}

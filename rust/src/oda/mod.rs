@@ -1,18 +1,40 @@
-//! The distributed VI solvers: QODA (Algorithm 1), the Q-GenX extra-gradient
-//! baseline, Adam/optimistic-Adam baselines and the adaptive learning-rate
-//! schedules (Eq. 4 and Alt). All solvers communicate through the shared
-//! `crate::comm` wire pipeline (re-exported here for compatibility).
+//! The distributed VI solver layer, built around a step-wise [`Solver`]
+//! API.
+//!
+//! * [`driver`] — the [`Solver`] trait (`init` / `step` / `state`), the
+//!   shared [`RunDriver`] outer loop (checkpoints, ergodic averaging,
+//!   wire-bit/oracle accounting, gap evaluation + early stopping, streaming
+//!   [`MetricsSink`]s) and the declarative [`RunSpec`] builder every
+//!   consumer constructs runs through;
+//! * [`qoda`] — QODA (Algorithm 1): optimistic dual averaging, one oracle
+//!   call and one compressed exchange per iteration;
+//! * [`qgenx`] — the Q-GenX extra-gradient baseline (two calls, two
+//!   exchanges per iteration);
+//! * [`baseline`] — the Adam and optimistic-Adam baselines of Figure 4;
+//! * [`lr`] — the adaptive learning-rate schedules (Eq. 4 and Alt);
+//! * [`source`] — `DualSource` oracles (analytic operators, synthetic
+//!   gradient streams; the GAN/LM trainers implement it over real models).
+//!
+//! All solvers communicate through per-node [`crate::comm::CommEndpoint`]s
+//! — import compressor types from [`crate::comm`] (the old
+//! `oda::compress` shim is gone).
 
 pub mod baseline;
-pub mod compress;
+pub mod driver;
 pub mod lr;
 pub mod qgenx;
 pub mod qoda;
 pub mod source;
 
-pub use compress::{Adaptation, Compressor, IdentityCompressor, QuantCompressor};
-pub use crate::comm::{CommEndpoint, CommError, WirePacket};
+pub use baseline::{AdamSolver, AdamState, OptimisticAdam};
+#[allow(deprecated)]
+pub use driver::QodaRun;
+pub use driver::{
+    normalize_checkpoints, Checkpoint, CompressionSpec, GapMode, GapPolicy, LrSpec,
+    MemorySink, MetricsSink, OperatorSpec, RunDriver, RunReport, RunSpec, Solver,
+    SolverKind, SolverState, StepRecord, StepStats,
+};
 pub use lr::{AdaptiveLr, AltLr, ConstantLr, LrSchedule};
 pub use qgenx::QGenX;
-pub use qoda::{Qoda, QodaRun};
-pub use source::{DualSource, OracleSource};
+pub use qoda::Qoda;
+pub use source::{DualSource, OracleSource, StreamSource};

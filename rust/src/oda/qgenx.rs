@@ -1,10 +1,11 @@
 //! Q-GenX baseline (Ramezani-Kebrya et al., 2023): distributed *extra-
-//! gradient* with global quantization and an adaptive step size. Two oracle
-//! calls AND two compressed communications per iteration — the cost QODA's
-//! optimism halves (paper Section 4 / Appendix A.2).
+//! gradient* with global quantization and an adaptive step size, as a
+//! step-wise [`Solver`]. Two oracle calls AND two compressed communications
+//! per iteration — the cost QODA's optimism halves (paper Section 4 /
+//! Appendix A.2).
 
+use super::driver::{exchange_mean, Solver, SolverState, StepStats};
 use super::lr::LrSchedule;
-use super::qoda::{Checkpoint, QodaRun};
 use super::source::DualSource;
 use crate::comm::{CommEndpoint, Compressor};
 
@@ -14,6 +15,13 @@ pub struct QGenX<'s> {
     /// its codec and packet scratch)
     pub endpoints: Vec<CommEndpoint>,
     pub lr: Box<dyn LrSchedule>,
+    // —— step-wise run state, established by `init` ——
+    x: Vec<f64>,
+    x_half: Vec<f64>,
+    /// decoded-dual scratch, reused across nodes and steps
+    hat: Vec<f64>,
+    mean0: Vec<f64>,
+    mean1: Vec<f64>,
 }
 
 impl<'s> QGenX<'s> {
@@ -24,89 +32,95 @@ impl<'s> QGenX<'s> {
     ) -> Self {
         assert_eq!(compressors.len(), source.num_nodes());
         let endpoints = compressors.into_iter().map(CommEndpoint::new).collect();
-        QGenX { source, endpoints, lr }
+        QGenX {
+            source,
+            endpoints,
+            lr,
+            x: Vec::new(),
+            x_half: Vec::new(),
+            hat: Vec::new(),
+            mean0: Vec::new(),
+            mean1: Vec::new(),
+        }
+    }
+}
+
+impl Solver for QGenX<'_> {
+    fn name(&self) -> &'static str {
+        "qgenx"
     }
 
-    pub fn run(&mut self, x0: &[f64], steps: usize, checkpoints: &[usize]) -> QodaRun {
-        let d = self.source.dim();
-        let k = self.source.num_nodes();
-        let kf = k as f64;
-        let mut x = x0.to_vec();
-        let mut xbar_sum = vec![0.0; d];
-        let mut total_bits = 0u64;
-        let mut out_ckpts = Vec::new();
-        let mut ck_iter = checkpoints.iter().peekable();
-        // decoded-dual scratch, reused across nodes and steps
-        let mut hat: Vec<f64> = Vec::with_capacity(d);
+    fn dim(&self) -> usize {
+        self.source.dim()
+    }
 
-        for t in 1..=steps {
-            let gamma = self.lr.gamma();
-            // extrapolation: quantized oracle at X_t  (communication #1)
-            let duals0 = self.source.duals(&x);
-            let mut mean0 = vec![0.0; d];
-            for (kk, dual) in duals0.iter().enumerate() {
-                let bits = self.endpoints[kk]
-                    .roundtrip_into(dual, &mut hat)
-                    .expect("comm loopback roundtrip");
-                total_bits += bits as u64;
-                for (m, v) in mean0.iter_mut().zip(&hat) {
-                    *m += v / kf;
-                }
-            }
-            let x_half: Vec<f64> =
-                x.iter().zip(&mean0).map(|(xi, g)| xi - gamma * g).collect();
-            // update: quantized oracle at X_{t+1/2}   (communication #2)
-            let duals1 = self.source.duals(&x_half);
-            let mut mean1 = vec![0.0; d];
-            for (kk, dual) in duals1.iter().enumerate() {
-                let bits = self.endpoints[kk]
-                    .roundtrip_into(dual, &mut hat)
-                    .expect("comm loopback roundtrip");
-                total_bits += bits as u64;
-                for (m, v) in mean1.iter_mut().zip(&hat) {
-                    *m += v / kf;
-                }
-            }
-            // adaptive step statistics: ||mean1 - mean0||^2 (the Q-GenX
-            // gradient-variation term)
-            let diff_sq: f64 = mean1
-                .iter()
-                .zip(&mean0)
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum();
-            self.lr.observe(diff_sq, 0.0, 0.0);
-            for i in 0..d {
-                x[i] -= gamma * mean1[i];
-            }
-            for (s, v) in xbar_sum.iter_mut().zip(&x_half) {
-                *s += v;
-            }
-            if ck_iter.peek() == Some(&&t) {
-                ck_iter.next();
-                out_ckpts.push(Checkpoint {
-                    t,
-                    xbar: xbar_sum.iter().map(|s| s / t as f64).collect(),
-                    total_bits,
-                    oracle_calls: self.source.calls(),
-                });
-            }
+    fn num_nodes(&self) -> usize {
+        self.source.num_nodes()
+    }
+
+    fn init(&mut self, x0: &[f64]) {
+        let d = self.source.dim();
+        assert_eq!(x0.len(), d);
+        self.x = x0.to_vec();
+        self.x_half = x0.to_vec();
+        self.hat = Vec::with_capacity(d);
+        self.mean0 = vec![0.0; d];
+        self.mean1 = vec![0.0; d];
+    }
+
+    fn step(&mut self, _t: usize) -> StepStats {
+        let gamma = self.lr.gamma();
+        let mut stats = StepStats::default();
+        // extrapolation: quantized oracle at X_t  (communication #1)
+        let duals0 = self.source.duals(&self.x);
+        exchange_mean(
+            &mut self.endpoints,
+            &duals0,
+            &mut self.hat,
+            &mut self.mean0,
+            &mut stats,
+        );
+        self.x_half.clear();
+        self.x_half
+            .extend(self.x.iter().zip(&self.mean0).map(|(xi, g)| xi - gamma * g));
+        // update: quantized oracle at X_{t+1/2}   (communication #2)
+        let duals1 = self.source.duals(&self.x_half);
+        exchange_mean(
+            &mut self.endpoints,
+            &duals1,
+            &mut self.hat,
+            &mut self.mean1,
+            &mut stats,
+        );
+        // adaptive step statistics: ||mean1 - mean0||^2 (the Q-GenX
+        // gradient-variation term)
+        let diff_sq: f64 = self
+            .mean1
+            .iter()
+            .zip(&self.mean0)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        self.lr.observe(diff_sq, 0.0, 0.0);
+        for (xi, g) in self.x.iter_mut().zip(&self.mean1) {
+            *xi -= gamma * g;
         }
-        let xbar: Vec<f64> = xbar_sum.iter().map(|s| s / steps as f64).collect();
-        QodaRun {
-            checkpoints: out_ckpts,
-            xbar,
-            x_last: x,
-            total_bits,
-            oracle_calls: self.source.calls(),
-            bits_per_iter_node: total_bits as f64 / (steps as f64 * kf),
-        }
+        stats
+    }
+
+    fn state(&self) -> SolverState<'_> {
+        SolverState { x: &self.x, avg_point: &self.x_half }
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.source.calls()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::oda::compress::{Compressor, IdentityCompressor, QuantCompressor};
+    use crate::comm::{IdentityCompressor, QuantCompressor};
+    use crate::oda::driver::RunDriver;
     use crate::oda::lr::AdaptiveLr;
     use crate::oda::source::OracleSource;
     use crate::quant::layer_map::LayerMap;
@@ -126,7 +140,7 @@ mod tests {
         let mut src = OracleSource::new(&op, 2, NoiseModel::None, 2);
         let mut solver =
             QGenX::new(&mut src, identity_boxes(2), Box::new(AdaptiveLr::default()));
-        let run = solver.run(&vec![0.0; 8], 800, &[]);
+        let run = RunDriver::new().run(&mut solver, &vec![0.0; 8], 800);
         let err = l2_norm64(&sub(&run.xbar, &op.sol));
         assert!(err < 0.25 * l2_norm64(&op.sol), "{err}");
     }
@@ -138,7 +152,7 @@ mod tests {
         let mut src = OracleSource::new(&op, 3, NoiseModel::None, 4);
         let mut solver =
             QGenX::new(&mut src, identity_boxes(3), Box::new(AdaptiveLr::default()));
-        let run = solver.run(&vec![0.0; 4], 100, &[]);
+        let run = RunDriver::new().run(&mut solver, &vec![0.0; 4], 100);
         assert_eq!(run.oracle_calls, 600, "extra-gradient pays 2 calls/iter");
     }
 
@@ -153,18 +167,18 @@ mod tests {
                 as Box<dyn Compressor>]
         };
         let mut src1 = OracleSource::new(&op, 1, NoiseModel::None, 6);
+        let mut qgenx =
+            QGenX::new(&mut src1, mk(1), Box::new(AdaptiveLr::default()));
         let bits_qgenx =
-            QGenX::new(&mut src1, mk(1), Box::new(AdaptiveLr::default()))
-                .run(&vec![0.0; 16], 200, &[])
-                .total_bits;
+            RunDriver::new().run(&mut qgenx, &vec![0.0; 16], 200).total_bits;
         let mut src2 = OracleSource::new(&op, 1, NoiseModel::None, 6);
-        let bits_qoda = crate::oda::qoda::Qoda::new(
+        let mut qoda = crate::oda::qoda::Qoda::new(
             &mut src2,
             mk(1),
             Box::new(AdaptiveLr::default()),
-        )
-        .run(&vec![0.0; 16], 200, &[])
-        .total_bits;
+        );
+        let bits_qoda =
+            RunDriver::new().run(&mut qoda, &vec![0.0; 16], 200).total_bits;
         let ratio = bits_qgenx as f64 / bits_qoda as f64;
         assert!((ratio - 2.0).abs() < 0.2, "ratio {ratio}");
     }
@@ -177,7 +191,7 @@ mod tests {
         let mut solver =
             QGenX::new(&mut src, identity_boxes(1), Box::new(AdaptiveLr::default()));
         let x0 = vec![1.0; 8];
-        let run = solver.run(&x0, 1500, &[]);
+        let run = RunDriver::new().run(&mut solver, &x0, 1500);
         let res = l2_norm64(&op.apply_vec(&run.xbar));
         assert!(res < 0.2 * l2_norm64(&op.apply_vec(&x0)), "{res}");
     }

@@ -1,4 +1,6 @@
-//! QODA — Quantized Optimistic Dual Averaging (Algorithm 1).
+//! QODA — Quantized Optimistic Dual Averaging (Algorithm 1), as a
+//! step-wise [`Solver`] state machine (the outer loop — checkpoints,
+//! ergodic averaging, accounting — lives in [`super::driver::RunDriver`]).
 //!
 //! Per iteration (ODA):
 //!   X_{t+1/2} = X_t - gamma_t * (1/K) sum_k V̂_{k,t-1/2}     (optimism: the
@@ -11,30 +13,13 @@
 //!   X_{t+1} = X_1 + eta_{t+1} Y_{t+1}
 //!
 //! with the adaptive learning rates of Eq. (4) or (Alt). The candidate
-//! solution is the ergodic average X̄_{T+1/2}.
+//! solution is the ergodic average X̄_{T+1/2}, which the driver accumulates
+//! from this solver's `avg_point` (= X_{t+1/2}).
 
+use super::driver::{Solver, SolverState, StepStats};
 use super::lr::{observe_from_duals, LrSchedule};
 use super::source::DualSource;
 use crate::comm::{CommEndpoint, Compressor};
-
-/// Per-checkpoint record for convergence curves.
-#[derive(Clone, Debug)]
-pub struct Checkpoint {
-    pub t: usize,
-    pub xbar: Vec<f64>,
-    pub total_bits: u64,
-    pub oracle_calls: u64,
-}
-
-pub struct QodaRun {
-    pub checkpoints: Vec<Checkpoint>,
-    pub xbar: Vec<f64>,
-    pub x_last: Vec<f64>,
-    pub total_bits: u64,
-    pub oracle_calls: u64,
-    /// average wire bits per node per iteration
-    pub bits_per_iter_node: f64,
-}
 
 pub struct Qoda<'s> {
     pub source: &'s mut dyn DualSource,
@@ -44,6 +29,18 @@ pub struct Qoda<'s> {
     /// Algorithm 1's update-step set U as a period (0 = never); forwarded to
     /// the codecs' `update_levels`
     pub update_every: usize,
+    // —— step-wise run state, established by `init` ——
+    x1: Vec<f64>,
+    x: Vec<f64>,
+    y: Vec<f64>,
+    /// V̂_{k,t-1/2}: the stored previous half-step duals
+    prev_hat: Vec<Vec<f64>>,
+    /// decoded-dual buffers, swapped with `prev_hat` each step (no per-step
+    /// allocation: the comm endpoints recycle their packet scratch too)
+    hats: Vec<Vec<f64>>,
+    x_half: Vec<f64>,
+    x_next: Vec<f64>,
+    last_dx_sq: f64,
 }
 
 impl<'s> Qoda<'s> {
@@ -54,106 +51,123 @@ impl<'s> Qoda<'s> {
     ) -> Self {
         assert_eq!(compressors.len(), source.num_nodes());
         let endpoints = compressors.into_iter().map(CommEndpoint::new).collect();
-        Qoda { source, endpoints, lr, update_every: 0 }
+        Qoda {
+            source,
+            endpoints,
+            lr,
+            update_every: 0,
+            x1: Vec::new(),
+            x: Vec::new(),
+            y: Vec::new(),
+            prev_hat: Vec::new(),
+            hats: Vec::new(),
+            x_half: Vec::new(),
+            x_next: Vec::new(),
+            last_dx_sq: 0.0,
+        }
+    }
+}
+
+impl Solver for Qoda<'_> {
+    fn name(&self) -> &'static str {
+        "qoda"
     }
 
-    /// Run T iterations from X_1 = x0, recording checkpoints at the given
-    /// iteration numbers (sorted).
-    pub fn run(&mut self, x0: &[f64], steps: usize, checkpoints: &[usize]) -> QodaRun {
+    fn dim(&self) -> usize {
+        self.source.dim()
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.source.num_nodes()
+    }
+
+    fn init(&mut self, x0: &[f64]) {
         let d = self.source.dim();
         let k = self.source.num_nodes();
-        let kf = k as f64;
-        let x1 = x0.to_vec();
-        let mut x = x0.to_vec();
-        let mut y = vec![0.0; d];
+        assert_eq!(x0.len(), d);
+        self.x1 = x0.to_vec();
+        self.x = x0.to_vec();
+        self.y = vec![0.0; d];
         // V̂_{k,1/2} = 0 (the paper's initialization)
-        let mut prev_hat: Vec<Vec<f64>> = vec![vec![0.0; d]; k];
-        // decoded-dual buffers, swapped with prev_hat each step (no per-step
-        // allocation: the comm endpoints recycle their packet scratch too)
-        let mut hats: Vec<Vec<f64>> = vec![vec![0.0; d]; k];
-        let mut xbar_sum = vec![0.0; d];
-        let mut total_bits = 0u64;
-        let mut out_ckpts = Vec::new();
-        let mut last_dx_sq = 0.0;
-        let mut ck_iter = checkpoints.iter().peekable();
+        self.prev_hat = vec![vec![0.0; d]; k];
+        self.hats = vec![vec![0.0; d]; k];
+        self.x_half = x0.to_vec();
+        self.x_next = vec![0.0; d];
+        self.last_dx_sq = 0.0;
+    }
 
-        for t in 1..=steps {
-            let gamma = self.lr.gamma();
-            // extrapolation with the stored previous duals (lines 9-10)
-            let mut x_half = x.clone();
-            for kk in 0..k {
-                for (xh, v) in x_half.iter_mut().zip(&prev_hat[kk]) {
-                    *xh -= gamma * v / kf;
-                }
-            }
-            // oracle + comm pipeline roundtrip (lines 11-15): ENC to a wire
-            // packet, loopback DEC of the same packet — the bits charged are
-            // the packet's actual payload size
-            let duals = self.source.duals(&x_half);
-            for (kk, dual) in duals.iter().enumerate() {
-                let bits = self.endpoints[kk]
-                    .roundtrip_into(dual, &mut hats[kk])
-                    .expect("comm loopback roundtrip");
-                total_bits += bits as u64;
-            }
-            // learning-rate statistics (Eq. 4 / Alt); dx lagged one step
-            let (diff_sq, sum_sq, _) =
-                observe_from_duals(&hats, &prev_hat, &x, &x);
-            self.lr.observe(diff_sq, sum_sq, last_dx_sq);
-            // dual averaging (lines 17-18)
-            for kk in 0..k {
-                for (yi, v) in y.iter_mut().zip(&hats[kk]) {
-                    *yi -= v / kf;
-                }
-            }
-            let eta = self.lr.eta();
-            let mut x_next = vec![0.0; d];
-            for i in 0..d {
-                x_next[i] = x1[i] + eta * y[i];
-            }
-            last_dx_sq = x
-                .iter()
-                .zip(&x_next)
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum();
-            x = x_next;
-            std::mem::swap(&mut prev_hat, &mut hats);
-            for (s, v) in xbar_sum.iter_mut().zip(&x_half) {
-                *s += v;
-            }
-            // explicit update-step set U (line 2): codecs may also
-            // self-schedule; this drives them at a fixed cadence
-            if self.update_every > 0 && t % self.update_every == 0 {
-                for ep in &mut self.endpoints {
-                    ep.update_levels();
-                }
-            }
-            if ck_iter.peek() == Some(&&t) {
-                ck_iter.next();
-                out_ckpts.push(Checkpoint {
-                    t,
-                    xbar: xbar_sum.iter().map(|s| s / t as f64).collect(),
-                    total_bits,
-                    oracle_calls: self.source.calls(),
-                });
+    fn step(&mut self, t: usize) -> StepStats {
+        let k = self.endpoints.len();
+        let kf = k as f64;
+        let gamma = self.lr.gamma();
+        // extrapolation with the stored previous duals (lines 9-10)
+        self.x_half.clone_from(&self.x);
+        for kk in 0..k {
+            for (xh, v) in self.x_half.iter_mut().zip(&self.prev_hat[kk]) {
+                *xh -= gamma * v / kf;
             }
         }
-        let xbar: Vec<f64> = xbar_sum.iter().map(|s| s / steps as f64).collect();
-        QodaRun {
-            checkpoints: out_ckpts,
-            xbar,
-            x_last: x,
-            total_bits,
-            oracle_calls: self.source.calls(),
-            bits_per_iter_node: total_bits as f64 / (steps as f64 * kf),
+        // oracle + comm pipeline roundtrip (lines 11-15): ENC to a wire
+        // packet, loopback DEC of the same packet — the bits charged are
+        // the packet's actual payload size
+        let duals = self.source.duals(&self.x_half);
+        let mut stats = StepStats::default();
+        for (kk, dual) in duals.iter().enumerate() {
+            let bits = self.endpoints[kk]
+                .roundtrip_into(dual, &mut self.hats[kk])
+                .expect("comm loopback roundtrip");
+            stats.bits += bits as u64;
+            for (v, h) in dual.iter().zip(&self.hats[kk]) {
+                stats.quant_err_sq += (v - h) * (v - h);
+                stats.dual_norm_sq += v * v;
+            }
         }
+        // learning-rate statistics (Eq. 4 / Alt); dx lagged one step
+        let (diff_sq, sum_sq, _) =
+            observe_from_duals(&self.hats, &self.prev_hat, &self.x, &self.x);
+        self.lr.observe(diff_sq, sum_sq, self.last_dx_sq);
+        // dual averaging (lines 17-18)
+        for kk in 0..k {
+            for (yi, v) in self.y.iter_mut().zip(&self.hats[kk]) {
+                *yi -= v / kf;
+            }
+        }
+        let eta = self.lr.eta();
+        for ((xn, x1), yv) in self.x_next.iter_mut().zip(&self.x1).zip(&self.y) {
+            *xn = x1 + eta * yv;
+        }
+        self.last_dx_sq = self
+            .x
+            .iter()
+            .zip(&self.x_next)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        std::mem::swap(&mut self.x, &mut self.x_next);
+        std::mem::swap(&mut self.prev_hat, &mut self.hats);
+        // explicit update-step set U (line 2): codecs may also
+        // self-schedule; this drives them at a fixed cadence
+        if self.update_every > 0 && t % self.update_every == 0 {
+            for ep in &mut self.endpoints {
+                ep.update_levels();
+            }
+        }
+        stats
+    }
+
+    fn state(&self) -> SolverState<'_> {
+        SolverState { x: &self.x, avg_point: &self.x_half }
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.source.calls()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::oda::compress::{IdentityCompressor, QuantCompressor};
+    use crate::comm::{IdentityCompressor, QuantCompressor};
+    use crate::oda::driver::RunDriver;
     use crate::oda::lr::{AdaptiveLr, AltLr};
     use crate::oda::source::OracleSource;
     use crate::quant::layer_map::LayerMap;
@@ -174,7 +188,7 @@ mod tests {
         let mut src = OracleSource::new(&op, 2, NoiseModel::None, 2);
         let mut solver =
             Qoda::new(&mut src, identity_boxes(2), Box::new(AdaptiveLr::default()));
-        let run = solver.run(&vec![0.0; 8], 800, &[]);
+        let run = RunDriver::new().run(&mut solver, &vec![0.0; 8], 800);
         let err = l2_norm64(&sub(&run.xbar, &sol));
         let err0 = l2_norm64(&sol);
         assert!(err < 0.2 * err0, "err {err} vs initial {err0}");
@@ -189,7 +203,7 @@ mod tests {
         let mut solver =
             Qoda::new(&mut src, identity_boxes(1), Box::new(AdaptiveLr::default()));
         let x0 = vec![1.0; 10];
-        let run = solver.run(&x0, 2000, &[]);
+        let run = RunDriver::new().run(&mut solver, &x0, 2000);
         let res = l2_norm64(&op.apply_vec(&run.xbar));
         let res0 = l2_norm64(&op.apply_vec(&x0));
         assert!(res < 0.15 * res0, "residual {res} vs {res0}");
@@ -209,13 +223,16 @@ mod tests {
             })
             .collect();
         let mut solver = Qoda::new(&mut src, comps, Box::new(AdaptiveLr::default()));
-        let run = solver.run(&vec![0.0; 16], 1500, &[]);
+        let run = RunDriver::new().run(&mut solver, &vec![0.0; 16], 1500);
         let err = l2_norm64(&sub(&run.xbar, &sol));
         let err0 = l2_norm64(&sol);
         assert!(err < 0.35 * err0, "err {err} vs {err0}");
         assert!(run.total_bits > 0);
         // compressed wire must be well below 32 bits/coord
         assert!(run.bits_per_iter_node < 16.0 * 16.0, "{}", run.bits_per_iter_node);
+        // the driver's fidelity accounting: small but nonzero wire error
+        let rel = run.rel_quant_error();
+        assert!(rel > 0.0 && rel < 0.2, "rel quant error {rel}");
     }
 
     #[test]
@@ -226,7 +243,7 @@ mod tests {
         let mut src = OracleSource::new(&op, 3, NoiseModel::None, 8);
         let mut solver =
             Qoda::new(&mut src, identity_boxes(3), Box::new(AdaptiveLr::default()));
-        let run = solver.run(&vec![0.0; 4], 100, &[]);
+        let run = RunDriver::new().run(&mut solver, &vec![0.0; 4], 100);
         assert_eq!(run.oracle_calls, 300);
     }
 
@@ -237,7 +254,9 @@ mod tests {
         let mut src = OracleSource::new(&op, 1, NoiseModel::None, 10);
         let mut solver =
             Qoda::new(&mut src, identity_boxes(1), Box::new(AdaptiveLr::default()));
-        let run = solver.run(&vec![0.0; 4], 50, &[10, 20, 50]);
+        let run = RunDriver::new()
+            .checkpoints(&[10, 20, 50])
+            .run(&mut solver, &vec![0.0; 4], 50);
         assert_eq!(run.checkpoints.len(), 3);
         assert_eq!(run.checkpoints[0].t, 10);
         assert_eq!(run.checkpoints[2].t, 50);
@@ -252,9 +271,32 @@ mod tests {
         let mut src = OracleSource::new(&op, 2, NoiseModel::Relative { sigma_r: 0.5 }, 12);
         let mut solver =
             Qoda::new(&mut src, identity_boxes(2), Box::new(AltLr::new(0.25)));
-        let run = solver.run(&vec![0.0; 8], 1500, &[]);
+        let run = RunDriver::new().run(&mut solver, &vec![0.0; 8], 1500);
         let err = l2_norm64(&sub(&run.x_last, &sol));
         let err0 = l2_norm64(&sol);
         assert!(err < 0.3 * err0, "err {err} vs {err0}");
+    }
+
+    #[test]
+    fn stepping_is_resumable() {
+        // driving 2 x 50 steps through the trait by hand matches one driven
+        // 100-step run — the state machine carries everything across
+        let mut rng = Rng::new(13);
+        let op = QuadraticOperator::random(6, 0.5, &mut rng);
+        let x0 = vec![0.0; 6];
+
+        let mut src_a = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.1 }, 14);
+        let mut a =
+            Qoda::new(&mut src_a, identity_boxes(2), Box::new(AdaptiveLr::default()));
+        let run = RunDriver::new().run(&mut a, &x0, 100);
+
+        let mut src_b = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.1 }, 14);
+        let mut b =
+            Qoda::new(&mut src_b, identity_boxes(2), Box::new(AdaptiveLr::default()));
+        b.init(&x0);
+        for t in 1..=100 {
+            b.step(t);
+        }
+        assert_eq!(run.x_last, b.state().x.to_vec());
     }
 }

@@ -50,11 +50,62 @@ impl<'a> DualSource for OracleSource<'a> {
     }
 }
 
+/// A dual source that ignores the query point: synthesizes (or replays) a
+/// per-node gradient stream. Lets compressor-fidelity ablations and codec
+/// audits run through the same `Solver`/`RunDriver` path as oracle-backed
+/// runs — drive it with a zero learning rate so the iterate stays put.
+pub struct StreamSource<F: FnMut(usize) -> Vec<f64>> {
+    gen: F,
+    dim: usize,
+    nodes: usize,
+    calls: u64,
+}
+
+impl<F: FnMut(usize) -> Vec<f64>> StreamSource<F> {
+    /// `gen(k)` produces node `k`'s next dual vector (length `dim`).
+    pub fn new(dim: usize, nodes: usize, gen: F) -> Self {
+        StreamSource { gen, dim, nodes, calls: 0 }
+    }
+}
+
+impl<F: FnMut(usize) -> Vec<f64>> DualSource for StreamSource<F> {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn num_nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn duals(&mut self, _x: &[f64]) -> Vec<Vec<f64>> {
+        self.calls += self.nodes as u64;
+        (0..self.nodes).map(|k| (self.gen)(k)).collect()
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::stats::rng::Rng;
     use crate::vi::operator::QuadraticOperator;
+
+    #[test]
+    fn stream_source_replays_its_generator() {
+        let mut n = 0.0;
+        let mut src = StreamSource::new(2, 3, |k| {
+            n += 1.0;
+            vec![n, k as f64]
+        });
+        let a = src.duals(&[9.0, 9.0]);
+        assert_eq!(a, vec![vec![1.0, 0.0], vec![2.0, 1.0], vec![3.0, 2.0]]);
+        assert_eq!(src.calls(), 3);
+        assert_eq!(src.dim(), 2);
+        assert_eq!(src.num_nodes(), 3);
+    }
 
     #[test]
     fn nodes_draw_independent_noise() {

@@ -23,6 +23,16 @@ impl<'a> GapEvaluator<'a> {
         GapEvaluator { op, center, radius, restarts: 6, iters: 200 }
     }
 
+    /// Trade accuracy for speed: fewer restarts/ascent iterations. In-run
+    /// evaluation schedules (the driver's `GapPolicy`, early stopping on a
+    /// gap threshold) use this to keep the per-step cost bounded.
+    pub fn budget(mut self, restarts: usize, iters: usize) -> Self {
+        assert!(restarts >= 1 && iters >= 1);
+        self.restarts = restarts;
+        self.iters = iters;
+        self
+    }
+
     fn project(&self, x: &mut [f64]) {
         let diff = sub(x, &self.center);
         let n = l2_norm64(&diff);
@@ -139,6 +149,21 @@ mod tests {
         let want = dot64(&a, &sub(&x_hat, &center)) + radius * l2_norm64(&a);
         let got = gap.eval(&x_hat);
         assert!((got - want).abs() < 1e-3 * want.abs().max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn budgeted_evaluator_still_matches_closed_form() {
+        let a = vec![1.0, -2.0, 0.5];
+        let op = ConstOp { a: a.clone() };
+        let center = vec![0.0, 0.0, 0.0];
+        let radius = 1.0;
+        // the constant-operator maximizer is a projection: even a tiny
+        // budget lands on it
+        let gap = GapEvaluator::new(&op, center.clone(), radius).budget(2, 60);
+        let x_hat = vec![0.2, -0.1, 0.3];
+        let want = dot64(&a, &sub(&x_hat, &center)) + radius * l2_norm64(&a);
+        let got = gap.eval(&x_hat);
+        assert!((got - want).abs() < 5e-3 * want.abs().max(1.0), "{got} vs {want}");
     }
 
     #[test]

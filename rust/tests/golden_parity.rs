@@ -1,0 +1,399 @@
+//! Golden parity: the step-wise `Solver` + `RunDriver` redesign must
+//! reproduce the legacy monolithic `run()` loops bit-for-bit — identical
+//! `total_bits`, `oracle_calls`, `xbar`, `x_last` and per-checkpoint
+//! records on fixed seeds, for QODA, Q-GenX and both Adam baselines.
+//!
+//! The legacy loops are replicated here verbatim (same operation order,
+//! same scratch discipline) on top of the public comm/lr/source APIs, so
+//! any drift in the driver's accounting or averaging fails loudly.
+
+use qoda::comm::{CommEndpoint, Compressor, IdentityCompressor, QuantCompressor};
+use qoda::oda::baseline::{AdamSolver, AdamState, OptimisticAdam};
+use qoda::oda::lr::{observe_from_duals, AdaptiveLr, AltLr, LrSchedule};
+use qoda::oda::source::{DualSource, OracleSource};
+use qoda::oda::{QGenX, Qoda, RunDriver, RunReport};
+use qoda::quant::layer_map::LayerMap;
+use qoda::stats::rng::Rng;
+use qoda::vi::noise::NoiseModel;
+use qoda::vi::operator::QuadraticOperator;
+
+/// What the pre-refactor `run()` loops produced.
+struct LegacyRun {
+    checkpoints: Vec<(usize, Vec<f64>, u64, u64)>,
+    xbar: Vec<f64>,
+    x_last: Vec<f64>,
+    total_bits: u64,
+    oracle_calls: u64,
+    bits_per_iter_node: f64,
+}
+
+fn assert_bit_identical(legacy: &LegacyRun, report: &RunReport) {
+    assert_eq!(legacy.total_bits, report.total_bits, "total_bits drifted");
+    assert_eq!(legacy.oracle_calls, report.oracle_calls, "oracle_calls drifted");
+    assert_eq!(legacy.xbar, report.xbar, "xbar drifted");
+    assert_eq!(legacy.x_last, report.x_last, "x_last drifted");
+    assert_eq!(legacy.bits_per_iter_node, report.bits_per_iter_node);
+    assert_eq!(legacy.checkpoints.len(), report.checkpoints.len());
+    for (l, n) in legacy.checkpoints.iter().zip(&report.checkpoints) {
+        assert_eq!(l.0, n.t);
+        assert_eq!(l.1, n.xbar, "checkpoint xbar drifted at t = {}", n.t);
+        assert_eq!(l.2, n.total_bits);
+        assert_eq!(l.3, n.oracle_calls);
+    }
+}
+
+/// The pre-refactor `Qoda::run`, verbatim.
+#[allow(clippy::too_many_arguments)]
+fn legacy_qoda(
+    source: &mut dyn DualSource,
+    compressors: Vec<Box<dyn Compressor>>,
+    mut lr: Box<dyn LrSchedule>,
+    update_every: usize,
+    x0: &[f64],
+    steps: usize,
+    checkpoints: &[usize],
+) -> LegacyRun {
+    let mut endpoints: Vec<CommEndpoint> =
+        compressors.into_iter().map(CommEndpoint::new).collect();
+    let d = source.dim();
+    let k = source.num_nodes();
+    let kf = k as f64;
+    let x1 = x0.to_vec();
+    let mut x = x0.to_vec();
+    let mut y = vec![0.0; d];
+    let mut prev_hat: Vec<Vec<f64>> = vec![vec![0.0; d]; k];
+    let mut hats: Vec<Vec<f64>> = vec![vec![0.0; d]; k];
+    let mut xbar_sum = vec![0.0; d];
+    let mut total_bits = 0u64;
+    let mut out_ckpts = Vec::new();
+    let mut last_dx_sq = 0.0;
+    let mut ck_iter = checkpoints.iter().peekable();
+
+    for t in 1..=steps {
+        let gamma = lr.gamma();
+        let mut x_half = x.clone();
+        for kk in 0..k {
+            for (xh, v) in x_half.iter_mut().zip(&prev_hat[kk]) {
+                *xh -= gamma * v / kf;
+            }
+        }
+        let duals = source.duals(&x_half);
+        for (kk, dual) in duals.iter().enumerate() {
+            let bits = endpoints[kk]
+                .roundtrip_into(dual, &mut hats[kk])
+                .expect("comm loopback roundtrip");
+            total_bits += bits as u64;
+        }
+        let (diff_sq, sum_sq, _) = observe_from_duals(&hats, &prev_hat, &x, &x);
+        lr.observe(diff_sq, sum_sq, last_dx_sq);
+        for kk in 0..k {
+            for (yi, v) in y.iter_mut().zip(&hats[kk]) {
+                *yi -= v / kf;
+            }
+        }
+        let eta = lr.eta();
+        let mut x_next = vec![0.0; d];
+        for i in 0..d {
+            x_next[i] = x1[i] + eta * y[i];
+        }
+        last_dx_sq = x
+            .iter()
+            .zip(&x_next)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        x = x_next;
+        std::mem::swap(&mut prev_hat, &mut hats);
+        for (s, v) in xbar_sum.iter_mut().zip(&x_half) {
+            *s += v;
+        }
+        if update_every > 0 && t % update_every == 0 {
+            for ep in &mut endpoints {
+                ep.update_levels();
+            }
+        }
+        if ck_iter.peek() == Some(&&t) {
+            ck_iter.next();
+            out_ckpts.push((
+                t,
+                xbar_sum.iter().map(|s| s / t as f64).collect(),
+                total_bits,
+                source.calls(),
+            ));
+        }
+    }
+    LegacyRun {
+        checkpoints: out_ckpts,
+        xbar: xbar_sum.iter().map(|s| s / steps as f64).collect(),
+        x_last: x,
+        total_bits,
+        oracle_calls: source.calls(),
+        bits_per_iter_node: total_bits as f64 / (steps as f64 * kf),
+    }
+}
+
+/// The pre-refactor `QGenX::run`, verbatim.
+fn legacy_qgenx(
+    source: &mut dyn DualSource,
+    compressors: Vec<Box<dyn Compressor>>,
+    mut lr: Box<dyn LrSchedule>,
+    x0: &[f64],
+    steps: usize,
+    checkpoints: &[usize],
+) -> LegacyRun {
+    let mut endpoints: Vec<CommEndpoint> =
+        compressors.into_iter().map(CommEndpoint::new).collect();
+    let d = source.dim();
+    let k = source.num_nodes();
+    let kf = k as f64;
+    let mut x = x0.to_vec();
+    let mut xbar_sum = vec![0.0; d];
+    let mut total_bits = 0u64;
+    let mut out_ckpts = Vec::new();
+    let mut ck_iter = checkpoints.iter().peekable();
+    let mut hat: Vec<f64> = Vec::with_capacity(d);
+
+    for t in 1..=steps {
+        let gamma = lr.gamma();
+        let duals0 = source.duals(&x);
+        let mut mean0 = vec![0.0; d];
+        for (kk, dual) in duals0.iter().enumerate() {
+            let bits = endpoints[kk]
+                .roundtrip_into(dual, &mut hat)
+                .expect("comm loopback roundtrip");
+            total_bits += bits as u64;
+            for (m, v) in mean0.iter_mut().zip(&hat) {
+                *m += v / kf;
+            }
+        }
+        let x_half: Vec<f64> =
+            x.iter().zip(&mean0).map(|(xi, g)| xi - gamma * g).collect();
+        let duals1 = source.duals(&x_half);
+        let mut mean1 = vec![0.0; d];
+        for (kk, dual) in duals1.iter().enumerate() {
+            let bits = endpoints[kk]
+                .roundtrip_into(dual, &mut hat)
+                .expect("comm loopback roundtrip");
+            total_bits += bits as u64;
+            for (m, v) in mean1.iter_mut().zip(&hat) {
+                *m += v / kf;
+            }
+        }
+        let diff_sq: f64 = mean1
+            .iter()
+            .zip(&mean0)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        lr.observe(diff_sq, 0.0, 0.0);
+        for i in 0..d {
+            x[i] -= gamma * mean1[i];
+        }
+        for (s, v) in xbar_sum.iter_mut().zip(&x_half) {
+            *s += v;
+        }
+        if ck_iter.peek() == Some(&&t) {
+            ck_iter.next();
+            out_ckpts.push((
+                t,
+                xbar_sum.iter().map(|s| s / t as f64).collect(),
+                total_bits,
+                source.calls(),
+            ));
+        }
+    }
+    LegacyRun {
+        checkpoints: out_ckpts,
+        xbar: xbar_sum.iter().map(|s| s / steps as f64).collect(),
+        x_last: x,
+        total_bits,
+        oracle_calls: source.calls(),
+        bits_per_iter_node: total_bits as f64 / (steps as f64 * kf),
+    }
+}
+
+/// The pre-refactor manual Adam loop (`AdamSolver::step` driven by hand),
+/// with the iterate average the driver now maintains.
+fn legacy_adam(
+    source: &mut dyn DualSource,
+    compressors: Vec<Box<dyn Compressor>>,
+    lr: f64,
+    optimistic: bool,
+    x0: &[f64],
+    steps: usize,
+) -> LegacyRun {
+    let mut endpoints: Vec<CommEndpoint> =
+        compressors.into_iter().map(CommEndpoint::new).collect();
+    let d = source.dim();
+    let kf = source.num_nodes() as f64;
+    let mut adam = AdamState::new(d, lr);
+    let mut x = x0.to_vec();
+    let mut prev_dir = vec![0.0; d];
+    let mut hat: Vec<f64> = Vec::new();
+    let mut xbar_sum = vec![0.0; d];
+    let mut total_bits = 0u64;
+
+    for _t in 1..=steps {
+        let query: Vec<f64> = if optimistic {
+            x.iter().zip(prev_dir.iter()).map(|(xi, p)| xi - p).collect()
+        } else {
+            x.to_vec()
+        };
+        let duals = source.duals(&query);
+        let mut mean = vec![0.0; d];
+        for (kk, dual) in duals.iter().enumerate() {
+            let bits = endpoints[kk]
+                .roundtrip_into(dual, &mut hat)
+                .expect("comm loopback roundtrip");
+            total_bits += bits as u64;
+            for (m, v) in mean.iter_mut().zip(&hat) {
+                *m += v / kf;
+            }
+        }
+        let dir = adam.direction(&mean);
+        for (xi, di) in x.iter_mut().zip(&dir) {
+            *xi -= di;
+        }
+        prev_dir = dir;
+        for (s, v) in xbar_sum.iter_mut().zip(&x) {
+            *s += v;
+        }
+    }
+    LegacyRun {
+        checkpoints: Vec::new(),
+        xbar: xbar_sum.iter().map(|s| s / steps as f64).collect(),
+        x_last: x,
+        total_bits,
+        oracle_calls: source.calls(),
+        bits_per_iter_node: total_bits as f64 / (steps as f64 * kf),
+    }
+}
+
+fn quant_boxes(d: usize, bits: u32, k: usize, seed0: u64) -> Vec<Box<dyn Compressor>> {
+    let map = LayerMap::single(d);
+    (0..k)
+        .map(|i| {
+            Box::new(QuantCompressor::global_bits(&map, bits, 128, seed0 + i as u64))
+                as Box<dyn Compressor>
+        })
+        .collect()
+}
+
+fn identity_boxes(k: usize) -> Vec<Box<dyn Compressor>> {
+    (0..k).map(|_| Box::new(IdentityCompressor) as Box<dyn Compressor>).collect()
+}
+
+#[test]
+fn qoda_driver_matches_legacy_loop_quantized() {
+    let mut rng = Rng::new(5);
+    let op = QuadraticOperator::random(16, 0.5, &mut rng);
+    let x0 = vec![0.0; 16];
+    let cks = [50usize, 150, 300];
+
+    let mut src_a = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.2 }, 6);
+    let legacy = legacy_qoda(
+        &mut src_a,
+        quant_boxes(16, 6, 2, 10),
+        Box::new(AdaptiveLr::default()),
+        0,
+        &x0,
+        300,
+        &cks,
+    );
+
+    let mut src_b = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.2 }, 6);
+    let mut solver = Qoda::new(
+        &mut src_b,
+        quant_boxes(16, 6, 2, 10),
+        Box::new(AdaptiveLr::default()),
+    );
+    let report = RunDriver::new().checkpoints(&cks).run(&mut solver, &x0, 300);
+    assert_bit_identical(&legacy, &report);
+}
+
+#[test]
+fn qoda_driver_matches_legacy_loop_update_steps() {
+    // explicit update-step set U exercised: the codecs retune mid-run and
+    // the wire bits drift between arms unless the cadence is identical
+    let mut rng = Rng::new(7);
+    let op = QuadraticOperator::random(12, 0.8, &mut rng);
+    let x0 = vec![0.0; 12];
+
+    let mut src_a = OracleSource::new(&op, 3, NoiseModel::Absolute { sigma: 0.3 }, 8);
+    let legacy = legacy_qoda(
+        &mut src_a,
+        quant_boxes(12, 5, 3, 40),
+        Box::new(AltLr::new(0.25)),
+        25,
+        &x0,
+        200,
+        &[200],
+    );
+
+    let mut src_b = OracleSource::new(&op, 3, NoiseModel::Absolute { sigma: 0.3 }, 8);
+    let mut solver = Qoda::new(
+        &mut src_b,
+        quant_boxes(12, 5, 3, 40),
+        Box::new(AltLr::new(0.25)),
+    );
+    solver.update_every = 25;
+    let report = RunDriver::new().checkpoints(&[200]).run(&mut solver, &x0, 200);
+    assert_bit_identical(&legacy, &report);
+}
+
+#[test]
+fn qgenx_driver_matches_legacy_loop() {
+    let mut rng = Rng::new(9);
+    let op = QuadraticOperator::random(16, 0.5, &mut rng);
+    let x0 = vec![0.0; 16];
+    let cks = [100usize, 250];
+
+    let mut src_a = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.2 }, 12);
+    let legacy = legacy_qgenx(
+        &mut src_a,
+        quant_boxes(16, 5, 2, 20),
+        Box::new(AdaptiveLr::default()),
+        &x0,
+        250,
+        &cks,
+    );
+
+    let mut src_b = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.2 }, 12);
+    let mut solver = QGenX::new(
+        &mut src_b,
+        quant_boxes(16, 5, 2, 20),
+        Box::new(AdaptiveLr::default()),
+    );
+    let report = RunDriver::new().checkpoints(&cks).run(&mut solver, &x0, 250);
+    assert_bit_identical(&legacy, &report);
+}
+
+#[test]
+fn adam_driver_matches_legacy_loop() {
+    let mut rng = Rng::new(11);
+    let op = QuadraticOperator::random(8, 0.5, &mut rng);
+    let x0 = vec![0.0; 8];
+
+    let mut src_a = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.1 }, 14);
+    let legacy =
+        legacy_adam(&mut src_a, identity_boxes(2), 0.05, false, &x0, 150);
+
+    let mut src_b = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.1 }, 14);
+    let mut solver = AdamSolver::new(&mut src_b, identity_boxes(2), 0.05);
+    let report = RunDriver::new().run(&mut solver, &x0, 150);
+    assert_bit_identical(&legacy, &report);
+}
+
+#[test]
+fn optimistic_adam_driver_matches_legacy_loop() {
+    let mut rng = Rng::new(13);
+    let op = QuadraticOperator::random(8, 0.5, &mut rng);
+    let x0 = vec![0.0; 8];
+
+    let mut src_a = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.1 }, 16);
+    let legacy =
+        legacy_adam(&mut src_a, quant_boxes(8, 6, 2, 30), 0.05, true, &x0, 150);
+
+    let mut src_b = OracleSource::new(&op, 2, NoiseModel::Absolute { sigma: 0.1 }, 16);
+    let mut solver = OptimisticAdam::new(&mut src_b, quant_boxes(8, 6, 2, 30), 0.05);
+    let report = RunDriver::new().run(&mut solver, &x0, 150);
+    assert_bit_identical(&legacy, &report);
+}
