@@ -10,8 +10,8 @@ use qoda::util::table::save_series_csv;
 
 fn main() -> qoda::util::error::Result<()> {
     let args = Args::from_env();
-    let steps = args.usize_or("steps", 240);
-    let nseeds = args.usize_or("seeds", 2);
+    let steps = args.usize_or("steps", 240)?;
+    let nseeds = args.usize_or("seeds", 2)?;
     let seeds: Vec<u64> = (1..=nseeds as u64).collect();
     println!("Figure 4: {steps} steps x {nseeds} seeds x 3 configurations\n");
     let (summary, rows) = fig4(steps, &seeds)?;

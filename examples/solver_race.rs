@@ -52,10 +52,10 @@ impl<'s> Racer<'s> {
     }
 }
 
-fn main() {
+fn main() -> qoda::util::error::Result<()> {
     let args = Args::from_env();
-    let budget_bits = (args.f64_or("budget-mbits", 4.0) * 1e6) as u64;
-    let k = args.usize_or("k", 4);
+    let budget_bits = (args.f64_or("budget-mbits", 4.0)? * 1e6) as u64;
+    let k = args.usize_or("k", 4)?;
     let d = 12;
 
     let mut op_rng = Rng::new(23);
@@ -149,4 +149,5 @@ fn main() {
         reference.final_gap().unwrap_or(f64::NAN),
         reference.total_bits as f64 / 1e6,
     );
+    Ok(())
 }

@@ -13,7 +13,7 @@ use qoda::util::table::save_series_csv;
 
 fn main() -> qoda::util::error::Result<()> {
     let args = Args::from_env();
-    let steps = args.usize_or("steps", 300);
+    let steps = args.usize_or("steps", 300)?;
     let rt = Runtime::cpu()?;
     let model = WganModel::load(&rt)?;
     println!(
@@ -21,15 +21,15 @@ fn main() -> qoda::util::error::Result<()> {
         model.dim,
         model.meta.layers.len(),
         model.meta.num_types(),
-        args.usize_or("k", 4),
+        args.usize_or("k", 4)?,
     );
     let cfg = GanTrainConfig {
         optimizer: GanOptimizer::OptimisticAdam,
         compression: GanCompression::LayerwiseLGreco { bits: 5, bucket: 128, every: 50 },
-        k_nodes: args.usize_or("k", 4),
+        k_nodes: args.usize_or("k", 4)?,
         steps,
         fid_every: (steps / 12).max(5),
-        seed: args.u64_or("seed", 1),
+        seed: args.u64_or("seed", 1)?,
         ..Default::default()
     };
     let run = train(&model, &cfg)?;

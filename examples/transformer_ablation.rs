@@ -9,8 +9,8 @@ use qoda::util::cli::Args;
 
 fn main() -> qoda::util::error::Result<()> {
     let args = Args::from_env();
-    let steps = args.usize_or("steps", 120);
-    let nseeds = args.usize_or("seeds", 2);
+    let steps = args.usize_or("steps", 120)?;
+    let nseeds = args.usize_or("seeds", 2)?;
     let seeds: Vec<u64> = (1..=nseeds as u64).collect();
     if !args.has("ablation") {
         let t = table3(steps, &[4, 8, 16], &seeds)?;

@@ -1,11 +1,12 @@
 //! Table 2 regenerator bench (weak scaling) + the end-to-end cluster
-//! exchange cost at each node count.
+//! exchange cost at each node count, across topologies.
 
 use qoda::bench_harness::bench;
-use qoda::bench_harness::experiments::table2;
-use qoda::coordinator::sim::ClusterSim;
-use qoda::net::NetworkModel;
+use qoda::bench_harness::experiments::{table2, topology_table};
 use qoda::comm::{Compressor, QuantCompressor};
+use qoda::coordinator::sim::ClusterSim;
+use qoda::coordinator::TopologySpec;
+use qoda::net::NetworkModel;
 use qoda::quant::layer_map::LayerMap;
 use qoda::stats::rng::Rng;
 
@@ -14,19 +15,31 @@ fn main() {
     t.print();
     let _ = t.save_csv("table2.csv");
 
+    // weak scaling with the topology axis (flat / hierarchical / PS)
+    let tt = topology_table(&[4, 8, 12, 16], 5.0);
+    tt.print();
+    let _ = tt.save_csv("topology.csv");
+
     // real codec work per exchange at increasing K (payload per node fixed)
     let d = 1usize << 16;
     for &k in &[4usize, 8] {
-        let map = LayerMap::single(d);
-        let comps: Vec<Box<dyn Compressor>> = (0..k)
-            .map(|i| Box::new(QuantCompressor::global_bits(&map, 5, 128, i as u64)) as _)
-            .collect();
-        let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), false);
-        let mut rng = Rng::new(5);
-        let duals: Vec<Vec<f64>> =
-            (0..k).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect();
-        bench(&format!("cluster_exchange/K={k}/d=64k"), Some((k * d) as u64), || {
-            sim.exchange(&duals).unwrap()
-        });
+        for spec in [TopologySpec::BroadcastAllGather, TopologySpec::hierarchical_for(k)] {
+            let map = LayerMap::single(d);
+            let comps: Vec<Box<dyn Compressor>> = (0..k)
+                .map(|i| {
+                    Box::new(QuantCompressor::global_bits(&map, 5, 128, i as u64)) as _
+                })
+                .collect();
+            let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), false)
+                .with_topology(&spec);
+            let mut rng = Rng::new(5);
+            let duals: Vec<Vec<f64>> =
+                (0..k).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect();
+            bench(
+                &format!("cluster_exchange/{}/K={k}/d=64k", spec.label()),
+                Some((k * d) as u64),
+                || sim.exchange(&duals).unwrap(),
+            );
+        }
     }
 }

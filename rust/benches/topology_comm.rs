@@ -1,0 +1,69 @@
+//! Per-topology comm cost baseline: ns/step (real codec + aggregation work)
+//! and bytes/step (topology-charged wire traffic) for one cluster exchange
+//! under each [`TopologySpec`], plus the modeled per-step comm milliseconds
+//! of the Table 1/2 regime. Emits the machine-readable
+//! `results/BENCH_comm.json` so CI and regression tooling can diff the
+//! numbers without scraping stdout.
+
+use qoda::bench_harness::experiments::topology_sweep;
+use qoda::bench_harness::{bench, JsonBench};
+use qoda::comm::{Compressor, QuantCompressor};
+use qoda::coordinator::sim::ClusterSim;
+use qoda::coordinator::TopologySpec;
+use qoda::net::NetworkModel;
+use qoda::quant::layer_map::LayerMap;
+use qoda::stats::rng::Rng;
+
+fn main() {
+    let mut json = JsonBench::new();
+    let d = 1usize << 16;
+    let k = 8usize;
+    let map = LayerMap::single(d);
+    let mut rng = Rng::new(5);
+    let duals: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect();
+
+    for spec in [
+        TopologySpec::BroadcastAllGather,
+        TopologySpec::hierarchical_for(k),
+        TopologySpec::ParameterServer,
+    ] {
+        let comps: Vec<Box<dyn Compressor>> = (0..k)
+            .map(|i| Box::new(QuantCompressor::global_bits(&map, 5, 128, i as u64)) as _)
+            .collect();
+        let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), false)
+            .with_topology(&spec);
+        let (_, metrics) = sim.exchange(&duals).expect("exchange");
+        let res = bench(
+            &format!("topology/{}/K={k}/d=64k", spec.label()),
+            Some((k * d) as u64),
+            || sim.exchange(&duals).unwrap(),
+        );
+        json.push(
+            &format!("exchange/{}", spec.label()),
+            &[
+                ("k", format!("{k}")),
+                ("ns_per_step", format!("{:.1}", res.mean_ns)),
+                ("bytes_per_step", format!("{:.1}", metrics.wire_bits as f64 / 8.0)),
+                ("modeled_comm_ms", format!("{:.4}", metrics.comm_s * 1e3)),
+            ],
+        );
+    }
+
+    // the weak-scaling regime, per topology, from the calibrated harness
+    for row in topology_sweep(&[4, 8, 12, 16], 5.0) {
+        json.push(
+            &format!("step_time/{}/K={}", row.topology.label(), row.k),
+            &[
+                ("k", format!("{}", row.k)),
+                ("baseline_ms", format!("{:.2}", row.baseline_ms)),
+                ("qoda5_ms", format!("{:.2}", row.qoda5_ms)),
+            ],
+        );
+    }
+
+    match json.save("BENCH_comm.json") {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_comm.json: {e}"),
+    }
+}

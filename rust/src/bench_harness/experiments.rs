@@ -7,6 +7,7 @@ use crate::coding::protocol::{
     encoded_bits, symbol_counts, Codebooks, ProtocolKind,
 };
 use crate::comm::{Compressor, QuantCompressor};
+use crate::coordinator::topology::{rack_spans, TopologySpec, Transport};
 use crate::net::{Collective, NetworkModel};
 use crate::oda::{
     CompressionSpec, ConstantLr, GapMode, LrSpec, OperatorSpec, Qoda, RunDriver,
@@ -86,6 +87,107 @@ pub fn step_time_ms(k: usize, bandwidth_gbps: f64, qoda5: bool, bytes_per_coord:
         let sync = BASELINE_SYNC_MS_PER_PEER * (k as f64 - 1.0);
         compute + sync + wire
     }
+}
+
+/// Peers a node synchronizes with per step under a topology (the fp32
+/// baseline's per-peer sync overhead): all K-1 under flat broadcast, rack
+/// peers + rack leaders under hierarchical, just the hub under a parameter
+/// server.
+fn sync_peers(topo: &TopologySpec, k: usize) -> usize {
+    match *topo {
+        TopologySpec::BroadcastAllGather => k.saturating_sub(1),
+        TopologySpec::Hierarchical { racks } => {
+            // racks = 0 resolves to the conventional K/4 layout, mirroring
+            // `Hierarchical::charge`
+            let racks = if racks == 0 { (k / 4).max(2) } else { racks };
+            let spans = rack_spans(k, racks);
+            let m = spans.iter().map(|&(s, e)| e - s).max().unwrap_or(1);
+            (m - 1) + spans.len().saturating_sub(1)
+        }
+        TopologySpec::ParameterServer => 1,
+    }
+}
+
+/// [`step_time_ms`] under an arbitrary topology: the same calibrated
+/// compute/codec/sync constants, with the wire phase routed and charged by
+/// the topology's [`Transport`](crate::coordinator::topology::Transport)
+/// over the heterogeneous-link network model. For
+/// [`TopologySpec::BroadcastAllGather`] this reproduces [`step_time_ms`].
+pub fn step_time_ms_topo(
+    k: usize,
+    bandwidth_gbps: f64,
+    qoda5: bool,
+    bytes_per_coord: f64,
+    topo: &TopologySpec,
+) -> f64 {
+    let net = NetworkModel::genesis_cloud(bandwidth_gbps);
+    let compute = COMPUTE_A_MS + COMPUTE_B_MS / k as f64;
+    let coords = (PAYLOAD_BYTES / 4.0) as usize;
+    let mut transport = topo.build();
+    let mut rng = Rng::new(1);
+    if qoda5 {
+        let bits = vec![(coords as f64 * bytes_per_coord * 8.0) as u64; k];
+        let charge = transport.charge(&bits, coords, &net, false, true, &mut rng);
+        compute + QODA_CODEC_MS + charge.comm_s * 1e3
+    } else {
+        let bits = vec![(PAYLOAD_BYTES * 8.0) as u64; k];
+        let charge = transport.charge(&bits, coords, &net, true, true, &mut rng);
+        let sync = BASELINE_SYNC_MS_PER_PEER * sync_peers(topo, k) as f64;
+        compute + sync + charge.comm_s * 1e3
+    }
+}
+
+/// One (K, topology) cell of the weak-scaling topology sweep.
+pub struct TopologySweepRow {
+    pub k: usize,
+    pub topology: TopologySpec,
+    pub baseline_ms: f64,
+    pub qoda5_ms: f64,
+}
+
+/// The weak-scaling regime across all three topologies: per node count,
+/// step time for the fp32 baseline and QODA5 under flat broadcast,
+/// hierarchical (K/4 racks) and parameter-server routing. Drives the
+/// `topology_sweep` example and the `BENCH_comm.json` emitter.
+pub fn topology_sweep(ks: &[usize], bandwidth_gbps: f64) -> Vec<TopologySweepRow> {
+    let bpc = measure_qoda5_bytes_per_coord(1 << 16, 42);
+    let mut rows = Vec::new();
+    for &k in ks {
+        for spec in [
+            TopologySpec::BroadcastAllGather,
+            TopologySpec::hierarchical_for(k),
+            TopologySpec::ParameterServer,
+        ] {
+            rows.push(TopologySweepRow {
+                k,
+                topology: spec,
+                baseline_ms: step_time_ms_topo(k, bandwidth_gbps, false, bpc, &spec),
+                qoda5_ms: step_time_ms_topo(k, bandwidth_gbps, true, bpc, &spec),
+            });
+        }
+    }
+    rows
+}
+
+/// Render [`topology_sweep`] as a table (the weak-scaling Table 2 with a
+/// topology axis).
+pub fn topology_table(ks: &[usize], bandwidth_gbps: f64) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Weak scaling x topology — time per step (ms), {bandwidth_gbps} Gbps cross-rack"
+        ),
+        &["K", "topology", "baseline", "QODA5", "speedup"],
+    );
+    for row in topology_sweep(ks, bandwidth_gbps) {
+        t.row(&[
+            format!("{}", row.k),
+            row.topology.label().to_string(),
+            format!("{:.0}", row.baseline_ms),
+            format!("{:.0}", row.qoda5_ms),
+            format!("{:.2}x", row.baseline_ms / row.qoda5_ms),
+        ]);
+    }
+    t
 }
 
 /// Table 1: time per optimization step vs inter-node bandwidth (K = 4).
@@ -532,6 +634,45 @@ mod tests {
         assert!(q12 < q4, "QODA should scale with K: {q4} -> {q12}");
         let speedup12 = b12 / q12;
         assert!(speedup12 > 2.0, "12-node speedup {speedup12} (paper: 2.5x)");
+    }
+
+    #[test]
+    fn flat_topology_reproduces_the_flat_step_time() {
+        let bpc = measure_qoda5_bytes_per_coord(1 << 16, 1);
+        let flat = TopologySpec::BroadcastAllGather;
+        for k in [4usize, 12] {
+            for qoda5 in [false, true] {
+                let a = step_time_ms(k, 5.0, qoda5, bpc);
+                let b = step_time_ms_topo(k, 5.0, qoda5, bpc, &flat);
+                assert!((a - b).abs() < 1e-3, "k={k} qoda5={qoda5}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_beats_broadcast_at_scale() {
+        // the acceptance regime: under the heterogeneous-link model the
+        // two-level topology wins at K >= 12, for the fp32 baseline and
+        // for QODA5 alike
+        let bpc = measure_qoda5_bytes_per_coord(1 << 16, 1);
+        for k in [12usize, 16] {
+            let hier = TopologySpec::hierarchical_for(k);
+            let flat = TopologySpec::BroadcastAllGather;
+            for qoda5 in [false, true] {
+                let t_flat = step_time_ms_topo(k, 5.0, qoda5, bpc, &flat);
+                let t_hier = step_time_ms_topo(k, 5.0, qoda5, bpc, &hier);
+                assert!(
+                    t_hier < t_flat,
+                    "K={k} qoda5={qoda5}: hier {t_hier} vs flat {t_flat}"
+                );
+            }
+        }
+        // and the parameter-server hub collapses under weak scaling
+        let ps16 =
+            step_time_ms_topo(16, 5.0, false, bpc, &TopologySpec::ParameterServer);
+        let flat16 =
+            step_time_ms_topo(16, 5.0, false, bpc, &TopologySpec::BroadcastAllGather);
+        assert!(ps16 > flat16, "{ps16} vs {flat16}");
     }
 
     #[test]

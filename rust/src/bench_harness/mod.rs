@@ -87,5 +87,87 @@ pub fn bench<T>(name: &str, elems: Option<u64>, mut f: impl FnMut() -> T) -> Ben
     res
 }
 
+/// Machine-readable bench sink: collects named records and writes them as a
+/// JSON array under `results/` (hand-rolled — the environment is offline,
+/// no serde). The comm benches emit `BENCH_comm.json` through this so CI
+/// and regression tooling can diff ns/step + bytes/step per topology
+/// without scraping stdout.
+#[derive(Default)]
+pub struct JsonBench {
+    entries: Vec<String>,
+}
+
+impl JsonBench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one record; `fields` are (key, already-JSON-encoded value)
+    /// pairs appended after `"name"`. The name is JSON-escaped.
+    pub fn push(&mut self, name: &str, fields: &[(&str, String)]) {
+        let escaped: String = name
+            .chars()
+            .flat_map(|c| match c {
+                '\\' => "\\\\".chars().collect::<Vec<_>>(),
+                '"' => "\\\"".chars().collect(),
+                c if (c as u32) < 0x20 => {
+                    format!("\\u{:04x}", c as u32).chars().collect()
+                }
+                c => vec![c],
+            })
+            .collect();
+        let mut obj = format!("{{\"name\":\"{escaped}\"");
+        for (k, v) in fields {
+            obj.push_str(&format!(",\"{k}\":{v}"));
+        }
+        obj.push('}');
+        self.entries.push(obj);
+    }
+
+    /// Convenience for the common (ns/step, bytes/step) record shape.
+    pub fn push_perf(&mut self, name: &str, ns_per_step: f64, bytes_per_step: f64) {
+        self.push(
+            name,
+            &[
+                ("ns_per_step", format!("{ns_per_step:.1}")),
+                ("bytes_per_step", format!("{bytes_per_step:.1}")),
+            ],
+        );
+    }
+
+    pub fn to_json(&self) -> String {
+        format!("[\n  {}\n]\n", self.entries.join(",\n  "))
+    }
+
+    /// Write under `results/` (created on demand); returns the path.
+    pub fn save(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = crate::util::repo_path("results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(name);
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_bench_renders_valid_records() {
+        let mut j = JsonBench::new();
+        j.push_perf("comm/flat", 1234.5, 8192.0);
+        j.push(
+            "comm/hier",
+            &[("ns_per_step", "10.0".into()), ("k", "8".into())],
+        );
+        let s = j.to_json();
+        assert!(s.starts_with("[\n"));
+        assert!(s.contains("{\"name\":\"comm/flat\",\"ns_per_step\":1234.5,\"bytes_per_step\":8192.0}"));
+        assert!(s.contains("\"k\":8"));
+        assert!(s.trim_end().ends_with(']'));
+    }
+}
+
 pub mod experiments;
 pub mod model_experiments;

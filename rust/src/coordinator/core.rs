@@ -1,0 +1,81 @@
+//! The decode-aggregate core both engines (and every topology) share.
+//!
+//! Historically `sim.rs` and `parallel.rs` each carried a private copy of
+//! the "decode every node's packet, fold into the running mean" loop. The
+//! copies had to stay float-for-float identical for the engines' parity
+//! guarantee to hold, which made every transport change a two-file edit.
+//! This module is now the single owner of that loop: the aggregation rule
+//! is *node order, one running mean, `v / k` folds* — so aggregates are
+//! bit-identical across engines **and** topologies by construction, because
+//! nothing topology-specific can touch the arithmetic.
+
+use crate::comm::CommError;
+
+/// Decode every node's payload in node order and fold it into `mean`.
+///
+/// `decode(node, out)` materializes node `node`'s decoded vector into
+/// `out` — the sim engine decodes through each node's own endpoint, the
+/// threaded engine through the leader's synchronized codec; both produce
+/// identical values, and this function owns the (order-sensitive) float
+/// accumulation they share.
+pub fn decode_aggregate_into(
+    k: usize,
+    d: usize,
+    mean: &mut Vec<f64>,
+    scratch: &mut Vec<f64>,
+    mut decode: impl FnMut(usize, &mut Vec<f64>) -> Result<(), CommError>,
+) -> Result<(), CommError> {
+    mean.clear();
+    mean.resize(d, 0.0);
+    let kf = k as f64;
+    for node in 0..k {
+        decode(node, scratch)?;
+        for (m, v) in mean.iter_mut().zip(scratch.iter()) {
+            *m += v / kf;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_in_node_order() {
+        let inputs = [vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut mean = Vec::new();
+        let mut scratch = Vec::new();
+        decode_aggregate_into(3, 2, &mut mean, &mut scratch, |node, out| {
+            out.clear();
+            out.extend_from_slice(&inputs[node]);
+            Ok(())
+        })
+        .unwrap();
+        // the exact float fold the engines are parity-tested on
+        let want: Vec<f64> = (0..2)
+            .map(|i| {
+                let mut m = 0.0;
+                for v in &inputs {
+                    m += v[i] / 3.0;
+                }
+                m
+            })
+            .collect();
+        assert_eq!(mean, want);
+    }
+
+    #[test]
+    fn decode_error_propagates() {
+        let mut mean = Vec::new();
+        let mut scratch = Vec::new();
+        let err = decode_aggregate_into(2, 4, &mut mean, &mut scratch, |node, _| {
+            if node == 1 {
+                Err(CommError::DimMismatch { want: 4, got: 3 })
+            } else {
+                Ok(())
+            }
+        });
+        assert_eq!(err, Err(CommError::DimMismatch { want: 4, got: 3 }));
+    }
+}

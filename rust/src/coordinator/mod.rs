@@ -1,37 +1,53 @@
 //! L3 distributed coordinator: the data-parallel synchronous engine of
 //! Section 3.1 — K nodes, each holding a local parameter copy and a private
 //! stochastic oracle; per step every node quantizes + entropy-codes its dual
-//! vector, broadcasts it, decodes the others and applies the identical
-//! (ODA) update.
+//! vector, the topology routes it, decodes the others and applies the
+//! identical (ODA) update.
 //!
-//! All wire traffic flows through the `crate::comm` subsystem: each node's
-//! [`comm::CommEndpoint`](crate::comm::CommEndpoint) encodes its dual into a
-//! real [`comm::WirePacket`](crate::comm::WirePacket) (entropy-coded
-//! payload + per-layer bit offsets + exact bit count), and decodes received
-//! packets through the same codec. The engines here are *thin transports*
-//! over that shared pipeline — they never re-implement encode/decode and
-//! they charge the network model with the packet's actual byte count, so
-//! wire-size accounting cannot drift from protocol semantics.
+//! The stack is split into three orthogonal layers:
 //!
-//! Two engines share the same step math and the same packets:
-//!  * `sim`      — deterministic in-process engine with a simulated network
-//!                 clock (drives the Table 1/2 harnesses and the GAN/LM
-//!                 trainers backed by the native model runtime);
-//!  * `parallel` — real `std::thread` workers shipping `WirePacket`s over
-//!                 channels, with the leader decoding in node order
-//!                 (exercises the actual concurrency for VI-operator
-//!                 sources; integration-tested for bit-identical aggregates
-//!                 *and identical wire bit counts* against `sim` across
-//!                 both protocols and multiple seeds).
+//! * **Packets** — all wire traffic flows through the `crate::comm`
+//!   subsystem: each node's [`comm::CommEndpoint`](crate::comm::CommEndpoint)
+//!   encodes its dual into a real [`comm::WirePacket`](crate::comm::WirePacket)
+//!   (entropy-coded payload + per-layer bit offsets + exact bit count) and
+//!   decodes received packets through the same codec.
+//! * **Aggregation** — [`core`] owns the one decode-aggregate rule (node
+//!   order, `v / k` folds). Both engines call it, so aggregates are
+//!   bit-identical across engines and topologies *by construction*.
+//! * **Topology** — [`topology`] is the pluggable transport layer: a
+//!   [`Transport`] is a routing/charging plan over the per-node packets,
+//!   selected by a [`TopologySpec`] that travels through `RunSpec`, the
+//!   `qoda run` CLI and the bench harnesses. Three ship today:
+//!   broadcast-allgather (flat ring collectives — the original behavior,
+//!   golden-parity tested), hierarchical two-level aggregation (rack-local
+//!   gather over fast PCIe-class links, leaders-only cross-rack exchange),
+//!   and a parameter-server hub. Each is charged against the heterogeneous
+//!   link classes and injectable stragglers of
+//!   [`net::NetworkModel`](crate::net::NetworkModel).
+//!
+//! Two engines consume the same packets through the same core:
+//!
+//! * `sim`      — deterministic in-process engine with a simulated network
+//!                clock (drives the Table 1/2 harnesses and the GAN/LM
+//!                trainers backed by the native model runtime);
+//! * `parallel` — real `std::thread` workers shipping `WirePacket`s over
+//!                channels, with the leader decoding in node order
+//!                (exercises the actual concurrency for VI-operator
+//!                sources; integration-tested for bit-identical aggregates
+//!                *and identical wire bit counts* against `sim` across all
+//!                topologies, both protocols and multiple seeds).
 //!
 //! Decode failures surface as `comm::CommError` from both engines — corrupt
-//! wire bytes can never panic the coordinator. Future transports (sharded /
-//! async allgather, multi-backend collectives) slot in as new consumers of
-//! the same packets rather than engine forks.
+//! wire bytes can never panic the coordinator. A new transport is a new
+//! [`Transport`] implementation (one file), not an engine fork: the engines
+//! never see topology internals, only the [`WireCharge`] they are billed.
 
+pub mod core;
 pub mod metrics;
 pub mod parallel;
 pub mod sim;
+pub mod topology;
 
 pub use metrics::StepMetrics;
 pub use sim::{ClusterSim, StepTimeModel};
+pub use topology::{TopologySpec, Transport, WireCharge};

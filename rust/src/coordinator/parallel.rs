@@ -2,7 +2,9 @@
 //! [`WirePacket`]s over channels. Each worker owns its oracle plus a
 //! `crate::comm` codec; the leader decodes every payload through the same
 //! pipeline, exactly as a receiving node would — there is no engine-local
-//! copy of the encode/decode plumbing.
+//! copy of the encode/decode plumbing, and the (order-sensitive) aggregate
+//! fold is the shared [`super::core`] one, so this engine is bit-identical
+//! to the sim engine under every topology.
 //!
 //! Used by the VI-operator workloads (operators are `Sync`); the model-
 //! backed sources run on the `sim` engine instead. Integration tests assert
@@ -10,10 +12,14 @@
 //! engines under the same seeds — replies are therefore aggregated in node
 //! order, not arrival order.
 
+use super::core::decode_aggregate_into;
+use super::topology::{TopologySpec, Transport};
 use crate::coding::protocol::ProtocolKind;
 use crate::comm::{Adaptation, CommError, Compressor, QuantCompressor, WirePacket};
+use crate::net::NetworkModel;
 use crate::quant::layer_map::LayerMap;
 use crate::quant::QuantConfig;
+use crate::stats::rng::Rng;
 use crate::vi::noise::{NoiseModel, Oracle};
 use crate::vi::operator::Operator;
 use std::sync::mpsc;
@@ -64,13 +70,30 @@ pub fn worker_codec_seed(seed: u64, node: usize) -> u64 {
     seed.wrapping_add(node as u64 * 7919 + 13)
 }
 
+/// What [`run_rounds_over`] produced, including the topology's accounting.
+pub struct RoundsReport {
+    /// final iterate
+    pub x: Vec<f64>,
+    /// total wire bits charged by the topology across all rounds
+    pub wire_bits: u64,
+    /// mean decoded vector of the last round
+    pub last_mean: Vec<f64>,
+    /// simulated network-clock seconds accumulated across rounds
+    pub comm_s: f64,
+}
+
 /// Run `steps` rounds of the distributed exchange with `k` worker threads:
 /// at each round the leader broadcasts the query point, every worker samples
 /// its oracle and encodes a wire packet via the shared comm pipeline; the
-/// leader decodes all payloads (in node order), averages and applies
-/// `update` to produce the next query point.
+/// leader decodes all payloads (in node order, through the shared
+/// decode-aggregate core), averages and applies `update` to produce the
+/// next query point.
 ///
-/// Returns (final x, total wire bits, mean decoded vector of the last round).
+/// Returns (final x, total wire bits, mean decoded vector of the last
+/// round), charging wire bits as the flat broadcast-allgather topology does
+/// (each packet counted once). For other topologies and the network clock
+/// use [`run_rounds_over`].
+#[allow(clippy::too_many_arguments)]
 pub fn run_rounds(
     op: &dyn Operator,
     noise: NoiseModel,
@@ -79,19 +102,55 @@ pub fn run_rounds(
     x0: Vec<f64>,
     steps: usize,
     seed: u64,
-    mut update: impl FnMut(&mut Vec<f64>, &[f64], usize),
+    update: impl FnMut(&mut Vec<f64>, &[f64], usize),
 ) -> Result<(Vec<f64>, u64, Vec<f64>), CommError> {
+    let report = run_rounds_over(
+        op,
+        noise,
+        k,
+        state,
+        x0,
+        steps,
+        seed,
+        &TopologySpec::BroadcastAllGather,
+        &NetworkModel::genesis_cloud(5.0),
+        update,
+    )?;
+    Ok((report.x, report.wire_bits, report.last_mean))
+}
+
+/// [`run_rounds`] under an arbitrary [`TopologySpec`]: the same threaded
+/// exchange, with the topology routing/charging each round's packets
+/// against `net`. The iterates and aggregates are identical under every
+/// topology (the aggregate math lives in the shared core); only `wire_bits`
+/// and `comm_s` differ.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rounds_over(
+    op: &dyn Operator,
+    noise: NoiseModel,
+    k: usize,
+    state: &SharedQuantState,
+    x0: Vec<f64>,
+    steps: usize,
+    seed: u64,
+    topology: &TopologySpec,
+    net: &NetworkModel,
+    mut update: impl FnMut(&mut Vec<f64>, &[f64], usize),
+) -> Result<RoundsReport, CommError> {
     let d = op.dim();
     assert_eq!(x0.len(), d);
     // the leader decodes with the same synchronized state (its RNG seed is
     // irrelevant: decode draws no randomness)
     let mut decoder = state.codec(0);
     let mut decoded = Vec::with_capacity(d);
+    let mut transport = topology.build();
+    let mut charge_rng = Rng::new(seed ^ 0x7A11);
 
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
 
     let mut x = x0;
-    let mut total_bits = 0u64;
+    let mut wire_bits = 0u64;
+    let mut comm_s = 0.0f64;
     let mut last_mean = vec![0.0; d];
 
     let result: Result<(), CommError> = std::thread::scope(|scope| {
@@ -116,6 +175,7 @@ pub fn run_rounds(
         }
         drop(reply_tx);
 
+        let mut mean = Vec::with_capacity(d);
         for t in 1..=steps {
             for tx in &to_workers {
                 tx.send(Cmd::Eval(x.clone())).expect("worker alive");
@@ -127,17 +187,26 @@ pub fn run_rounds(
                 let r = reply_rx.recv().expect("reply");
                 slots[r.node] = Some(r.packet);
             }
-            let mut mean = vec![0.0; d];
-            for slot in &slots {
-                let packet = slot.as_ref().expect("one packet per node");
-                total_bits += packet.len_bits() as u64;
-                decoder.decode_into(packet, &mut decoded)?;
-                for (m, v) in mean.iter_mut().zip(&decoded) {
-                    *m += v / k as f64;
-                }
-            }
+            let bits: Vec<u64> = slots
+                .iter()
+                .map(|s| s.as_ref().expect("one packet per node").len_bits() as u64)
+                .collect();
+            decode_aggregate_into(k, d, &mut mean, &mut decoded, |node, out| {
+                let packet = slots[node].as_ref().expect("one packet per node");
+                decoder.decode_into(packet, out)
+            })?;
+            let charge = transport.charge(
+                &bits,
+                d,
+                net,
+                false,
+                state.protocol == ProtocolKind::Main,
+                &mut charge_rng,
+            );
+            wire_bits += charge.wire_bits;
+            comm_s += charge.comm_s;
             update(&mut x, &mean, t);
-            last_mean = mean;
+            last_mean.clone_from(&mean);
         }
         for tx in &to_workers {
             let _ = tx.send(Cmd::Stop);
@@ -146,7 +215,7 @@ pub fn run_rounds(
     });
     result?;
 
-    Ok((x, total_bits, last_mean))
+    Ok(RoundsReport { x, wire_bits, last_mean, comm_s })
 }
 
 #[cfg(test)]
@@ -245,5 +314,41 @@ mod tests {
         for (m, t) in mean.iter().zip(&a) {
             assert!((m - t).abs() < 0.05 * t.abs().max(1.0), "{m} vs {t}");
         }
+    }
+
+    #[test]
+    fn topologies_agree_on_iterates_and_charge_the_clock() {
+        let mut rng = Rng::new(5);
+        let op = QuadraticOperator::random(8, 0.5, &mut rng);
+        let st = state(8, 5);
+        let net = NetworkModel::genesis_cloud(5.0);
+        let run = |spec: &TopologySpec| {
+            run_rounds_over(
+                &op,
+                NoiseModel::Absolute { sigma: 0.2 },
+                6,
+                &st,
+                vec![0.1; 8],
+                3,
+                17,
+                spec,
+                &net,
+                |x, mean, _| {
+                    for (xi, g) in x.iter_mut().zip(mean) {
+                        *xi -= 0.05 * g;
+                    }
+                },
+            )
+            .unwrap()
+        };
+        let flat = run(&TopologySpec::BroadcastAllGather);
+        let hier = run(&TopologySpec::Hierarchical { racks: 3 });
+        let ps = run(&TopologySpec::ParameterServer);
+        assert_eq!(flat.x, hier.x);
+        assert_eq!(flat.x, ps.x);
+        assert_eq!(flat.last_mean, hier.last_mean);
+        assert!(hier.wire_bits > flat.wire_bits);
+        assert!(ps.wire_bits > flat.wire_bits);
+        assert!(flat.comm_s > 0.0 && hier.comm_s > 0.0 && ps.comm_s > 0.0);
     }
 }

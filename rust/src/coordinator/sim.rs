@@ -1,16 +1,19 @@
 //! Deterministic cluster engine with a simulated network clock.
 //!
-//! The engine is a thin transport over the shared `crate::comm` pipeline:
-//! each node's [`CommEndpoint`] encodes its dual vector into a real
-//! [`WirePacket`](crate::comm::WirePacket), the engine charges the network
-//! model with the packet's *actual* byte count (never a codec self-report),
-//! decodes it exactly as a receiving node would, and aggregates. The
-//! optimizer logic (ODA / Adam / SGD) lives in the drivers that call
-//! `exchange` each step.
+//! The engine is a thin transport consumer over the shared `crate::comm`
+//! pipeline: each node's [`CommEndpoint`] encodes its dual vector into a
+//! real [`WirePacket`](crate::comm::WirePacket), the decode-aggregate core
+//! ([`super::core`]) folds the decoded packets in node order, and the
+//! pluggable [`Transport`] (broadcast-allgather by default; hierarchical or
+//! parameter-server via [`ClusterSim::with_topology`]) charges the network
+//! model with the packets' *actual* byte counts. The optimizer logic
+//! (ODA / Adam / SGD) lives in the drivers that call `exchange` each step.
 
+use super::core::decode_aggregate_into;
 use super::metrics::StepMetrics;
+use super::topology::{TopologySpec, Transport};
 use crate::comm::{CommEndpoint, CommError, Compressor};
-use crate::net::{Collective, NetworkModel};
+use crate::net::NetworkModel;
 use crate::stats::rng::Rng;
 use std::time::Instant;
 
@@ -31,6 +34,7 @@ pub struct ClusterSim {
     pub uncompressed_collective: bool,
     /// Main (shared-codeword) vs Alternating protocol for jitter accounting
     pub main_protocol: bool,
+    topology: Box<dyn Transport>,
     rng: Rng,
     /// decode scratch, reused across nodes and steps
     decoded: Vec<f64>,
@@ -47,9 +51,21 @@ impl ClusterSim {
             net,
             uncompressed_collective,
             main_protocol: true,
+            topology: TopologySpec::BroadcastAllGather.build(),
             rng: Rng::new(0xC0FFEE),
             decoded: Vec::new(),
         }
+    }
+
+    /// Swap in a different communication topology (default:
+    /// broadcast-allgather, the pre-topology behavior).
+    pub fn with_topology(mut self, spec: &TopologySpec) -> Self {
+        self.topology = spec.build();
+        self
+    }
+
+    pub fn topology_spec(&self) -> TopologySpec {
+        self.topology.spec()
     }
 
     pub fn k(&self) -> usize {
@@ -61,47 +77,45 @@ impl ClusterSim {
     }
 
     /// One synchronous exchange: every node encodes its dual vector into a
-    /// wire packet, "broadcasts" it, everyone decodes and averages. Returns
-    /// the mean decoded vector plus codec/wire timing on the real encoded
-    /// byte counts.
+    /// wire packet, the topology routes and charges the packets, everyone
+    /// decodes and averages (in node order, via the shared decode-aggregate
+    /// core — the aggregate is identical under every topology). Returns the
+    /// mean decoded vector plus codec/wire timing on the real encoded byte
+    /// counts.
     pub fn exchange(&mut self, duals: &[Vec<f64>]) -> Result<(Vec<f64>, StepMetrics), CommError> {
         assert_eq!(duals.len(), self.endpoints.len());
         let k = duals.len();
         let d = duals[0].len();
         let t0 = Instant::now();
-        let mut mean = vec![0.0; d];
-        let mut bytes = Vec::with_capacity(k);
-        let mut wire_bits = 0u64;
+        // ENC every node's dual onto the wire; the packet's bit count is
+        // the one truth
+        let mut bits = Vec::with_capacity(k);
         for (ep, dual) in self.endpoints.iter_mut().zip(duals) {
-            // ENC onto the wire; the packet's bit count is the one truth
-            let bits = ep.send(dual);
-            wire_bits += bits as u64;
-            bytes.push(bits as f64 / 8.0);
-            // DEC as every receiving node would
-            ep.recv_into(&mut self.decoded)?;
-            for (m, v) in mean.iter_mut().zip(&self.decoded) {
-                *m += v / k as f64;
-            }
+            bits.push(ep.send(dual) as u64);
         }
+        // DEC as every receiving node would, folding in node order
+        let mut mean = Vec::with_capacity(d);
+        let endpoints = &mut self.endpoints;
+        decode_aggregate_into(k, d, &mut mean, &mut self.decoded, |node, out| {
+            endpoints[node].recv_into(out)
+        })?;
         let codec_s = t0.elapsed().as_secs_f64();
-        let kind = if self.uncompressed_collective {
-            Collective::RingAllReduce
-        } else {
-            Collective::RingAllGather
-        };
-        let comm_s = self.net.sample_collective_seconds(
-            kind,
-            &bytes,
+        let charge = self.topology.charge(
+            &bits,
+            d,
+            &self.net,
+            self.uncompressed_collective,
             self.main_protocol,
             &mut self.rng,
         );
+        let payload_bits: u64 = bits.iter().sum();
         let metrics = StepMetrics {
             step: 0,
             compute_s: 0.0,
             codec_s,
-            comm_s,
-            bytes_per_node: bytes.iter().sum::<f64>() / k as f64,
-            wire_bits,
+            comm_s: charge.comm_s,
+            bytes_per_node: payload_bits as f64 / 8.0 / k as f64,
+            wire_bits: charge.wire_bits,
             scalars: Vec::new(),
         };
         Ok((mean, metrics))
@@ -197,5 +211,39 @@ mod tests {
         let (m1, _) = ClusterSim::new(mk(), net.clone(), false).exchange(&ds).unwrap();
         let (m2, _) = ClusterSim::new(mk(), net, false).exchange(&ds).unwrap();
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn topologies_share_the_aggregate_but_not_the_charge() {
+        let map = LayerMap::single(512);
+        let mk = || -> Vec<Box<dyn Compressor>> {
+            (0..6)
+                .map(|i| {
+                    Box::new(QuantCompressor::global_bits(&map, 5, 128, 40 + i as u64))
+                        as _
+                })
+                .collect()
+        };
+        let net = NetworkModel::genesis_cloud(5.0);
+        let ds = duals(6, 512, 11);
+        let mut outs = Vec::new();
+        for spec in [
+            TopologySpec::BroadcastAllGather,
+            TopologySpec::Hierarchical { racks: 3 },
+            TopologySpec::ParameterServer,
+        ] {
+            let mut sim =
+                ClusterSim::new(mk(), net.clone(), false).with_topology(&spec);
+            assert_eq!(sim.topology_spec(), spec);
+            outs.push(sim.exchange(&ds).unwrap());
+        }
+        // bit-identical aggregates under every topology...
+        assert_eq!(outs[0].0, outs[1].0);
+        assert_eq!(outs[0].0, outs[2].0);
+        // ...but distinct wire-bit totals (the routing differs)
+        assert!(outs[1].1.wire_bits > outs[0].1.wire_bits);
+        assert!(outs[2].1.wire_bits > outs[0].1.wire_bits);
+        // payload-per-node metric is topology-independent
+        assert_eq!(outs[0].1.bytes_per_node, outs[1].1.bytes_per_node);
     }
 }

@@ -1,0 +1,498 @@
+//! Pluggable communication topologies: how `WirePacket`s move through the
+//! cluster, and what that routing costs on the simulated network clock.
+//!
+//! A [`Transport`] is a *routing and charging plan* over the per-node
+//! packets the `crate::comm` pipeline produces. It deliberately does **not**
+//! own any decode or aggregation math — that lives in
+//! [`super::core::decode_aggregate_into`] and is identical for every
+//! topology, which is what makes aggregates bit-identical across topologies
+//! and engines by construction. Topologies differ only in:
+//!
+//! * **wire bits** — how many payload bits actually cross links, per the
+//!   per-topology analytic formulas documented on each implementation
+//!   (pinned by `tests/topology_equivalence.rs`);
+//! * **network-clock seconds** — which link class (cross-rack vs rack-local,
+//!   see [`NetworkModel`]) each phase is charged against, which phases pay
+//!   incast/straggler penalties, and which carry the entropy-coded payloads
+//!   that the jitter model (Remark D.3) taxes.
+//!
+//! Three topologies ship:
+//!
+//! * [`BroadcastAllGather`] — every node broadcasts its packet to every
+//!   other node over the cross-rack network (today's ring collectives;
+//!   golden-parity tested against the pre-topology engines);
+//! * [`Hierarchical`] — two-level aggregation as on real multi-GPU nodes:
+//!   rack-local gather onto a rack leader over fast PCIe-class links, a
+//!   leaders-only cross-rack exchange, then a rack-local broadcast down;
+//! * [`ParameterServer`] — a hub ingests all K packets and unicasts the
+//!   fp32 aggregate back, serializing on its egress link (the classic PS
+//!   scaling wall).
+
+use crate::net::{Collective, NetworkModel};
+use crate::stats::rng::Rng;
+
+/// Fixed software launch/synchronization cost charged per phase of a
+/// multi-phase topology (collective setup, leader coordination):
+/// hierarchical pays 3x (up / cross / down), the parameter server 2x
+/// (up / down). The flat broadcast topology pays none — its single
+/// collective's setup cost is already absorbed in the calibrated constants
+/// of the flat collective model, and charging it again would break golden
+/// parity with the pre-topology engines.
+pub const PHASE_SETUP_MS: f64 = 0.25;
+
+/// Declarative description of a topology — the value that travels through
+/// `RunSpec`, the `qoda run` CLI and the bench harnesses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologySpec {
+    /// every node broadcasts to every other node (flat ring collectives)
+    BroadcastAllGather,
+    /// two-level: rack-local reduce/gather, cross-rack exchange between
+    /// rack leaders, rack-local broadcast down
+    Hierarchical { racks: usize },
+    /// all packets to one hub; the hub unicasts the fp32 aggregate back
+    ParameterServer,
+}
+
+impl TopologySpec {
+    /// Build the transport this spec describes.
+    pub fn build(&self) -> Box<dyn Transport> {
+        match *self {
+            TopologySpec::BroadcastAllGather => Box::new(BroadcastAllGather),
+            TopologySpec::Hierarchical { racks } => Box::new(Hierarchical { racks }),
+            TopologySpec::ParameterServer => Box::new(ParameterServer),
+        }
+    }
+
+    /// The conventional rack layout for a K-node cluster of 4-GPU machines:
+    /// K/4 racks (at least two, so a cross-rack phase always exists).
+    pub fn hierarchical_for(k: usize) -> TopologySpec {
+        TopologySpec::Hierarchical { racks: (k / 4).max(2) }
+    }
+
+    /// Parse a CLI name (`--topology`). `racks` feeds the hierarchical
+    /// variant; 0 is a "resolve at runtime" sentinel — the transport falls
+    /// back to the conventional K/4 layout of
+    /// [`TopologySpec::hierarchical_for`] once it sees the node count, so
+    /// an unresolved spec never degenerates to a single free-cross-phase
+    /// rack. Callers that know K may still resolve it eagerly.
+    pub fn parse(name: &str, racks: usize) -> Option<TopologySpec> {
+        match name {
+            "flat" | "broadcast" | "allgather" | "broadcast-allgather" => {
+                Some(TopologySpec::BroadcastAllGather)
+            }
+            "hier" | "hierarchical" | "two-level" => {
+                Some(TopologySpec::Hierarchical { racks })
+            }
+            "ps" | "hub" | "param-server" | "parameter-server" => {
+                Some(TopologySpec::ParameterServer)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TopologySpec::BroadcastAllGather => "broadcast-allgather",
+            TopologySpec::Hierarchical { .. } => "hierarchical",
+            TopologySpec::ParameterServer => "param-server",
+        }
+    }
+}
+
+/// What one synchronous exchange cost under a topology.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireCharge {
+    /// payload bits that crossed links, per the topology's analytic formula
+    pub wire_bits: u64,
+    /// simulated network-clock seconds for the exchange
+    pub comm_s: f64,
+}
+
+/// A routing/charging plan for one synchronous exchange of per-node
+/// packets. Implementations must be pure accounting: the aggregate math is
+/// shared by all topologies (see module docs).
+pub trait Transport: Send {
+    fn spec(&self) -> TopologySpec;
+
+    fn name(&self) -> &'static str {
+        // default to the spec label; concrete transports may refine
+        self.spec().label()
+    }
+
+    /// Charge one exchange: `packet_bits[i]` is node i's encoded payload
+    /// size, `agg_dim` the aggregate's dimensionality (sizes hub/leader
+    /// downlinks that carry raw fp32), `uncompressed` selects in-network
+    /// reduction (uniform fp32 payloads) over store-and-forward of
+    /// entropy-coded bundles, and `main_protocol` feeds the jitter model.
+    fn charge(
+        &mut self,
+        packet_bits: &[u64],
+        agg_dim: usize,
+        net: &NetworkModel,
+        uncompressed: bool,
+        main_protocol: bool,
+        rng: &mut Rng,
+    ) -> WireCharge;
+}
+
+/// Contiguous rack layout: `k` nodes split into at most `racks` blocks of
+/// `ceil(k / racks)`; returns the non-empty `(start, end)` spans. The first
+/// node of each span is its rack leader.
+pub fn rack_spans(k: usize, racks: usize) -> Vec<(usize, usize)> {
+    let racks = racks.clamp(1, k.max(1));
+    let m = (k + racks - 1) / racks;
+    let mut spans = Vec::new();
+    let mut start = 0;
+    while start < k {
+        let end = (start + m).min(k);
+        spans.push((start, end));
+        start = end;
+    }
+    spans
+}
+
+// ---------------------------------------------------------------------------
+// Broadcast-allgather (flat) — today's behavior
+// ---------------------------------------------------------------------------
+
+/// Flat broadcast: every node's packet reaches every other node via the
+/// ring collectives of [`NetworkModel::sample_collective_seconds`] —
+/// ring allreduce for uniform fp32, ring allgather for entropy-coded
+/// payloads.
+///
+/// Wire bits: `W = Σ_i b_i` (each packet counted once — the ring forwards
+/// chunks, it does not duplicate them). This is exactly the pre-topology
+/// engines' accounting, asserted by golden parity.
+pub struct BroadcastAllGather;
+
+impl Transport for BroadcastAllGather {
+    fn spec(&self) -> TopologySpec {
+        TopologySpec::BroadcastAllGather
+    }
+
+    fn charge(
+        &mut self,
+        packet_bits: &[u64],
+        _agg_dim: usize,
+        net: &NetworkModel,
+        uncompressed: bool,
+        main_protocol: bool,
+        rng: &mut Rng,
+    ) -> WireCharge {
+        let bytes: Vec<f64> = packet_bits.iter().map(|&b| b as f64 / 8.0).collect();
+        let kind = if uncompressed {
+            Collective::RingAllReduce
+        } else {
+            Collective::RingAllGather
+        };
+        let comm_s = net.sample_collective_seconds(kind, &bytes, main_protocol, rng);
+        WireCharge { wire_bits: packet_bits.iter().sum(), comm_s }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical two-level aggregation
+// ---------------------------------------------------------------------------
+
+/// Two-level aggregation over [`rack_spans`]: members send up to their rack
+/// leader on rack-local links, leaders exchange cross-rack, leaders
+/// broadcast down.
+///
+/// With entropy-coded payloads leaders cannot reduce without decoding (and
+/// re-encoding would break bit-identical aggregates), so rack bundles are
+/// concatenations; with uniform fp32 the leader reduces in place and one
+/// aggregate-sized vector crosses racks. Wire-bit formulas (B_r = rack r's
+/// packet-bit sum, B = Σ_r B_r, A = 32·agg_dim, R = #racks):
+///
+/// * coded:  `W = Σ_r (B_r − b_leader(r))  +  B  +  Σ_{r: |r|>1} B`
+///   (up-gather; cross allgather counted once per bundle like the flat
+///   accounting; full-packet-set multicast down counted once per
+///   multi-member rack — leader-only racks skip the down phase, they
+///   already hold everything)
+/// * fp32:   `W = Σ_r (B_r − b_leader(r))  +  R·A  +  Σ_{r: |r|>1} A`
+///   (up-gather; cross allreduce counted once per leader contribution;
+///   aggregate multicast down counted once per multi-member rack)
+///
+/// Rack-local phases are charged against the fast intra-rack link class and
+/// pay no incast term (point-to-point PCIe); the cross-rack phase pays the
+/// collective + straggler model at R participants and the expected jitter
+/// multiplier when it carries entropy-coded bundles. The cross-phase ring
+/// formulas deliberately mirror [`NetworkModel::collective_seconds`] (which
+/// hard-codes participants `0..k`, while this phase spans only the leaders)
+/// — keep them in sync; both sides are pinned by the calibration and
+/// topology unit tests.
+pub struct Hierarchical {
+    pub racks: usize,
+}
+
+impl Transport for Hierarchical {
+    fn spec(&self) -> TopologySpec {
+        TopologySpec::Hierarchical { racks: self.racks }
+    }
+
+    fn charge(
+        &mut self,
+        packet_bits: &[u64],
+        agg_dim: usize,
+        net: &NetworkModel,
+        uncompressed: bool,
+        main_protocol: bool,
+        _rng: &mut Rng,
+    ) -> WireCharge {
+        let k = packet_bits.len();
+        // racks = 0 is the "resolve at runtime" sentinel (see
+        // `TopologySpec::parse`): fall back to the conventional K/4 layout
+        // rather than degenerating to one rack with a free cross phase
+        let racks = if self.racks == 0 { (k / 4).max(2) } else { self.racks };
+        let spans = rack_spans(k, racks);
+        let r_eff = spans.len() as f64;
+        let total_bits: u64 = packet_bits.iter().sum();
+        let agg_bits = 32u64 * agg_dim as u64;
+
+        let mut wire_bits = 0u64;
+        // --- phase 1: rack-local gather onto the leader ---------------------
+        let mut t_up = 0.0f64;
+        for &(start, end) in &spans {
+            let up_bits: u64 = packet_bits[start + 1..end].iter().sum();
+            wire_bits += up_bits;
+            if end - start > 1 {
+                let slow = net.max_slowdown_over(start..end);
+                let t = up_bits as f64 / 8.0 / net.intra_bytes_per_sec() * slow
+                    + net.intra_rack_latency_us * 1e-6;
+                t_up = t_up.max(t);
+            }
+        }
+
+        // --- phase 2: cross-rack exchange among the rack leaders -------------
+        let leaders: Vec<usize> = spans.iter().map(|&(s, _)| s).collect();
+        let slow_x = net.max_slowdown_over(leaders.iter().copied());
+        let lat = net.latency_us * 1e-6;
+        let bw = net.bytes_per_sec();
+        let t_cross;
+        if uncompressed {
+            // leaders ring-allreduce one reduced fp32 vector
+            let a_bytes = agg_bits as f64 / 8.0;
+            wire_bits += spans.len() as u64 * agg_bits;
+            let wire = 2.0 * (r_eff - 1.0) / r_eff * a_bytes / bw
+                + 2.0 * (r_eff - 1.0) * lat;
+            let straggler = net.straggler_ms_per_node_mb * 1e-3 * (a_bytes / 1e6)
+                * (r_eff - 1.0);
+            t_cross = wire * slow_x + straggler;
+        } else {
+            // leaders ring-allgather their rack bundles (store-and-forward)
+            let bundles: Vec<f64> = spans
+                .iter()
+                .map(|&(s, e)| packet_bits[s..e].iter().sum::<u64>() as f64 / 8.0)
+                .collect();
+            wire_bits += total_bits;
+            let sum_b: f64 = bundles.iter().sum();
+            let max_b = bundles.iter().copied().fold(0.0, f64::max);
+            let wire = (r_eff - 1.0) / r_eff * sum_b / bw + (r_eff - 1.0) * lat;
+            let straggler =
+                net.straggler_ms_per_node_mb * 1e-3 * (max_b / 1e6) * (r_eff - 1.0);
+            // entropy-coded bundles pay the expected jitter overhead
+            t_cross = (wire * slow_x + straggler) * net.jitter_multiplier(main_protocol);
+        }
+
+        // --- phase 3: rack-local broadcast down ------------------------------
+        // multicast: counted once per rack with members (a leader-only rack
+        // already holds everything after the cross phase). In coded mode the
+        // stream must carry the *full* packet set: after the point-to-point
+        // up-gather a member holds only its own packet, and the union of
+        // what the members lack is every packet, so the multicast is
+        // `total_bits` (each member skips its own contribution on decode,
+        // but the bits cross the rack links once regardless).
+        let mut t_down = 0.0f64;
+        for &(start, end) in &spans {
+            if end - start > 1 {
+                let down_bits = if uncompressed { agg_bits } else { total_bits };
+                wire_bits += down_bits;
+                let slow = net.max_slowdown_over(start..end);
+                let t = down_bits as f64 / 8.0 / net.intra_bytes_per_sec() * slow
+                    + net.intra_rack_latency_us * 1e-6;
+                t_down = t_down.max(t);
+            }
+        }
+
+        let comm_s = t_up + t_cross + t_down + 3.0 * PHASE_SETUP_MS * 1e-3;
+        WireCharge { wire_bits, comm_s }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter-server hub
+// ---------------------------------------------------------------------------
+
+/// A single hub ingests every node's packet over the cross-rack network and
+/// unicasts the fp32 aggregate back to each node, serialized on its egress
+/// link — cheap at small K, a linear wall at large K.
+///
+/// Wire bits: `W = Σ_i b_i + K · 32 · agg_dim` (uplink packets once each;
+/// one aggregate copy per worker downlink).
+pub struct ParameterServer;
+
+impl Transport for ParameterServer {
+    fn spec(&self) -> TopologySpec {
+        TopologySpec::ParameterServer
+    }
+
+    fn charge(
+        &mut self,
+        packet_bits: &[u64],
+        agg_dim: usize,
+        net: &NetworkModel,
+        _uncompressed: bool,
+        main_protocol: bool,
+        _rng: &mut Rng,
+    ) -> WireCharge {
+        let k = packet_bits.len();
+        let kf = k as f64;
+        let total_bits: u64 = packet_bits.iter().sum();
+        let agg_bits = 32u64 * agg_dim as u64;
+        let bw = net.bytes_per_sec();
+        let lat = net.latency_us * 1e-6;
+        let slow = net.max_slowdown_over(0..k);
+        let max_b = packet_bits.iter().map(|&b| b as f64 / 8.0).fold(0.0, f64::max);
+
+        // uplink: the hub's ingress serializes all K payloads; K-deep incast
+        let up_wire = total_bits as f64 / 8.0 / bw * slow + lat;
+        let up_straggler =
+            net.straggler_ms_per_node_mb * 1e-3 * (max_b / 1e6) * (kf - 1.0).max(0.0);
+        let t_up = (up_wire + up_straggler) * net.jitter_multiplier(main_protocol);
+
+        // downlink: K unicast copies of the fp32 aggregate, serialized on
+        // the hub's egress
+        let t_down = kf * (agg_bits as f64 / 8.0) / bw * slow + lat;
+
+        let comm_s = t_up + t_down + 2.0 * PHASE_SETUP_MS * 1e-3;
+        WireCharge { wire_bits: total_bits + k as u64 * agg_bits, comm_s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::NetworkModel;
+
+    fn charge(
+        spec: &TopologySpec,
+        bits: &[u64],
+        d: usize,
+        net: &NetworkModel,
+        uncompressed: bool,
+    ) -> WireCharge {
+        let mut rng = Rng::new(7);
+        spec.build().charge(bits, d, net, uncompressed, true, &mut rng)
+    }
+
+    #[test]
+    fn rack_spans_cover_all_nodes() {
+        assert_eq!(rack_spans(8, 2), vec![(0, 4), (4, 8)]);
+        assert_eq!(rack_spans(6, 3), vec![(0, 2), (2, 4), (4, 6)]);
+        // non-divisible: blocks of ceil(k/racks), last short, none empty
+        assert_eq!(rack_spans(7, 3), vec![(0, 3), (3, 6), (6, 7)]);
+        assert_eq!(rack_spans(6, 4), vec![(0, 2), (2, 4), (4, 6)]);
+        assert_eq!(rack_spans(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(rack_spans(0, 4), Vec::<(usize, usize)>::new());
+    }
+
+    #[test]
+    fn wire_bit_formulas_uniform_payloads() {
+        // k = 6 identical packets of 512 bits, d = 16 (fp32 agg = 512 bits)
+        let bits = [512u64; 6];
+        let net = NetworkModel::genesis_cloud(5.0);
+        let flat = charge(&TopologySpec::BroadcastAllGather, &bits, 16, &net, false);
+        assert_eq!(flat.wire_bits, 6 * 512);
+
+        // hierarchical, 3 racks of 2, coded: up = 3*512 (one non-leader per
+        // rack), cross = 6*512, down = full packet set per rack = 3 * 6*512
+        let hier =
+            charge(&TopologySpec::Hierarchical { racks: 3 }, &bits, 16, &net, false);
+        assert_eq!(hier.wire_bits, 3 * 512 + 6 * 512 + 3 * 6 * 512);
+
+        // hierarchical, fp32 reduce mode: up = 3*512, cross = R*A = 3*512,
+        // down = R*A = 3*512
+        let hier_fp =
+            charge(&TopologySpec::Hierarchical { racks: 3 }, &bits, 16, &net, true);
+        assert_eq!(hier_fp.wire_bits, 3 * 512 + 3 * 512 + 3 * 512);
+
+        // parameter server: up = 6*512, down = K*A = 6*512
+        let ps = charge(&TopologySpec::ParameterServer, &bits, 16, &net, false);
+        assert_eq!(ps.wire_bits, 6 * 512 + 6 * 512);
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_at_scale_under_heterogeneous_links() {
+        // the Table 2 regime: 0.7 MB quantized payloads, 5 Gbps cross-rack,
+        // 50 Gbps rack-local
+        let net = NetworkModel::genesis_cloud(5.0);
+        let d = 1 << 20;
+        for k in [12usize, 16] {
+            let bits = vec![0.7e6 as u64 * 8; k];
+            let flat = charge(&TopologySpec::BroadcastAllGather, &bits, d, &net, false);
+            let hier = charge(&TopologySpec::hierarchical_for(k), &bits, d, &net, false);
+            assert!(
+                hier.comm_s < flat.comm_s,
+                "K={k}: hier {} vs flat {}",
+                hier.comm_s,
+                flat.comm_s
+            );
+        }
+    }
+
+    #[test]
+    fn parameter_server_hits_a_scaling_wall() {
+        let net = NetworkModel::genesis_cloud(5.0);
+        let d = 1 << 20;
+        let t = |k: usize| {
+            let bits = vec![0.7e6 as u64 * 8; k];
+            charge(&TopologySpec::ParameterServer, &bits, d, &net, false).comm_s
+        };
+        // hub egress serializes K aggregate copies: the cost grows ~linearly
+        assert!(t(16) > 3.0 * t(4), "{} vs {}", t(16), t(4));
+        // and at K = 16 the hub is far worse than the flat collective
+        let bits = vec![0.7e6 as u64 * 8; 16];
+        let flat = charge(&TopologySpec::BroadcastAllGather, &bits, d, &net, false);
+        assert!(t(16) > 2.0 * flat.comm_s);
+    }
+
+    #[test]
+    fn stragglers_slow_only_the_phases_they_touch() {
+        let d = 1 << 18;
+        let bits = vec![0.5e6 as u64 * 8; 8];
+        let clean = NetworkModel::genesis_cloud(5.0);
+        // node 5 lives in rack 1 of the 2-rack layout and is not a leader:
+        // only the rack-1 local phases slow down
+        let slowed = NetworkModel::genesis_cloud(5.0).with_straggler(5, 4.0);
+        let spec = TopologySpec::Hierarchical { racks: 2 };
+        let t_clean = charge(&spec, &bits, d, &clean, false).comm_s;
+        let t_slow = charge(&spec, &bits, d, &slowed, false).comm_s;
+        assert!(t_slow > t_clean, "{t_slow} vs {t_clean}");
+        // a slow member does not touch the cross-rack phase, so the hit is
+        // bounded by the (fast) rack-local phases
+        let cross_only = charge(&spec, &bits, d, &clean, false).comm_s;
+        assert!(t_slow - t_clean < 0.5 * cross_only, "{t_slow} vs {t_clean}");
+
+        // a straggling *leader* (node 4) slows the cross-rack exchange too
+        let slow_leader = NetworkModel::genesis_cloud(5.0).with_straggler(4, 4.0);
+        let t_leader = charge(&spec, &bits, d, &slow_leader, false).comm_s;
+        assert!(t_leader > t_slow, "{t_leader} vs {t_slow}");
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            TopologySpec::parse("flat", 0),
+            Some(TopologySpec::BroadcastAllGather)
+        );
+        assert_eq!(
+            TopologySpec::parse("hier", 3),
+            Some(TopologySpec::Hierarchical { racks: 3 })
+        );
+        assert_eq!(
+            TopologySpec::parse("ps", 0),
+            Some(TopologySpec::ParameterServer)
+        );
+        assert_eq!(TopologySpec::parse("mesh", 0), None);
+    }
+}

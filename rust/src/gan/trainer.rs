@@ -12,6 +12,7 @@ use super::fid::fid;
 use crate::comm::{Compressor, IdentityCompressor, QuantCompressor};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::sim::ClusterSim;
+use crate::coordinator::topology::TopologySpec;
 use crate::net::NetworkModel;
 use crate::oda::baseline::AdamState;
 use crate::runtime::WganModel;
@@ -46,6 +47,8 @@ pub struct GanTrainConfig {
     pub fid_every: usize,
     pub seed: u64,
     pub bandwidth_gbps: f64,
+    /// communication topology the cluster engine routes packets through
+    pub topology: TopologySpec,
 }
 
 impl Default for GanTrainConfig {
@@ -60,6 +63,7 @@ impl Default for GanTrainConfig {
             fid_every: 25,
             seed: 1,
             bandwidth_gbps: 5.0,
+            topology: TopologySpec::BroadcastAllGather,
         }
     }
 }
@@ -102,7 +106,8 @@ pub fn train(model: &WganModel, cfg: &GanTrainConfig) -> Result<GanRunResult> {
         comps,
         NetworkModel::genesis_cloud(cfg.bandwidth_gbps),
         uncompressed,
-    );
+    )
+    .with_topology(&cfg.topology);
 
     let mut params = model.init_params(cfg.seed as i32)?;
     let mut adam = AdamState::new(d, cfg.lr);

@@ -28,9 +28,11 @@
 //!
 //! * [`coordinator`] — the two cluster engines (deterministic `sim` with a
 //!   calibrated network clock, threaded `parallel` shipping packets over
-//!   channels) are thin transports over `comm`; they charge the network
-//!   model with measured packet bytes and are integration-tested for
-//!   bit-identical agreement;
+//!   channels) share one decode-aggregate core and route packets through a
+//!   pluggable [`coordinator::Transport`] topology (broadcast-allgather,
+//!   hierarchical two-level, parameter-server), charged with measured
+//!   packet bytes against the heterogeneous-link network model; engines and
+//!   topologies are integration-tested for bit-identical agreement;
 //! * [`quant`] + [`coding`] — the layer-wise quantizer, level-sequence
 //!   adaptation (Eq. 2 / L-GreCo) and the Main/Alternating entropy-coding
 //!   protocols the codecs compose;

@@ -4,6 +4,7 @@
 //!   run               drive an arbitrary solver RunSpec from flags
 //!   table1            step time vs bandwidth (Table 1)
 //!   table2            weak scaling (Table 2)
+//!   topology          weak scaling x topology (flat / hierarchical / PS)
 //!   fig4              WGAN FID curves: Adam vs QODA global vs layerwise
 //!   table3            transformer: PowerSGD x quantization (Table 3)
 //!   fig5              per-layer-type quantization ablation (Figure 5)
@@ -18,6 +19,9 @@
 //!   train-lm          single transformer-LM training run
 //!   all               run the non-PJRT suite (writes results/*.csv)
 //!
+//! Malformed flags print the error plus this usage and exit with status 2 —
+//! no panics, no backtraces.
+//!
 //! `run` flags (all optional):
 //!   --solver qoda|qgenx|adam|oadam    --op quadratic|bilinear  --dim N --mu F
 //!   --noise none|absolute|relative    --sigma F                --k N
@@ -26,103 +30,125 @@
 //!   --protocol main|alternating       --steps T
 //!   --checkpoints t1,t2,...           --update-every N
 //!   --gap true|false                  --gap-every N --gap-stop THRESH
+//!   --topology flat|hier|ps           --racks R (hier; 0 = K/4)
+//!   --bandwidth GBPS (attach the network clock and report comm seconds)
 
 use qoda::bench_harness::{experiments, model_experiments};
 use qoda::coding::protocol::ProtocolKind;
+use qoda::coordinator::TopologySpec;
 use qoda::gan::trainer::{GanCompression, GanOptimizer, GanTrainConfig};
 use qoda::lm::trainer::{LmTrainConfig, QuantTarget};
+use qoda::net::NetworkModel;
 use qoda::oda::{
     CompressionSpec, GapMode, LrSpec, OperatorSpec, RunSpec, SolverKind,
 };
 use qoda::runtime::{LmModel, Runtime, WganModel};
 use qoda::util::cli::Args;
-use qoda::util::error::Result;
+use qoda::util::error::{Error, Result};
 use qoda::util::table::{save_series_csv, Table};
 use qoda::vi::noise::NoiseModel;
 
+fn usage() -> &'static str {
+    "usage: qoda <run|table1|table2|topology|fig4|table3|fig5|rates|verify-variance|\
+     verify-codelen|verify-mqv|protocols|optimism|ablations|train-gan|train-lm|all> \
+     [flags]\n(see `qoda help` or the module docs for per-command flags)"
+}
+
+/// Resolve `--topology` / `--racks` against the node count.
+fn topology_from_args(args: &Args, k: usize) -> Result<TopologySpec> {
+    let name = args.get_or("topology", "flat");
+    let racks = args.usize_or("racks", 0)?;
+    let spec = TopologySpec::parse(&name, racks)
+        .ok_or_else(|| Error::msg(format!("--topology expects flat|hier|ps, got {name:?}")))?;
+    Ok(match spec {
+        TopologySpec::Hierarchical { racks: 0 } => TopologySpec::hierarchical_for(k),
+        other => other,
+    })
+}
+
 /// Assemble a [`RunSpec`] from `qoda run` flags — the CLI face of the
 /// declarative builder.
-fn run_spec_from_args(args: &Args) -> RunSpec {
-    let solver = match args.get_or("solver", "qoda").as_str() {
+fn run_spec_from_args(args: &Args) -> Result<RunSpec> {
+    let solver = match args.one_of("solver", "qoda", &["qoda", "qgenx", "adam", "oadam", "optimistic-adam"])?.as_str() {
         "qoda" => SolverKind::Qoda,
         "qgenx" => SolverKind::QGenX,
-        "adam" => SolverKind::Adam { lr: args.f64_or("adam-lr", 0.05) },
-        "oadam" | "optimistic-adam" => {
-            SolverKind::OptimisticAdam { lr: args.f64_or("adam-lr", 0.05) }
-        }
-        other => panic!("--solver expects qoda|qgenx|adam|oadam, got {other}"),
+        "adam" => SolverKind::Adam { lr: args.f64_or("adam-lr", 0.05)? },
+        _ => SolverKind::OptimisticAdam { lr: args.f64_or("adam-lr", 0.05)? },
     };
-    let seed = args.u64_or("seed", 1);
-    let operator = match args.get_or("op", "quadratic").as_str() {
-        "quadratic" => OperatorSpec::Quadratic {
-            dim: args.usize_or("dim", 16),
-            mu: args.f64_or("mu", 0.5),
+    let seed = args.u64_or("seed", 1)?;
+    let operator = match args.one_of("op", "quadratic", &["quadratic", "bilinear"])?.as_str() {
+        "bilinear" => OperatorSpec::Bilinear { n: args.usize_or("dim", 16)? / 2, seed },
+        _ => OperatorSpec::Quadratic {
+            dim: args.usize_or("dim", 16)?,
+            mu: args.f64_or("mu", 0.5)?,
             seed,
         },
-        "bilinear" => OperatorSpec::Bilinear { n: args.usize_or("dim", 16) / 2, seed },
-        other => panic!("--op expects quadratic|bilinear, got {other}"),
     };
-    let noise = match args.get_or("noise", "absolute").as_str() {
+    let noise = match args.one_of("noise", "absolute", &["none", "absolute", "relative"])?.as_str() {
         "none" => NoiseModel::None,
-        "absolute" => NoiseModel::Absolute { sigma: args.f64_or("sigma", 0.5) },
-        "relative" => NoiseModel::Relative { sigma_r: args.f64_or("sigma", 0.5) },
-        other => panic!("--noise expects none|absolute|relative, got {other}"),
+        "relative" => NoiseModel::Relative { sigma_r: args.f64_or("sigma", 0.5)? },
+        _ => NoiseModel::Absolute { sigma: args.f64_or("sigma", 0.5)? },
     };
     let compression = match args.get("bits") {
         None => CompressionSpec::None,
         Some(b) => CompressionSpec::Global {
-            bits: b.parse().expect("--bits expects a small integer"),
-            bucket: args.usize_or("bucket", 128),
+            bits: b.parse().map_err(|_| {
+                Error::msg(format!("--bits expects a small integer, got {b:?}"))
+            })?,
+            bucket: args.usize_or("bucket", 128)?,
         },
     };
-    let lr = match args.get_or("lr", "adaptive").as_str() {
-        "adaptive" => LrSpec::Adaptive,
-        "alt" => LrSpec::Alt { q_hat: args.f64_or("qhat", 0.25) },
+    let lr = match args.one_of("lr", "adaptive", &["adaptive", "alt", "constant"])?.as_str() {
+        "alt" => LrSpec::Alt { q_hat: args.f64_or("qhat", 0.25)? },
         "constant" => LrSpec::Constant {
-            gamma: args.f64_or("gamma", 0.1),
-            eta: args.f64_or("eta", 0.1),
+            gamma: args.f64_or("gamma", 0.1)?,
+            eta: args.f64_or("eta", 0.1)?,
         },
-        other => panic!("--lr expects adaptive|alt|constant, got {other}"),
+        _ => LrSpec::Adaptive,
     };
-    let protocol = match args.get_or("protocol", "main").as_str() {
-        "main" => ProtocolKind::Main,
+    let protocol = match args.one_of("protocol", "main", &["main", "alternating"])?.as_str() {
         "alternating" => ProtocolKind::Alternating,
-        other => panic!("--protocol expects main|alternating, got {other}"),
+        _ => ProtocolKind::Main,
     };
-    let steps = args.usize_or("steps", 1000);
-    let checkpoints: Vec<usize> = match args.get("checkpoints") {
-        Some(list) => list
-            .split(',')
-            .map(|v| v.trim().parse().expect("--checkpoints expects t1,t2,..."))
-            .collect(),
-        // default: log-spaced quarters plus the horizon (driver normalizes)
-        None => vec![steps / 8, steps / 4, steps / 2, steps],
-    };
+    let steps = args.usize_or("steps", 1000)?;
+    // default checkpoints: log-spaced quarters plus the horizon (the driver
+    // normalizes)
+    let checkpoints: Vec<usize> =
+        args.list_or("checkpoints", vec![steps / 8, steps / 4, steps / 2, steps])?;
     let gap = if args.has("gap-stop") {
         GapMode::EarlyStop {
-            every: args.usize_or("gap-every", 100),
-            threshold: args.f64_or("gap-stop", 1e-3),
+            every: args.usize_or("gap-every", 100)?,
+            threshold: args.f64_or("gap-stop", 1e-3)?,
         }
     } else if args.bool_or("gap", true) {
         GapMode::AtCheckpoints
     } else {
         GapMode::Off
     };
-    RunSpec::new(solver, operator)
+    let k = args.usize_or("k", 4)?;
+    let mut spec = RunSpec::new(solver, operator)
         .noise(noise)
-        .nodes(args.usize_or("k", 4))
+        .nodes(k)
         .compression(compression)
         .lr(lr)
         .protocol(protocol)
         .steps(steps)
         .checkpoints(&checkpoints)
         .seed(seed)
-        .update_every(args.usize_or("update-every", 0))
+        .update_every(args.usize_or("update-every", 0)?)
         .gap(gap)
+        .topology(topology_from_args(args, k)?);
+    // an explicit --topology without --bandwidth still attaches the default
+    // network clock — otherwise the flag would be a silent no-op (the
+    // topology only shows up in comm_s / net_wire_bits accounting)
+    if args.has("bandwidth") || args.has("topology") {
+        spec = spec.network(NetworkModel::genesis_cloud(args.f64_or("bandwidth", 5.0)?));
+    }
+    Ok(spec)
 }
 
 fn run_cmd(args: &Args) -> Result<()> {
-    let spec = run_spec_from_args(args);
+    let spec = run_spec_from_args(args)?;
     println!("driving: {spec:?}\n");
     let report = spec.run();
     let mut t = Table::new(
@@ -155,18 +181,25 @@ fn run_cmd(args: &Args) -> Result<()> {
         report.bits_per_iter_node,
         report.rel_quant_error(),
     );
+    if report.comm_s > 0.0 {
+        println!(
+            "{} topology: {:.3} Mbits routed, {:.1} ms on the simulated network clock",
+            spec.topology.label(),
+            report.net_wire_bits as f64 / 1e6,
+            report.comm_s * 1e3,
+        );
+    }
     if let Some(g) = report.final_gap() {
         println!("final GAP(x-bar) = {g:.6}");
     }
     Ok(())
 }
 
-fn main() -> Result<()> {
-    let args = Args::from_env();
+fn dispatch(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => {
-            run_cmd(&args)?;
+            run_cmd(args)?;
         }
         "table1" => {
             let t = experiments::table1();
@@ -178,9 +211,16 @@ fn main() -> Result<()> {
             t.print();
             t.save_csv("table2.csv")?;
         }
+        "topology" => {
+            let ks = args.list_or("ks", vec![4usize, 8, 12, 16])?;
+            let bw = args.f64_or("bandwidth", 5.0)?;
+            let t = experiments::topology_table(&ks, bw);
+            t.print();
+            t.save_csv("topology.csv")?;
+        }
         "fig4" => {
-            let steps = args.usize_or("steps", 240);
-            let nseeds = args.usize_or("seeds", 2);
+            let steps = args.usize_or("steps", 240)?;
+            let nseeds = args.usize_or("seeds", 2)?;
             let seeds: Vec<u64> = (1..=nseeds as u64).collect();
             let (summary, rows) = model_experiments::fig4(steps, &seeds)?;
             summary.print();
@@ -193,8 +233,8 @@ fn main() -> Result<()> {
             println!("curves -> results/fig4_fid.csv");
         }
         "table3" => {
-            let steps = args.usize_or("steps", 120);
-            let nseeds = args.usize_or("seeds", 2);
+            let steps = args.usize_or("steps", 120)?;
+            let nseeds = args.usize_or("seeds", 2)?;
             let seeds: Vec<u64> = (1..=nseeds as u64).collect();
             let ranks = [4usize, 8, 16];
             let t = model_experiments::table3(steps, &ranks, &seeds)?;
@@ -202,15 +242,16 @@ fn main() -> Result<()> {
             t.save_csv("table3.csv")?;
         }
         "fig5" => {
-            let steps = args.usize_or("steps", 120);
-            let nseeds = args.usize_or("seeds", 2);
+            let steps = args.usize_or("steps", 120)?;
+            let nseeds = args.usize_or("seeds", 2)?;
             let seeds: Vec<u64> = (1..=nseeds as u64).collect();
             let t = model_experiments::fig5(steps, &seeds)?;
             t.print();
             t.save_csv("fig5.csv")?;
         }
         "rates" => {
-            let noise = args.get_or("noise", "absolute");
+            let noise =
+                args.one_of("noise", "absolute", &["absolute", "relative", "relative-alt"])?;
             let t = experiments::rates_table(&noise);
             t.print();
             t.save_csv(&format!("rates_{noise}.csv"))?;
@@ -248,30 +289,35 @@ fn main() -> Result<()> {
         "train-gan" => {
             let rt = Runtime::cpu()?;
             let model = WganModel::load(&rt)?;
+            let k = args.usize_or("k", 4)?;
             let cfg = GanTrainConfig {
-                optimizer: match args.get_or("optimizer", "qoda").as_str() {
+                optimizer: match args.one_of("optimizer", "qoda", &["qoda", "adam", "oadam"])?.as_str() {
                     "adam" => GanOptimizer::Adam,
                     _ => GanOptimizer::OptimisticAdam,
                 },
-                compression: match args.get_or("compression", "layerwise").as_str() {
+                compression: match args
+                    .one_of("compression", "layerwise", &["none", "global", "layerwise"])?
+                    .as_str()
+                {
                     "none" => GanCompression::None,
                     "global" => GanCompression::Global {
-                        bits: args.usize_or("bits", 5) as u32,
-                        bucket: args.usize_or("bucket", 128),
+                        bits: args.usize_or("bits", 5)? as u32,
+                        bucket: args.usize_or("bucket", 128)?,
                     },
                     _ => GanCompression::LayerwiseLGreco {
-                        bits: args.usize_or("bits", 5) as u32,
-                        bucket: args.usize_or("bucket", 128),
-                        every: args.usize_or("update-every", 50),
+                        bits: args.usize_or("bits", 5)? as u32,
+                        bucket: args.usize_or("bucket", 128)?,
+                        every: args.usize_or("update-every", 50)?,
                     },
                 },
-                k_nodes: args.usize_or("k", 4),
-                steps: args.usize_or("steps", 300),
-                lr: args.f64_or("lr", 5e-4),
-                clip: args.f64_or("clip", 0.1) as f32,
-                fid_every: args.usize_or("fid-every", 25),
-                seed: args.u64_or("seed", 1),
-                bandwidth_gbps: args.f64_or("bandwidth", 5.0),
+                k_nodes: k,
+                steps: args.usize_or("steps", 300)?,
+                lr: args.f64_or("lr", 5e-4)?,
+                clip: args.f64_or("clip", 0.1)? as f32,
+                fid_every: args.usize_or("fid-every", 25)?,
+                seed: args.u64_or("seed", 1)?,
+                bandwidth_gbps: args.f64_or("bandwidth", 5.0)?,
+                topology: topology_from_args(args, k)?,
             };
             println!("training WGAN: {cfg:?}");
             let run = qoda::gan::trainer::train(&model, &cfg)?;
@@ -291,16 +337,22 @@ fn main() -> Result<()> {
         "train-lm" => {
             let rt = Runtime::cpu()?;
             let model = LmModel::load(&rt)?;
+            let quant_bits = match args.get("bits") {
+                None => None,
+                Some(b) => Some(b.parse().map_err(|_| {
+                    Error::msg(format!("--bits expects a small integer, got {b:?}"))
+                })?),
+            };
             let cfg = LmTrainConfig {
-                rank: args.usize_or("rank", 16),
-                quant_bits: args.get("bits").map(|b| b.parse().unwrap()),
+                rank: args.usize_or("rank", 16)?,
+                quant_bits,
                 layerwise: args.bool_or("layerwise", true),
                 target: QuantTarget::All,
-                k_nodes: args.usize_or("k", 2),
-                steps: args.usize_or("steps", 120),
-                lr: args.f64_or("lr", 1e-2),
-                seed: args.u64_or("seed", 1),
-                eval_every: args.usize_or("eval-every", 20),
+                k_nodes: args.usize_or("k", 2)?,
+                steps: args.usize_or("steps", 120)?,
+                lr: args.f64_or("lr", 1e-2)?,
+                seed: args.u64_or("seed", 1)?,
+                eval_every: args.usize_or("eval-every", 20)?,
             };
             println!("training LM: {cfg:?}");
             let run = qoda::lm::trainer::train(&model, &cfg)?;
@@ -319,6 +371,7 @@ fn main() -> Result<()> {
             for (name, t) in [
                 ("table1", experiments::table1()),
                 ("table2", experiments::table2()),
+                ("topology", experiments::topology_table(&[4, 8, 12, 16], 5.0)),
                 ("verify_variance", experiments::verify_variance()),
                 ("verify_codelen", experiments::verify_codelen()),
                 ("verify_mqv", experiments::verify_mqv()),
@@ -337,11 +390,18 @@ fn main() -> Result<()> {
             }
         }
         _ => {
-            println!(
-                "usage: qoda <run|table1|table2|fig4|table3|fig5|rates|verify-variance|\
-                 verify-codelen|verify-mqv|protocols|optimism|train-gan|train-lm|all> [flags]"
-            );
+            println!("{}", usage());
         }
     }
     Ok(())
+}
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        eprintln!();
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
 }

@@ -3,9 +3,24 @@
 //! OpenMPI for quantized payloads / NCCL ring-allreduce for fp32).
 //!
 //! The coder produces *real encoded byte counts*; this module converts them
-//! to wall-clock the way a bandwidth-bound cluster does, including the ring
-//! collectives, per-hop latency, jitter (Remark D.3) and the baseline's
-//! scaling degradation that Table 2 exhibits.
+//! to wall-clock the way a bandwidth-bound cluster does. It models:
+//!
+//! * the flat ring collectives ([`Collective`]), per-hop latency, jitter
+//!   (Remark D.3) and the baseline's scaling degradation that Table 2
+//!   exhibits — pinned by the calibration tests in [`simulator`];
+//! * **two heterogeneous link classes** — slow cross-rack links
+//!   (`bandwidth_gbps`) and fast PCIe/NVLink-class rack-local links
+//!   (`intra_rack_gbps`) — which the pluggable topologies of
+//!   [`crate::coordinator::topology`] charge their phases against;
+//! * **injectable stragglers** ([`NetworkModel::with_straggler`]): per-node
+//!   link slowdowns that bottleneck exactly the phases the slow link
+//!   participates in (a rack-local straggler never touches the cross-rack
+//!   exchange; a straggling rack *leader* does).
+//!
+//! The topology layer asks this module for primitive phase costs
+//! ([`NetworkModel::link_seconds`], [`NetworkModel::collective_seconds`],
+//! [`NetworkModel::max_slowdown_over`]) and composes them; this module
+//! never needs to know which topology is running.
 
 pub mod simulator;
 

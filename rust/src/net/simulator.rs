@@ -1,4 +1,4 @@
-//! Analytic cluster network model.
+//! Analytic cluster network model with heterogeneous links.
 //!
 //! Calibration targets (paper Tables 1–2): with K = 4 and 5 Gbps links the
 //! uncompressed WGAN baseline spends ~251 ms/step and QODA5 ~195 ms; at
@@ -7,7 +7,23 @@
 //! while QODA5 improves (165/127/115 ms). The model reproduces this regime
 //! from first principles: ring collectives + per-hop latency + a
 //! K-dependent straggler/incast term that full-fat fp32 payloads suffer and
-//! sub-megabyte quantized payloads do not.
+//! sub-megabyte quantized payloads do not. These regime numbers are pinned
+//! by unit tests below (`calibration` module).
+//!
+//! Two kinds of heterogeneity are modeled so the coordinator's pluggable
+//! topologies (`crate::coordinator::topology`) can be charged realistically:
+//!
+//! * **Two link classes.** Cross-rack links run at `bandwidth_gbps` /
+//!   `latency_us` (the 1–5 Gbps inter-node network of the paper's testbed);
+//!   rack-local links run at `intra_rack_gbps` / `intra_rack_latency_us`
+//!   (PCIe/NVLink-class, 50 Gbps by default — an order of magnitude
+//!   faster). The flat collectives below only ever use the cross-rack
+//!   class, so pre-topology behavior is unchanged; hierarchical topologies
+//!   charge their rack-local phases against the fast class.
+//! * **Injectable stragglers.** `with_straggler(node, slowdown)` multiplies
+//!   the effective wire time of any phase that node's link participates in
+//!   (a ring is bottlenecked by its slowest member). With no stragglers
+//!   injected every formula reduces exactly to the homogeneous model.
 
 use crate::stats::rng::Rng;
 
@@ -43,39 +59,99 @@ impl JitterModel {
 
 #[derive(Clone, Debug)]
 pub struct NetworkModel {
+    /// cross-rack (inter-node) link bandwidth
     pub bandwidth_gbps: f64,
-    /// one-hop latency
+    /// one-hop cross-rack latency
     pub latency_us: f64,
+    /// rack-local link bandwidth (PCIe/NVLink class)
+    pub intra_rack_gbps: f64,
+    /// one-hop rack-local latency
+    pub intra_rack_latency_us: f64,
     /// incast/straggler coefficient: extra per-step milliseconds per node
     /// per megabyte of *per-node* payload (saturating switches; hits the
-    /// fp32 baseline, negligible for compressed payloads)
+    /// fp32 baseline, negligible for compressed payloads). Only charged on
+    /// cross-rack phases — rack-local links are point-to-point.
     pub straggler_ms_per_node_mb: f64,
     pub jitter: JitterModel,
+    /// per-node link slowdown multipliers (1.0 = nominal); empty means a
+    /// homogeneous cluster. A phase is slowed by the worst link it touches.
+    pub link_slowdown: Vec<f64>,
 }
 
 impl NetworkModel {
-    /// The paper's testbed: 5 Gbps, ~50 us inter-node latency.
+    /// The paper's testbed: 5 Gbps, ~50 us inter-node latency, 50 Gbps
+    /// PCIe-class rack-local links.
     pub fn genesis_cloud(bandwidth_gbps: f64) -> Self {
         NetworkModel {
             bandwidth_gbps,
             latency_us: 50.0,
+            intra_rack_gbps: 50.0,
+            intra_rack_latency_us: 5.0,
             straggler_ms_per_node_mb: 0.9,
             jitter: JitterModel::none(),
+            link_slowdown: Vec::new(),
         }
     }
 
-    fn bytes_per_sec(&self) -> f64 {
+    /// Override the rack-local link class.
+    pub fn with_intra_rack(mut self, gbps: f64, latency_us: f64) -> Self {
+        self.intra_rack_gbps = gbps;
+        self.intra_rack_latency_us = latency_us;
+        self
+    }
+
+    /// Inject a straggler: `node`'s link runs `slowdown`x slower than
+    /// nominal. Every phase that link participates in is bottlenecked by it.
+    pub fn with_straggler(mut self, node: usize, slowdown: f64) -> Self {
+        if self.link_slowdown.len() <= node {
+            self.link_slowdown.resize(node + 1, 1.0);
+        }
+        self.link_slowdown[node] = slowdown;
+        self
+    }
+
+    /// The slowdown multiplier of `node`'s link (1.0 when homogeneous).
+    pub fn slowdown(&self, node: usize) -> f64 {
+        self.link_slowdown.get(node).copied().unwrap_or(1.0)
+    }
+
+    /// Worst slowdown among the given participants — the bottleneck factor
+    /// of any collective phase they form.
+    pub fn max_slowdown_over(&self, nodes: impl IntoIterator<Item = usize>) -> f64 {
+        nodes.into_iter().map(|n| self.slowdown(n)).fold(1.0, f64::max)
+    }
+
+    pub fn bytes_per_sec(&self) -> f64 {
         self.bandwidth_gbps * 1e9 / 8.0
     }
 
-    /// Wall-clock seconds for one collective exchange.
-    /// `per_node_bytes[k]` is node k's (possibly compressed) payload size.
+    pub fn intra_bytes_per_sec(&self) -> f64 {
+        self.intra_rack_gbps * 1e9 / 8.0
+    }
+
+    /// Seconds to move `bytes` across one link (cross-rack or rack-local),
+    /// including the one-hop latency and the sender's straggler factor.
+    pub fn link_seconds(&self, bytes: f64, node: usize, intra_rack: bool) -> f64 {
+        let (bw, lat_us) = if intra_rack {
+            (self.intra_bytes_per_sec(), self.intra_rack_latency_us)
+        } else {
+            (self.bytes_per_sec(), self.latency_us)
+        };
+        bytes / bw * self.slowdown(node) + lat_us * 1e-6
+    }
+
+    /// Wall-clock seconds for one flat collective exchange over the
+    /// cross-rack links. `per_node_bytes[k]` is node k's (possibly
+    /// compressed) payload size; node indices are `0..k` for straggler
+    /// lookup.
     pub fn collective_seconds(&self, kind: Collective, per_node_bytes: &[f64]) -> f64 {
         let k = per_node_bytes.len().max(1) as f64;
         let total: f64 = per_node_bytes.iter().sum();
         let max_b = per_node_bytes.iter().copied().fold(0.0, f64::max);
         let bw = self.bytes_per_sec();
         let lat = self.latency_us * 1e-6;
+        // a ring moves at the pace of its slowest member link
+        let slow = self.max_slowdown_over(0..per_node_bytes.len());
         let wire = match kind {
             Collective::RingAllReduce => {
                 // 2(K-1)/K of the (uniform) payload, 2(K-1) latency hops
@@ -91,7 +167,7 @@ impl NetworkModel {
         let per_node_mb = max_b / 1e6;
         let straggler =
             self.straggler_ms_per_node_mb * 1e-3 * per_node_mb * (k - 1.0).max(0.0);
-        wire + straggler
+        wire * slow + straggler
     }
 
     /// Expected retransmission overhead multiplier for a payload under the
@@ -138,8 +214,11 @@ mod tests {
         NetworkModel {
             bandwidth_gbps: bw,
             latency_us: 50.0,
+            intra_rack_gbps: 50.0,
+            intra_rack_latency_us: 5.0,
             straggler_ms_per_node_mb: 0.0,
             jitter: JitterModel::none(),
+            link_slowdown: Vec::new(),
         }
     }
 
@@ -184,6 +263,36 @@ mod tests {
     }
 
     #[test]
+    fn injected_straggler_bottlenecks_the_ring() {
+        let n = net(5.0);
+        let base = n.collective_seconds(Collective::RingAllGather, &[1e6; 4]);
+        let slowed =
+            net(5.0).with_straggler(2, 3.0).collective_seconds(
+                Collective::RingAllGather,
+                &[1e6; 4],
+            );
+        assert!((slowed - 3.0 * base).abs() < 1e-12, "{slowed} vs 3x {base}");
+        // a straggler outside the participant set does not slow the phase
+        let outside = net(5.0).with_straggler(7, 3.0).collective_seconds(
+            Collective::RingAllGather,
+            &[1e6; 4],
+        );
+        assert_eq!(outside, base);
+    }
+
+    #[test]
+    fn intra_rack_links_are_faster() {
+        let n = net(5.0);
+        let cross = n.link_seconds(1e6, 0, false);
+        let intra = n.link_seconds(1e6, 0, true);
+        assert!(intra < cross / 5.0, "{intra} vs {cross}");
+        // straggler multiplier applies to either class
+        let s = net(5.0).with_straggler(1, 2.0);
+        assert!(s.link_seconds(1e6, 1, true) > 1.9 * n.link_seconds(1e6, 1, true));
+        assert_eq!(s.link_seconds(1e6, 0, true), n.link_seconds(1e6, 0, true));
+    }
+
+    #[test]
     fn jitter_penalizes_main_protocol_more() {
         let mut n = net(5.0);
         n.jitter = JitterModel { p: 0.2, retrans_fraction: 1.0, resync_fraction: 0.05 };
@@ -214,5 +323,53 @@ mod tests {
         let t1 = n.collective_seconds(Collective::RingAllGather, &[1e6; 4]);
         let t2 = n.collective_seconds(Collective::RingAllGather, &[2e6; 4]);
         assert!(t2 > 1.9 * t1 && t2 < 2.1 * t1);
+    }
+}
+
+/// Pins the Table 1/2 regime documented in the module header: the model,
+/// driven through the bench harness's calibrated compute/codec constants,
+/// must keep reproducing the paper's step times and the weak-scaling
+/// inversion. These tests are the contract future network-model changes are
+/// measured against.
+#[cfg(test)]
+mod calibration {
+    use crate::bench_harness::experiments::{measure_qoda5_bytes_per_coord, step_time_ms};
+
+    #[test]
+    fn table1_k4_step_times_pin() {
+        let bpc = measure_qoda5_bytes_per_coord(1 << 16, 1);
+        // K = 4, 5 Gbps: baseline ~251 ms vs QODA5 ~195 ms
+        let b5 = step_time_ms(4, 5.0, false, bpc);
+        let q5 = step_time_ms(4, 5.0, true, bpc);
+        assert!((b5 - 251.0).abs() < 10.0, "baseline@5Gbps {b5} (want ~251)");
+        assert!((q5 - 195.0).abs() < 17.0, "qoda5@5Gbps {q5} (want ~195)");
+        assert!(b5 > q5 + 35.0, "{b5} vs {q5}");
+        // K = 4, 1 Gbps: baseline degrades to ~291 ms, QODA5 barely moves
+        let b1 = step_time_ms(4, 1.0, false, bpc);
+        let q1 = step_time_ms(4, 1.0, true, bpc);
+        assert!((b1 - 291.0).abs() < 10.0, "baseline@1Gbps {b1} (want ~291)");
+        assert!(q1 - q5 < 25.0, "qoda5 should be near-flat: {q5} -> {q1}");
+    }
+
+    #[test]
+    fn table2_weak_scaling_inversion_pin() {
+        let bpc = measure_qoda5_bytes_per_coord(1 << 16, 1);
+        let b: Vec<f64> =
+            [4, 8, 12, 16].iter().map(|&k| step_time_ms(k, 5.0, false, bpc)).collect();
+        let q: Vec<f64> =
+            [4, 8, 12, 16].iter().map(|&k| step_time_ms(k, 5.0, true, bpc)).collect();
+        // the inversion: the baseline *degrades* monotonically with K while
+        // QODA5 *improves* monotonically (the paper's 303/318 regime at
+        // K = 8/12 vs 165/127)
+        for i in 1..4 {
+            assert!(b[i] > b[i - 1], "baseline must degrade: {b:?}");
+            assert!(q[i] < q[i - 1], "qoda5 must improve: {q:?}");
+        }
+        assert!((b[2] - 318.0).abs() < 15.0, "baseline@12 {} (want ~318)", b[2]);
+        // the headline end-to-end speedup at K = 12 (paper: ~2.5x)
+        let s12 = b[2] / q[2];
+        assert!(s12 > 2.0, "12-node speedup {s12}");
+        // and it keeps widening under weak scaling
+        assert!(b[3] / q[3] > b[1] / q[1], "{b:?} / {q:?}");
     }
 }

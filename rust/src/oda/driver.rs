@@ -32,6 +32,8 @@ use super::qoda::Qoda;
 use super::source::OracleSource;
 use crate::coding::protocol::ProtocolKind;
 use crate::comm::{Adaptation, CommEndpoint, Compressor, IdentityCompressor, QuantCompressor};
+use crate::coordinator::topology::{TopologySpec, Transport, WireCharge};
+use crate::net::NetworkModel;
 use crate::quant::layer_map::LayerMap;
 use crate::quant::QuantConfig;
 use crate::stats::rng::Rng;
@@ -159,6 +161,12 @@ pub struct RunReport {
     pub quant_err_sq: f64,
     /// accumulated sum over steps/nodes of ||V||²
     pub dual_norm_sq: f64,
+    /// simulated network-clock seconds across the run (0.0 unless the
+    /// driver was given a [`NetClock`] / the spec a network model)
+    pub comm_s: f64,
+    /// wire bits as charged by the topology's routing (equals `total_bits`
+    /// for broadcast-allgather; 0 without a [`NetClock`])
+    pub net_wire_bits: u64,
 }
 
 impl RunReport {
@@ -178,10 +186,6 @@ impl RunReport {
     }
 }
 
-/// Pre-PR-2 name of [`RunReport`], kept for one release.
-#[deprecated(note = "renamed to `RunReport`: the struct was never QODA-specific")]
-pub type QodaRun = RunReport;
-
 // ---------------------------------------------------------------------------
 // Metrics sinks
 // ---------------------------------------------------------------------------
@@ -199,6 +203,9 @@ pub struct StepRecord {
     /// the gap evaluated at this step, when the driver's [`GapPolicy`]
     /// scheduled one
     pub gap: Option<f64>,
+    /// simulated network seconds this step charged (0.0 without a
+    /// [`NetClock`])
+    pub comm_s: f64,
 }
 
 /// Observer of a live run. All hooks default to no-ops except `on_step`.
@@ -225,6 +232,62 @@ impl MetricsSink for MemorySink {
 // ---------------------------------------------------------------------------
 // The driver
 // ---------------------------------------------------------------------------
+
+/// A simulated network clock the driver charges each step's wire bits
+/// against: a [`TopologySpec`]-built transport routing over a
+/// [`NetworkModel`]. Per-node payloads are taken as equal shares of the
+/// step's total bits (the solvers' per-node packets differ by at most the
+/// entropy coder's jitter, and the split preserves the exact total).
+pub struct NetClock {
+    transport: Box<dyn Transport>,
+    pub model: NetworkModel,
+    /// true => fp32 payloads, in-network reduction applies
+    pub uncompressed: bool,
+    pub main_protocol: bool,
+    rng: Rng,
+}
+
+impl NetClock {
+    pub fn new(
+        spec: &TopologySpec,
+        model: NetworkModel,
+        uncompressed: bool,
+        main_protocol: bool,
+    ) -> Self {
+        NetClock {
+            transport: spec.build(),
+            model,
+            uncompressed,
+            main_protocol,
+            rng: Rng::new(0x1C0C),
+        }
+    }
+
+    pub fn spec(&self) -> TopologySpec {
+        self.transport.spec()
+    }
+
+    /// Charge one step's exchange: `total_bits` split evenly across the
+    /// `k` nodes (remainder spread over the first nodes, so the sum is
+    /// exact), `d` the aggregate dimension.
+    pub fn charge_step(&mut self, total_bits: u64, k: usize, d: usize) -> WireCharge {
+        let k = k.max(1);
+        let base = total_bits / k as u64;
+        let rem = (total_bits % k as u64) as usize;
+        let mut bits = vec![base; k];
+        for b in bits.iter_mut().take(rem) {
+            *b += 1;
+        }
+        self.transport.charge(
+            &bits,
+            d,
+            &self.model,
+            self.uncompressed,
+            self.main_protocol,
+            &mut self.rng,
+        )
+    }
+}
 
 /// Restricted-gap evaluation schedule for a driven run.
 pub struct GapPolicy<'a> {
@@ -256,6 +319,7 @@ pub fn normalize_checkpoints(requested: &[usize], steps: usize) -> Vec<usize> {
 pub struct RunDriver<'a> {
     checkpoints: Vec<usize>,
     gap: Option<GapPolicy<'a>>,
+    net: Option<NetClock>,
 }
 
 impl Default for RunDriver<'_> {
@@ -266,7 +330,7 @@ impl Default for RunDriver<'_> {
 
 impl<'a> RunDriver<'a> {
     pub fn new() -> Self {
-        RunDriver { checkpoints: Vec::new(), gap: None }
+        RunDriver { checkpoints: Vec::new(), gap: None, net: None }
     }
 
     /// Record a [`Checkpoint`] at each of these iteration numbers (any
@@ -279,6 +343,14 @@ impl<'a> RunDriver<'a> {
     /// Attach a gap-evaluation schedule (and optional early stopping).
     pub fn gap(mut self, policy: GapPolicy<'a>) -> Self {
         self.gap = Some(policy);
+        self
+    }
+
+    /// Attach a simulated network clock: every step's wire bits are routed
+    /// through the clock's topology and charged to the report's `comm_s` /
+    /// `net_wire_bits`.
+    pub fn network(mut self, clock: NetClock) -> Self {
+        self.net = Some(clock);
         self
     }
 
@@ -296,7 +368,8 @@ impl<'a> RunDriver<'a> {
         sinks: &mut [&mut dyn MetricsSink],
     ) -> RunReport {
         let d = solver.dim();
-        let kf = solver.num_nodes() as f64;
+        let k = solver.num_nodes();
+        let kf = k as f64;
         let cks = normalize_checkpoints(&self.checkpoints, steps);
         let mut ck_iter = cks.iter().peekable();
         solver.init(x0);
@@ -307,6 +380,8 @@ impl<'a> RunDriver<'a> {
         let mut total_bits = 0u64;
         let mut quant_err_sq = 0.0f64;
         let mut dual_norm_sq = 0.0f64;
+        let mut comm_s = 0.0f64;
+        let mut net_wire_bits = 0u64;
         let mut out_ckpts = Vec::new();
         let mut gap_trace = Vec::new();
         let mut stopped_early = false;
@@ -318,6 +393,13 @@ impl<'a> RunDriver<'a> {
             total_bits += stats.bits;
             quant_err_sq += stats.quant_err_sq;
             dual_norm_sq += stats.dual_norm_sq;
+            let mut step_comm_s = 0.0;
+            if let Some(clock) = self.net.as_mut() {
+                let charge = clock.charge_step(stats.bits, k, d);
+                step_comm_s = charge.comm_s;
+                comm_s += charge.comm_s;
+                net_wire_bits += charge.wire_bits;
+            }
             {
                 let st = solver.state();
                 for (s, v) in xbar_sum.iter_mut().zip(st.avg_point) {
@@ -349,6 +431,7 @@ impl<'a> RunDriver<'a> {
                 total_bits,
                 oracle_calls: solver.oracle_calls() - calls0,
                 gap: gap_now,
+                comm_s: step_comm_s,
             };
             for sink in sinks.iter_mut() {
                 sink.on_step(&rec);
@@ -387,6 +470,8 @@ impl<'a> RunDriver<'a> {
             gap_trace,
             quant_err_sq,
             dual_norm_sq,
+            comm_s,
+            net_wire_bits,
         };
         for sink in sinks.iter_mut() {
             sink.on_finish(&report);
@@ -556,6 +641,11 @@ pub struct RunSpec {
     /// starting point X_1 (default: the origin)
     pub x0: Option<Vec<f64>>,
     pub gap: GapMode,
+    /// how the per-node packets are routed (affects `comm_s` /
+    /// `net_wire_bits` accounting only — aggregates are topology-invariant)
+    pub topology: TopologySpec,
+    /// attach a network model to charge every step on the simulated clock
+    pub network: Option<NetworkModel>,
 }
 
 impl RunSpec {
@@ -574,6 +664,8 @@ impl RunSpec {
             update_every: 0,
             x0: None,
             gap: GapMode::Off,
+            topology: TopologySpec::BroadcastAllGather,
+            network: None,
         }
     }
 
@@ -632,6 +724,16 @@ impl RunSpec {
         self
     }
 
+    pub fn topology(mut self, spec: TopologySpec) -> Self {
+        self.topology = spec;
+        self
+    }
+
+    pub fn network(mut self, net: NetworkModel) -> Self {
+        self.network = Some(net);
+        self
+    }
+
     /// The operator instance this spec's oracles wrap (rebuilt from the
     /// seed — identical every call), for external gap evaluation.
     pub fn operator_instance(&self) -> Box<dyn Operator> {
@@ -655,6 +757,14 @@ impl RunSpec {
             .map(|i| self.compression.build(d, self.protocol, self.seed + i as u64))
             .collect();
         let mut driver = RunDriver::new().checkpoints(&self.checkpoints);
+        if let Some(model) = &self.network {
+            driver = driver.network(NetClock::new(
+                &self.topology,
+                model.clone(),
+                matches!(self.compression, CompressionSpec::None),
+                self.protocol == ProtocolKind::Main,
+            ));
+        }
         if !matches!(self.gap, GapMode::Off) {
             let sol = op
                 .solution()
@@ -867,17 +977,37 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_alias_still_names_the_report() {
-        #[allow(deprecated)]
-        fn takes_legacy(run: &super::QodaRun) -> u64 {
-            run.total_bits
-        }
-        let report = RunSpec::new(
+    fn network_clock_charges_topologies_differently() {
+        let spec = |topo: TopologySpec| {
+            RunSpec::new(
+                SolverKind::Qoda,
+                OperatorSpec::Quadratic { dim: 16, mu: 0.5, seed: 4 },
+            )
+            .nodes(4)
+            .compression(CompressionSpec::Global { bits: 5, bucket: 128 })
+            .steps(40)
+            .topology(topo)
+            .network(NetworkModel::genesis_cloud(5.0))
+            .run()
+        };
+        let flat = spec(TopologySpec::BroadcastAllGather);
+        let hier = spec(TopologySpec::Hierarchical { racks: 2 });
+        // algorithmic results are topology-invariant...
+        assert_eq!(flat.x_last, hier.x_last);
+        assert_eq!(flat.total_bits, hier.total_bits);
+        // ...while the network accounting reflects the routing
+        assert_eq!(flat.net_wire_bits, flat.total_bits);
+        assert!(hier.net_wire_bits > flat.net_wire_bits);
+        assert!(flat.comm_s > 0.0 && hier.comm_s > 0.0);
+        // no network model attached => no clock
+        let off = RunSpec::new(
             SolverKind::Qoda,
-            OperatorSpec::Quadratic { dim: 4, mu: 0.5, seed: 2 },
+            OperatorSpec::Quadratic { dim: 16, mu: 0.5, seed: 4 },
         )
+        .nodes(4)
         .steps(10)
         .run();
-        assert_eq!(takes_legacy(&report), report.total_bits);
+        assert_eq!(off.comm_s, 0.0);
+        assert_eq!(off.net_wire_bits, 0);
     }
 }

@@ -4,7 +4,8 @@
 //! * [`driver`] — the [`Solver`] trait (`init` / `step` / `state`), the
 //!   shared [`RunDriver`] outer loop (checkpoints, ergodic averaging,
 //!   wire-bit/oracle accounting, gap evaluation + early stopping, streaming
-//!   [`MetricsSink`]s) and the declarative [`RunSpec`] builder every
+//!   [`MetricsSink`]s, optional [`NetClock`] charging every step against a
+//!   pluggable topology) and the declarative [`RunSpec`] builder every
 //!   consumer constructs runs through;
 //! * [`qoda`] — QODA (Algorithm 1): optimistic dual averaging, one oracle
 //!   call and one compressed exchange per iteration;
@@ -27,12 +28,10 @@ pub mod qoda;
 pub mod source;
 
 pub use baseline::{AdamSolver, AdamState, OptimisticAdam};
-#[allow(deprecated)]
-pub use driver::QodaRun;
 pub use driver::{
     normalize_checkpoints, Checkpoint, CompressionSpec, GapMode, GapPolicy, LrSpec,
-    MemorySink, MetricsSink, OperatorSpec, RunDriver, RunReport, RunSpec, Solver,
-    SolverKind, SolverState, StepRecord, StepStats,
+    MemorySink, MetricsSink, NetClock, OperatorSpec, RunDriver, RunReport, RunSpec,
+    Solver, SolverKind, SolverState, StepRecord, StepStats,
 };
 pub use lr::{AdaptiveLr, AltLr, ConstantLr, LrSchedule};
 pub use qgenx::QGenX;

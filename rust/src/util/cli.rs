@@ -1,7 +1,11 @@
 //! Minimal CLI argument parsing (offline environment: no clap).
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Malformed values surface as [`Error`](crate::util::error::Error)s
+//! (`Err`, never `panic!`) so `main` can print usage and exit nonzero
+//! instead of aborting with a backtrace.
 
+use crate::util::error::{Error, Result};
 use std::collections::HashMap;
 
 #[derive(Clone, Debug, Default)]
@@ -51,28 +55,67 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects usize, got {v}")))
-            .unwrap_or(default)
+    /// Parse `--key` as `T`, falling back to `default` when absent. A
+    /// present-but-malformed value is an error, not a panic.
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, kind: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::msg(format!("--{key} expects {kind}, got {v:?}"))
+            }),
+        }
     }
 
-    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects u64, got {v}")))
-            .unwrap_or(default)
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.parse_or(key, "a non-negative integer", default)
     }
 
-    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects f64, got {v}")))
-            .unwrap_or(default)
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        self.parse_or(key, "a non-negative integer", default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.parse_or(key, "a number", default)
     }
 
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key)
             .map(|v| matches!(v, "true" | "1" | "yes"))
             .unwrap_or(default)
+    }
+
+    /// Parse `--key` as a comma-separated list of `T`.
+    pub fn list_or<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: Vec<T>,
+    ) -> Result<Vec<T>> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(list) => list
+                .split(',')
+                .map(|v| {
+                    v.trim().parse().map_err(|_| {
+                        Error::msg(format!(
+                            "--{key} expects a comma-separated list, got {v:?}"
+                        ))
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// The value of `--key` (or `default`), validated against an allowlist.
+    pub fn one_of(&self, key: &str, default: &str, allowed: &[&str]) -> Result<String> {
+        let v = self.get_or(key, default);
+        if allowed.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            Err(Error::msg(format!(
+                "--{key} expects {}, got {v:?}",
+                allowed.join("|")
+            )))
+        }
     }
 }
 
@@ -88,17 +131,17 @@ mod tests {
     fn positional_and_flags() {
         let a = parse(&["cmd", "--steps", "100", "--fast", "--k=4", "pos2"]);
         assert_eq!(a.positional, vec!["cmd", "pos2"]);
-        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
         assert!(a.has("fast"));
         assert!(a.bool_or("fast", false));
-        assert_eq!(a.usize_or("k", 0), 4);
-        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.usize_or("k", 0).unwrap(), 4);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
     }
 
     #[test]
     fn floats_and_strings() {
         let a = parse(&["--lr", "0.5", "--name", "abc"]);
-        assert_eq!(a.f64_or("lr", 0.0), 0.5);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.5);
         assert_eq!(a.get_or("name", ""), "abc");
     }
 
@@ -106,5 +149,29 @@ mod tests {
     fn trailing_flag() {
         let a = parse(&["--verbose"]);
         assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn malformed_values_error_instead_of_panicking() {
+        let a = parse(&["--steps", "ten", "--lr", "fast", "--seed", "-3"]);
+        let e = a.usize_or("steps", 0).unwrap_err();
+        assert!(e.to_string().contains("--steps"), "{e}");
+        assert!(a.f64_or("lr", 0.0).is_err());
+        assert!(a.u64_or("seed", 0).is_err());
+        // absent flags still fall back to the default
+        assert_eq!(a.usize_or("absent", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn lists_and_allowlists() {
+        let a = parse(&["--checkpoints", "10, 20,50", "--solver", "qoda"]);
+        assert_eq!(a.list_or("checkpoints", vec![0usize]).unwrap(), vec![10, 20, 50]);
+        assert_eq!(a.list_or("absent", vec![7usize]).unwrap(), vec![7]);
+        assert!(parse(&["--checkpoints", "a,b"])
+            .list_or::<usize>("checkpoints", vec![])
+            .is_err());
+        assert_eq!(a.one_of("solver", "qoda", &["qoda", "qgenx"]).unwrap(), "qoda");
+        assert!(a.one_of("solver", "qoda", &["adam"]).is_err());
+        assert_eq!(a.one_of("absent", "main", &["main", "alt"]).unwrap(), "main");
     }
 }

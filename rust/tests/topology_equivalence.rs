@@ -1,0 +1,250 @@
+//! Cross-topology equivalence: every topology, on both engines, across
+//! seeds, must produce bit-identical aggregates and iterates — a topology
+//! is a routing/charging plan, never math. Per-topology wire-bit totals
+//! must match their analytic formulas, and the flat broadcast topology must
+//! charge the exact pre-refactor network-clock time (golden parity).
+
+use qoda::coding::protocol::ProtocolKind;
+use qoda::comm::Compressor;
+use qoda::coordinator::parallel::{
+    run_rounds_over, worker_codec_seed, worker_oracle_seed, SharedQuantState,
+};
+use qoda::coordinator::sim::ClusterSim;
+use qoda::coordinator::TopologySpec;
+use qoda::net::{Collective, NetworkModel};
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::{LevelSequence, QuantConfig};
+use qoda::stats::rng::Rng;
+use qoda::vi::noise::{NoiseModel, Oracle};
+use qoda::vi::operator::QuadraticOperator;
+
+const D: usize = 24;
+const K: usize = 6;
+
+fn shared_state() -> SharedQuantState {
+    SharedQuantState {
+        map: LayerMap::from_spec(&[("a", 16, "ff"), ("b", 8, "emb")]).bucketed(8),
+        cfg: QuantConfig {
+            sequences: vec![LevelSequence::bits(4), LevelSequence::bits(6)],
+            q: 2.0,
+        },
+        protocol: ProtocolKind::Main,
+    }
+}
+
+fn topologies() -> [TopologySpec; 3] {
+    [
+        TopologySpec::BroadcastAllGather,
+        TopologySpec::Hierarchical { racks: 3 },
+        TopologySpec::ParameterServer,
+    ]
+}
+
+/// All topologies x both engines x 3 seeds: aggregates, iterates and (per
+/// topology) wire-bit totals agree bit-for-bit.
+#[test]
+fn topologies_and_engines_agree_bitwise_across_seeds() {
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let mut op_rng = Rng::new(99);
+    let op = QuadraticOperator::random(D, 0.5, &mut op_rng);
+    let lr = 0.07;
+    let steps = 4;
+    let net = NetworkModel::genesis_cloud(5.0);
+
+    for seed in [11u64, 29, 47] {
+        let st = shared_state();
+        let x0 = vec![0.3; D];
+        // (x, last_mean, wire_bits) per (topology, engine)
+        let mut reference: Option<(Vec<f64>, Vec<f64>)> = None;
+        for spec in topologies() {
+            // threaded engine
+            let par = run_rounds_over(
+                &op,
+                noise,
+                K,
+                &st,
+                x0.clone(),
+                steps,
+                seed,
+                &spec,
+                &net,
+                |x, mean, _| {
+                    for (xi, g) in x.iter_mut().zip(mean) {
+                        *xi -= lr * g;
+                    }
+                },
+            )
+            .expect("run_rounds_over");
+
+            // sim engine with the same per-node codec + oracle seeds
+            let codecs: Vec<Box<dyn Compressor>> = (0..K)
+                .map(|n| Box::new(st.codec(worker_codec_seed(seed, n))) as _)
+                .collect();
+            let mut sim =
+                ClusterSim::new(codecs, net.clone(), false).with_topology(&spec);
+            let mut oracles: Vec<Oracle> = (0..K)
+                .map(|n| Oracle::new(&op, noise, worker_oracle_seed(seed, n)))
+                .collect();
+            let mut x = x0.clone();
+            let mut bits_sim = 0u64;
+            let mut last_mean = vec![0.0; D];
+            for _ in 0..steps {
+                let duals: Vec<Vec<f64>> =
+                    oracles.iter_mut().map(|o| o.sample(&x)).collect();
+                let (mean, m) = sim.exchange(&duals).expect("exchange");
+                bits_sim += m.wire_bits;
+                for (xi, g) in x.iter_mut().zip(&mean) {
+                    *xi -= lr * g;
+                }
+                last_mean = mean;
+            }
+
+            // engines agree on everything, including the topology's charge
+            assert_eq!(par.x, x, "iterate mismatch ({spec:?}, seed {seed})");
+            assert_eq!(
+                par.last_mean, last_mean,
+                "aggregate mismatch ({spec:?}, seed {seed})"
+            );
+            assert_eq!(
+                par.wire_bits, bits_sim,
+                "wire bit mismatch ({spec:?}, seed {seed})"
+            );
+            assert!(par.comm_s > 0.0);
+
+            // topologies agree on the math (aggregates/iterates), while the
+            // wire accounting is allowed (expected) to differ
+            match &reference {
+                None => reference = Some((par.x.clone(), par.last_mean.clone())),
+                Some((rx, rm)) => {
+                    assert_eq!(&par.x, rx, "cross-topology iterate drift ({spec:?})");
+                    assert_eq!(
+                        &par.last_mean, rm,
+                        "cross-topology aggregate drift ({spec:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Per-topology wire-bit totals match the analytic formulas, with the real
+/// (heterogeneous, entropy-coded) per-node packet sizes recovered from the
+/// same seeded codecs the engines use.
+#[test]
+fn wire_bits_match_analytic_formulas() {
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let mut op_rng = Rng::new(7);
+    let op = QuadraticOperator::random(D, 0.5, &mut op_rng);
+    let st = shared_state();
+    let seed = 31u64;
+    let x0 = vec![0.25; D];
+    let net = NetworkModel::genesis_cloud(5.0);
+
+    // per-node packet bits of the single round, from fresh codecs seeded
+    // exactly like the engines' workers
+    let b: Vec<u64> = (0..K)
+        .map(|n| {
+            let mut oracle = Oracle::new(&op, noise, worker_oracle_seed(seed, n));
+            let mut codec = st.codec(worker_codec_seed(seed, n));
+            let dual = oracle.sample(&x0);
+            codec.encode(&dual).len_bits() as u64
+        })
+        .collect();
+    let total: u64 = b.iter().sum();
+    let agg_bits = 32 * D as u64;
+
+    // racks of 2: leaders are nodes 0, 2, 4; every rack has a member, so
+    // each pays the full-packet-set multicast down
+    let expected_hier: u64 = (b[1] + b[3] + b[5]) // up: non-leaders
+        + total                                   // cross: bundles, once each
+        + 3 * total; // down: full packet set per multi-member rack
+    let expected = [
+        (TopologySpec::BroadcastAllGather, total),
+        (TopologySpec::Hierarchical { racks: 3 }, expected_hier),
+        (TopologySpec::ParameterServer, total + K as u64 * agg_bits),
+    ];
+
+    for (spec, want) in expected {
+        let report = run_rounds_over(
+            &op,
+            noise,
+            K,
+            &st,
+            x0.clone(),
+            1,
+            seed,
+            &spec,
+            &net,
+            |_, _, _| {},
+        )
+        .expect("run_rounds_over");
+        assert_eq!(report.wire_bits, want, "wire formula mismatch ({spec:?})");
+    }
+    // the formulas are genuinely distinct on this workload
+    assert!(expected_hier > total);
+}
+
+/// fp32 in-network reduction formulas: with identity compressors (b_i =
+/// 32d) the hierarchical topology reduces rack-locally, so `W = (K + 2R -
+/// #nonleader-corrected)`... concretely: up (K - R) + cross R + down R
+/// aggregate-sized vectors.
+#[test]
+fn fp32_reduce_wire_formulas() {
+    use qoda::comm::IdentityCompressor;
+    let d = 16usize;
+    let k = 6usize;
+    let a = 32 * d as u64;
+    let duals: Vec<Vec<f64>> = {
+        let mut rng = Rng::new(3);
+        (0..k).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect()
+    };
+    let mk = || -> Vec<Box<dyn Compressor>> {
+        (0..k).map(|_| Box::new(IdentityCompressor) as _).collect()
+    };
+    let net = NetworkModel::genesis_cloud(5.0);
+
+    let (_, flat) = ClusterSim::new(mk(), net.clone(), true).exchange(&duals).unwrap();
+    assert_eq!(flat.wire_bits, k as u64 * a);
+
+    let (_, hier) = ClusterSim::new(mk(), net.clone(), true)
+        .with_topology(&TopologySpec::Hierarchical { racks: 3 })
+        .exchange(&duals)
+        .unwrap();
+    // 3 racks of 2: up = 3 member grads, cross = 3 leader contributions,
+    // down = 3 aggregate multicasts — all aggregate-sized
+    assert_eq!(hier.wire_bits, 3 * a + 3 * a + 3 * a);
+
+    let (_, ps) = ClusterSim::new(mk(), net, true)
+        .with_topology(&TopologySpec::ParameterServer)
+        .exchange(&duals)
+        .unwrap();
+    assert_eq!(ps.wire_bits, k as u64 * a + k as u64 * a);
+}
+
+/// Golden parity of the network clock: the flat topology must charge the
+/// byte-exact collective sample the pre-refactor engine drew, from the same
+/// RNG stream.
+#[test]
+fn flat_network_clock_golden_parity() {
+    let st = shared_state();
+    let codecs: Vec<Box<dyn Compressor>> =
+        (0..K).map(|n| Box::new(st.codec(worker_codec_seed(5, n))) as _).collect();
+    let net = NetworkModel::genesis_cloud(5.0);
+    let mut sim = ClusterSim::new(codecs, net.clone(), false);
+    let duals: Vec<Vec<f64>> = {
+        let mut rng = Rng::new(13);
+        (0..K).map(|_| (0..D).map(|_| rng.gaussian()).collect()).collect()
+    };
+    let (_, m) = sim.exchange(&duals).unwrap();
+    // replay the legacy charging path: per-node encoded bytes through
+    // sample_collective_seconds with the engine's seed (0xC0FFEE)
+    let bytes: Vec<f64> = sim
+        .endpoints()
+        .iter()
+        .map(|e| e.packet().len_bits() as f64 / 8.0)
+        .collect();
+    let mut legacy_rng = Rng::new(0xC0FFEE);
+    let want =
+        net.sample_collective_seconds(Collective::RingAllGather, &bytes, true, &mut legacy_rng);
+    assert_eq!(m.comm_s, want, "network-clock drift vs pre-refactor charging");
+}
