@@ -1,15 +1,18 @@
 //! Per-topology comm cost baseline: ns/step (real codec + aggregation work)
 //! and bytes/step (topology-charged wire traffic) for one cluster exchange
 //! under each [`TopologySpec`], plus the modeled per-step comm milliseconds
-//! of the Table 1/2 regime. Emits the machine-readable
+//! of the Table 1/2 regime — synchronous AND overlapped (exposed vs hidden
+//! against the weak-scaling compute window). Emits the machine-readable
 //! `results/BENCH_comm.json` so CI and regression tooling can diff the
 //! numbers without scraping stdout.
 
-use qoda::bench_harness::experiments::topology_sweep;
+use qoda::bench_harness::experiments::{
+    overlap_sweep, table2_compute_window_s, topology_sweep,
+};
 use qoda::bench_harness::{bench, JsonBench};
 use qoda::comm::{Compressor, QuantCompressor};
 use qoda::coordinator::sim::ClusterSim;
-use qoda::coordinator::TopologySpec;
+use qoda::coordinator::{ExchangePlan, TopologySpec};
 use qoda::net::NetworkModel;
 use qoda::quant::layer_map::LayerMap;
 use qoda::stats::rng::Rng;
@@ -22,6 +25,8 @@ fn main() {
     let mut rng = Rng::new(5);
     let duals: Vec<Vec<f64>> =
         (0..k).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect();
+    // the Table 1/2 compute window at this K, for the exposed/hidden split
+    let plan = ExchangePlan::overlapped(1, table2_compute_window_s(k));
 
     for spec in [
         TopologySpec::BroadcastAllGather,
@@ -34,6 +39,7 @@ fn main() {
         let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), false)
             .with_topology(&spec);
         let (_, metrics) = sim.exchange(&duals).expect("exchange");
+        let (exposed_s, hidden_s) = plan.split(metrics.comm_s);
         let res = bench(
             &format!("topology/{}/K={k}/d=64k", spec.label()),
             Some((k * d) as u64),
@@ -46,6 +52,8 @@ fn main() {
                 ("ns_per_step", format!("{:.1}", res.mean_ns)),
                 ("bytes_per_step", format!("{:.1}", metrics.wire_bits as f64 / 8.0)),
                 ("modeled_comm_ms", format!("{:.4}", metrics.comm_s * 1e3)),
+                ("comm_exposed_ms", format!("{:.4}", exposed_s * 1e3)),
+                ("comm_hidden_ms", format!("{:.4}", hidden_s * 1e3)),
             ],
         );
     }
@@ -58,6 +66,22 @@ fn main() {
                 ("k", format!("{}", row.k)),
                 ("baseline_ms", format!("{:.2}", row.baseline_ms)),
                 ("qoda5_ms", format!("{:.2}", row.qoda5_ms)),
+            ],
+        );
+    }
+
+    // the same regime under the overlapped exchange: exposed/hidden comm
+    // and the double-buffered step time, per topology
+    for row in overlap_sweep(&[4, 8, 12, 16], 5.0, 1) {
+        json.push(
+            &format!("overlap/{}/K={}", row.topology.label(), row.k),
+            &[
+                ("k", format!("{}", row.k)),
+                ("comm_ms", format!("{:.2}", row.comm_ms)),
+                ("comm_exposed_ms", format!("{:.2}", row.comm_exposed_ms)),
+                ("comm_hidden_ms", format!("{:.2}", row.comm_hidden_ms)),
+                ("sync_step_ms", format!("{:.2}", row.sync_ms)),
+                ("overlap_step_ms", format!("{:.2}", row.overlap_ms)),
             ],
         );
     }

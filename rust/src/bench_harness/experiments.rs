@@ -7,7 +7,9 @@ use crate::coding::protocol::{
     encoded_bits, symbol_counts, Codebooks, ProtocolKind,
 };
 use crate::comm::{Compressor, QuantCompressor};
-use crate::coordinator::topology::{rack_spans, TopologySpec, Transport};
+use crate::coordinator::topology::{
+    rack_spans, resolve_racks, ExchangePlan, TopologySpec, Transport,
+};
 use crate::net::{Collective, NetworkModel};
 use crate::oda::{
     CompressionSpec, ConstantLr, GapMode, LrSpec, OperatorSpec, Qoda, RunDriver,
@@ -40,6 +42,33 @@ pub const BASELINE_SYNC_MS_PER_PEER: f64 = 13.0;
 /// codec is benchmarked separately in rust/benches; the table uses the
 /// device-speed figure so the regime matches the testbed
 pub const QODA_CODEC_MS: f64 = 4.0;
+
+/// The Table 2 per-step compute window (seconds) at `k` nodes — the weak-
+/// scaling model `COMPUTE_A_MS + COMPUTE_B_MS / K` in one place, shared by
+/// the overlap harness, the bench JSON emitter, the simulator calibration
+/// pins and `examples/overlap_sweep.rs` so they can never disagree about
+/// what an overlapped exchange hides behind.
+pub fn table2_compute_window_s(k: usize) -> f64 {
+    (COMPUTE_A_MS + COMPUTE_B_MS / k as f64) * 1e-3
+}
+
+/// One QODA5-regime exchange charge: `k` nodes each shipping the Table 1/2
+/// payload at `bpc` measured bytes/coordinate, routed by `topo` over the
+/// `bandwidth_gbps` genesis-cloud model. The single source of the
+/// payload-construction recipe shared by [`step_time_ms_topo`],
+/// [`overlap_sweep`] and `examples/overlap_sweep.rs`.
+pub fn qoda5_charge(
+    k: usize,
+    bandwidth_gbps: f64,
+    bpc: f64,
+    topo: &TopologySpec,
+) -> crate::coordinator::topology::WireCharge {
+    let net = NetworkModel::genesis_cloud(bandwidth_gbps);
+    let coords = (PAYLOAD_BYTES / 4.0) as usize;
+    let bits = vec![(coords as f64 * bpc * 8.0) as u64; k];
+    let mut rng = Rng::new(1);
+    topo.build().charge(&bits, coords, &net, false, true, &mut rng)
+}
 
 /// Real encoded bytes/coordinate for a gradient-shaped vector under the
 /// QODA5 configuration (5-bit, bucket 128, entropy-coded): measured through
@@ -97,9 +126,9 @@ fn sync_peers(topo: &TopologySpec, k: usize) -> usize {
     match *topo {
         TopologySpec::BroadcastAllGather => k.saturating_sub(1),
         TopologySpec::Hierarchical { racks } => {
-            // racks = 0 resolves to the conventional K/4 layout, mirroring
-            // `Hierarchical::charge`
-            let racks = if racks == 0 { (k / 4).max(2) } else { racks };
+            // racks = 0 resolves to the conventional K/4 layout, exactly as
+            // `Hierarchical::charge` does via `resolve_racks`
+            let racks = resolve_racks(k, racks);
             let spans = rack_spans(k, racks);
             let m = spans.iter().map(|&(s, e)| e - s).max().unwrap_or(1);
             (m - 1) + spans.len().saturating_sub(1)
@@ -120,18 +149,16 @@ pub fn step_time_ms_topo(
     bytes_per_coord: f64,
     topo: &TopologySpec,
 ) -> f64 {
-    let net = NetworkModel::genesis_cloud(bandwidth_gbps);
     let compute = COMPUTE_A_MS + COMPUTE_B_MS / k as f64;
-    let coords = (PAYLOAD_BYTES / 4.0) as usize;
-    let mut transport = topo.build();
-    let mut rng = Rng::new(1);
     if qoda5 {
-        let bits = vec![(coords as f64 * bytes_per_coord * 8.0) as u64; k];
-        let charge = transport.charge(&bits, coords, &net, false, true, &mut rng);
+        let charge = qoda5_charge(k, bandwidth_gbps, bytes_per_coord, topo);
         compute + QODA_CODEC_MS + charge.comm_s * 1e3
     } else {
+        let net = NetworkModel::genesis_cloud(bandwidth_gbps);
+        let coords = (PAYLOAD_BYTES / 4.0) as usize;
         let bits = vec![(PAYLOAD_BYTES * 8.0) as u64; k];
-        let charge = transport.charge(&bits, coords, &net, true, true, &mut rng);
+        let mut rng = Rng::new(1);
+        let charge = topo.build().charge(&bits, coords, &net, true, true, &mut rng);
         let sync = BASELINE_SYNC_MS_PER_PEER * sync_peers(topo, k) as f64;
         compute + sync + charge.comm_s * 1e3
     }
@@ -185,6 +212,83 @@ pub fn topology_table(ks: &[usize], bandwidth_gbps: f64) -> Table {
             format!("{:.0}", row.baseline_ms),
             format!("{:.0}", row.qoda5_ms),
             format!("{:.2}x", row.baseline_ms / row.qoda5_ms),
+        ]);
+    }
+    t
+}
+
+/// One (K, topology) cell of the overlapped-exchange sweep: the Table 1/2
+/// QODA5 regime with comm split into exposed vs hidden against the weak-
+/// scaling compute window.
+pub struct OverlapRow {
+    pub k: usize,
+    pub topology: TopologySpec,
+    /// full modeled comm per step (ms) — what a synchronous exchange pays
+    pub comm_ms: f64,
+    /// comm left on the critical path under the overlapped exchange (ms)
+    pub comm_exposed_ms: f64,
+    /// comm hidden behind the next step's compute (ms)
+    pub comm_hidden_ms: f64,
+    /// synchronous step time (ms): compute + codec + full comm
+    pub sync_ms: f64,
+    /// overlapped step time (ms): compute + codec + exposed comm only
+    pub overlap_ms: f64,
+}
+
+/// The QODA5 weak-scaling regime under an overlapped exchange of `depth`:
+/// per (K, topology), the transport's charge is split against the
+/// calibrated compute window `COMPUTE_A_MS + COMPUTE_B_MS / K` and the step
+/// time recomputed with only the exposed share on the critical path.
+/// Drives `overlap_table`, the `BENCH_comm.json` exposed/hidden columns and
+/// `examples/overlap_sweep.rs`.
+pub fn overlap_sweep(ks: &[usize], bandwidth_gbps: f64, depth: usize) -> Vec<OverlapRow> {
+    let bpc = measure_qoda5_bytes_per_coord(1 << 16, 42);
+    let mut rows = Vec::new();
+    for &k in ks {
+        let compute_ms = table2_compute_window_s(k) * 1e3;
+        let plan = ExchangePlan::overlapped(depth, table2_compute_window_s(k));
+        for spec in [
+            TopologySpec::BroadcastAllGather,
+            TopologySpec::hierarchical_for(k),
+            TopologySpec::ParameterServer,
+        ] {
+            let charge = qoda5_charge(k, bandwidth_gbps, bpc, &spec);
+            let (exposed_s, hidden_s) = plan.split(charge.comm_s);
+            let comm_ms = charge.comm_s * 1e3;
+            rows.push(OverlapRow {
+                k,
+                topology: spec,
+                comm_ms,
+                comm_exposed_ms: exposed_s * 1e3,
+                comm_hidden_ms: hidden_s * 1e3,
+                sync_ms: compute_ms + QODA_CODEC_MS + comm_ms,
+                overlap_ms: compute_ms + QODA_CODEC_MS + exposed_s * 1e3,
+            });
+        }
+    }
+    rows
+}
+
+/// Render [`overlap_sweep`] as a table (the Table 2 regime with the
+/// synchronous-vs-overlapped axis).
+pub fn overlap_table(ks: &[usize], bandwidth_gbps: f64, depth: usize) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Weak scaling x overlap (QODA5) — per-step ms, depth {depth}, \
+             {bandwidth_gbps} Gbps cross-rack"
+        ),
+        &["K", "topology", "comm", "exposed", "hidden", "sync step", "overlap step", "speedup"],
+    );
+    for row in overlap_sweep(ks, bandwidth_gbps, depth) {
+        t.row(&[
+            format!("{}", row.k),
+            row.topology.label().to_string(),
+            format!("{:.1}", row.comm_ms),
+            format!("{:.1}", row.comm_exposed_ms),
+            format!("{:.1}", row.comm_hidden_ms),
+            format!("{:.0}", row.sync_ms),
+            format!("{:.0}", row.overlap_ms),
+            format!("{:.2}x", row.sync_ms / row.overlap_ms),
         ]);
     }
     t
@@ -673,6 +777,59 @@ mod tests {
         let flat16 =
             step_time_ms_topo(16, 5.0, false, bpc, &TopologySpec::BroadcastAllGather);
         assert!(ps16 > flat16, "{ps16} vs {flat16}");
+    }
+
+    #[test]
+    fn overlap_hides_the_table2_comm_and_never_exposes_more_than_sync() {
+        // at the paper's weak-scaling points the compute window dwarfs the
+        // quantized comm: overlapping hides all of it, for every topology,
+        // and the overlapped step never exceeds the synchronous step
+        let rows = overlap_sweep(&[4, 8, 12, 16], 5.0, 1);
+        for row in &rows {
+            assert!(row.comm_exposed_ms <= row.comm_ms + 1e-12, "{:?}", row.topology);
+            assert!(
+                (row.comm_exposed_ms + row.comm_hidden_ms - row.comm_ms).abs() < 1e-9,
+                "split must conserve comm: {:?} K={}",
+                row.topology,
+                row.k
+            );
+            assert!(row.overlap_ms <= row.sync_ms + 1e-12);
+        }
+        // the acceptance regime: at K >= 12 the hidden-communication
+        // speedup is real for flat and hierarchical routing
+        for row in rows.iter().filter(|r| {
+            r.k >= 12 && !matches!(r.topology, TopologySpec::ParameterServer)
+        }) {
+            assert!(
+                row.comm_hidden_ms > 0.9 * row.comm_ms,
+                "K={} {:?}: hidden {} of {}",
+                row.k,
+                row.topology,
+                row.comm_hidden_ms,
+                row.comm_ms
+            );
+            assert!(
+                row.sync_ms / row.overlap_ms > 1.05,
+                "K={} {:?}: {} vs {}",
+                row.k,
+                row.topology,
+                row.sync_ms,
+                row.overlap_ms
+            );
+        }
+        // overlap closes the flat-vs-hierarchical gap once comm hides: at
+        // K = 16 the synchronous step times differ across those topologies,
+        // the overlapped ones agree to the compute+codec floor
+        let at16: Vec<&OverlapRow> = rows
+            .iter()
+            .filter(|r| {
+                r.k == 16 && !matches!(r.topology, TopologySpec::ParameterServer)
+            })
+            .collect();
+        assert_eq!(at16.len(), 2);
+        let sync_gap = (at16[0].sync_ms - at16[1].sync_ms).abs();
+        let overlap_gap = (at16[0].overlap_ms - at16[1].overlap_ms).abs();
+        assert!(overlap_gap < 0.1 * sync_gap, "{overlap_gap} vs {sync_gap}");
     }
 
     #[test]

@@ -10,6 +10,13 @@ pub struct StepMetrics {
     pub codec_s: f64,
     /// modeled seconds on the wire (network simulator on real byte counts)
     pub comm_s: f64,
+    /// the share of `comm_s` left on the critical path by the engine's
+    /// exchange schedule (== `comm_s` for a synchronous exchange)
+    pub comm_exposed_s: f64,
+    /// the share of `comm_s` hidden behind the next step's compute window
+    /// (0.0 for a synchronous exchange); `comm_exposed_s + comm_hidden_s
+    /// == comm_s` always
+    pub comm_hidden_s: f64,
     /// encoded payload bytes per node this step
     pub bytes_per_node: f64,
     /// exact total wire bits across all nodes this step (summed off the
@@ -20,8 +27,17 @@ pub struct StepMetrics {
 }
 
 impl StepMetrics {
+    /// Synchronous wall-clock: compute + codec + the full wire time.
     pub fn total_s(&self) -> f64 {
         self.compute_s + self.codec_s + self.comm_s
+    }
+
+    /// Wall-clock under the engine's exchange schedule: compute + codec +
+    /// only the *exposed* share of the wire time. Falls back to
+    /// [`StepMetrics::total_s`] semantics when no split was recorded
+    /// (`comm_hidden_s == 0`).
+    pub fn wall_s(&self) -> f64 {
+        self.compute_s + self.codec_s + self.comm_s - self.comm_hidden_s
     }
 
     pub fn scalar(&self, name: &str) -> Option<f64> {
@@ -77,6 +93,8 @@ mod tests {
                 compute_s: 0.1,
                 codec_s: 0.01,
                 comm_s: 0.04,
+                comm_exposed_s: 0.04,
+                comm_hidden_s: 0.0,
                 bytes_per_node: 100.0,
                 wire_bits: 800,
                 scalars: vec![],
@@ -87,5 +105,26 @@ mod tests {
         assert!((run.mean_step_ms() - 150.0).abs() < 1e-9);
         assert_eq!(run.series("loss"), vec![(0, 0.0), (1, 1.0), (2, 2.0)]);
         assert_eq!(run.total_bytes(), 300.0);
+    }
+
+    #[test]
+    fn wall_time_subtracts_only_the_hidden_share() {
+        let mut m = StepMetrics {
+            compute_s: 0.1,
+            codec_s: 0.01,
+            comm_s: 0.04,
+            comm_exposed_s: 0.04,
+            comm_hidden_s: 0.0,
+            ..Default::default()
+        };
+        // synchronous: wall == total
+        assert_eq!(m.wall_s(), m.total_s());
+        // overlapped: only the exposed share stays on the critical path
+        m.comm_exposed_s = 0.01;
+        m.comm_hidden_s = 0.03;
+        assert!((m.wall_s() - 0.12).abs() < 1e-12, "{}", m.wall_s());
+        // records without a recorded split keep the synchronous reading
+        let legacy = StepMetrics { compute_s: 0.2, comm_s: 0.05, ..Default::default() };
+        assert_eq!(legacy.wall_s(), legacy.total_s());
     }
 }

@@ -1,10 +1,10 @@
-//! L3 distributed coordinator: the data-parallel synchronous engine of
-//! Section 3.1 — K nodes, each holding a local parameter copy and a private
-//! stochastic oracle; per step every node quantizes + entropy-codes its dual
-//! vector, the topology routes it, decodes the others and applies the
-//! identical (ODA) update.
+//! L3 distributed coordinator: the data-parallel engine of Section 3.1 —
+//! K nodes, each holding a local parameter copy and a private stochastic
+//! oracle; per step every node quantizes + entropy-codes its dual vector,
+//! the topology routes it, decodes the others and applies the identical
+//! (ODA) update.
 //!
-//! The stack is split into three orthogonal layers:
+//! The stack is split into orthogonal layers:
 //!
 //! * **Packets** — all wire traffic flows through the `crate::comm`
 //!   subsystem: each node's [`comm::CommEndpoint`](crate::comm::CommEndpoint)
@@ -21,26 +21,44 @@
 //!   broadcast-allgather (flat ring collectives — the original behavior,
 //!   golden-parity tested), hierarchical two-level aggregation (rack-local
 //!   gather over fast PCIe-class links, leaders-only cross-rack exchange),
-//!   and a parameter-server hub. Each is charged against the heterogeneous
-//!   link classes and injectable stragglers of
-//!   [`net::NetworkModel`](crate::net::NetworkModel).
+//!   and a parameter-server hub. Every charge also decomposes into a
+//!   [`net::PhaseTimeline`](crate::net::PhaseTimeline) of rack-local /
+//!   cross-rack intervals against the heterogeneous link classes and
+//!   injectable stragglers of [`net::NetworkModel`](crate::net::NetworkModel).
+//! * **Exchange schedule** — an [`ExchangePlan`] decides how each charge
+//!   meets the clock. [`ExchangeMode::Synchronous`] is lock-step: the full
+//!   `comm_s` sits on the critical path, and the engines are bit- and
+//!   clock-identical to the pre-overlap coordinator (pinned by
+//!   `tests/overlap_parity.rs`). [`ExchangeMode::Overlapped`] double-buffers
+//!   the duals: round t's bundle travels while round t+1 computes, the
+//!   engines apply aggregates `depth` rounds stale, and each step's
+//!   `comm_s` splits into `comm_exposed_s` (outlives the compute window)
+//!   vs `comm_hidden_s` (overlapped away) — the split the Table 1/2
+//!   overlap harness and `examples/overlap_sweep.rs` report.
 //!
 //! Two engines consume the same packets through the same core:
 //!
 //! * `sim`      — deterministic in-process engine with a simulated network
 //!                clock (drives the Table 1/2 harnesses and the GAN/LM
-//!                trainers backed by the native model runtime);
+//!                trainers backed by the native model runtime); overlapped
+//!                mode stages aggregates in an engine-side double buffer
+//!                ([`sim::ClusterSim::drain_staged`] flushes the tail);
 //! * `parallel` — real `std::thread` workers shipping `WirePacket`s over
 //!                channels, with the leader decoding in node order
 //!                (exercises the actual concurrency for VI-operator
-//!                sources; integration-tested for bit-identical aggregates
-//!                *and identical wire bit counts* against `sim` across all
-//!                topologies, both protocols and multiple seeds).
+//!                sources). In overlapped mode the double buffer is real:
+//!                the leader queues round t+1 before collecting round t's
+//!                round-tagged replies, so the in-flight bundle overlaps
+//!                worker compute on actual threads. Integration-tested for
+//!                bit-identical aggregates *and identical wire bit counts*
+//!                against `sim` across all topologies, both protocols and
+//!                multiple seeds — in both exchange modes.
 //!
 //! Decode failures surface as `comm::CommError` from both engines — corrupt
 //! wire bytes can never panic the coordinator. A new transport is a new
 //! [`Transport`] implementation (one file), not an engine fork: the engines
-//! never see topology internals, only the [`WireCharge`] they are billed.
+//! never see topology internals, only the [`WireCharge`] they are billed
+//! and the timeline the overlap scheduler splits.
 
 pub mod core;
 pub mod metrics;
@@ -50,4 +68,6 @@ pub mod topology;
 
 pub use metrics::StepMetrics;
 pub use sim::{ClusterSim, StepTimeModel};
-pub use topology::{TopologySpec, Transport, WireCharge};
+pub use topology::{
+    ExchangeMode, ExchangePlan, TopologySpec, Transport, WireCharge,
+};

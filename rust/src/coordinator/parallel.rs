@@ -11,9 +11,19 @@
 //! bit-identical aggregates *and identical wire bit counts* between both
 //! engines under the same seeds — replies are therefore aggregated in node
 //! order, not arrival order.
+//!
+//! Exchanges follow an [`ExchangePlan`]. Synchronous runs use the lock-step
+//! loop (send round t, collect round t, update) that is bit-identical to
+//! the pre-overlap engine. Overlapped runs use a *real* double buffer over
+//! the same channels: the leader queues round t+1's query before collecting
+//! round t's packets (workers never idle on the leader's decode), applies
+//! aggregates `depth` rounds stale while the newer bundle is still in
+//! flight, round-tags replies so interleaved rounds cannot mix, and drains
+//! the pipeline at the end so every round's aggregate is applied exactly
+//! once, in order.
 
 use super::core::decode_aggregate_into;
-use super::topology::{TopologySpec, Transport};
+use super::topology::{ExchangeMode, ExchangePlan, TopologySpec, Transport};
 use crate::coding::protocol::ProtocolKind;
 use crate::comm::{Adaptation, CommError, Compressor, QuantCompressor, WirePacket};
 use crate::net::NetworkModel;
@@ -30,9 +40,12 @@ enum Cmd {
     Stop,
 }
 
-/// Worker reply: the node id plus its encoded wire packet.
+/// Worker reply: the node id, the round the packet belongs to (rounds
+/// interleave on the reply channel under an overlapped exchange), and the
+/// encoded wire packet.
 struct Reply {
     node: usize,
+    round: usize,
     packet: WirePacket,
 }
 
@@ -80,6 +93,12 @@ pub struct RoundsReport {
     pub last_mean: Vec<f64>,
     /// simulated network-clock seconds accumulated across rounds
     pub comm_s: f64,
+    /// the share of `comm_s` the exchange plan left on the critical path
+    /// (== `comm_s` for synchronous runs)
+    pub comm_exposed_s: f64,
+    /// the share of `comm_s` hidden behind the plan's compute window
+    /// (`comm_exposed_s + comm_hidden_s == comm_s`)
+    pub comm_hidden_s: f64,
 }
 
 /// Run `steps` rounds of the distributed exchange with `k` worker threads:
@@ -114,16 +133,27 @@ pub fn run_rounds(
         seed,
         &TopologySpec::BroadcastAllGather,
         &NetworkModel::genesis_cloud(5.0),
+        ExchangePlan::synchronous(),
         update,
     )?;
     Ok((report.x, report.wire_bits, report.last_mean))
 }
 
-/// [`run_rounds`] under an arbitrary [`TopologySpec`]: the same threaded
-/// exchange, with the topology routing/charging each round's packets
-/// against `net`. The iterates and aggregates are identical under every
-/// topology (the aggregate math lives in the shared core); only `wire_bits`
-/// and `comm_s` differ.
+/// [`run_rounds`] under an arbitrary [`TopologySpec`] and [`ExchangePlan`]:
+/// the same threaded exchange, with the topology routing/charging each
+/// round's packets against `net` and the plan scheduling comm against
+/// compute. The aggregates are identical under every topology (the
+/// aggregate math lives in the shared core); only `wire_bits` / `comm_s` /
+/// the exposed split differ. Under `ExchangeMode::Synchronous` the loop —
+/// and every float it produces — is identical to the pre-overlap engine.
+///
+/// Under `ExchangeMode::Overlapped { depth }` the iterates follow the
+/// depth-step-stale schedule: round t's query point is `x_t` where
+/// `x_{t+1} = update(x_t, mean_{t-depth})` (no update while the pipe
+/// fills), the leader queues round t+1 *before* collecting round t so the
+/// in-flight bundle genuinely overlaps worker compute, and the pipeline
+/// drains at the end — every round's aggregate is applied exactly once, in
+/// round order, with `update` receiving the aggregate's producing round.
 #[allow(clippy::too_many_arguments)]
 pub fn run_rounds_over(
     op: &dyn Operator,
@@ -135,6 +165,7 @@ pub fn run_rounds_over(
     seed: u64,
     topology: &TopologySpec,
     net: &NetworkModel,
+    plan: ExchangePlan,
     mut update: impl FnMut(&mut Vec<f64>, &[f64], usize),
 ) -> Result<RoundsReport, CommError> {
     let d = op.dim();
@@ -151,6 +182,8 @@ pub fn run_rounds_over(
     let mut x = x0;
     let mut wire_bits = 0u64;
     let mut comm_s = 0.0f64;
+    let mut comm_exposed_s = 0.0f64;
+    let mut comm_hidden_s = 0.0f64;
     let mut last_mean = vec![0.0; d];
 
     let result: Result<(), CommError> = std::thread::scope(|scope| {
@@ -164,10 +197,12 @@ pub fn run_rounds_over(
             let mut codec = state.codec(worker_codec_seed(seed, node));
             scope.spawn(move || {
                 let mut oracle = Oracle::new(op, noise, worker_oracle_seed(seed, node));
+                let mut round = 0usize;
                 while let Ok(Cmd::Eval(xq)) = rx.recv() {
+                    round += 1;
                     let dual = oracle.sample(&xq);
                     let packet = codec.encode(&dual);
-                    if reply_tx.send(Reply { node, packet }).is_err() {
+                    if reply_tx.send(Reply { node, round, packet }).is_err() {
                         break;
                     }
                 }
@@ -176,22 +211,51 @@ pub fn run_rounds_over(
         drop(reply_tx);
 
         let mut mean = Vec::with_capacity(d);
-        for t in 1..=steps {
-            for tx in &to_workers {
-                tx.send(Cmd::Eval(x.clone())).expect("worker alive");
+        let mut slots: Vec<Option<WirePacket>> = (0..k).map(|_| None).collect();
+        // replies from a newer round that raced ahead of the one being
+        // collected (only possible under an overlapped exchange)
+        let mut early: Vec<Reply> = Vec::new();
+        let collect_round = |t: usize,
+                             slots: &mut [Option<WirePacket>],
+                             early: &mut Vec<Reply>| {
+            for s in slots.iter_mut() {
+                *s = None;
             }
-            // collect all k packets, then aggregate in node order so the
-            // float accumulation matches the sim engine bit-for-bit
-            let mut slots: Vec<Option<WirePacket>> = (0..k).map(|_| None).collect();
-            for _ in 0..k {
+            let mut have = 0usize;
+            let mut i = 0;
+            while i < early.len() {
+                if early[i].round == t {
+                    let r = early.swap_remove(i);
+                    slots[r.node] = Some(r.packet);
+                    have += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            while have < k {
                 let r = reply_rx.recv().expect("reply");
-                slots[r.node] = Some(r.packet);
+                if r.round == t {
+                    slots[r.node] = Some(r.packet);
+                    have += 1;
+                } else {
+                    debug_assert!(r.round > t, "stale reply for round {}", r.round);
+                    early.push(r);
+                }
             }
+        };
+
+        // one full exchange for round `t`: collect the round-tagged
+        // packets, decode-aggregate into `mean` (node order, bit-identical
+        // to the sim engine), charge the topology and accumulate the plan's
+        // exposed/hidden split. Shared verbatim by both schedule arms, so
+        // the golden-parity-critical path exists exactly once.
+        let mut exchange_round = |t: usize, mean: &mut Vec<f64>| -> Result<(), CommError> {
+            collect_round(t, &mut slots, &mut early);
             let bits: Vec<u64> = slots
                 .iter()
                 .map(|s| s.as_ref().expect("one packet per node").len_bits() as u64)
                 .collect();
-            decode_aggregate_into(k, d, &mut mean, &mut decoded, |node, out| {
+            decode_aggregate_into(k, d, mean, &mut decoded, |node, out| {
                 let packet = slots[node].as_ref().expect("one packet per node");
                 decoder.decode_into(packet, out)
             })?;
@@ -205,8 +269,60 @@ pub fn run_rounds_over(
             );
             wire_bits += charge.wire_bits;
             comm_s += charge.comm_s;
-            update(&mut x, &mean, t);
-            last_mean.clone_from(&mean);
+            let (e, h) = plan.split(charge.comm_s);
+            comm_exposed_s += e;
+            comm_hidden_s += h;
+            Ok(())
+        };
+
+        match plan.mode {
+            ExchangeMode::Synchronous => {
+                for t in 1..=steps {
+                    for tx in &to_workers {
+                        tx.send(Cmd::Eval(x.clone())).expect("worker alive");
+                    }
+                    exchange_round(t, &mut mean)?;
+                    update(&mut x, &mean, t);
+                    last_mean.clone_from(&mean);
+                }
+            }
+            ExchangeMode::Overlapped { depth } => {
+                let depth = depth.max(1);
+                // aggregates decoded but not yet applied: (producing round,
+                // mean), oldest first — the leader-side double buffer
+                let mut staged: std::collections::VecDeque<(usize, Vec<f64>)> =
+                    std::collections::VecDeque::new();
+                if steps > 0 {
+                    for tx in &to_workers {
+                        tx.send(Cmd::Eval(x.clone())).expect("worker alive");
+                    }
+                }
+                for t in 1..=steps {
+                    // round t is in flight. Before touching its replies,
+                    // advance the iterate with the aggregate leaving the
+                    // depth window and queue round t+1 — workers proceed
+                    // while the leader decodes.
+                    if t < steps {
+                        if let Some(&(r, _)) = staged.front() {
+                            if r + depth <= t {
+                                let (r, m) = staged.pop_front().expect("front exists");
+                                update(&mut x, &m, r);
+                            }
+                        }
+                        for tx in &to_workers {
+                            tx.send(Cmd::Eval(x.clone())).expect("worker alive");
+                        }
+                    }
+                    exchange_round(t, &mut mean)?;
+                    staged.push_back((t, mean.clone()));
+                    last_mean.clone_from(&mean);
+                }
+                // pipeline drain: the aggregates still in flight apply in
+                // round order — every exchange yields exactly one update
+                while let Some((r, m)) = staged.pop_front() {
+                    update(&mut x, &m, r);
+                }
+            }
         }
         for tx in &to_workers {
             let _ = tx.send(Cmd::Stop);
@@ -215,7 +331,7 @@ pub fn run_rounds_over(
     });
     result?;
 
-    Ok(RoundsReport { x, wire_bits, last_mean, comm_s })
+    Ok(RoundsReport { x, wire_bits, last_mean, comm_s, comm_exposed_s, comm_hidden_s })
 }
 
 #[cfg(test)]
@@ -333,6 +449,7 @@ mod tests {
                 17,
                 spec,
                 &net,
+                ExchangePlan::synchronous(),
                 |x, mean, _| {
                     for (xi, g) in x.iter_mut().zip(mean) {
                         *xi -= 0.05 * g;
@@ -350,5 +467,111 @@ mod tests {
         assert!(hier.wire_bits > flat.wire_bits);
         assert!(ps.wire_bits > flat.wire_bits);
         assert!(flat.comm_s > 0.0 && hier.comm_s > 0.0 && ps.comm_s > 0.0);
+        // synchronous accounting: everything exposed, nothing hidden
+        for r in [&flat, &hier, &ps] {
+            assert_eq!(r.comm_exposed_s, r.comm_s);
+            assert_eq!(r.comm_hidden_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn overlapped_rounds_apply_every_aggregate_once_in_order() {
+        // instrument the update closure: under an overlapped exchange the
+        // aggregates must arrive depth rounds stale but each exactly once,
+        // in producing-round order, with the drain flushing the tail
+        let mut rng = Rng::new(7);
+        let op = QuadraticOperator::random(6, 0.5, &mut rng);
+        let st = state(6, 6);
+        let net = NetworkModel::genesis_cloud(5.0);
+        let steps = 5;
+        for depth in [1usize, 2] {
+            let mut applied: Vec<usize> = Vec::new();
+            let report = run_rounds_over(
+                &op,
+                NoiseModel::Absolute { sigma: 0.1 },
+                3,
+                &st,
+                vec![0.2; 6],
+                steps,
+                23,
+                &TopologySpec::BroadcastAllGather,
+                &net,
+                ExchangePlan::overlapped(depth, 0.0),
+                |x, mean, t| {
+                    applied.push(t);
+                    for (xi, g) in x.iter_mut().zip(mean) {
+                        *xi -= 0.05 * g;
+                    }
+                },
+            )
+            .unwrap();
+            assert_eq!(applied, (1..=steps).collect::<Vec<_>>(), "depth {depth}");
+            assert!(report.wire_bits > 0);
+            // zero compute window: the overlap hides nothing
+            assert_eq!(report.comm_exposed_s, report.comm_s);
+            assert_eq!(report.comm_hidden_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn overlapped_single_round_matches_synchronous_after_drain() {
+        // with one round there is nothing to overlap: the drained pipeline
+        // must land exactly where the synchronous engine does
+        let mut rng = Rng::new(11);
+        let op = QuadraticOperator::random(8, 0.5, &mut rng);
+        let st = state(8, 5);
+        let net = NetworkModel::genesis_cloud(5.0);
+        let run = |plan: ExchangePlan| {
+            run_rounds_over(
+                &op,
+                NoiseModel::Absolute { sigma: 0.2 },
+                3,
+                &st,
+                vec![0.3; 8],
+                1,
+                31,
+                &TopologySpec::BroadcastAllGather,
+                &net,
+                plan,
+                |x, mean, _| {
+                    for (xi, g) in x.iter_mut().zip(mean) {
+                        *xi -= 0.07 * g;
+                    }
+                },
+            )
+            .unwrap()
+        };
+        let sync = run(ExchangePlan::synchronous());
+        let over = run(ExchangePlan::overlapped(1, 0.0));
+        assert_eq!(sync.x, over.x);
+        assert_eq!(sync.last_mean, over.last_mean);
+        assert_eq!(sync.wire_bits, over.wire_bits);
+        assert_eq!(sync.comm_s, over.comm_s);
+    }
+
+    #[test]
+    fn overlapped_hides_comm_behind_the_compute_window() {
+        let mut rng = Rng::new(13);
+        let op = QuadraticOperator::random(6, 0.5, &mut rng);
+        let st = state(6, 5);
+        let net = NetworkModel::genesis_cloud(5.0);
+        let report = run_rounds_over(
+            &op,
+            NoiseModel::Absolute { sigma: 0.1 },
+            4,
+            &st,
+            vec![0.1; 6],
+            3,
+            41,
+            &TopologySpec::Hierarchical { racks: 2 },
+            &net,
+            // a generous window: everything hides
+            ExchangePlan::overlapped(1, 10.0),
+            |_, _, _| {},
+        )
+        .unwrap();
+        assert!(report.comm_s > 0.0);
+        assert_eq!(report.comm_exposed_s, 0.0);
+        assert_eq!(report.comm_hidden_s, report.comm_s);
     }
 }

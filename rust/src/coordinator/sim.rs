@@ -8,13 +8,25 @@
 //! parameter-server via [`ClusterSim::with_topology`]) charges the network
 //! model with the packets' *actual* byte counts. The optimizer logic
 //! (ODA / Adam / SGD) lives in the drivers that call `exchange` each step.
+//!
+//! Exchanges follow the engine's [`ExchangePlan`]. Under the default
+//! [`ExchangeMode::Synchronous`] every call returns its own aggregate and
+//! the full `comm_s` is exposed — bit- and clock-identical to the
+//! pre-overlap engine. Under [`ExchangeMode::Overlapped`] the engine
+//! double-buffers: each call stages its freshly decoded aggregate and
+//! returns the one staged `depth` calls earlier (the zero vector while the
+//! pipe fills), modeling duals that travel while the next step computes;
+//! the step's `comm_s` splits into `comm_exposed_s` / `comm_hidden_s`
+//! against the plan's compute window, and [`ClusterSim::drain_staged`]
+//! flushes the still-in-flight aggregates when the run ends.
 
 use super::core::decode_aggregate_into;
 use super::metrics::StepMetrics;
-use super::topology::{TopologySpec, Transport};
+use super::topology::{ExchangeMode, ExchangePlan, TopologySpec, Transport};
 use crate::comm::{CommEndpoint, CommError, Compressor};
 use crate::net::NetworkModel;
 use crate::stats::rng::Rng;
+use std::collections::VecDeque;
 use std::time::Instant;
 
 /// How a harness obtains the per-step compute time.
@@ -35,6 +47,11 @@ pub struct ClusterSim {
     /// Main (shared-codeword) vs Alternating protocol for jitter accounting
     pub main_protocol: bool,
     topology: Box<dyn Transport>,
+    /// how exchanges are scheduled against compute (synchronous by default)
+    plan: ExchangePlan,
+    /// aggregates decoded but not yet released to the caller (the
+    /// overlapped double buffer, oldest first)
+    staged: VecDeque<Vec<f64>>,
     rng: Rng,
     /// decode scratch, reused across nodes and steps
     decoded: Vec<f64>,
@@ -52,6 +69,8 @@ impl ClusterSim {
             uncompressed_collective,
             main_protocol: true,
             topology: TopologySpec::BroadcastAllGather.build(),
+            plan: ExchangePlan::synchronous(),
+            staged: VecDeque::new(),
             rng: Rng::new(0xC0FFEE),
             decoded: Vec::new(),
         }
@@ -64,8 +83,25 @@ impl ClusterSim {
         self
     }
 
+    /// Swap in a different exchange schedule (default: synchronous, the
+    /// pre-overlap behavior).
+    pub fn with_exchange(mut self, plan: ExchangePlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
     pub fn topology_spec(&self) -> TopologySpec {
         self.topology.spec()
+    }
+
+    pub fn exchange_plan(&self) -> ExchangePlan {
+        self.plan
+    }
+
+    /// Update the compute window overlapped exchanges hide behind (e.g.
+    /// from measured per-step compute, the way the GAN trainer does).
+    pub fn set_compute_window(&mut self, compute_s: f64) {
+        self.plan.compute_s_per_step = compute_s;
     }
 
     pub fn k(&self) -> usize {
@@ -76,12 +112,26 @@ impl ClusterSim {
         &self.endpoints
     }
 
-    /// One synchronous exchange: every node encodes its dual vector into a
-    /// wire packet, the topology routes and charges the packets, everyone
-    /// decodes and averages (in node order, via the shared decode-aggregate
-    /// core — the aggregate is identical under every topology). Returns the
-    /// mean decoded vector plus codec/wire timing on the real encoded byte
-    /// counts.
+    /// One exchange under the engine's [`ExchangePlan`]: every node encodes
+    /// its dual vector into a wire packet, the topology routes and charges
+    /// the packets, everyone decodes and averages (in node order, via the
+    /// shared decode-aggregate core — the aggregate is identical under
+    /// every topology).
+    ///
+    /// Synchronous mode returns this step's aggregate. Overlapped mode
+    /// returns the aggregate staged `depth` exchanges earlier — the
+    /// one-step-stale (depth-step-stale) double buffer — and the zero
+    /// vector while the pipe fills; call [`ClusterSim::drain_staged`] after
+    /// the last step to flush the aggregates still in flight. The zero fill
+    /// is a bitwise no-op for plain linear updates (which is what keeps this
+    /// engine parity-testable against the threaded engine's skip), but
+    /// callers driving a *stateful* optimizer must skip their update during
+    /// the first [`ExchangeMode::staleness`] rounds — feeding Adam-style
+    /// state synthetic zero gradients advances its timestep and decays its
+    /// moments (see the GAN trainer for the pattern). Either way the
+    /// metrics carry codec/wire timing on the real encoded byte counts,
+    /// with `comm_s` split into exposed/hidden against the plan (a
+    /// steady-state split — see [`ExchangePlan::split`]).
     pub fn exchange(&mut self, duals: &[Vec<f64>]) -> Result<(Vec<f64>, StepMetrics), CommError> {
         assert_eq!(duals.len(), self.endpoints.len());
         let k = duals.len();
@@ -108,17 +158,40 @@ impl ClusterSim {
             self.main_protocol,
             &mut self.rng,
         );
+        let (comm_exposed_s, comm_hidden_s) = self.plan.split(charge.comm_s);
         let payload_bits: u64 = bits.iter().sum();
         let metrics = StepMetrics {
             step: 0,
             compute_s: 0.0,
             codec_s,
             comm_s: charge.comm_s,
+            comm_exposed_s,
+            comm_hidden_s,
             bytes_per_node: payload_bits as f64 / 8.0 / k as f64,
             wire_bits: charge.wire_bits,
             scalars: Vec::new(),
         };
-        Ok((mean, metrics))
+        let out = match self.plan.mode {
+            ExchangeMode::Synchronous => mean,
+            ExchangeMode::Overlapped { depth } => {
+                self.staged.push_back(mean);
+                if self.staged.len() > depth.max(1) {
+                    self.staged.pop_front().expect("staged non-empty")
+                } else {
+                    // the pipe is still filling: nothing has arrived yet
+                    vec![0.0; d]
+                }
+            }
+        };
+        Ok((out, metrics))
+    }
+
+    /// Flush the overlapped double buffer: the aggregates still in flight,
+    /// oldest first. Empty in synchronous mode (nothing is ever staged).
+    /// Callers apply these to finish the run exactly one update per
+    /// exchange, just `depth` steps late.
+    pub fn drain_staged(&mut self) -> Vec<Vec<f64>> {
+        self.staged.drain(..).collect()
     }
 
     /// Trigger Algorithm 1's level update (lines 2-7) on every node. Must be
@@ -245,5 +318,107 @@ mod tests {
         assert!(outs[2].1.wire_bits > outs[0].1.wire_bits);
         // payload-per-node metric is topology-independent
         assert_eq!(outs[0].1.bytes_per_node, outs[1].1.bytes_per_node);
+    }
+
+    #[test]
+    fn overlapped_exchange_returns_stale_aggregates_and_drains() {
+        use crate::coordinator::topology::ExchangePlan;
+        let map = LayerMap::single(128);
+        let mk = || -> Vec<Box<dyn Compressor>> {
+            (0..3)
+                .map(|i| {
+                    Box::new(QuantCompressor::global_bits(&map, 5, 128, 60 + i as u64))
+                        as _
+                })
+                .collect()
+        };
+        let net = NetworkModel::genesis_cloud(5.0);
+        let rounds: Vec<Vec<Vec<f64>>> =
+            (0..3).map(|r| duals(3, 128, 200 + r)).collect();
+
+        // synchronous reference: the per-round aggregates
+        let mut sync = ClusterSim::new(mk(), net.clone(), false);
+        let sync_means: Vec<Vec<f64>> =
+            rounds.iter().map(|ds| sync.exchange(ds).unwrap().0).collect();
+
+        // overlapped depth 1: round t returns round t-1's aggregate,
+        // round 1 returns zeros, and the drain flushes the last one
+        let mut ov = ClusterSim::new(mk(), net.clone(), false)
+            .with_exchange(ExchangePlan::overlapped(1, 0.0));
+        let got: Vec<Vec<f64>> =
+            rounds.iter().map(|ds| ov.exchange(ds).unwrap().0).collect();
+        assert_eq!(got[0], vec![0.0; 128], "pipe fills with zeros");
+        assert_eq!(got[1], sync_means[0], "one-step-stale aggregate");
+        assert_eq!(got[2], sync_means[1]);
+        let staged = ov.drain_staged();
+        assert_eq!(staged.len(), 1);
+        assert_eq!(staged[0], sync_means[2], "drain flushes the in-flight round");
+        assert!(ov.drain_staged().is_empty(), "drain is idempotent");
+
+        // depth 2 staggers by two rounds
+        let mut ov2 = ClusterSim::new(mk(), net.clone(), false)
+            .with_exchange(ExchangePlan::overlapped(2, 0.0));
+        let got2: Vec<Vec<f64>> =
+            rounds.iter().map(|ds| ov2.exchange(ds).unwrap().0).collect();
+        assert_eq!(got2[0], vec![0.0; 128]);
+        assert_eq!(got2[1], vec![0.0; 128]);
+        assert_eq!(got2[2], sync_means[0]);
+        assert_eq!(ov2.drain_staged(), vec![sync_means[1].clone(), sync_means[2].clone()]);
+
+        // synchronous mode never stages anything
+        assert!(sync.drain_staged().is_empty());
+    }
+
+    #[test]
+    fn overlapped_metrics_split_comm_against_the_compute_window() {
+        use crate::coordinator::topology::ExchangePlan;
+        let map = LayerMap::single(512);
+        let mk = || -> Vec<Box<dyn Compressor>> {
+            (0..4)
+                .map(|i| {
+                    Box::new(QuantCompressor::global_bits(&map, 5, 128, 80 + i as u64))
+                        as _
+                })
+                .collect()
+        };
+        let net = NetworkModel::genesis_cloud(5.0);
+        let ds = duals(4, 512, 21);
+
+        // synchronous: everything exposed
+        let (_, m_sync) = ClusterSim::new(mk(), net.clone(), false).exchange(&ds).unwrap();
+        assert_eq!(m_sync.comm_exposed_s, m_sync.comm_s);
+        assert_eq!(m_sync.comm_hidden_s, 0.0);
+
+        // overlapped with zero compute: exposed == comm_s exactly
+        let (_, m0) = ClusterSim::new(mk(), net.clone(), false)
+            .with_exchange(ExchangePlan::overlapped(1, 0.0))
+            .exchange(&ds)
+            .unwrap();
+        assert_eq!(m0.comm_s, m_sync.comm_s, "the charge itself is mode-invariant");
+        assert_eq!(m0.comm_exposed_s, m0.comm_s);
+
+        // overlapped with a huge compute window: fully hidden
+        let (_, m1) = ClusterSim::new(mk(), net.clone(), false)
+            .with_exchange(ExchangePlan::overlapped(1, 10.0))
+            .exchange(&ds)
+            .unwrap();
+        assert_eq!(m1.comm_exposed_s, 0.0);
+        assert_eq!(m1.comm_hidden_s, m1.comm_s);
+        assert!(m1.wall_s() < m1.total_s());
+
+        // the invariants: exposed + hidden == comm_s, exposed <= comm_s
+        for m in [&m_sync, &m0, &m1] {
+            assert_eq!(m.comm_exposed_s + m.comm_hidden_s, m.comm_s);
+            assert!(m.comm_exposed_s <= m.comm_s);
+        }
+
+        // set_compute_window retunes the split mid-run
+        let mut sim = ClusterSim::new(mk(), net, false)
+            .with_exchange(ExchangePlan::overlapped(1, 0.0));
+        let (_, a) = sim.exchange(&ds).unwrap();
+        assert_eq!(a.comm_exposed_s, a.comm_s);
+        sim.set_compute_window(10.0);
+        let (_, b) = sim.exchange(&ds).unwrap();
+        assert_eq!(b.comm_exposed_s, 0.0);
     }
 }

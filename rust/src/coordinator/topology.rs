@@ -27,8 +27,15 @@
 //! * [`ParameterServer`] — a hub ingests all K packets and unicasts the
 //!   fp32 aggregate back, serializing on its egress link (the classic PS
 //!   scaling wall).
+//!
+//! Every charge also decomposes into a
+//! [`PhaseTimeline`](crate::net::PhaseTimeline) via
+//! [`Transport::charge_timeline`]; the [`ExchangeMode`]/[`ExchangePlan`]
+//! defined here decide how much of that timeline the engines' schedule
+//! leaves on the critical path (synchronous: all of it; overlapped:
+//! whatever the compute window cannot hide).
 
-use crate::net::{Collective, NetworkModel};
+use crate::net::{Collective, NetworkModel, PhaseKind, PhaseTimeline};
 use crate::stats::rng::Rng;
 
 /// Fixed software launch/synchronization cost charged per phase of a
@@ -99,6 +106,112 @@ impl TopologySpec {
     }
 }
 
+/// How exchanges are scheduled against compute.
+///
+/// `Synchronous` is the classic lock-step schedule: every step waits for
+/// its own exchange, so the full `comm_s` sits on the critical path. It is
+/// bit- and clock-identical to the pre-overlap engines (pinned by
+/// `tests/overlap_parity.rs`). `Overlapped { depth }` double-buffers the
+/// duals: round t's packets travel while round t+1's compute proceeds, the
+/// engines apply aggregates `depth` rounds stale, and only the part of
+/// `comm_s` that outlives the compute window stays exposed on the critical
+/// path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// lock-step: exchange, then compute — `comm_s` fully exposed
+    #[default]
+    Synchronous,
+    /// comm of round t overlaps compute of rounds t+1..t+depth; aggregates
+    /// arrive `depth` rounds stale (`depth = 1` is the classic double
+    /// buffer)
+    Overlapped { depth: usize },
+}
+
+impl ExchangeMode {
+    /// Parse a CLI name (`--exchange`); `depth` feeds the overlapped
+    /// variant (clamped to at least 1 — a zero-deep overlap is synchronous
+    /// in denial).
+    pub fn parse(name: &str, depth: usize) -> Option<ExchangeMode> {
+        match name {
+            "sync" | "synchronous" => Some(ExchangeMode::Synchronous),
+            "overlap" | "overlapped" | "async" => {
+                Some(ExchangeMode::Overlapped { depth: depth.max(1) })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExchangeMode::Synchronous => "synchronous",
+            ExchangeMode::Overlapped { .. } => "overlapped",
+        }
+    }
+
+    /// Staleness of the aggregates the engines apply (0 = fresh).
+    pub fn staleness(&self) -> usize {
+        match *self {
+            ExchangeMode::Synchronous => 0,
+            ExchangeMode::Overlapped { depth } => depth.max(1),
+        }
+    }
+}
+
+/// An [`ExchangeMode`] plus the modeled compute window it can hide behind —
+/// the value that travels through `ClusterSim`, `run_rounds_over`,
+/// `NetClock` and `RunSpec`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExchangePlan {
+    pub mode: ExchangeMode,
+    /// modeled compute seconds per step available to hide communication
+    /// behind (0.0 = nothing to hide behind: overlap exposes everything)
+    pub compute_s_per_step: f64,
+}
+
+impl Default for ExchangePlan {
+    fn default() -> Self {
+        Self::synchronous()
+    }
+}
+
+impl ExchangePlan {
+    pub fn synchronous() -> Self {
+        ExchangePlan { mode: ExchangeMode::Synchronous, compute_s_per_step: 0.0 }
+    }
+
+    pub fn overlapped(depth: usize, compute_s_per_step: f64) -> Self {
+        ExchangePlan {
+            mode: ExchangeMode::Overlapped { depth: depth.max(1) },
+            compute_s_per_step,
+        }
+    }
+
+    /// Split one step's communication seconds into `(exposed, hidden)`.
+    ///
+    /// Synchronous exchanges expose everything. Overlapped exchanges hide
+    /// comm behind **one** compute window per step — with one exchange
+    /// issued per step, the sustained hiding capacity is one window
+    /// regardless of `depth` (a deeper pipe buys staleness tolerance and
+    /// transient absorption, not link bandwidth; were the window multiplied
+    /// by depth, a run could report more comm hidden than compute exists to
+    /// hide it behind). The accounting is steady-state: boundary rounds
+    /// (the drain tail, a 1-step run) are charged as if the pipeline were
+    /// full, an error of at most `depth` windows per run. The split is
+    /// exact by construction: `exposed + hidden == comm_s` bit-for-bit,
+    /// `0 <= exposed <= comm_s`, and `exposed == comm_s` exactly when the
+    /// compute window is zero.
+    pub fn split(&self, comm_s: f64) -> (f64, f64) {
+        match self.mode {
+            ExchangeMode::Synchronous => (comm_s, 0.0),
+            ExchangeMode::Overlapped { .. } => {
+                let window = self.compute_s_per_step.max(0.0);
+                let exposed = (comm_s - window).max(0.0);
+                (exposed, comm_s - exposed)
+            }
+        }
+    }
+}
+
 /// What one synchronous exchange cost under a topology.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WireCharge {
@@ -108,9 +221,9 @@ pub struct WireCharge {
     pub comm_s: f64,
 }
 
-/// A routing/charging plan for one synchronous exchange of per-node
-/// packets. Implementations must be pure accounting: the aggregate math is
-/// shared by all topologies (see module docs).
+/// A routing/charging plan for one exchange of per-node packets.
+/// Implementations must be pure accounting: the aggregate math is shared by
+/// all topologies (see module docs).
 pub trait Transport: Send {
     fn spec(&self) -> TopologySpec;
 
@@ -119,11 +232,27 @@ pub trait Transport: Send {
         self.spec().label()
     }
 
-    /// Charge one exchange: `packet_bits[i]` is node i's encoded payload
-    /// size, `agg_dim` the aggregate's dimensionality (sizes hub/leader
-    /// downlinks that carry raw fp32), `uncompressed` selects in-network
-    /// reduction (uniform fp32 payloads) over store-and-forward of
-    /// entropy-coded bundles, and `main_protocol` feeds the jitter model.
+    /// Charge one exchange and decompose it into per-phase intervals:
+    /// `packet_bits[i]` is node i's encoded payload size, `agg_dim` the
+    /// aggregate's dimensionality (sizes hub/leader downlinks that carry
+    /// raw fp32), `uncompressed` selects in-network reduction (uniform fp32
+    /// payloads) over store-and-forward of entropy-coded bundles, and
+    /// `main_protocol` feeds the jitter model. The returned
+    /// [`PhaseTimeline`] is the overlapped scheduler's view of the same
+    /// exchange (rack-local gather / cross-rack / broadcast-down).
+    fn charge_timeline(
+        &mut self,
+        packet_bits: &[u64],
+        agg_dim: usize,
+        net: &NetworkModel,
+        uncompressed: bool,
+        main_protocol: bool,
+        rng: &mut Rng,
+    ) -> (WireCharge, PhaseTimeline);
+
+    /// Charge one synchronous exchange — [`Transport::charge_timeline`]
+    /// minus the phase decomposition. Provided, so the two can never
+    /// disagree: the synchronous accounting IS the timeline's charge.
     fn charge(
         &mut self,
         packet_bits: &[u64],
@@ -132,15 +261,38 @@ pub trait Transport: Send {
         uncompressed: bool,
         main_protocol: bool,
         rng: &mut Rng,
-    ) -> WireCharge;
+    ) -> WireCharge {
+        self.charge_timeline(packet_bits, agg_dim, net, uncompressed, main_protocol, rng)
+            .0
+    }
 }
 
-/// Contiguous rack layout: `k` nodes split into at most `racks` blocks of
-/// `ceil(k / racks)`; returns the non-empty `(start, end)` spans. The first
-/// node of each span is its rack leader.
+/// Resolve a requested rack count for a `k`-node cluster. `0` is the
+/// "resolve at runtime" sentinel (see [`TopologySpec::parse`]) and maps to
+/// the conventional K/4 layout of [`TopologySpec::hierarchical_for`]; any
+/// explicit request is clamped to `[1, k]` so `racks > k` degenerates to
+/// singleton racks instead of phantom empty spans. `k == 0` resolves to a
+/// single (empty) rack.
+pub fn resolve_racks(k: usize, racks: usize) -> usize {
+    if k == 0 {
+        return 1;
+    }
+    let want = if racks == 0 { (k / 4).max(2) } else { racks };
+    want.clamp(1, k)
+}
+
+/// Contiguous rack layout: `k` nodes split into at most
+/// `resolve_racks(k, racks)` blocks of `ceil(k / racks)`; returns the
+/// non-empty `(start, end)` spans. The first node of each span is its rack
+/// leader. Degenerate inputs are clamped, never trusted: `racks == 0`
+/// resolves to the conventional layout, `racks > k` yields `k` singleton
+/// racks, `k == 0` yields no spans.
 pub fn rack_spans(k: usize, racks: usize) -> Vec<(usize, usize)> {
-    let racks = racks.clamp(1, k.max(1));
-    let m = (k + racks - 1) / racks;
+    if k == 0 {
+        return Vec::new();
+    }
+    let racks = resolve_racks(k, racks);
+    let m = k.div_ceil(racks);
     let mut spans = Vec::new();
     let mut start = 0;
     while start < k {
@@ -149,6 +301,12 @@ pub fn rack_spans(k: usize, racks: usize) -> Vec<(usize, usize)> {
         start = end;
     }
     spans
+}
+
+/// The rack-leader node ids of [`rack_spans`] (the first node of each
+/// span) — the participants of the cross-rack phase.
+pub fn rack_leaders(k: usize, racks: usize) -> Vec<usize> {
+    rack_spans(k, racks).iter().map(|&(s, _)| s).collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -170,7 +328,7 @@ impl Transport for BroadcastAllGather {
         TopologySpec::BroadcastAllGather
     }
 
-    fn charge(
+    fn charge_timeline(
         &mut self,
         packet_bits: &[u64],
         _agg_dim: usize,
@@ -178,7 +336,7 @@ impl Transport for BroadcastAllGather {
         uncompressed: bool,
         main_protocol: bool,
         rng: &mut Rng,
-    ) -> WireCharge {
+    ) -> (WireCharge, PhaseTimeline) {
         let bytes: Vec<f64> = packet_bits.iter().map(|&b| b as f64 / 8.0).collect();
         let kind = if uncompressed {
             Collective::RingAllReduce
@@ -186,7 +344,11 @@ impl Transport for BroadcastAllGather {
             Collective::RingAllGather
         };
         let comm_s = net.sample_collective_seconds(kind, &bytes, main_protocol, rng);
-        WireCharge { wire_bits: packet_bits.iter().sum(), comm_s }
+        (
+            WireCharge { wire_bits: packet_bits.iter().sum(), comm_s },
+            // one flat ring over the cross-rack links: a single phase
+            PhaseTimeline::single(PhaseKind::CrossRack, comm_s),
+        )
     }
 }
 
@@ -230,7 +392,7 @@ impl Transport for Hierarchical {
         TopologySpec::Hierarchical { racks: self.racks }
     }
 
-    fn charge(
+    fn charge_timeline(
         &mut self,
         packet_bits: &[u64],
         agg_dim: usize,
@@ -238,12 +400,13 @@ impl Transport for Hierarchical {
         uncompressed: bool,
         main_protocol: bool,
         _rng: &mut Rng,
-    ) -> WireCharge {
+    ) -> (WireCharge, PhaseTimeline) {
         let k = packet_bits.len();
         // racks = 0 is the "resolve at runtime" sentinel (see
-        // `TopologySpec::parse`): fall back to the conventional K/4 layout
-        // rather than degenerating to one rack with a free cross phase
-        let racks = if self.racks == 0 { (k / 4).max(2) } else { self.racks };
+        // `TopologySpec::parse`): resolve_racks falls back to the
+        // conventional K/4 layout rather than degenerating to one rack
+        // with a free cross phase
+        let racks = resolve_racks(k, self.racks);
         let spans = rack_spans(k, racks);
         let r_eff = spans.len() as f64;
         let total_bits: u64 = packet_bits.iter().sum();
@@ -315,7 +478,12 @@ impl Transport for Hierarchical {
         }
 
         let comm_s = t_up + t_cross + t_down + 3.0 * PHASE_SETUP_MS * 1e-3;
-        WireCharge { wire_bits, comm_s }
+        let setup = PHASE_SETUP_MS * 1e-3;
+        let mut timeline = PhaseTimeline::default();
+        timeline.push(PhaseKind::RackLocalGather, t_up + setup);
+        timeline.push(PhaseKind::CrossRack, t_cross + setup);
+        timeline.push(PhaseKind::RackLocalBroadcast, t_down + setup);
+        (WireCharge { wire_bits, comm_s }, timeline)
     }
 }
 
@@ -336,7 +504,7 @@ impl Transport for ParameterServer {
         TopologySpec::ParameterServer
     }
 
-    fn charge(
+    fn charge_timeline(
         &mut self,
         packet_bits: &[u64],
         agg_dim: usize,
@@ -344,7 +512,7 @@ impl Transport for ParameterServer {
         _uncompressed: bool,
         main_protocol: bool,
         _rng: &mut Rng,
-    ) -> WireCharge {
+    ) -> (WireCharge, PhaseTimeline) {
         let k = packet_bits.len();
         let kf = k as f64;
         let total_bits: u64 = packet_bits.iter().sum();
@@ -365,7 +533,12 @@ impl Transport for ParameterServer {
         let t_down = kf * (agg_bits as f64 / 8.0) / bw * slow + lat;
 
         let comm_s = t_up + t_down + 2.0 * PHASE_SETUP_MS * 1e-3;
-        WireCharge { wire_bits: total_bits + k as u64 * agg_bits, comm_s }
+        let setup = PHASE_SETUP_MS * 1e-3;
+        let mut timeline = PhaseTimeline::default();
+        // both hub phases ride the cross-rack network
+        timeline.push(PhaseKind::CrossRack, t_up + setup);
+        timeline.push(PhaseKind::CrossRack, t_down + setup);
+        (WireCharge { wire_bits: total_bits + k as u64 * agg_bits, comm_s }, timeline)
     }
 }
 
@@ -494,5 +667,153 @@ mod tests {
             Some(TopologySpec::ParameterServer)
         );
         assert_eq!(TopologySpec::parse("mesh", 0), None);
+    }
+
+    #[test]
+    fn degenerate_rack_inputs_are_clamped() {
+        // racks = 0 resolves to the conventional K/4 layout (>= 2 racks) —
+        // never one mega-rack with a free cross phase
+        assert_eq!(resolve_racks(8, 0), 2);
+        assert_eq!(resolve_racks(16, 0), 4);
+        assert_eq!(rack_spans(8, 0), vec![(0, 4), (4, 8)]);
+        assert_eq!(rack_leaders(8, 0), vec![0, 4]);
+        // racks > k clamps to singleton racks: every node leads itself
+        assert_eq!(resolve_racks(3, 8), 3);
+        assert_eq!(rack_spans(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(rack_leaders(3, 8), vec![0, 1, 2]);
+        // k = 0: no spans, no leaders, regardless of the rack request
+        assert_eq!(rack_spans(0, 0), Vec::<(usize, usize)>::new());
+        assert_eq!(rack_spans(0, 4), Vec::<(usize, usize)>::new());
+        assert_eq!(rack_leaders(0, 4), Vec::<usize>::new());
+        // tiny clusters under the sentinel: the K/4 layout clamps to k
+        assert_eq!(resolve_racks(1, 0), 1);
+        assert_eq!(rack_spans(1, 0), vec![(0, 1)]);
+        assert_eq!(rack_leaders(1, 0), vec![0]);
+        assert_eq!(resolve_racks(2, 0), 2);
+        assert_eq!(rack_leaders(2, 0), vec![0, 1]);
+        // spans always cover 0..k exactly, whatever the request
+        for (k, racks) in [(7usize, 0usize), (7, 1), (7, 100), (1, 1), (5, 5)] {
+            let spans = rack_spans(k, racks);
+            assert_eq!(spans.first().map(|&(s, _)| s), Some(0), "k={k} racks={racks}");
+            assert_eq!(spans.last().map(|&(_, e)| e), Some(k), "k={k} racks={racks}");
+            for w in spans.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous spans: k={k} racks={racks}");
+            }
+            assert!(spans.iter().all(|&(s, e)| s < e), "non-empty: k={k} racks={racks}");
+        }
+    }
+
+    #[test]
+    fn degenerate_rack_charges_stay_finite_and_routable() {
+        // a hierarchical transport built with degenerate rack requests must
+        // still produce a finite, positive charge (racks = 0 resolved, racks
+        // > k clamped, k = 1 collapses the cross phase to a no-op ring)
+        let net = NetworkModel::genesis_cloud(5.0);
+        for (k, racks) in [(6usize, 0usize), (3, 8), (1, 0), (2, 5)] {
+            let bits = vec![4096u64; k];
+            let spec = TopologySpec::Hierarchical { racks };
+            let c = charge(&spec, &bits, 64, &net, false);
+            assert!(c.comm_s.is_finite() && c.comm_s > 0.0, "k={k} racks={racks}");
+            assert!(c.wire_bits >= bits.iter().sum::<u64>() - bits[0], "k={k}");
+        }
+    }
+
+    #[test]
+    fn exchange_mode_parse_and_labels() {
+        assert_eq!(ExchangeMode::parse("sync", 1), Some(ExchangeMode::Synchronous));
+        assert_eq!(
+            ExchangeMode::parse("overlap", 2),
+            Some(ExchangeMode::Overlapped { depth: 2 })
+        );
+        // depth 0 clamps to the classic double buffer
+        assert_eq!(
+            ExchangeMode::parse("overlapped", 0),
+            Some(ExchangeMode::Overlapped { depth: 1 })
+        );
+        assert_eq!(ExchangeMode::parse("bogus", 1), None);
+        assert_eq!(ExchangeMode::Synchronous.staleness(), 0);
+        assert_eq!(ExchangeMode::Overlapped { depth: 3 }.staleness(), 3);
+        assert_eq!(ExchangeMode::default(), ExchangeMode::Synchronous);
+    }
+
+    #[test]
+    fn exchange_plan_split_invariants() {
+        let comm = 0.017;
+        // synchronous: everything exposed
+        let (e, h) = ExchangePlan::synchronous().split(comm);
+        assert_eq!((e, h), (comm, 0.0));
+        // zero compute window: overlap degenerates to full exposure, exactly
+        let (e, h) = ExchangePlan::overlapped(1, 0.0).split(comm);
+        assert_eq!((e, h), (comm, 0.0));
+        // window larger than comm: fully hidden
+        let (e, h) = ExchangePlan::overlapped(1, 1.0).split(comm);
+        assert_eq!((e, h), (0.0, comm));
+        // partial: exposed + hidden == comm bit-for-bit, both non-negative
+        for window in [0.001, 0.005, 0.016, 0.0169999] {
+            let (e, h) = ExchangePlan::overlapped(1, window).split(comm);
+            assert!(e >= 0.0 && h >= 0.0);
+            assert!(e <= comm);
+            assert_eq!(e + h, comm, "window {window}");
+        }
+        // depth buys staleness tolerance, NOT hiding capacity: with one
+        // exchange per step the sustained window is one compute slot
+        let (e1, _) = ExchangePlan::overlapped(1, 0.005).split(comm);
+        let (e2, _) = ExchangePlan::overlapped(4, 0.005).split(comm);
+        assert_eq!(e2, e1, "a deeper pipe cannot hide more than compute exists");
+    }
+
+    #[test]
+    fn timelines_decompose_the_charge() {
+        let net = NetworkModel::genesis_cloud(5.0);
+        let bits = vec![0.7e6 as u64 * 8; 8];
+        let d = 1 << 18;
+        for spec in [
+            TopologySpec::BroadcastAllGather,
+            TopologySpec::Hierarchical { racks: 2 },
+            TopologySpec::ParameterServer,
+        ] {
+            let mut rng = Rng::new(7);
+            let (c, tl) =
+                spec.build().charge_timeline(&bits, d, &net, false, true, &mut rng);
+            // the timeline sums back to the synchronous charge (association
+            // of the same float terms)
+            assert!(
+                (tl.total_s() - c.comm_s).abs() < 1e-12 * c.comm_s.max(1.0),
+                "{spec:?}: {} vs {}",
+                tl.total_s(),
+                c.comm_s
+            );
+            assert!(tl.phases.iter().all(|&(_, s)| s >= 0.0));
+            // and charge() is charge_timeline().0 by construction
+            let c2 = charge(&spec, &bits, d, &net, false);
+            assert_eq!(c, c2, "{spec:?}");
+        }
+        // phase structure: flat is a single cross-rack ring; hierarchical
+        // decomposes into gather / cross / broadcast; the hub pays two
+        // cross-rack phases
+        let mut rng = Rng::new(7);
+        let (_, flat) = TopologySpec::BroadcastAllGather.build().charge_timeline(
+            &bits, d, &net, false, true, &mut rng,
+        );
+        assert_eq!(flat.phases.len(), 1);
+        assert_eq!(flat.phases[0].0, PhaseKind::CrossRack);
+        let (_, hier) = TopologySpec::Hierarchical { racks: 2 }.build().charge_timeline(
+            &bits, d, &net, false, true, &mut rng,
+        );
+        assert_eq!(
+            hier.phases.iter().map(|&(k, _)| k).collect::<Vec<_>>(),
+            vec![
+                PhaseKind::RackLocalGather,
+                PhaseKind::CrossRack,
+                PhaseKind::RackLocalBroadcast
+            ]
+        );
+        // the cross-rack phase dominates under heterogeneous links
+        assert!(hier.phase_s(PhaseKind::CrossRack) > hier.phase_s(PhaseKind::RackLocalGather));
+        let (_, ps) = TopologySpec::ParameterServer.build().charge_timeline(
+            &bits, d, &net, false, true, &mut rng,
+        );
+        assert_eq!(ps.phases.len(), 2);
+        assert!(ps.phases.iter().all(|&(k, _)| k == PhaseKind::CrossRack));
     }
 }

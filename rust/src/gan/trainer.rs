@@ -12,7 +12,7 @@ use super::fid::fid;
 use crate::comm::{Compressor, IdentityCompressor, QuantCompressor};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::sim::ClusterSim;
-use crate::coordinator::topology::TopologySpec;
+use crate::coordinator::topology::{ExchangeMode, ExchangePlan, TopologySpec};
 use crate::net::NetworkModel;
 use crate::oda::baseline::AdamState;
 use crate::runtime::WganModel;
@@ -49,6 +49,10 @@ pub struct GanTrainConfig {
     pub bandwidth_gbps: f64,
     /// communication topology the cluster engine routes packets through
     pub topology: TopologySpec,
+    /// exchange schedule: synchronous lock-step (default) or overlapped
+    /// double-buffered duals — the engine then applies one-step-stale
+    /// aggregates and hides comm behind the *measured* per-step compute
+    pub exchange: ExchangeMode,
 }
 
 impl Default for GanTrainConfig {
@@ -64,6 +68,7 @@ impl Default for GanTrainConfig {
             seed: 1,
             bandwidth_gbps: 5.0,
             topology: TopologySpec::BroadcastAllGather,
+            exchange: ExchangeMode::Synchronous,
         }
     }
 }
@@ -74,6 +79,27 @@ pub struct GanRunResult {
     pub fid_curve: Vec<(usize, f64)>,
     pub final_fid: f64,
     pub params: Vec<f32>,
+}
+
+/// One optimizer application: Adam direction, parameter step, WGAN critic
+/// clipping. Shared by the training loop and the overlapped-pipeline drain
+/// so the two can never drift. Returns the applied direction (the
+/// optimistic lookahead state).
+fn apply_update(
+    params: &mut [f32],
+    adam: &mut AdamState,
+    mean: &[f64],
+    gen_dim: usize,
+    clip: f32,
+) -> Vec<f64> {
+    let dir = adam.direction(mean);
+    for (p, di) in params.iter_mut().zip(&dir) {
+        *p -= *di as f32;
+    }
+    for p in params[gen_dim..].iter_mut() {
+        *p = p.clamp(-clip, clip);
+    }
+    dir
 }
 
 fn build_compressors(
@@ -107,7 +133,8 @@ pub fn train(model: &WganModel, cfg: &GanTrainConfig) -> Result<GanRunResult> {
         NetworkModel::genesis_cloud(cfg.bandwidth_gbps),
         uncompressed,
     )
-    .with_topology(&cfg.topology);
+    .with_topology(&cfg.topology)
+    .with_exchange(ExchangePlan { mode: cfg.exchange, compute_s_per_step: 0.0 });
 
     let mut params = model.init_params(cfg.seed as i32)?;
     let mut adam = AdamState::new(d, cfg.lr);
@@ -143,16 +170,21 @@ pub fn train(model: &WganModel, cfg: &GanTrainConfig) -> Result<GanRunResult> {
         }
         let compute_s = t0.elapsed().as_secs_f64();
 
+        // overlapped exchanges hide comm behind this step's measured compute
+        cluster.set_compute_window(compute_s);
+        // under ExchangeMode::Overlapped `mean` is the previous round's
+        // aggregate — the one-step-stale path. While the pipe fills the
+        // engine returns zeros: skip the optimizer entirely (exactly as the
+        // threaded engine does), otherwise Adam's timestep and moment decay
+        // would advance on synthetic zero gradients and the run would pay
+        // steps + depth updates for steps exchanges.
         let (mean, mut metrics) = cluster.exchange(&duals)?;
-        let dir = adam.direction(&mean);
-        for (p, di) in params.iter_mut().zip(&dir) {
-            *p -= *di as f32;
+        // staleness() is the pipe depth (0 when synchronous): the first
+        // `staleness` rounds return the zero fill
+        let filling = step <= cfg.exchange.staleness();
+        if !filling {
+            prev_dir = apply_update(&mut params, &mut adam, &mean, model.gen_dim, cfg.clip);
         }
-        // WGAN weight clipping on the critic parameters
-        for p in params[model.gen_dim..].iter_mut() {
-            *p = p.clamp(-cfg.clip, cfg.clip);
-        }
-        prev_dir = dir;
 
         metrics.step = step;
         metrics.compute_s = compute_s;
@@ -165,6 +197,25 @@ pub fn train(model: &WganModel, cfg: &GanTrainConfig) -> Result<GanRunResult> {
             fid_curve.push((step, f));
         }
         run.push(metrics);
+    }
+    // pipeline drain: apply the aggregates still in the overlapped double
+    // buffer so every exchanged round lands exactly one optimizer update
+    let drained = cluster.drain_staged();
+    let drained_any = !drained.is_empty();
+    for mean in drained {
+        apply_update(&mut params, &mut adam, &mean, model.gen_dim, cfg.clip);
+    }
+    // the drain moved the weights after the in-loop FID was sampled:
+    // re-evaluate the final point (same eval seed) so the curve and
+    // `final_fid` describe the params actually returned
+    if drained_any {
+        if let Some(last) = fid_curve.last_mut() {
+            if last.0 == cfg.steps {
+                let (fake, real) =
+                    model.samples(&params, (cfg.seed as i32) * 7 + cfg.steps as i32)?;
+                last.1 = fid(&fake, &real);
+            }
+        }
     }
     let final_fid = fid_curve.last().map(|&(_, f)| f).unwrap_or(f64::NAN);
     Ok(GanRunResult { metrics: run, fid_curve, final_fid, params })

@@ -31,8 +31,11 @@
 //!   channels) share one decode-aggregate core and route packets through a
 //!   pluggable [`coordinator::Transport`] topology (broadcast-allgather,
 //!   hierarchical two-level, parameter-server), charged with measured
-//!   packet bytes against the heterogeneous-link network model; engines and
-//!   topologies are integration-tested for bit-identical agreement;
+//!   packet bytes against the heterogeneous-link network model, under a
+//!   synchronous or overlapped [`coordinator::ExchangePlan`]
+//!   (double-buffered duals hiding comm behind the next step's compute);
+//!   engines, topologies and exchange modes are integration-tested for
+//!   bit-identical agreement;
 //! * [`quant`] + [`coding`] — the layer-wise quantizer, level-sequence
 //!   adaptation (Eq. 2 / L-GreCo) and the Main/Alternating entropy-coding
 //!   protocols the codecs compose;

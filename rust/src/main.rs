@@ -5,6 +5,7 @@
 //!   table1            step time vs bandwidth (Table 1)
 //!   table2            weak scaling (Table 2)
 //!   topology          weak scaling x topology (flat / hierarchical / PS)
+//!   overlap           weak scaling x exchange schedule (sync vs overlapped)
 //!   fig4              WGAN FID curves: Adam vs QODA global vs layerwise
 //!   table3            transformer: PowerSGD x quantization (Table 3)
 //!   fig5              per-layer-type quantization ablation (Figure 5)
@@ -32,10 +33,12 @@
 //!   --gap true|false                  --gap-every N --gap-stop THRESH
 //!   --topology flat|hier|ps           --racks R (hier; 0 = K/4)
 //!   --bandwidth GBPS (attach the network clock and report comm seconds)
+//!   --exchange sync|overlap           --depth D (overlap pipeline depth)
+//!   --compute-ms MS (modeled compute per step the overlap hides behind)
 
 use qoda::bench_harness::{experiments, model_experiments};
 use qoda::coding::protocol::ProtocolKind;
-use qoda::coordinator::TopologySpec;
+use qoda::coordinator::{ExchangeMode, TopologySpec};
 use qoda::gan::trainer::{GanCompression, GanOptimizer, GanTrainConfig};
 use qoda::lm::trainer::{LmTrainConfig, QuantTarget};
 use qoda::net::NetworkModel;
@@ -49,9 +52,19 @@ use qoda::util::table::{save_series_csv, Table};
 use qoda::vi::noise::NoiseModel;
 
 fn usage() -> &'static str {
-    "usage: qoda <run|table1|table2|topology|fig4|table3|fig5|rates|verify-variance|\
+    "usage: qoda <run|table1|table2|topology|overlap|fig4|table3|fig5|rates|verify-variance|\
      verify-codelen|verify-mqv|protocols|optimism|ablations|train-gan|train-lm|all> \
      [flags]\n(see `qoda help` or the module docs for per-command flags)"
+}
+
+/// Resolve `--exchange` / `--depth`. `ExchangeMode::parse` is the single
+/// validator (it also accepts the `async` alias), so the CLI can never
+/// drift from the library's accepted names.
+fn exchange_from_args(args: &Args) -> Result<ExchangeMode> {
+    let name = args.get_or("exchange", "sync");
+    ExchangeMode::parse(&name, args.usize_or("depth", 1)?).ok_or_else(|| {
+        Error::msg(format!("--exchange expects sync|overlap, got {name:?}"))
+    })
 }
 
 /// Resolve `--topology` / `--racks` against the node count.
@@ -137,11 +150,14 @@ fn run_spec_from_args(args: &Args) -> Result<RunSpec> {
         .seed(seed)
         .update_every(args.usize_or("update-every", 0)?)
         .gap(gap)
-        .topology(topology_from_args(args, k)?);
-    // an explicit --topology without --bandwidth still attaches the default
-    // network clock — otherwise the flag would be a silent no-op (the
-    // topology only shows up in comm_s / net_wire_bits accounting)
-    if args.has("bandwidth") || args.has("topology") {
+        .topology(topology_from_args(args, k)?)
+        .exchange(exchange_from_args(args)?)
+        .compute_per_step(args.f64_or("compute-ms", 0.0)? * 1e-3);
+    // an explicit --topology or --exchange without --bandwidth still
+    // attaches the default network clock — otherwise the flag would be a
+    // silent no-op (both only show up in comm_s / exposed-vs-hidden /
+    // net_wire_bits accounting)
+    if args.has("bandwidth") || args.has("topology") || args.has("exchange") {
         spec = spec.network(NetworkModel::genesis_cloud(args.f64_or("bandwidth", 5.0)?));
     }
     Ok(spec)
@@ -183,10 +199,14 @@ fn run_cmd(args: &Args) -> Result<()> {
     );
     if report.comm_s > 0.0 {
         println!(
-            "{} topology: {:.3} Mbits routed, {:.1} ms on the simulated network clock",
+            "{} topology, {} exchange: {:.3} Mbits routed, {:.1} ms on the simulated \
+             network clock ({:.1} ms exposed + {:.1} ms hidden behind compute)",
             spec.topology.label(),
+            spec.exchange.mode.label(),
             report.net_wire_bits as f64 / 1e6,
             report.comm_s * 1e3,
+            report.comm_exposed_s * 1e3,
+            report.comm_hidden_s * 1e3,
         );
     }
     if let Some(g) = report.final_gap() {
@@ -217,6 +237,14 @@ fn dispatch(args: &Args) -> Result<()> {
             let t = experiments::topology_table(&ks, bw);
             t.print();
             t.save_csv("topology.csv")?;
+        }
+        "overlap" => {
+            let ks = args.list_or("ks", vec![4usize, 8, 12, 16])?;
+            let bw = args.f64_or("bandwidth", 5.0)?;
+            let depth = args.usize_or("depth", 1)?;
+            let t = experiments::overlap_table(&ks, bw, depth);
+            t.print();
+            t.save_csv("overlap.csv")?;
         }
         "fig4" => {
             let steps = args.usize_or("steps", 240)?;
@@ -318,6 +346,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 seed: args.u64_or("seed", 1)?,
                 bandwidth_gbps: args.f64_or("bandwidth", 5.0)?,
                 topology: topology_from_args(args, k)?,
+                exchange: exchange_from_args(args)?,
             };
             println!("training WGAN: {cfg:?}");
             let run = qoda::gan::trainer::train(&model, &cfg)?;
@@ -372,6 +401,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 ("table1", experiments::table1()),
                 ("table2", experiments::table2()),
                 ("topology", experiments::topology_table(&[4, 8, 12, 16], 5.0)),
+                ("overlap", experiments::overlap_table(&[4, 8, 12, 16], 5.0, 1)),
                 ("verify_variance", experiments::verify_variance()),
                 ("verify_codelen", experiments::verify_codelen()),
                 ("verify_mqv", experiments::verify_mqv()),

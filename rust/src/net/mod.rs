@@ -15,13 +15,23 @@
 //! * **injectable stragglers** ([`NetworkModel::with_straggler`]): per-node
 //!   link slowdowns that bottleneck exactly the phases the slow link
 //!   participates in (a rack-local straggler never touches the cross-rack
-//!   exchange; a straggling rack *leader* does).
+//!   exchange; a straggling rack *leader* does);
+//! * **phase decomposition** ([`PhaseTimeline`]): every topology charge
+//!   splits into wall-clock-ordered intervals tagged by [`PhaseKind`]
+//!   (rack-local gather → cross-rack exchange → rack-local broadcast).
+//!   The *synchronous* exchange schedule puts the whole timeline on the
+//!   critical path; the *overlapped* schedule
+//!   ([`ExchangeMode::Overlapped`](crate::coordinator::topology::ExchangeMode))
+//!   hides it behind the next step's compute window and exposes only the
+//!   remainder — the calibration tests below pin which phases a given
+//!   compute budget can hide and which a straggling leader re-exposes.
 //!
 //! The topology layer asks this module for primitive phase costs
 //! ([`NetworkModel::link_seconds`], [`NetworkModel::collective_seconds`],
-//! [`NetworkModel::max_slowdown_over`]) and composes them; this module
-//! never needs to know which topology is running.
+//! [`NetworkModel::max_slowdown_over`]) and composes them into a charge
+//! plus its timeline; this module never needs to know which topology — or
+//! which exchange schedule — is running.
 
 pub mod simulator;
 
-pub use simulator::{Collective, JitterModel, NetworkModel};
+pub use simulator::{Collective, JitterModel, NetworkModel, PhaseKind, PhaseTimeline};

@@ -27,6 +27,54 @@
 
 use crate::stats::rng::Rng;
 
+/// One phase class of a multi-phase exchange. The overlapped exchange
+/// scheduler reasons about a charge phase-by-phase: rack-local phases ride
+/// the fast intra-rack links, the cross-rack phase is the slow long-haul
+/// exchange that dominates at scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// members push their packets up to the rack leader (point-to-point,
+    /// intra-rack link class)
+    RackLocalGather,
+    /// the long-haul exchange over the cross-rack network (leaders-only
+    /// ring, hub ingest/egress, or the whole flat collective)
+    CrossRack,
+    /// leaders multicast the result back down inside the rack
+    RackLocalBroadcast,
+}
+
+/// A [`WireCharge`](crate::coordinator::topology::WireCharge) decomposed
+/// into per-phase intervals, in wall-clock order. Each entry carries its
+/// share of the fixed per-phase setup cost, so `total_s()` tracks the
+/// charge's `comm_s` (up to float association — the synchronous `comm_s`
+/// stays the golden-parity number; the timeline is the overlap scheduler's
+/// view of the same exchange).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseTimeline {
+    pub phases: Vec<(PhaseKind, f64)>,
+}
+
+impl PhaseTimeline {
+    /// A single-phase exchange (the flat collectives: one cross-rack ring).
+    pub fn single(kind: PhaseKind, seconds: f64) -> Self {
+        PhaseTimeline { phases: vec![(kind, seconds)] }
+    }
+
+    pub fn push(&mut self, kind: PhaseKind, seconds: f64) {
+        self.phases.push((kind, seconds));
+    }
+
+    /// Sum of all phase intervals.
+    pub fn total_s(&self) -> f64 {
+        self.phases.iter().map(|&(_, s)| s).sum()
+    }
+
+    /// Total seconds spent in phases of `kind`.
+    pub fn phase_s(&self, kind: PhaseKind) -> f64 {
+        self.phases.iter().filter(|&&(k, _)| k == kind).map(|&(_, s)| s).sum()
+    }
+}
+
 /// Collective used to exchange the per-node payloads.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Collective {
@@ -333,7 +381,13 @@ mod tests {
 /// measured against.
 #[cfg(test)]
 mod calibration {
-    use crate::bench_harness::experiments::{measure_qoda5_bytes_per_coord, step_time_ms};
+    use super::{NetworkModel, PhaseKind};
+    use crate::bench_harness::experiments::{
+        measure_qoda5_bytes_per_coord, step_time_ms, table2_compute_window_s,
+        PAYLOAD_BYTES,
+    };
+    use crate::coordinator::topology::{ExchangePlan, TopologySpec};
+    use crate::stats::rng::Rng;
 
     #[test]
     fn table1_k4_step_times_pin() {
@@ -371,5 +425,90 @@ mod calibration {
         assert!(s12 > 2.0, "12-node speedup {s12}");
         // and it keeps widening under weak scaling
         assert!(b[3] / q[3] > b[1] / q[1], "{b:?} / {q:?}");
+    }
+
+    /// Pins the overlap regime at the Table 1/2 weak-scaling point (K = 12,
+    /// heterogeneous links): the compute window dwarfs the quantized
+    /// hierarchical exchange, so overlapping hides the whole timeline — in
+    /// particular both rack-local phases — and exposes nothing.
+    #[test]
+    fn overlap_hides_at_least_the_rack_local_phases_at_k12() {
+        let bpc = measure_qoda5_bytes_per_coord(1 << 16, 1);
+        let k = 12usize;
+        let coords = (PAYLOAD_BYTES / 4.0) as usize;
+        let bits = vec![(coords as f64 * bpc * 8.0) as u64; k];
+        let spec = TopologySpec::hierarchical_for(k);
+        let net = NetworkModel::genesis_cloud(5.0);
+        let mut rng = Rng::new(2);
+        let (charge, tl) =
+            spec.build().charge_timeline(&bits, coords, &net, false, true, &mut rng);
+        // the Table 2 compute window at K = 12
+        let window_s = table2_compute_window_s(k);
+        assert!(charge.comm_s < window_s, "{} vs {window_s}", charge.comm_s);
+        let (exposed, hidden) = ExchangePlan::overlapped(1, window_s).split(charge.comm_s);
+        assert_eq!(exposed, 0.0, "the whole exchange hides behind compute");
+        let rack_local = tl.phase_s(PhaseKind::RackLocalGather)
+            + tl.phase_s(PhaseKind::RackLocalBroadcast);
+        assert!(rack_local > 0.0);
+        assert!(hidden >= rack_local, "{hidden} vs rack-local {rack_local}");
+        // ... and the cross-rack phase too (it dominates the timeline)
+        assert!(hidden >= tl.phase_s(PhaseKind::CrossRack));
+    }
+
+    /// A straggler re-exposes exactly the phases its link touches. On ideal
+    /// (infinitely fast, zero-latency) rack-local links with a compute
+    /// window sized to the clean exchange: a straggling rack *member*
+    /// re-exposes nothing — its link only carries rack-local phases — while
+    /// a straggling rack *leader* re-exposes exactly the cross-rack phase's
+    /// inflation.
+    #[test]
+    fn leader_straggler_reexposes_exactly_the_cross_rack_phase() {
+        let bpc = measure_qoda5_bytes_per_coord(1 << 16, 1);
+        let k = 12usize;
+        let coords = (PAYLOAD_BYTES / 4.0) as usize;
+        let bits = vec![(coords as f64 * bpc * 8.0) as u64; k];
+        // K/4 = 3 racks of 4: leaders are nodes 0, 4, 8
+        let spec = TopologySpec::hierarchical_for(k);
+        let ideal = |slow: Option<(usize, f64)>| {
+            let mut net = NetworkModel::genesis_cloud(5.0)
+                .with_intra_rack(f64::INFINITY, 0.0);
+            if let Some((node, factor)) = slow {
+                net = net.with_straggler(node, factor);
+            }
+            let mut rng = Rng::new(2);
+            spec.build().charge_timeline(&bits, coords, &net, false, true, &mut rng)
+        };
+        let (clean, tl_clean) = ideal(None);
+        // compute window exactly covers the clean exchange: fully hidden
+        let plan = ExchangePlan::overlapped(1, clean.comm_s);
+        assert_eq!(plan.split(clean.comm_s).0, 0.0);
+
+        // a 4x straggler on node 5 — a member of rack 1, not a leader —
+        // only touches the (free) rack-local phases: nothing re-exposes
+        let (member, _) = ideal(Some((5, 4.0)));
+        assert_eq!(member.comm_s, clean.comm_s, "member straggler is invisible");
+        assert_eq!(plan.split(member.comm_s).0, 0.0);
+
+        // a 4x straggler on node 4 — the rack-1 leader — inflates the
+        // cross-rack phase, and exactly that inflation re-exposes
+        let (slow, tl_slow) = ideal(Some((4, 4.0)));
+        let (exposed, _) = plan.split(slow.comm_s);
+        assert!(exposed > 0.0);
+        let d_cross = tl_slow.phase_s(PhaseKind::CrossRack)
+            - tl_clean.phase_s(PhaseKind::CrossRack);
+        assert!(d_cross > 0.0);
+        assert!(
+            (exposed - d_cross).abs() < 1e-9 * slow.comm_s.max(1e-9),
+            "exposed {exposed} vs cross-rack inflation {d_cross}"
+        );
+        // no other phase moved: the whole slowdown is the cross-rack phase
+        assert_eq!(
+            tl_slow.phase_s(PhaseKind::RackLocalGather),
+            tl_clean.phase_s(PhaseKind::RackLocalGather)
+        );
+        assert_eq!(
+            tl_slow.phase_s(PhaseKind::RackLocalBroadcast),
+            tl_clean.phase_s(PhaseKind::RackLocalBroadcast)
+        );
     }
 }

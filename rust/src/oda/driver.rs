@@ -24,6 +24,13 @@
 //! interleaved solver races under a shared wire budget
 //! (`examples/solver_race.rs`), or driving a solver over a coordinator
 //! transport.
+//!
+//! The optional [`NetClock`] charges every step's wire bits on a simulated
+//! network under an [`ExchangePlan`]: synchronous exchanges expose the full
+//! `comm_s`; overlapped exchanges model the engines' one-step-stale double
+//! buffer and split each step's charge into `comm_exposed_s` (outlives the
+//! compute window) vs `comm_hidden_s` (overlapped behind the next step's
+//! compute) — see the [`NetClock`] docs for the exact staleness semantics.
 
 use super::baseline::{AdamSolver, OptimisticAdam};
 use super::lr::{AdaptiveLr, AltLr, ConstantLr, LrSchedule};
@@ -32,7 +39,9 @@ use super::qoda::Qoda;
 use super::source::OracleSource;
 use crate::coding::protocol::ProtocolKind;
 use crate::comm::{Adaptation, CommEndpoint, Compressor, IdentityCompressor, QuantCompressor};
-use crate::coordinator::topology::{TopologySpec, Transport, WireCharge};
+use crate::coordinator::topology::{
+    ExchangeMode, ExchangePlan, TopologySpec, Transport, WireCharge,
+};
 use crate::net::NetworkModel;
 use crate::quant::layer_map::LayerMap;
 use crate::quant::QuantConfig;
@@ -164,6 +173,14 @@ pub struct RunReport {
     /// simulated network-clock seconds across the run (0.0 unless the
     /// driver was given a [`NetClock`] / the spec a network model)
     pub comm_s: f64,
+    /// the share of `comm_s` the exchange schedule left on the critical
+    /// path: equal to `comm_s` under [`ExchangeMode::Synchronous`] (and
+    /// under an overlapped exchange with a zero compute window); always
+    /// `comm_exposed_s + comm_hidden_s == comm_s`
+    pub comm_exposed_s: f64,
+    /// the share of `comm_s` hidden behind the next step's compute under
+    /// [`ExchangeMode::Overlapped`] (0.0 when synchronous)
+    pub comm_hidden_s: f64,
     /// wire bits as charged by the topology's routing (equals `total_bits`
     /// for broadcast-allgather; 0 without a [`NetClock`])
     pub net_wire_bits: u64,
@@ -206,6 +223,12 @@ pub struct StepRecord {
     /// simulated network seconds this step charged (0.0 without a
     /// [`NetClock`])
     pub comm_s: f64,
+    /// the exposed share of `comm_s` under the clock's exchange plan
+    /// (== `comm_s` for synchronous exchanges)
+    pub comm_exposed_s: f64,
+    /// the share of `comm_s` hidden behind the compute window
+    /// (`comm_exposed_s + comm_hidden_s == comm_s`)
+    pub comm_hidden_s: f64,
 }
 
 /// Observer of a live run. All hooks default to no-ops except `on_step`.
@@ -238,12 +261,28 @@ impl MetricsSink for MemorySink {
 /// [`NetworkModel`]. Per-node payloads are taken as equal shares of the
 /// step's total bits (the solvers' per-node packets differ by at most the
 /// entropy coder's jitter, and the split preserves the exact total).
+///
+/// The clock's [`ExchangePlan`] decides how each charge meets the critical
+/// path. Under [`ExchangeMode::Overlapped`] the charge is split into
+/// exposed vs hidden seconds against the plan's compute window — this is
+/// *accounting for* the engines' one-step-stale double buffer, not a change
+/// to the solver math: the driver's solvers exchange through in-process
+/// loopback endpoints, so their iterates are exactly the synchronous ones.
+/// The staleness cost lives where the staleness is real — in the
+/// coordinator engines (`ClusterSim` overlapped mode, the pipelined
+/// `run_rounds_over`), whose aggregates genuinely arrive `depth` rounds
+/// late. A run report with `comm_hidden_s > 0` therefore reads as: "on a
+/// cluster running this schedule, these seconds come off the critical
+/// path, and the iterates follow the depth-stale trajectory the engines
+/// (and `tests/overlap_parity.rs`) pin".
 pub struct NetClock {
     transport: Box<dyn Transport>,
     pub model: NetworkModel,
     /// true => fp32 payloads, in-network reduction applies
     pub uncompressed: bool,
     pub main_protocol: bool,
+    /// how charges are scheduled against compute (synchronous by default)
+    pub plan: ExchangePlan,
     rng: Rng,
 }
 
@@ -259,8 +298,17 @@ impl NetClock {
             model,
             uncompressed,
             main_protocol,
+            plan: ExchangePlan::synchronous(),
             rng: Rng::new(0x1C0C),
         }
+    }
+
+    /// Attach an exchange schedule (default: synchronous — the clock then
+    /// behaves exactly as before overlap existed, same charges off the same
+    /// RNG stream).
+    pub fn with_exchange(mut self, plan: ExchangePlan) -> Self {
+        self.plan = plan;
+        self
     }
 
     pub fn spec(&self) -> TopologySpec {
@@ -381,6 +429,8 @@ impl<'a> RunDriver<'a> {
         let mut quant_err_sq = 0.0f64;
         let mut dual_norm_sq = 0.0f64;
         let mut comm_s = 0.0f64;
+        let mut comm_exposed_s = 0.0f64;
+        let mut comm_hidden_s = 0.0f64;
         let mut net_wire_bits = 0u64;
         let mut out_ckpts = Vec::new();
         let mut gap_trace = Vec::new();
@@ -394,10 +444,17 @@ impl<'a> RunDriver<'a> {
             quant_err_sq += stats.quant_err_sq;
             dual_norm_sq += stats.dual_norm_sq;
             let mut step_comm_s = 0.0;
+            let mut step_exposed_s = 0.0;
+            let mut step_hidden_s = 0.0;
             if let Some(clock) = self.net.as_mut() {
                 let charge = clock.charge_step(stats.bits, k, d);
+                let (exposed, hidden) = clock.plan.split(charge.comm_s);
                 step_comm_s = charge.comm_s;
+                step_exposed_s = exposed;
+                step_hidden_s = hidden;
                 comm_s += charge.comm_s;
+                comm_exposed_s += exposed;
+                comm_hidden_s += hidden;
                 net_wire_bits += charge.wire_bits;
             }
             {
@@ -432,6 +489,8 @@ impl<'a> RunDriver<'a> {
                 oracle_calls: solver.oracle_calls() - calls0,
                 gap: gap_now,
                 comm_s: step_comm_s,
+                comm_exposed_s: step_exposed_s,
+                comm_hidden_s: step_hidden_s,
             };
             for sink in sinks.iter_mut() {
                 sink.on_step(&rec);
@@ -471,6 +530,8 @@ impl<'a> RunDriver<'a> {
             quant_err_sq,
             dual_norm_sq,
             comm_s,
+            comm_exposed_s,
+            comm_hidden_s,
             net_wire_bits,
         };
         for sink in sinks.iter_mut() {
@@ -646,6 +707,10 @@ pub struct RunSpec {
     pub topology: TopologySpec,
     /// attach a network model to charge every step on the simulated clock
     pub network: Option<NetworkModel>,
+    /// how exchanges are scheduled against compute on the simulated clock
+    /// (synchronous by default; overlapped splits `comm_s` into exposed
+    /// vs hidden against `exchange.compute_s_per_step`)
+    pub exchange: ExchangePlan,
 }
 
 impl RunSpec {
@@ -666,6 +731,7 @@ impl RunSpec {
             gap: GapMode::Off,
             topology: TopologySpec::BroadcastAllGather,
             network: None,
+            exchange: ExchangePlan::synchronous(),
         }
     }
 
@@ -734,6 +800,19 @@ impl RunSpec {
         self
     }
 
+    /// Select the exchange schedule charged on the simulated clock.
+    pub fn exchange(mut self, mode: ExchangeMode) -> Self {
+        self.exchange.mode = mode;
+        self
+    }
+
+    /// Modeled compute seconds per step that an overlapped exchange hides
+    /// communication behind (ignored when synchronous).
+    pub fn compute_per_step(mut self, compute_s: f64) -> Self {
+        self.exchange.compute_s_per_step = compute_s;
+        self
+    }
+
     /// The operator instance this spec's oracles wrap (rebuilt from the
     /// seed — identical every call), for external gap evaluation.
     pub fn operator_instance(&self) -> Box<dyn Operator> {
@@ -758,12 +837,15 @@ impl RunSpec {
             .collect();
         let mut driver = RunDriver::new().checkpoints(&self.checkpoints);
         if let Some(model) = &self.network {
-            driver = driver.network(NetClock::new(
-                &self.topology,
-                model.clone(),
-                matches!(self.compression, CompressionSpec::None),
-                self.protocol == ProtocolKind::Main,
-            ));
+            driver = driver.network(
+                NetClock::new(
+                    &self.topology,
+                    model.clone(),
+                    matches!(self.compression, CompressionSpec::None),
+                    self.protocol == ProtocolKind::Main,
+                )
+                .with_exchange(self.exchange),
+            );
         }
         if !matches!(self.gap, GapMode::Off) {
             let sol = op
@@ -1009,5 +1091,68 @@ mod tests {
         .run();
         assert_eq!(off.comm_s, 0.0);
         assert_eq!(off.net_wire_bits, 0);
+    }
+
+    #[test]
+    fn overlapped_clock_splits_comm_without_touching_the_math() {
+        let spec = |mode: ExchangeMode, compute_s: f64| {
+            RunSpec::new(
+                SolverKind::Qoda,
+                OperatorSpec::Quadratic { dim: 16, mu: 0.5, seed: 6 },
+            )
+            .nodes(4)
+            .compression(CompressionSpec::Global { bits: 5, bucket: 128 })
+            .steps(30)
+            .topology(TopologySpec::Hierarchical { racks: 2 })
+            .network(NetworkModel::genesis_cloud(5.0))
+            .exchange(mode)
+            .compute_per_step(compute_s)
+            .run()
+        };
+        let sync = spec(ExchangeMode::Synchronous, 0.0);
+        let ov0 = spec(ExchangeMode::Overlapped { depth: 1 }, 0.0);
+        let ov = spec(ExchangeMode::Overlapped { depth: 1 }, 10.0);
+        // the clock is pure accounting: iterates, bits and the charge
+        // itself are mode-invariant
+        assert_eq!(sync.x_last, ov.x_last);
+        assert_eq!(sync.total_bits, ov.total_bits);
+        assert_eq!(sync.comm_s, ov.comm_s);
+        assert_eq!(sync.net_wire_bits, ov.net_wire_bits);
+        // synchronous: everything exposed
+        assert_eq!(sync.comm_exposed_s, sync.comm_s);
+        assert_eq!(sync.comm_hidden_s, 0.0);
+        // overlapped with zero compute: exposed == comm_s exactly
+        assert_eq!(ov0.comm_exposed_s, ov0.comm_s);
+        assert_eq!(ov0.comm_hidden_s, 0.0);
+        // overlapped with a generous window: fully hidden
+        assert_eq!(ov.comm_exposed_s, 0.0);
+        assert_eq!(ov.comm_hidden_s, ov.comm_s);
+        // invariants hold for all three
+        for r in [&sync, &ov0, &ov] {
+            assert!(r.comm_exposed_s <= r.comm_s);
+            assert!((r.comm_exposed_s + r.comm_hidden_s - r.comm_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn step_records_carry_the_exposed_split() {
+        let mut sink = MemorySink::default();
+        RunSpec::new(
+            SolverKind::Qoda,
+            OperatorSpec::Quadratic { dim: 8, mu: 0.5, seed: 9 },
+        )
+        .nodes(2)
+        .compression(CompressionSpec::Global { bits: 5, bucket: 128 })
+        .steps(12)
+        .network(NetworkModel::genesis_cloud(5.0))
+        .exchange(ExchangeMode::Overlapped { depth: 1 })
+        .compute_per_step(10.0)
+        .run_observed(&mut [&mut sink]);
+        assert_eq!(sink.records.len(), 12);
+        for rec in &sink.records {
+            assert!(rec.comm_s > 0.0);
+            assert_eq!(rec.comm_exposed_s, 0.0, "fully hidden at this window");
+            assert_eq!(rec.comm_hidden_s, rec.comm_s);
+        }
     }
 }

@@ -1,0 +1,578 @@
+//! Golden parity for the overlapped-exchange refactor.
+//!
+//! `ExchangeMode::Synchronous` must be **bit- and clock-identical** to the
+//! pre-overlap (PR 3) coordinator: this file replays the PR 3 charging
+//! arithmetic verbatim (per-topology formulas + the flat collective's
+//! sampled jitter stream) and pins both engines, all three topologies and
+//! the driver's `NetClock` against it across seeds. `ExchangeMode::
+//! Overlapped` is then pinned to its invariants: the charge itself is
+//! mode-invariant, `comm_exposed_s <= comm_s` with equality at a zero
+//! compute window, `comm_exposed_s + comm_hidden_s == comm_s`, and the
+//! engines agree bit-for-bit on the depth-stale iterate trajectory.
+
+use qoda::coding::protocol::ProtocolKind;
+use qoda::comm::Compressor;
+use qoda::coordinator::parallel::{
+    run_rounds_over, worker_codec_seed, worker_oracle_seed, SharedQuantState,
+};
+use qoda::coordinator::sim::ClusterSim;
+use qoda::coordinator::topology::PHASE_SETUP_MS;
+use qoda::coordinator::{ExchangeMode, ExchangePlan, TopologySpec};
+use qoda::net::{Collective, JitterModel, NetworkModel};
+use qoda::oda::{CompressionSpec, NetClock, OperatorSpec, RunSpec, SolverKind};
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::{LevelSequence, QuantConfig};
+use qoda::stats::rng::Rng;
+use qoda::vi::noise::{NoiseModel, Oracle};
+use qoda::vi::operator::QuadraticOperator;
+
+const D: usize = 24;
+const K: usize = 6;
+
+fn shared_state() -> SharedQuantState {
+    SharedQuantState {
+        map: LayerMap::from_spec(&[("a", 16, "ff"), ("b", 8, "emb")]).bucketed(8),
+        cfg: QuantConfig {
+            sequences: vec![LevelSequence::bits(4), LevelSequence::bits(6)],
+            q: 2.0,
+        },
+        protocol: ProtocolKind::Main,
+    }
+}
+
+fn topologies() -> [TopologySpec; 3] {
+    [
+        TopologySpec::BroadcastAllGather,
+        TopologySpec::Hierarchical { racks: 3 },
+        TopologySpec::ParameterServer,
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// The PR 3 charging arithmetic, replayed verbatim. Any drift between these
+// replicas and the live transports is a golden-parity break.
+// ---------------------------------------------------------------------------
+
+/// PR 3 `rack_spans`: contiguous blocks of ceil(k / racks). (The live
+/// function now also clamps degenerate inputs; for the resolved racks >= 1
+/// used here the layouts are identical.)
+fn legacy_rack_spans(k: usize, racks: usize) -> Vec<(usize, usize)> {
+    let racks = racks.clamp(1, k.max(1));
+    let m = (k + racks - 1) / racks;
+    let mut spans = Vec::new();
+    let mut start = 0;
+    while start < k {
+        let end = (start + m).min(k);
+        spans.push((start, end));
+        start = end;
+    }
+    spans
+}
+
+/// PR 3 charge arithmetic for one exchange under `spec`, term for term.
+fn legacy_charge(
+    spec: &TopologySpec,
+    packet_bits: &[u64],
+    agg_dim: usize,
+    net: &NetworkModel,
+    uncompressed: bool,
+    main_protocol: bool,
+    rng: &mut Rng,
+) -> (u64, f64) {
+    match *spec {
+        TopologySpec::BroadcastAllGather => {
+            let bytes: Vec<f64> = packet_bits.iter().map(|&b| b as f64 / 8.0).collect();
+            let kind = if uncompressed {
+                Collective::RingAllReduce
+            } else {
+                Collective::RingAllGather
+            };
+            let comm_s = net.sample_collective_seconds(kind, &bytes, main_protocol, rng);
+            (packet_bits.iter().sum(), comm_s)
+        }
+        TopologySpec::Hierarchical { racks } => {
+            let k = packet_bits.len();
+            let racks = if racks == 0 { (k / 4).max(2) } else { racks };
+            let spans = legacy_rack_spans(k, racks);
+            let r_eff = spans.len() as f64;
+            let total_bits: u64 = packet_bits.iter().sum();
+            let agg_bits = 32u64 * agg_dim as u64;
+
+            let mut wire_bits = 0u64;
+            let mut t_up = 0.0f64;
+            for &(start, end) in &spans {
+                let up_bits: u64 = packet_bits[start + 1..end].iter().sum();
+                wire_bits += up_bits;
+                if end - start > 1 {
+                    let slow = net.max_slowdown_over(start..end);
+                    let t = up_bits as f64 / 8.0 / net.intra_bytes_per_sec() * slow
+                        + net.intra_rack_latency_us * 1e-6;
+                    t_up = t_up.max(t);
+                }
+            }
+
+            let leaders: Vec<usize> = spans.iter().map(|&(s, _)| s).collect();
+            let slow_x = net.max_slowdown_over(leaders.iter().copied());
+            let lat = net.latency_us * 1e-6;
+            let bw = net.bytes_per_sec();
+            let t_cross;
+            if uncompressed {
+                let a_bytes = agg_bits as f64 / 8.0;
+                wire_bits += spans.len() as u64 * agg_bits;
+                let wire = 2.0 * (r_eff - 1.0) / r_eff * a_bytes / bw
+                    + 2.0 * (r_eff - 1.0) * lat;
+                let straggler = net.straggler_ms_per_node_mb * 1e-3 * (a_bytes / 1e6)
+                    * (r_eff - 1.0);
+                t_cross = wire * slow_x + straggler;
+            } else {
+                let bundles: Vec<f64> = spans
+                    .iter()
+                    .map(|&(s, e)| packet_bits[s..e].iter().sum::<u64>() as f64 / 8.0)
+                    .collect();
+                wire_bits += total_bits;
+                let sum_b: f64 = bundles.iter().sum();
+                let max_b = bundles.iter().copied().fold(0.0, f64::max);
+                let wire = (r_eff - 1.0) / r_eff * sum_b / bw + (r_eff - 1.0) * lat;
+                let straggler =
+                    net.straggler_ms_per_node_mb * 1e-3 * (max_b / 1e6) * (r_eff - 1.0);
+                t_cross =
+                    (wire * slow_x + straggler) * net.jitter_multiplier(main_protocol);
+            }
+
+            let mut t_down = 0.0f64;
+            for &(start, end) in &spans {
+                if end - start > 1 {
+                    let down_bits = if uncompressed { agg_bits } else { total_bits };
+                    wire_bits += down_bits;
+                    let slow = net.max_slowdown_over(start..end);
+                    let t = down_bits as f64 / 8.0 / net.intra_bytes_per_sec() * slow
+                        + net.intra_rack_latency_us * 1e-6;
+                    t_down = t_down.max(t);
+                }
+            }
+
+            let comm_s = t_up + t_cross + t_down + 3.0 * PHASE_SETUP_MS * 1e-3;
+            (wire_bits, comm_s)
+        }
+        TopologySpec::ParameterServer => {
+            let k = packet_bits.len();
+            let kf = k as f64;
+            let total_bits: u64 = packet_bits.iter().sum();
+            let agg_bits = 32u64 * agg_dim as u64;
+            let bw = net.bytes_per_sec();
+            let lat = net.latency_us * 1e-6;
+            let slow = net.max_slowdown_over(0..k);
+            let max_b =
+                packet_bits.iter().map(|&b| b as f64 / 8.0).fold(0.0, f64::max);
+
+            let up_wire = total_bits as f64 / 8.0 / bw * slow + lat;
+            let up_straggler = net.straggler_ms_per_node_mb * 1e-3 * (max_b / 1e6)
+                * (kf - 1.0).max(0.0);
+            let t_up = (up_wire + up_straggler) * net.jitter_multiplier(main_protocol);
+
+            let t_down = kf * (agg_bits as f64 / 8.0) / bw * slow + lat;
+
+            let comm_s = t_up + t_down + 2.0 * PHASE_SETUP_MS * 1e-3;
+            (total_bits + k as u64 * agg_bits, comm_s)
+        }
+    }
+}
+
+/// Randomized packet-bit vectors, deterministic per seed.
+fn random_bits(rng: &mut Rng, k: usize) -> Vec<u64> {
+    (0..k).map(|_| 256 + rng.below(1 << 14)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Transport charges: synchronous == PR 3, term for term, stream for
+//    stream (jitter on, so the flat collective's RNG draws are exercised).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn synchronous_charges_match_pr3_bit_for_bit() {
+    let mut jittered = NetworkModel::genesis_cloud(5.0).with_straggler(2, 2.5);
+    jittered.jitter = JitterModel { p: 0.2, retrans_fraction: 1.0, resync_fraction: 0.05 };
+    let d = 1 << 12;
+    for seed in [3u64, 41, 97] {
+        for spec in topologies() {
+            for uncompressed in [false, true] {
+                // one transport, one legacy replay, SAME rng seed: five
+                // consecutive charges must agree on every float, which also
+                // pins the sampled jitter stream position
+                let mut transport = spec.build();
+                let mut rng_live = Rng::new(seed);
+                let mut rng_legacy = Rng::new(seed);
+                let mut bits_rng = Rng::new(seed ^ 0xB17);
+                for step in 0..5 {
+                    let bits = random_bits(&mut bits_rng, K);
+                    let live =
+                        transport.charge(&bits, d, &jittered, uncompressed, true, &mut rng_live);
+                    let (want_bits, want_s) = legacy_charge(
+                        &spec,
+                        &bits,
+                        d,
+                        &jittered,
+                        uncompressed,
+                        true,
+                        &mut rng_legacy,
+                    );
+                    assert_eq!(
+                        live.wire_bits, want_bits,
+                        "wire bits drift ({spec:?}, seed {seed}, step {step})"
+                    );
+                    assert_eq!(
+                        live.comm_s, want_s,
+                        "network-clock drift ({spec:?}, seed {seed}, step {step}, \
+                         uncompressed {uncompressed})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Both engines, all topologies, three seeds: synchronous mode reproduces
+//    PR 3's aggregates, wire bits and network-clock seconds bit-for-bit.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engines_reproduce_pr3_accounting_across_topologies_and_seeds() {
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let mut op_rng = Rng::new(77);
+    let op = QuadraticOperator::random(D, 0.5, &mut op_rng);
+    let lr = 0.06;
+    let steps = 3;
+    let net = NetworkModel::genesis_cloud(5.0);
+
+    for seed in [5u64, 17, 23] {
+        for spec in topologies() {
+            let st = shared_state();
+            let x0 = vec![0.25; D];
+
+            // engine 1: the threaded coordinator under the synchronous plan
+            let par = run_rounds_over(
+                &op,
+                noise,
+                K,
+                &st,
+                x0.clone(),
+                steps,
+                seed,
+                &spec,
+                &net,
+                ExchangePlan::synchronous(),
+                |x, mean, _| {
+                    for (xi, g) in x.iter_mut().zip(mean) {
+                        *xi -= lr * g;
+                    }
+                },
+            )
+            .expect("run_rounds_over");
+
+            // engine 2: the sim engine, same per-node codec + oracle seeds,
+            // with the PR 3 charge replayed alongside every round
+            let codecs: Vec<Box<dyn Compressor>> = (0..K)
+                .map(|n| Box::new(st.codec(worker_codec_seed(seed, n))) as _)
+                .collect();
+            let mut sim =
+                ClusterSim::new(codecs, net.clone(), false).with_topology(&spec);
+            let mut oracles: Vec<Oracle> = (0..K)
+                .map(|n| Oracle::new(&op, noise, worker_oracle_seed(seed, n)))
+                .collect();
+            let mut x = x0;
+            let mut wire_sim = 0u64;
+            let mut comm_sim = 0.0f64;
+            let mut wire_legacy = 0u64;
+            let mut comm_legacy = 0.0f64;
+            let mut legacy_rng = Rng::new(0xC0FFEE); // the sim engine's seed
+            let mut last_mean = vec![0.0; D];
+            for _ in 0..steps {
+                let duals: Vec<Vec<f64>> =
+                    oracles.iter_mut().map(|o| o.sample(&x)).collect();
+                let (mean, m) = sim.exchange(&duals).expect("exchange");
+                // replay PR 3 on the actual per-node packet sizes
+                let bits: Vec<u64> = sim
+                    .endpoints()
+                    .iter()
+                    .map(|e| e.packet().len_bits() as u64)
+                    .collect();
+                let (lb, ls) =
+                    legacy_charge(&spec, &bits, D, &net, false, true, &mut legacy_rng);
+                wire_legacy += lb;
+                comm_legacy += ls;
+                wire_sim += m.wire_bits;
+                comm_sim += m.comm_s;
+                // synchronous split: everything exposed, nothing hidden
+                assert_eq!(m.comm_exposed_s, m.comm_s);
+                assert_eq!(m.comm_hidden_s, 0.0);
+                for (xi, g) in x.iter_mut().zip(&mean) {
+                    *xi -= lr * g;
+                }
+                last_mean = mean;
+            }
+
+            // sim == PR 3 replay
+            assert_eq!(wire_sim, wire_legacy, "({spec:?}, seed {seed})");
+            assert_eq!(comm_sim, comm_legacy, "({spec:?}, seed {seed})");
+            // threaded engine == sim engine, on everything
+            assert_eq!(par.x, x, "iterate drift ({spec:?}, seed {seed})");
+            assert_eq!(par.last_mean, last_mean, "aggregate drift ({spec:?})");
+            assert_eq!(par.wire_bits, wire_sim, "wire drift ({spec:?})");
+            assert_eq!(par.comm_s, comm_sim, "clock drift ({spec:?})");
+            assert_eq!(par.comm_exposed_s, par.comm_s);
+            assert_eq!(par.comm_hidden_s, 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. The driver's NetClock: same charges off the same RNG stream as PR 3,
+//    with or without an overlapped plan attached.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn netclock_sample_stream_matches_pr3_bit_for_bit() {
+    let mut net = NetworkModel::genesis_cloud(5.0);
+    net.jitter = JitterModel { p: 0.25, retrans_fraction: 1.0, resync_fraction: 0.05 };
+    let k = 4usize;
+    let d = 512usize;
+    let totals = [40_000u64, 41_337, 39_991, 65_536, 12_345];
+
+    let run_clock = |plan: Option<ExchangePlan>| -> Vec<(u64, f64)> {
+        let mut clock = NetClock::new(
+            &TopologySpec::BroadcastAllGather,
+            net.clone(),
+            false,
+            true,
+        );
+        if let Some(p) = plan {
+            clock = clock.with_exchange(p);
+        }
+        totals
+            .iter()
+            .map(|&t| {
+                let c = clock.charge_step(t, k, d);
+                (c.wire_bits, c.comm_s)
+            })
+            .collect()
+    };
+
+    // legacy replay: PR 3's equal split + sample stream from Rng(0x1C0C)
+    let mut legacy_rng = Rng::new(0x1C0C);
+    let want: Vec<(u64, f64)> = totals
+        .iter()
+        .map(|&total| {
+            let base = total / k as u64;
+            let rem = (total % k as u64) as usize;
+            let mut bits = vec![base; k];
+            for b in bits.iter_mut().take(rem) {
+                *b += 1;
+            }
+            let bytes: Vec<f64> = bits.iter().map(|&b| b as f64 / 8.0).collect();
+            let s = net.sample_collective_seconds(
+                Collective::RingAllGather,
+                &bytes,
+                true,
+                &mut legacy_rng,
+            );
+            (bits.iter().sum(), s)
+        })
+        .collect();
+
+    assert_eq!(run_clock(None), want, "synchronous NetClock drifted from PR 3");
+    // attaching an overlapped plan must not perturb the charge stream —
+    // the split is accounting on top, never a different draw
+    assert_eq!(
+        run_clock(Some(ExchangePlan::overlapped(1, 0.050))),
+        want,
+        "overlapped NetClock perturbed the sample stream"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 4. Overlap invariants through the driver, every topology in the sweep:
+//    exposed <= comm_s, equality at a zero compute window, the split
+//    conserves comm_s, and overlap never worsens exposure vs synchronous.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overlapped_exposure_invariants_across_the_topology_sweep() {
+    for spec in topologies() {
+        let run = |mode: ExchangeMode, compute_s: f64| {
+            RunSpec::new(
+                SolverKind::Qoda,
+                OperatorSpec::Quadratic { dim: 16, mu: 0.5, seed: 11 },
+            )
+            .nodes(4)
+            .compression(CompressionSpec::Global { bits: 5, bucket: 128 })
+            .steps(25)
+            .seed(3)
+            .topology(spec)
+            .network(NetworkModel::genesis_cloud(5.0))
+            .exchange(mode)
+            .compute_per_step(compute_s)
+            .run()
+        };
+        let sync = run(ExchangeMode::Synchronous, 0.0);
+        assert!(sync.comm_s > 0.0, "{spec:?}");
+        assert_eq!(sync.comm_exposed_s, sync.comm_s, "{spec:?}");
+        assert_eq!(sync.comm_hidden_s, 0.0, "{spec:?}");
+
+        // compute-per-step = 0: overlap exposes everything, exactly
+        let ov0 = run(ExchangeMode::Overlapped { depth: 1 }, 0.0);
+        assert_eq!(ov0.comm_s, sync.comm_s, "charge is mode-invariant ({spec:?})");
+        assert_eq!(ov0.comm_exposed_s, ov0.comm_s, "{spec:?}");
+
+        for compute_s in [1e-4, 1e-3, 5e-3, 1.0] {
+            for depth in [1usize, 2] {
+                let ov = run(ExchangeMode::Overlapped { depth }, compute_s);
+                assert_eq!(ov.comm_s, sync.comm_s, "{spec:?}");
+                assert_eq!(ov.x_last, sync.x_last, "clock must not touch math");
+                // the acceptance invariant: overlap never increases the
+                // exposed share over synchronous
+                assert!(
+                    ov.comm_exposed_s <= sync.comm_exposed_s,
+                    "{spec:?} compute {compute_s} depth {depth}"
+                );
+                assert!(ov.comm_exposed_s >= 0.0 && ov.comm_hidden_s >= 0.0);
+                assert!(
+                    (ov.comm_exposed_s + ov.comm_hidden_s - ov.comm_s).abs()
+                        <= 1e-12 * ov.comm_s,
+                    "{spec:?}: split must conserve comm_s"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Overlapped engines agree bit-for-bit on the depth-stale trajectory.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overlapped_engines_agree_bitwise_on_the_stale_trajectory() {
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let mut op_rng = Rng::new(88);
+    let op = QuadraticOperator::random(D, 0.5, &mut op_rng);
+    let lr = 0.05;
+    let steps = 5;
+    let net = NetworkModel::genesis_cloud(5.0);
+
+    for seed in [9u64, 31] {
+        for depth in [1usize, 2] {
+            for spec in [
+                TopologySpec::BroadcastAllGather,
+                TopologySpec::Hierarchical { racks: 3 },
+            ] {
+                let st = shared_state();
+                let x0 = vec![0.2; D];
+                let par = run_rounds_over(
+                    &op,
+                    noise,
+                    K,
+                    &st,
+                    x0.clone(),
+                    steps,
+                    seed,
+                    &spec,
+                    &net,
+                    ExchangePlan::overlapped(depth, 0.0),
+                    |x, mean, _| {
+                        for (xi, g) in x.iter_mut().zip(mean) {
+                            *xi -= lr * g;
+                        }
+                    },
+                )
+                .expect("run_rounds_over");
+
+                // sim engine replica of the same schedule: query the
+                // current iterate, apply the (stale or zero) returned
+                // aggregate, drain the double buffer at the end
+                let codecs: Vec<Box<dyn Compressor>> = (0..K)
+                    .map(|n| Box::new(st.codec(worker_codec_seed(seed, n))) as _)
+                    .collect();
+                let mut sim = ClusterSim::new(codecs, net.clone(), false)
+                    .with_topology(&spec)
+                    .with_exchange(ExchangePlan::overlapped(depth, 0.0));
+                let mut oracles: Vec<Oracle> = (0..K)
+                    .map(|n| Oracle::new(&op, noise, worker_oracle_seed(seed, n)))
+                    .collect();
+                let mut x = x0;
+                let mut wire_sim = 0u64;
+                let mut last_mean = vec![0.0; D];
+                for _ in 0..steps {
+                    let duals: Vec<Vec<f64>> =
+                        oracles.iter_mut().map(|o| o.sample(&x)).collect();
+                    let (stale, m) = sim.exchange(&duals).expect("exchange");
+                    wire_sim += m.wire_bits;
+                    for (xi, g) in x.iter_mut().zip(&stale) {
+                        *xi -= lr * g;
+                    }
+                    last_mean = stale;
+                }
+                for mean in sim.drain_staged() {
+                    for (xi, g) in x.iter_mut().zip(&mean) {
+                        *xi -= lr * g;
+                    }
+                    last_mean = mean;
+                }
+
+                assert_eq!(
+                    par.x, x,
+                    "stale-iterate drift ({spec:?}, seed {seed}, depth {depth})"
+                );
+                assert_eq!(par.wire_bits, wire_sim, "({spec:?}, depth {depth})");
+                // the final aggregate both engines saw last is the final
+                // round's mean
+                assert_eq!(par.last_mean, last_mean, "({spec:?}, depth {depth})");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 6. Staleness changes the trajectory (it must — otherwise nothing
+//    overlapped) but a one-round run, drained, is exactly synchronous.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn staleness_is_real_but_degenerates_to_sync_on_one_round() {
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let mut op_rng = Rng::new(55);
+    let op = QuadraticOperator::random(D, 0.5, &mut op_rng);
+    let lr = 0.08;
+    let st = shared_state();
+    let x0 = vec![0.4; D];
+    let net = NetworkModel::genesis_cloud(5.0);
+    let run = |steps: usize, plan: ExchangePlan| {
+        run_rounds_over(
+            &op,
+            noise,
+            K,
+            &st,
+            x0.clone(),
+            steps,
+            13,
+            &TopologySpec::BroadcastAllGather,
+            &net,
+            plan,
+            |x, mean, _| {
+                for (xi, g) in x.iter_mut().zip(mean) {
+                    *xi -= lr * g;
+                }
+            },
+        )
+        .expect("run_rounds_over")
+    };
+    // multi-round: the stale trajectory genuinely differs...
+    let sync = run(4, ExchangePlan::synchronous());
+    let over = run(4, ExchangePlan::overlapped(1, 0.0));
+    assert_ne!(sync.x, over.x, "overlap must actually stagger the updates");
+    // ...but one round has nothing to stagger
+    let sync1 = run(1, ExchangePlan::synchronous());
+    let over1 = run(1, ExchangePlan::overlapped(1, 0.0));
+    assert_eq!(sync1.x, over1.x);
+    assert_eq!(sync1.last_mean, over1.last_mean);
+    assert_eq!(sync1.comm_s, over1.comm_s);
+}

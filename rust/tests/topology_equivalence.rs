@@ -10,7 +10,7 @@ use qoda::coordinator::parallel::{
     run_rounds_over, worker_codec_seed, worker_oracle_seed, SharedQuantState,
 };
 use qoda::coordinator::sim::ClusterSim;
-use qoda::coordinator::TopologySpec;
+use qoda::coordinator::{ExchangePlan, TopologySpec};
 use qoda::net::{Collective, NetworkModel};
 use qoda::quant::layer_map::LayerMap;
 use qoda::quant::{LevelSequence, QuantConfig};
@@ -68,6 +68,7 @@ fn topologies_and_engines_agree_bitwise_across_seeds() {
                 seed,
                 &spec,
                 &net,
+                ExchangePlan::synchronous(),
                 |x, mean, _| {
                     for (xi, g) in x.iter_mut().zip(mean) {
                         *xi -= lr * g;
@@ -175,6 +176,7 @@ fn wire_bits_match_analytic_formulas() {
             seed,
             &spec,
             &net,
+            ExchangePlan::synchronous(),
             |_, _, _| {},
         )
         .expect("run_rounds_over");
