@@ -1,10 +1,13 @@
 //! Perf baseline for the unified `comm` pipeline: ns/coordinate and
 //! bytes/step for the full encode+decode path — identity vs quantized,
-//! both wire protocols, sequential vs per-layer-parallel entropy coding.
-//! Future transport PRs (sharded/async allgather, multi-backend) measure
-//! against these numbers.
+//! both wire protocols, sequential vs per-layer-parallel entropy coding,
+//! and the fused single-pass kernels against the staged reference (the
+//! streams are bit-identical; only the time differs). Emits its records
+//! into the shared machine-readable `results/BENCH_comm.json` (merged with
+//! the other comm benches) so CI's perf gate can diff ns/step without
+//! scraping stdout.
 
-use qoda::bench_harness::bench;
+use qoda::bench_harness::{bench, JsonBench};
 use qoda::coding::protocol::ProtocolKind;
 use qoda::comm::{
     Adaptation, CommEndpoint, Compressor, IdentityCompressor, QuantCompressor,
@@ -20,46 +23,98 @@ fn grad(n: usize, seed: u64) -> Vec<f64> {
         .collect()
 }
 
-fn bench_endpoint(name: &str, codec: Box<dyn Compressor>, v: &[f64]) {
+/// Bench one codec's full encode+decode roundtrip; returns mean ns/step.
+fn bench_endpoint(
+    json: &mut JsonBench,
+    name: &str,
+    codec: Box<dyn Compressor>,
+    v: &[f64],
+) -> f64 {
     let mut ep = CommEndpoint::new(codec);
     let mut out = Vec::with_capacity(v.len());
     // one warm roundtrip so the report shows the packet's steady-state size
     ep.roundtrip_into(v, &mut out).expect("roundtrip");
     let bytes = ep.packet().len_bytes();
-    bench(
+    let res = bench(
         &format!("{name}/encode+decode"),
         Some(v.len() as u64),
         || ep.roundtrip_into(v, &mut out).expect("roundtrip"),
     );
-    println!("{name:<46} bytes/step: {bytes} ({:.3} bytes/coord)", bytes as f64 / v.len() as f64);
+    println!(
+        "{name:<46} bytes/step: {bytes} ({:.3} bytes/coord)",
+        bytes as f64 / v.len() as f64
+    );
+    json.push_perf(name, res.mean_ns, bytes as f64);
+    res.mean_ns
+}
+
+/// Fused (default) and staged variants of one configuration, plus the
+/// speedup record the perf gate tracks.
+fn bench_fused_vs_staged(
+    json: &mut JsonBench,
+    name: &str,
+    mk: impl Fn() -> QuantCompressor,
+    v: &[f64],
+) {
+    let fused_ns = bench_endpoint(json, name, Box::new(mk()), v);
+    let mut staged = mk();
+    staged.staged = true;
+    let staged_ns = bench_endpoint(json, &format!("{name}/staged"), Box::new(staged), v);
+    let speedup = staged_ns / fused_ns.max(1e-9);
+    println!("{name:<46} fused speedup: {speedup:.2}x");
+    json.push(
+        &format!("fusion_speedup/{name}"),
+        &[("speedup", format!("{speedup:.3}"))],
+    );
 }
 
 fn main() {
+    let mut json = JsonBench::new();
     let n = 1usize << 16;
     let v = grad(n, 3);
     let map = LayerMap::single(n);
 
-    bench_endpoint("comm/identity/64k", Box::new(IdentityCompressor), &v);
+    bench_endpoint(
+        &mut json,
+        "comm/identity/64k",
+        Box::new(IdentityCompressor::new()),
+        &v,
+    );
 
     for (kind, name) in [
         (ProtocolKind::Main, "main"),
         (ProtocolKind::Alternating, "alternating"),
     ] {
-        let codec = QuantCompressor::new(
-            map.bucketed(128).with_single_type(),
-            QuantConfig::uniform_bits(1, 5, 2.0),
-            kind,
-            Adaptation::Fixed,
-            7,
+        let map = map.clone();
+        bench_fused_vs_staged(
+            &mut json,
+            &format!("comm/quant5/{name}/64k"),
+            move || {
+                QuantCompressor::new(
+                    map.bucketed(128).with_single_type(),
+                    QuantConfig::uniform_bits(1, 5, 2.0),
+                    kind,
+                    Adaptation::Fixed,
+                    7,
+                )
+            },
+            &v,
         );
-        bench_endpoint(&format!("comm/quant5/{name}/64k"), Box::new(codec), &v);
     }
 
     // per-layer encode parallelism (same wire bits, more threads)
     for threads in [1usize, 2, 4] {
-        let mut codec = QuantCompressor::global_bits(&map, 5, 128, 9);
-        codec.encode_threads = threads;
-        bench_endpoint(&format!("comm/quant5/main/64k/threads={threads}"), Box::new(codec), &v);
+        let map = map.clone();
+        bench_fused_vs_staged(
+            &mut json,
+            &format!("comm/quant5/main/64k/threads={threads}"),
+            move || {
+                let mut codec = QuantCompressor::global_bits(&map, 5, 128, 9);
+                codec.encode_threads = threads;
+                codec
+            },
+            &v,
+        );
     }
 
     // layer-wise adaptive configuration (the paper's QODA5 layerwise mode)
@@ -68,6 +123,15 @@ fn main() {
         ("emb", n / 4, "embedding"),
         ("attn", n / 4, "attention"),
     ]);
-    let codec = QuantCompressor::layerwise(&het, 5, 128, 0, 11);
-    bench_endpoint("comm/quant5-layerwise/main/64k", Box::new(codec), &v);
+    bench_fused_vs_staged(
+        &mut json,
+        "comm/quant5-layerwise/main/64k",
+        move || QuantCompressor::layerwise(&het, 5, 128, 0, 11),
+        &v,
+    );
+
+    match json.save_merged("BENCH_comm.json") {
+        Ok(path) => println!("merged into {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_comm.json: {e}"),
+    }
 }

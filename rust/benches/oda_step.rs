@@ -24,7 +24,7 @@ fn main() {
             .collect()
     };
     let mk_id = || -> Vec<Box<dyn Compressor>> {
-        (0..k).map(|_| Box::new(IdentityCompressor) as _).collect()
+        (0..k).map(|_| Box::new(IdentityCompressor::new()) as _).collect()
     };
 
     bench(&format!("qoda/identity/{steps}steps/K{k}/d{d}"), Some(steps as u64), || {

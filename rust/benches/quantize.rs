@@ -1,17 +1,31 @@
 //! Hot-path bench: the layer-wise quantizer (quantize / dequantize /
-//! quantize+code round trip) at gradient-realistic sizes.
+//! quantize+code round trip) at gradient-realistic sizes, plus the fused
+//! single-pass ENC/DEC kernels against the staged reference — same wire
+//! bits, one pass instead of four. The kernel records merge into the shared
+//! `results/BENCH_comm.json` for the CI perf gate.
 
-use qoda::bench_harness::bench;
-use qoda::coding::protocol::{decode_vector, encode_vector, Codebooks, ProtocolKind};
+use qoda::bench_harness::{bench, JsonBench};
+use qoda::coding::bitio::BitWriter;
+use qoda::coding::fused::{
+    decode_vector_fused, encode_layer_body, fold_layer_stats, layer_norm_f32,
+};
+use qoda::coding::protocol::{
+    decode_vector, decode_vector_into, encode_vector, Codebooks, ProtocolKind,
+};
+use qoda::quant::adaptive::TypeStats;
 use qoda::quant::layer_map::LayerMap;
-use qoda::quant::quantizer::{dequantize, quantize};
+use qoda::quant::quantizer::{
+    dequantize, dequantize_into, quantize, quantize_into, QuantizedVector,
+};
 use qoda::quant::QuantConfig;
 use qoda::stats::rng::Rng;
 
 fn main() {
+    let mut json = JsonBench::new();
     for &n in &[1usize << 14, 1 << 18, 1 << 20] {
         let mut rng = Rng::new(1);
         let v: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+        let v64: Vec<f64> = v.iter().map(|&x| x as f64).collect();
         let map = LayerMap::single(n).bucketed(128);
         let cfg = QuantConfig::uniform_bits(1, 5, 2.0);
         let mut qrng = Rng::new(2);
@@ -30,5 +44,77 @@ fn main() {
         bench(&format!("decode/main/n={n}"), Some(n as u64), || {
             decode_vector(&buf, &map, &books).unwrap()
         });
+
+        // ---- fused vs staged ENC kernel (from the f64 dual, the full
+        // per-step work: stats fold + stochastic rounding + entropy bits) ----
+        let mut codes = Vec::new();
+        books.fill_code_table(0, &mut codes);
+        let mut w = BitWriter::new();
+        let mut v32: Vec<f32> = Vec::with_capacity(n);
+        let mut enc_qv = QuantizedVector::default();
+        let mut st = TypeStats::default();
+        let mut enc_rng = Rng::new(3);
+        let staged_enc = bench(&format!("kernel/enc/staged/n={n}"), Some(n as u64), || {
+            v32.clear();
+            v32.extend(v64.iter().map(|&x| x as f32));
+            for l in &map.layers {
+                st.add_layer_sample(&v32[l.offset..l.offset + l.len], cfg.q);
+            }
+            quantize_into(&v32, &map, &cfg, &mut enc_rng, &mut enc_qv);
+            encode_vector(&enc_qv, &books)
+        });
+        let mut fused_rng = Rng::new(3);
+        let fused_enc = bench(&format!("kernel/enc/fused/n={n}"), Some(n as u64), || {
+            w.clear();
+            for l in &map.layers {
+                let s = &v64[l.offset..l.offset + l.len];
+                let raw = layer_norm_f32(s, cfg.q);
+                fold_layer_stats(s, raw, &mut st);
+                encode_layer_body(s, &cfg.sequences[0], raw, &codes, &mut fused_rng, &mut w);
+            }
+            w.len_bits()
+        });
+
+        // ---- fused vs staged DEC kernel (wire bits back to the f64 dual) ----
+        let mut dec_qv = QuantizedVector::default();
+        let mut out32: Vec<f32> = Vec::new();
+        let mut out64: Vec<f64> = Vec::new();
+        let staged_dec = bench(&format!("kernel/dec/staged/n={n}"), Some(n as u64), || {
+            let mut r = buf.reader();
+            decode_vector_into(&mut r, &map, &books, &mut dec_qv).unwrap();
+            dequantize_into(&dec_qv, &cfg, &mut out32);
+            out64.clear();
+            out64.extend(out32.iter().map(|&x| x as f64));
+            out64.len()
+        });
+        let fused_dec = bench(&format!("kernel/dec/fused/n={n}"), Some(n as u64), || {
+            let mut r = buf.reader();
+            decode_vector_fused(&mut r, &map, &books, &cfg, &mut out64).unwrap();
+            out64.len()
+        });
+
+        for (dir, staged_ns, fused_ns) in [
+            ("enc", staged_enc.mean_ns, fused_enc.mean_ns),
+            ("dec", staged_dec.mean_ns, fused_dec.mean_ns),
+        ] {
+            json.push(
+                &format!("kernel/{dir}/staged/n={n}"),
+                &[("ns_per_step", format!("{staged_ns:.1}"))],
+            );
+            json.push(
+                &format!("kernel/{dir}/fused/n={n}"),
+                &[("ns_per_step", format!("{fused_ns:.1}"))],
+            );
+            let speedup = staged_ns / fused_ns.max(1e-9);
+            println!("kernel_speedup/{dir}/n={n}: {speedup:.2}x");
+            json.push(
+                &format!("kernel_speedup/{dir}/n={n}"),
+                &[("speedup", format!("{speedup:.3}"))],
+            );
+        }
+    }
+    match json.save_merged("BENCH_comm.json") {
+        Ok(path) => println!("merged into {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_comm.json: {e}"),
     }
 }

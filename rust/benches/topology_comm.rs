@@ -86,8 +86,8 @@ fn main() {
         );
     }
 
-    match json.save("BENCH_comm.json") {
-        Ok(path) => println!("wrote {}", path.display()),
+    match json.save_merged("BENCH_comm.json") {
+        Ok(path) => println!("merged into {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_comm.json: {e}"),
     }
 }

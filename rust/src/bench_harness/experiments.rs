@@ -91,11 +91,11 @@ pub fn measure_qoda5_bytes_per_coord(n: usize, seed: u64) -> f64 {
     let map = LayerMap::single(n);
     let mut codec = QuantCompressor::global_bits(&map, 5, 128, seed ^ 0x51);
     // pass 1: cold (uniform books) — gathers the per-type statistics
-    let _ = codec.encode(&v);
+    let _ = codec.encode(&v).expect("warm-up encode");
     // tune the entropy coder to the observed level distribution (Prop D.1)
     codec.retune_books();
     // pass 2: the measured wire packet
-    let packet = codec.encode(&v);
+    let packet = codec.encode(&v).expect("measured encode");
     packet.len_bits() as f64 / 8.0 / n as f64
 }
 

@@ -140,6 +140,8 @@ impl JsonBench {
     }
 
     /// Write under `results/` (created on demand); returns the path.
+    /// Overwrites the whole file — see [`Self::save_merged`] when several
+    /// bench binaries share one result file.
     pub fn save(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
         let dir = crate::util::repo_path("results");
         std::fs::create_dir_all(&dir)?;
@@ -147,6 +149,95 @@ impl JsonBench {
         std::fs::write(&path, self.to_json())?;
         Ok(path)
     }
+
+    /// Merge-write under `results/`: records already in the file keep their
+    /// place unless this run produced a record of the same name, which
+    /// replaces them; this run's new records append. Lets the comm benches
+    /// (`comm_pipeline`, `quantize`, `topology_comm`) share one committed
+    /// `BENCH_comm.json` without clobbering each other's sections.
+    pub fn save_merged(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = crate::util::repo_path("results");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(name);
+        let mut merged: Vec<String> = Vec::new();
+        if let Ok(old) = std::fs::read_to_string(&path) {
+            for e in parse_entries(&old) {
+                let keep = match entry_name(&e) {
+                    Some(n) => !self.entries.iter().any(|m| entry_name(m) == Some(n)),
+                    None => true,
+                };
+                if keep {
+                    merged.push(e);
+                }
+            }
+        }
+        merged.extend(self.entries.iter().cloned());
+        let body = if merged.is_empty() {
+            "[]\n".to_string()
+        } else {
+            format!("[\n  {}\n]\n", merged.join(",\n  "))
+        };
+        std::fs::write(&path, body)?;
+        Ok(path)
+    }
+}
+
+/// The (escaped) `"name"` field of a rendered record, as emitted by
+/// [`JsonBench::push`] — every record starts with it.
+fn entry_name(entry: &str) -> Option<&str> {
+    let rest = entry.strip_prefix("{\"name\":\"")?;
+    let bytes = rest.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => i += 2,
+            b'"' => return Some(&rest[..i]),
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+/// Split a JSON array of flat objects (the shape `to_json` writes) back
+/// into rendered entries. A string-aware brace scanner — sufficient for
+/// this sink's output, not a general JSON parser.
+fn parse_entries(json: &str) -> Vec<String> {
+    let bytes = json.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'{' {
+            let start = i;
+            let mut depth = 0usize;
+            let mut in_str = false;
+            while i < bytes.len() {
+                let c = bytes[i];
+                if in_str {
+                    match c {
+                        b'\\' => i += 1,
+                        b'"' => in_str = false,
+                        _ => {}
+                    }
+                } else {
+                    match c {
+                        b'"' => in_str = true,
+                        b'{' => depth += 1,
+                        b'}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                out.push(json[start..=i].to_string());
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                i += 1;
+            }
+        }
+        i += 1;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -166,6 +257,38 @@ mod tests {
         assert!(s.contains("{\"name\":\"comm/flat\",\"ns_per_step\":1234.5,\"bytes_per_step\":8192.0}"));
         assert!(s.contains("\"k\":8"));
         assert!(s.trim_end().ends_with(']'));
+    }
+
+    #[test]
+    fn entries_roundtrip_through_the_parser() {
+        let mut j = JsonBench::new();
+        j.push_perf("a/b", 1.0, 2.0);
+        j.push("weird \"name\"", &[("x", "1".into())]);
+        let parsed = parse_entries(&j.to_json());
+        assert_eq!(parsed, j.entries);
+        assert_eq!(entry_name(&parsed[0]), Some("a/b"));
+        assert_eq!(entry_name(&parsed[1]), Some("weird \\\"name\\\""));
+    }
+
+    #[test]
+    fn merge_replaces_same_name_and_keeps_the_rest() {
+        let mut old = JsonBench::new();
+        old.push_perf("keep/me", 1.0, 1.0);
+        old.push_perf("replace/me", 100.0, 1.0);
+        let mut new = JsonBench::new();
+        new.push_perf("replace/me", 5.0, 1.0);
+        new.push_perf("brand/new", 7.0, 1.0);
+        // simulate the merge in memory (save_merged does the same via disk)
+        let mut merged: Vec<String> = parse_entries(&old.to_json())
+            .into_iter()
+            .filter(|e| {
+                !new.entries.iter().any(|m| entry_name(m) == entry_name(e))
+            })
+            .collect();
+        merged.extend(new.entries.iter().cloned());
+        let names: Vec<_> = merged.iter().filter_map(|e| entry_name(e)).collect();
+        assert_eq!(names, ["keep/me", "replace/me", "brand/new"]);
+        assert!(merged[1].contains("\"ns_per_step\":5.0"));
     }
 }
 

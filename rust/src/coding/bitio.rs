@@ -240,6 +240,16 @@ impl<'a> BitReader<'a> {
         self.pos += n as usize;
         debug_assert!(self.pos <= self.bits);
     }
+
+    /// Move the cursor back `n` bits (n must not exceed the bits already
+    /// consumed). The batched decoder uses this to return its unconsumed
+    /// local cache to the stream before falling back to the bit-by-bit
+    /// slow path, so both paths observe identical positions.
+    #[inline]
+    pub fn rewind(&mut self, n: usize) {
+        debug_assert!(n <= self.pos, "rewind past start");
+        self.pos -= n;
+    }
 }
 
 #[cfg(test)]

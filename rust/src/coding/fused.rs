@@ -1,0 +1,558 @@
+//! Fused single-pass ENC/DEC kernels — the comm hot path.
+//!
+//! The staged pipeline (`quant::quantizer` → `coding::protocol`) makes four
+//! passes over every vector: f64→f32 copy, `TypeStats` sweep, stochastic
+//! rounding into a materialized `QuantizedVector`, then entropy coding.
+//! This module collapses them: per layer, one norm pass over the f64 input
+//! (computing the L^q norm of its *f32 image*), an optional statistics
+//! fold, and one hot loop that normalizes, stochastically rounds, and
+//! emits the Huffman codeword + sign bit straight into the [`BitWriter`]
+//! through a 64-bit accumulator — no `indices`/`signs` materialization.
+//! Decode drives the table-driven Huffman lookup through a batched
+//! word-level cache ([`BitCache`]) refilled 64 bits at a time and
+//! dequantizes via a per-layer value table directly into the caller's
+//! `f64` output.
+//!
+//! **Bit-exactness is the contract.** Every arithmetic step replicates the
+//! staged path operation-for-operation (f32 rounding points, stochastic
+//! rounding comparisons, one `uniform_f32` per coordinate iff the
+//! f32-rounded norm is positive, histogram accumulation order, decode
+//! error positions), so fused and staged streams are bit-identical and
+//! decode to bit-identical vectors. `QuantCompressor { staged }` keeps the
+//! reference path alive and `tests/fused_parity.rs` + `tests/comm_fuzz.rs`
+//! pin the equivalence across protocols × adaptation modes × seeds ×
+//! thread counts.
+
+use super::bitio::{BitReader, BitWriter};
+use super::huffman::Huffman;
+use super::protocol::Codebooks;
+use super::DecodeError;
+use crate::quant::adaptive::TypeStats;
+use crate::quant::layer_map::LayerMap;
+use crate::quant::levels::LevelSequence;
+use crate::quant::QuantConfig;
+use crate::stats::rng::Rng;
+
+/// L^q norm of the f32 image of an f64 slice — bit-identical to
+/// `vecops::lq_norm` applied to the staged path's `v32` copy, without
+/// materializing it.
+pub fn layer_norm_f32(v: &[f64], q: f64) -> f64 {
+    if q <= 0.0 || q.is_infinite() {
+        v.iter().fold(0.0f64, |m, &x| m.max((x as f32).abs() as f64))
+    } else if q == 2.0 {
+        v.iter()
+            .map(|&x| {
+                let y = (x as f32) as f64;
+                y * y
+            })
+            .sum::<f64>()
+            .sqrt()
+    } else if q == 1.0 {
+        v.iter().map(|&x| (x as f32).abs() as f64).sum()
+    } else {
+        v.iter()
+            .map(|&x| ((x as f32).abs() as f64).powf(q))
+            .sum::<f64>()
+            .powf(1.0 / q)
+    }
+}
+
+/// Number of `uniform_f32` draws the encode body consumes for a layer:
+/// one per coordinate iff the f32-rounded norm is positive (the zero
+/// layer draws nothing). The parallel encoder uses this to advance each
+/// worker's RNG clone to its chunk's start position.
+#[inline]
+pub fn layer_draws(raw_norm: f64, len: usize) -> usize {
+    if (raw_norm as f32 as f64) > 0.0 {
+        len
+    } else {
+        0
+    }
+}
+
+/// Fold one layer's normalized magnitudes into its type statistics —
+/// value-for-value what `TypeStats::add_layer_sample` accumulates over the
+/// staged `v32` copy (weight `‖·‖_q²`, unrounded norm, layer order).
+pub fn fold_layer_stats(v: &[f64], raw_norm: f64, st: &mut TypeStats) {
+    if raw_norm <= 0.0 {
+        return;
+    }
+    let inv = 1.0 / raw_norm;
+    let w = raw_norm * raw_norm;
+    for &x in v {
+        st.hist.add_one((((x as f32).abs() as f64) * inv).clamp(0.0, 1.0), w);
+    }
+}
+
+/// Fused quantize + entropy-encode of one layer: norm header, then per
+/// coordinate the stochastic-rounding decision and the codeword + sign bit,
+/// buffered through a 64-bit accumulator (one `write_bits` per ~8–20
+/// symbols instead of two per coordinate).
+///
+/// `raw_norm` is `layer_norm_f32(v, q)`; `codes[j]` is type `type_id`'s
+/// stream-order codeword for symbol j (`Codebooks::fill_code_table`).
+/// Draws exactly `layer_draws(raw_norm, v.len())` randoms from `rng`.
+pub fn encode_layer_body(
+    v: &[f64],
+    seq: &LevelSequence,
+    raw_norm: f64,
+    codes: &[(u64, u32)],
+    rng: &mut Rng,
+    w: &mut BitWriter,
+) {
+    assert!(seq.num_symbols() <= 256, "u8 index encoding");
+    // the wire header carries the norm as f32 (C_q = 32); rounding here
+    // keeps encode → decode → dequantize bit-exact with the staged path
+    let norm = raw_norm as f32 as f64;
+    w.write_f32(norm as f32);
+    if !(norm > 0.0) {
+        // zero (or NaN-norm) layer: every symbol is level 0, no sign bits,
+        // no RNG draws — identical to the staged all-zero `QuantizedLayer`
+        let (c0, l0) = codes[0];
+        for _ in 0..v.len() {
+            w.write_bits(c0, l0);
+        }
+        return;
+    }
+    let inv = 1.0 / norm;
+    let ls = seq.as_slice();
+    let nlev = ls.len();
+    // 64-bit write accumulator: codeword + optional sign land together
+    let mut cache = 0u64;
+    let mut clen: u32 = 0;
+    macro_rules! emit {
+        ($idx:expr, $neg:expr) => {{
+            let (c, l) = codes[$idx];
+            let mut bits = c;
+            let mut nb = l;
+            if $idx != 0 {
+                bits |= (($neg) as u64) << nb;
+                nb += 1;
+            }
+            if clen + nb >= 64 {
+                w.write_bits(cache, clen);
+                cache = 0;
+                clen = 0;
+            }
+            cache |= bits << clen;
+            clen += nb;
+        }};
+    }
+    if let Some(inv_step) = seq.uniform_inv_step() {
+        // fast path: uniformly spaced levels — closed-form bracket
+        for &x64 in v {
+            let x = x64 as f32;
+            let mag = ((x.abs() as f64) * inv).min(1.0);
+            let pos = mag * inv_step;
+            let mut tau = pos as usize;
+            let mut xi = pos - tau as f64;
+            if tau >= nlev - 1 {
+                tau = nlev - 2;
+                xi = 1.0;
+            }
+            let u01 = rng.uniform_f32() as f64;
+            let idx = if u01 < xi { tau + 1 } else { tau };
+            emit!(idx, x < 0.0);
+        }
+    } else {
+        for &x64 in v {
+            let x = x64 as f32;
+            let mag = ((x.abs() as f64) * inv).clamp(0.0, 1.0);
+            let tau = seq.bracket(mag);
+            let (lo, hi) = (ls[tau], ls[tau + 1]);
+            let xi = (mag - lo) / (hi - lo).max(1e-38);
+            let u01 = rng.uniform_f32() as f64;
+            let idx = if u01 < xi { tau + 1 } else { tau };
+            emit!(idx, x < 0.0);
+        }
+    }
+    if clen > 0 {
+        w.write_bits(cache, clen);
+    }
+}
+
+/// Batched bit consumer: a 64-bit local cache refilled word-at-a-time from
+/// the [`BitReader`], so symbol decode is one table lookup + shift instead
+/// of per-symbol reader arithmetic. `pos()` reports the logical stream
+/// position (reader position minus cached bits), which is what keeps
+/// decode-error positions identical to the staged path; `spill` returns
+/// unconsumed cached bits to the reader before any slow-path or exit.
+struct BitCache<'r, 'a> {
+    r: &'r mut BitReader<'a>,
+    cache: u64,
+    len: u32,
+}
+
+impl<'r, 'a> BitCache<'r, 'a> {
+    fn new(r: &'r mut BitReader<'a>) -> Self {
+        BitCache { r, cache: 0, len: 0 }
+    }
+
+    /// Logical bit position (for decode-error reporting).
+    #[inline]
+    fn pos(&self) -> usize {
+        self.r.bit_pos() - self.len as usize
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        let take = self.r.remaining().min((64 - self.len) as usize) as u32;
+        if take > 0 {
+            self.cache |= self.r.read_bits(take) << self.len;
+            self.len += take;
+        }
+    }
+
+    /// Consume `n` bits (n <= 32); `None` when the stream runs dry.
+    #[inline]
+    fn take(&mut self, n: u32) -> Option<u64> {
+        if self.len < n {
+            self.refill();
+            if self.len < n {
+                return None;
+            }
+        }
+        let v = self.cache & ((1u64 << n) - 1);
+        self.cache >>= n;
+        self.len -= n;
+        Some(v)
+    }
+
+    /// Decode one symbol via the code's fast table, falling back to the
+    /// bit-exact canonical slow path on a table miss.
+    #[inline]
+    fn decode_sym(&mut self, h: &Huffman) -> Result<usize, DecodeError> {
+        if self.len < 16 {
+            // one refill covers the widest table (11 bits) + a sign bit
+            // for several symbols; when the stream is exhausted the cache
+            // holds every remaining bit, so indexing zero-pads exactly
+            // like the staged `peek_bits`
+            self.refill();
+        }
+        let (table, table_bits) = h.fast_table();
+        let idx = (self.cache & ((1u64 << table_bits) - 1)) as usize;
+        let (sym, l) = table[idx];
+        if sym != u16::MAX && (l as u32) <= self.len {
+            self.cache >>= l;
+            self.len -= l as u32;
+            return Ok(sym as usize);
+        }
+        self.decode_sym_slow(h)
+    }
+
+    #[cold]
+    fn decode_sym_slow(&mut self, h: &Huffman) -> Result<usize, DecodeError> {
+        self.spill();
+        h.decode(self.r)
+    }
+
+    /// Return unconsumed cached bits to the reader.
+    fn spill(&mut self) {
+        self.r.rewind(self.len as usize);
+        self.cache = 0;
+        self.len = 0;
+    }
+}
+
+/// Fused decode of one layer straight into `out` (f64): norm header, then
+/// per symbol a value-table lookup `±(norm · l_sym)` with the staged
+/// path's exact f32 rounding. Range-checks every decoded symbol like
+/// `Codebooks::decode_symbol` (same `InvalidCode`/`Truncated` positions).
+fn decode_layer_fused(
+    c: &mut BitCache,
+    books: &Codebooks,
+    type_id: usize,
+    len: usize,
+    seq: &LevelSequence,
+    out: &mut Vec<f64>,
+) -> Result<(), DecodeError> {
+    let norm_bits = match c.take(32) {
+        Some(b) => b as u32,
+        None => return Err(DecodeError::Truncated { bit_pos: c.pos() }),
+    };
+    let norm = f32::from_bits(norm_bits) as f64;
+    let (h, off, size) = books.decode_surface(type_id);
+    let ls = seq.as_slice();
+    // dequantize table: symbol -> positive magnitude, rounded through f32
+    // exactly like `dequantize_layer_into` (`(norm * l) as f32`); negation
+    // commutes with the f32→f64 widening, so sign flip happens on the f64
+    let cap = ls.len().min(256);
+    let mut vtab = [0.0f64; 256];
+    for (j, &l) in ls.iter().enumerate().take(cap) {
+        vtab[j] = ((norm * l) as f32) as f64;
+    }
+    for _ in 0..len {
+        let bit_pos = c.pos();
+        let joint = c.decode_sym(h)?;
+        if joint < off || joint - off >= size {
+            // decodable codeword of the wrong type / rank: desynchronized
+            return Err(DecodeError::InvalidCode { bit_pos });
+        }
+        let sym = joint - off;
+        if sym >= cap {
+            // rank beyond this type's level sequence (stale codebooks)
+            return Err(DecodeError::InvalidCode { bit_pos });
+        }
+        let mut val = vtab[sym];
+        if sym != 0 {
+            match c.take(1) {
+                Some(1) => val = -val,
+                Some(_) => {}
+                None => return Err(DecodeError::Truncated { bit_pos: c.pos() }),
+            }
+        }
+        out.push(val);
+    }
+    Ok(())
+}
+
+/// Fused decode of a full vector into `out` (cleared first). The reader is
+/// left exactly where the staged decode would leave it — on success all
+/// consumed bits are accounted, so the caller's trailing-bits check is
+/// unchanged. On error, `out`'s contents are unspecified (the staged path
+/// buffers internally; engines abort the round on any decode error).
+pub fn decode_vector_fused(
+    r: &mut BitReader,
+    map: &LayerMap,
+    books: &Codebooks,
+    cfg: &QuantConfig,
+    out: &mut Vec<f64>,
+) -> Result<(), DecodeError> {
+    out.clear();
+    out.reserve(map.dim);
+    let mut c = BitCache::new(r);
+    let mut res = Ok(());
+    for l in &map.layers {
+        let seq = &cfg.sequences[l.type_id];
+        if let Err(e) = decode_layer_fused(&mut c, books, l.type_id, l.len, seq, out) {
+            res = Err(e);
+            break;
+        }
+    }
+    c.spill();
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::protocol::{
+        decode_vector_into, encode_layer, Codebooks, ProtocolKind,
+    };
+    use crate::quant::quantizer::{dequantize_into, quantize_slice_into, QuantizedVector};
+    use crate::util::prop::for_cases;
+
+    /// Staged reference for one layer: quantize into wire form, then
+    /// entropy-code — the exact two passes the fused body collapses.
+    fn staged_layer_bits(
+        v32: &[f32],
+        seq: &LevelSequence,
+        q: f64,
+        type_id: usize,
+        books: &Codebooks,
+        rng: &mut Rng,
+    ) -> BitWriter {
+        let mut layer = Default::default();
+        quantize_slice_into(v32, seq, q, type_id, rng, &mut layer);
+        let mut w = BitWriter::new();
+        encode_layer(&layer, books, &mut w);
+        w
+    }
+
+    #[test]
+    fn fused_layer_encode_matches_staged_bit_for_bit() {
+        for_cases(40, 0xF05ED, |g| {
+            let n = g.usize_in(1, 300);
+            let v: Vec<f64> = g.vec_f64(n, g.f64_in(0.05, 6.0));
+            let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            // exercise both the uniform fast path and the bracket-search
+            // slow path, both protocols
+            let seq = if g.f64_in(0.0, 1.0) < 0.5 {
+                LevelSequence::bits(g.usize_in(2, 6) as u32)
+            } else {
+                LevelSequence::new(g.level_sequence(8))
+            };
+            let kind = if g.f64_in(0.0, 1.0) < 0.5 {
+                ProtocolKind::Main
+            } else {
+                ProtocolKind::Alternating
+            };
+            let cfg = QuantConfig { sequences: vec![seq.clone()], q: 2.0 };
+            let books = Codebooks::uniform(kind, &cfg, &[1.0]);
+            let seed = g.rng.next_u64();
+
+            let mut rng_a = Rng::new(seed);
+            let staged = staged_layer_bits(&v32, &seq, 2.0, 0, &books, &mut rng_a);
+
+            let mut rng_b = Rng::new(seed);
+            let raw = layer_norm_f32(&v, 2.0);
+            let mut codes = Vec::new();
+            books.fill_code_table(0, &mut codes);
+            let mut w = BitWriter::new();
+            encode_layer_body(&v, &seq, raw, &codes, &mut rng_b, &mut w);
+
+            assert_eq!(staged.finish(), w.finish(), "fused stream diverged");
+            // both paths consumed the same number of randoms
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+        });
+    }
+
+    #[test]
+    fn zero_layer_draws_nothing_and_matches() {
+        let v = vec![0.0f64; 17];
+        let v32 = vec![0.0f32; 17];
+        let seq = LevelSequence::bits(3);
+        let cfg = QuantConfig { sequences: vec![seq.clone()], q: 2.0 };
+        let books = Codebooks::uniform(ProtocolKind::Main, &cfg, &[1.0]);
+        let mut rng_a = Rng::new(9);
+        let staged = staged_layer_bits(&v32, &seq, 2.0, 0, &books, &mut rng_a);
+        let mut rng_b = Rng::new(9);
+        let raw = layer_norm_f32(&v, 2.0);
+        assert_eq!(layer_draws(raw, 17), 0);
+        let mut codes = Vec::new();
+        books.fill_code_table(0, &mut codes);
+        let mut w = BitWriter::new();
+        encode_layer_body(&v, &seq, raw, &codes, &mut rng_b, &mut w);
+        assert_eq!(staged.finish(), w.finish());
+        assert_eq!(rng_a.next_u64(), rng_b.next_u64());
+    }
+
+    #[test]
+    fn fused_stats_fold_matches_staged_sweep() {
+        for_cases(20, 0x57A75, |g| {
+            let n = g.usize_in(1, 200);
+            let v: Vec<f64> = g.vec_f64(n, 2.0);
+            let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            let mut a = TypeStats::default();
+            a.add_layer_sample(&v32, 2.0);
+            let mut b = TypeStats::default();
+            fold_layer_stats(&v, layer_norm_f32(&v, 2.0), &mut b);
+            assert_eq!(a.hist.total_weight().to_bits(), b.hist.total_weight().to_bits());
+            for i in 0..=64 {
+                let u = i as f64 / 64.0;
+                assert_eq!(a.hist.cdf(u).to_bits(), b.hist.cdf(u).to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn fused_decode_matches_staged_decode() {
+        for_cases(40, 0xDEC0DE, |g| {
+            let map = LayerMap::from_spec(&[
+                ("a", g.usize_in(1, 200), "x"),
+                ("b", g.usize_in(1, 200), "y"),
+            ]);
+            let cfg = QuantConfig {
+                sequences: vec![
+                    LevelSequence::bits(g.usize_in(2, 6) as u32),
+                    LevelSequence::new(g.level_sequence(9)),
+                ],
+                q: 2.0,
+            };
+            let kind = if g.f64_in(0.0, 1.0) < 0.5 {
+                ProtocolKind::Main
+            } else {
+                ProtocolKind::Alternating
+            };
+            let books = Codebooks::uniform(kind, &cfg, &map.type_proportions());
+            let v = g.vec_f64(map.dim, 3.0);
+            // encode fused (already pinned against staged above)
+            let mut rng = Rng::new(g.rng.next_u64());
+            let mut w = BitWriter::new();
+            for l in &map.layers {
+                let s = &v[l.offset..l.offset + l.len];
+                let mut codes = Vec::new();
+                books.fill_code_table(l.type_id, &mut codes);
+                encode_layer_body(
+                    s,
+                    &cfg.sequences[l.type_id],
+                    layer_norm_f32(s, cfg.q),
+                    &codes,
+                    &mut rng,
+                    &mut w,
+                );
+            }
+            let buf = w.finish();
+
+            // staged: wire form -> dequantize -> widen
+            let mut qv = QuantizedVector::default();
+            let mut r = buf.reader();
+            decode_vector_into(&mut r, &map, &books, &mut qv).expect("staged decode");
+            assert_eq!(r.remaining(), 0);
+            let mut out32: Vec<f32> = Vec::new();
+            dequantize_into(&qv, &cfg, &mut out32);
+            let staged: Vec<f64> = out32.iter().map(|&x| x as f64).collect();
+
+            // fused: straight to f64
+            let mut r2 = buf.reader();
+            let mut fused: Vec<f64> = Vec::new();
+            decode_vector_fused(&mut r2, &map, &books, &cfg, &mut fused)
+                .expect("fused decode");
+            assert_eq!(r2.remaining(), 0, "fused decode must consume the stream");
+            assert_eq!(staged.len(), fused.len());
+            for (i, (a, b)) in staged.iter().zip(&fused).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "coord {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn fused_decode_errors_match_staged_on_truncation() {
+        // every strict prefix must fail identically in both decoders:
+        // same error variant AND same reported bit position
+        for_cases(30, 0x7235, |g| {
+            let map = LayerMap::from_spec(&[
+                ("a", g.usize_in(4, 80), "x"),
+                ("b", g.usize_in(4, 80), "y"),
+            ]);
+            let cfg = QuantConfig::uniform_bits(2, g.usize_in(2, 5) as u32, 2.0);
+            let kind = if g.f64_in(0.0, 1.0) < 0.5 {
+                ProtocolKind::Main
+            } else {
+                ProtocolKind::Alternating
+            };
+            let books = Codebooks::uniform(kind, &cfg, &map.type_proportions());
+            let v = g.vec_f64(map.dim, 1.0);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let mut w = BitWriter::new();
+            for l in &map.layers {
+                let s = &v[l.offset..l.offset + l.len];
+                let mut codes = Vec::new();
+                books.fill_code_table(l.type_id, &mut codes);
+                encode_layer_body(
+                    s,
+                    &cfg.sequences[l.type_id],
+                    layer_norm_f32(s, cfg.q),
+                    &codes,
+                    &mut rng,
+                    &mut w,
+                );
+            }
+            let full = w.finish();
+            let cut = g.usize_in(0, full.len_bits() - 1);
+            let mut wc = BitWriter::new();
+            let mut rr = full.reader();
+            let mut left = cut;
+            while left > 0 {
+                let take = left.min(64) as u32;
+                wc.write_bits(rr.read_bits(take), take);
+                left -= take as usize;
+            }
+            let short = wc.finish();
+
+            let mut qv = QuantizedVector::default();
+            let staged_err = {
+                let mut r = short.reader();
+                decode_vector_into(&mut r, &map, &books, &mut qv)
+                    .expect_err("truncated stream must fail (staged)")
+            };
+            let fused_err = {
+                let mut r = short.reader();
+                let mut out = Vec::new();
+                decode_vector_fused(&mut r, &map, &books, &cfg, &mut out)
+                    .expect_err("truncated stream must fail (fused)")
+            };
+            assert_eq!(staged_err, fused_err, "cut at {cut}/{}", full.len_bits());
+        });
+    }
+}

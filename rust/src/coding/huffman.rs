@@ -233,6 +233,21 @@ impl Huffman {
     pub fn code_len(&self, sym: usize) -> u32 {
         self.lengths[sym]
     }
+
+    /// Stream-order codeword for `sym` as `(bits, len)` — the exact pair
+    /// `encode` feeds to `write_bits`. The fused encoder snapshots these
+    /// into flat per-type tables so the hot loop never chases pointers.
+    #[inline]
+    pub(crate) fn code_bits(&self, sym: usize) -> (u64, u32) {
+        (self.rev_codes[sym], self.lengths[sym])
+    }
+
+    /// Fast-decode surface for the batched reader: the lookup table and its
+    /// index width. Entry = (symbol, code length), `(u16::MAX, 0)` = miss.
+    #[inline]
+    pub(crate) fn fast_table(&self) -> (&[(u16, u8)], u32) {
+        (&self.table, self.table_bits)
+    }
 }
 
 /// Shannon entropy in bits of a probability vector (0 log 0 = 0).

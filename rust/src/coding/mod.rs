@@ -1,6 +1,22 @@
 //! Entropy coding stack (Section 3.2, Appendix D): bit I/O, Elias universal
-//! codes, canonical Huffman, the Main and Alternating wire protocols, and
-//! the Theorem 5.3 / D.5 code-length bounds.
+//! codes, canonical Huffman, the Main and Alternating wire protocols, the
+//! Theorem 5.3 / D.5 code-length bounds — and the fused single-pass
+//! kernels that actually run the comm hot path.
+//!
+//! Two implementations share one wire format:
+//!
+//! * **Staged** (`protocol` over `quant::quantizer`): quantize into an
+//!   explicit `QuantizedVector`, then entropy-code it. This is the
+//!   readable reference — every arithmetic step is a named function.
+//! * **Fused** ([`fused`]): per layer, one pass computes the norm, folds
+//!   the adaptive statistics, stochastically rounds, and emits codeword +
+//!   sign bits through a 64-bit write accumulator; decode batches the
+//!   table-driven Huffman lookup through a word-level bit cache and
+//!   dequantizes straight into `f64`. No intermediate buffers.
+//!
+//! The two paths are pinned bit-identical (streams AND decoded values) by
+//! `fused`'s unit tests, `tests/fused_parity.rs` and `tests/comm_fuzz.rs`;
+//! `comm::QuantCompressor` keeps both behind a `staged` toggle.
 //!
 //! Decoding operates on *wire* data and therefore never panics on malformed
 //! input: every decode entry point returns [`DecodeError`], which the
@@ -8,6 +24,7 @@
 
 pub mod bitio;
 pub mod elias;
+pub mod fused;
 pub mod huffman;
 pub mod length;
 pub mod protocol;

@@ -109,7 +109,17 @@ impl Codebooks {
     #[inline]
     fn decode_symbol(&self, r: &mut BitReader, type_id: usize) -> Result<usize, DecodeError> {
         match self.kind {
-            ProtocolKind::Main => self.main.as_ref().unwrap().decode(r),
+            ProtocolKind::Main => {
+                let bit_pos = r.bit_pos();
+                let sym = self.main.as_ref().unwrap().decode(r)?;
+                if sym >= self.sizes[type_id] {
+                    // rank exists in the merged codebook but not for this
+                    // type: corrupt or desynchronized stream (previously an
+                    // out-of-bounds panic in dequantize)
+                    return Err(DecodeError::InvalidCode { bit_pos });
+                }
+                Ok(sym)
+            }
             ProtocolKind::Alternating => {
                 let bit_pos = r.bit_pos();
                 let joint = self.alt.as_ref().unwrap().decode(r)?;
@@ -122,6 +132,43 @@ impl Codebooks {
                 }
                 Ok(joint - self.offsets[type_id])
             }
+        }
+    }
+
+    /// Snapshot the stream-order codeword of every symbol of `type_id` into
+    /// `out` as `(bits, len)` pairs — `out[j]` is exactly what
+    /// `encode_symbol(w, type_id, j)` would feed to `write_bits`. The fused
+    /// encoder rebuilds these flat tables whenever the codebooks change.
+    pub fn fill_code_table(&self, type_id: usize, out: &mut Vec<(u64, u32)>) {
+        out.clear();
+        match self.kind {
+            ProtocolKind::Main => {
+                let h = self.main.as_ref().unwrap();
+                out.extend((0..self.sizes[type_id]).map(|j| h.code_bits(j)));
+            }
+            ProtocolKind::Alternating => {
+                let h = self.alt.as_ref().unwrap();
+                let off = self.offsets[type_id];
+                out.extend((0..self.sizes[type_id]).map(|j| h.code_bits(off + j)));
+            }
+        }
+    }
+
+    /// Decode surface for `type_id`: the Huffman code driving the stream
+    /// plus the `(offset, size)` window mapping joint symbols back to ranks
+    /// (Main: offset 0 over the merged code; Alternating: this type's slice
+    /// of the union alphabet). The batched decoder range-checks against the
+    /// window exactly like `decode_symbol`.
+    pub(crate) fn decode_surface(&self, type_id: usize) -> (&Huffman, usize, usize) {
+        match self.kind {
+            ProtocolKind::Main => {
+                (self.main.as_ref().unwrap(), 0, self.sizes[type_id])
+            }
+            ProtocolKind::Alternating => (
+                self.alt.as_ref().unwrap(),
+                self.offsets[type_id],
+                self.sizes[type_id],
+            ),
         }
     }
 

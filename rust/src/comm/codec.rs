@@ -3,15 +3,29 @@
 //! L-GreCo-style adaptive re-optimization of levels at update steps
 //! (Algorithm 1, lines 2–7).
 //!
-//! Codecs keep every intermediate buffer (`f32` cast, quantized wire form,
-//! bit writer, decode scratch) alive across calls, so the per-step hot path
-//! allocates nothing once warm. Entropy coding of the (already quantized)
-//! layers can optionally fan out across worker threads — the stream is
-//! spliced back in layer order and is bit-identical to a sequential encode.
+//! ENC/DEC run the **fused** single-pass kernels of [`crate::coding::fused`]
+//! by default: per layer, one pass computes the norm, folds the adaptive
+//! statistics, stochastically rounds and emits Huffman bits straight into
+//! the codec-owned [`BitWriter`]; decode drives the table-driven Huffman
+//! lookup through a batched word-level bit cache and dequantizes directly
+//! into the caller's `f64` output. The staged reference pipeline
+//! (`quantize_into` → `encode_layer`, `decode_vector_into` →
+//! `dequantize_into`) stays available behind [`QuantCompressor::staged`]
+//! and is pinned bit-identical to the fused path (streams, decoded values,
+//! RNG trajectory, statistics) by `tests/fused_parity.rs` and
+//! `tests/comm_fuzz.rs`.
+//!
+//! Codecs keep every buffer (bit writer, per-type codeword tables, norm and
+//! decode scratch) alive across calls, so the per-step hot path allocates
+//! nothing once warm. Entropy coding can optionally fan out across worker
+//! threads — the stream is spliced back in layer order and is bit-identical
+//! to a sequential encode; a panicking worker surfaces as
+//! [`CommError::EncodeWorker`] instead of tearing down the engine.
 
 use super::packet::WirePacket;
 use super::CommError;
 use crate::coding::bitio::{BitBuf, BitWriter};
+use crate::coding::fused;
 use crate::coding::protocol::{
     decode_vector_into, encode_layer, Codebooks, ProtocolKind,
 };
@@ -29,10 +43,12 @@ use crate::stats::rng::Rng;
 ///
 /// Both directions reuse internal scratch; `decode_into` clears and fills
 /// the caller's output buffer so the caller controls its lifetime (the
-/// engines keep one per node).
+/// engines keep one per node). Encoding is fallible: the parallel entropy
+/// coder reports worker panics as [`CommError::EncodeWorker`].
 pub trait Compressor: Send {
     /// ENC: encode `v` into `packet`, reusing the packet's allocation.
-    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket);
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket)
+        -> Result<(), CommError>;
 
     /// DEC: reconstruct the receiver-side vector from an encoded packet.
     fn decode_into(&mut self, packet: &WirePacket, out: &mut Vec<f64>)
@@ -47,10 +63,10 @@ pub trait Compressor: Send {
     fn name(&self) -> &'static str;
 
     /// Allocating convenience ENC.
-    fn encode(&mut self, v: &[f64]) -> WirePacket {
+    fn encode(&mut self, v: &[f64]) -> Result<WirePacket, CommError> {
         let mut packet = WirePacket::new();
-        self.encode_into(v, &mut packet);
-        packet
+        self.encode_into(v, &mut packet)?;
+        Ok(packet)
     }
 
     /// Allocating convenience DEC.
@@ -63,17 +79,29 @@ pub trait Compressor: Send {
 
 /// No compression: raw f32 on the wire (the uncompressed fp32 baseline —
 /// 32 bits/coordinate of *real* payload, not an accounting fiction).
-pub struct IdentityCompressor;
+/// Owns its bit-writer scratch so a warm encode allocates nothing.
+#[derive(Default)]
+pub struct IdentityCompressor {
+    w: BitWriter,
+}
+
+impl IdentityCompressor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 impl Compressor for IdentityCompressor {
-    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket) {
-        let mut w = BitWriter::new();
-        packet.begin_encode(v.len(), &mut w);
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket)
+        -> Result<(), CommError> {
+        let w = &mut self.w;
+        packet.begin_encode(v.len(), w);
         packet.mark_layer(0);
         for &x in v {
             w.write_f32(x as f32);
         }
-        packet.finish_encode(&mut w);
+        packet.finish_encode(w);
+        Ok(())
     }
 
     fn decode_into(
@@ -125,9 +153,13 @@ pub struct QuantCompressor {
     pub cfg: QuantConfig,
     pub protocol: ProtocolKind,
     pub adaptation: Adaptation,
-    /// worker threads for the per-layer entropy-coding stage (1 = inline);
+    /// worker threads for the per-layer encode stage (1 = inline);
     /// the emitted stream is bit-identical either way
     pub encode_threads: usize,
+    /// run the staged reference pipeline instead of the fused kernels.
+    /// Wire streams and decoded vectors are bit-identical either way —
+    /// this is the A/B switch the parity suite and benches flip.
+    pub staged: bool,
     books: Codebooks,
     stats: Vec<TypeStats>,
     rng: Rng,
@@ -139,6 +171,13 @@ pub struct QuantCompressor {
     /// eps_Q of the *current* configuration (refreshed on update)
     pub current_eps_q: f64,
     // ---- reusable scratch (the no-churn hot path) ----
+    /// codec-owned bit writer (swaps buffers with the packet each call)
+    w: BitWriter,
+    /// per-type stream-order codeword tables (rebuilt with the books)
+    enc_tables: Vec<Vec<(u64, u32)>>,
+    /// per-layer raw norms of the current encode (parallel fused path)
+    layer_norms: Vec<f64>,
+    // staged-path scratch
     v32: Vec<f32>,
     qv: QuantizedVector,
     dec_qv: QuantizedVector,
@@ -156,12 +195,13 @@ impl QuantCompressor {
         let books = Codebooks::uniform(protocol, &cfg, &map.type_proportions());
         let stats = (0..map.num_types()).map(|_| TypeStats::default()).collect();
         let eps = crate::quant::variance::eps_q_for(&map, &cfg);
-        QuantCompressor {
+        let mut c = QuantCompressor {
             map,
             cfg,
             protocol,
             adaptation,
             encode_threads: 1,
+            staged: false,
             books,
             stats,
             rng: Rng::new(seed),
@@ -170,11 +210,16 @@ impl QuantCompressor {
             total_bits: 0,
             total_coords: 0,
             current_eps_q: eps,
+            w: BitWriter::new(),
+            enc_tables: Vec::new(),
+            layer_norms: Vec::new(),
             v32: Vec::new(),
             qv: QuantizedVector::default(),
             dec_qv: QuantizedVector::default(),
             out32: Vec::new(),
-        }
+        };
+        c.rebuild_enc_tables();
+        c
     }
 
     /// Convenience: b-bit global quantization with bucketing (the paper's
@@ -249,6 +294,16 @@ impl QuantCompressor {
             })
             .collect();
         self.books = Codebooks::build(self.protocol, &probs, &self.map.type_proportions());
+        self.rebuild_enc_tables();
+    }
+
+    /// Re-snapshot every type's flat codeword table from the current books
+    /// (the fused encoder's lookup surface).
+    fn rebuild_enc_tables(&mut self) {
+        self.enc_tables.resize_with(self.map.num_types(), Vec::new);
+        for (m, tab) in self.enc_tables.iter_mut().enumerate() {
+            self.books.fill_code_table(m, tab);
+        }
     }
 
     /// The self-scheduled cadence of Algorithm 1's update set U, applied at
@@ -268,11 +323,11 @@ impl QuantCompressor {
             self.update_levels();
         }
     }
-}
 
-impl Compressor for QuantCompressor {
-    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket) {
-        self.maybe_scheduled_update();
+    /// Staged reference ENC: four explicit passes (f32 copy, statistics
+    /// sweep, quantize into wire form, entropy-code).
+    fn encode_staged(&mut self, v: &[f64], packet: &mut WirePacket)
+        -> Result<(), CommError> {
         self.v32.clear();
         self.v32.extend(v.iter().map(|&x| x as f32));
         {
@@ -286,22 +341,166 @@ impl Compressor for QuantCompressor {
         }
         quantize_into(&self.v32, &self.map, &self.cfg, &mut self.rng, &mut self.qv);
 
-        let mut w = BitWriter::new();
-        packet.begin_encode(v.len(), &mut w);
+        let w = &mut self.w;
+        packet.begin_encode(v.len(), w);
         let threads = self.encode_threads;
         if threads > 1 && self.qv.layers.len() >= 2 * threads {
-            encode_layers_parallel(&self.qv.layers, &self.books, threads, &mut w, packet);
+            encode_layers_parallel(&self.qv.layers, &self.books, threads, w, packet)?;
         } else {
             for layer in &self.qv.layers {
                 packet.mark_layer(w.len_bits());
-                encode_layer(layer, &self.books, &mut w);
+                encode_layer(layer, &self.books, w);
             }
         }
-        packet.finish_encode(&mut w);
+        packet.finish_encode(w);
+        Ok(())
+    }
 
+    /// Fused ENC: one pass per layer folds norm, statistics, stochastic
+    /// rounding and entropy coding (no intermediate wire form).
+    fn encode_fused(&mut self, v: &[f64], packet: &mut WirePacket)
+        -> Result<(), CommError> {
+        assert_eq!(v.len(), self.map.dim);
+        let threads = self.encode_threads;
+        if threads > 1 && self.map.layers.len() >= 2 * threads {
+            return self.encode_fused_parallel(v, packet);
+        }
+        let Self {
+            ref map,
+            ref cfg,
+            ref mut stats,
+            ref mut rng,
+            ref mut w,
+            ref enc_tables,
+            ..
+        } = *self;
+        packet.begin_encode(v.len(), w);
+        for l in &map.layers {
+            let s = &v[l.offset..l.offset + l.len];
+            let raw = fused::layer_norm_f32(s, cfg.q);
+            fused::fold_layer_stats(s, raw, &mut stats[l.type_id]);
+            packet.mark_layer(w.len_bits());
+            fused::encode_layer_body(
+                s,
+                &cfg.sequences[l.type_id],
+                raw,
+                &enc_tables[l.type_id],
+                rng,
+                w,
+            );
+        }
+        packet.finish_encode(w);
+        Ok(())
+    }
+
+    /// Parallel fused ENC: a sequential pass computes per-layer norms and
+    /// folds statistics (preserving the staged accumulation order), then
+    /// layer chunks encode on scoped workers whose RNG clones are advanced
+    /// to exactly the draw position a sequential encode would reach — the
+    /// spliced stream and the final RNG state are bit-identical to
+    /// `encode_fused` with `encode_threads == 1`.
+    fn encode_fused_parallel(&mut self, v: &[f64], packet: &mut WirePacket)
+        -> Result<(), CommError> {
+        let threads = self.encode_threads;
+        let Self {
+            ref map,
+            ref cfg,
+            ref mut stats,
+            ref mut rng,
+            ref mut w,
+            ref enc_tables,
+            ref mut layer_norms,
+            ..
+        } = *self;
+        layer_norms.clear();
+        for l in &map.layers {
+            let s = &v[l.offset..l.offset + l.len];
+            let raw = fused::layer_norm_f32(s, cfg.q);
+            fused::fold_layer_stats(s, raw, &mut stats[l.type_id]);
+            layer_norms.push(raw);
+        }
+        let chunk = map.layers.len().div_ceil(threads);
+        // worker RNGs: one clone per chunk, advanced past the draws of all
+        // preceding chunks (one `next_u64` per coordinate of every layer
+        // with a positive f32-rounded norm)
+        let mut worker_rngs: Vec<Rng> = Vec::with_capacity(threads);
+        let mut cursor = rng.clone();
+        for (chunk_layers, chunk_norms) in
+            map.layers.chunks(chunk).zip(layer_norms.chunks(chunk))
+        {
+            worker_rngs.push(cursor.clone());
+            let draws: usize = chunk_layers
+                .iter()
+                .zip(chunk_norms)
+                .map(|(l, &raw)| fused::layer_draws(raw, l.len))
+                .sum();
+            for _ in 0..draws {
+                cursor.next_u64();
+            }
+        }
+        *rng = cursor; // final state == sequential encode's end state
+
+        let mut parts: Vec<Option<(Vec<usize>, BitBuf)>> = Vec::with_capacity(threads);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = map
+                .layers
+                .chunks(chunk)
+                .zip(layer_norms.chunks(chunk))
+                .zip(worker_rngs)
+                .map(|((chunk_layers, chunk_norms), mut crng)| {
+                    scope.spawn(move || {
+                        let mut lw = BitWriter::new();
+                        let mut offs = Vec::with_capacity(chunk_layers.len());
+                        for (l, &raw) in chunk_layers.iter().zip(chunk_norms) {
+                            let s = &v[l.offset..l.offset + l.len];
+                            offs.push(lw.len_bits());
+                            fused::encode_layer_body(
+                                s,
+                                &cfg.sequences[l.type_id],
+                                raw,
+                                &enc_tables[l.type_id],
+                                &mut crng,
+                                &mut lw,
+                            );
+                        }
+                        (offs, lw.finish())
+                    })
+                })
+                .collect();
+            for h in handles {
+                parts.push(h.join().ok());
+            }
+        });
+        let panicked = parts.iter().filter(|p| p.is_none()).count();
+        if panicked > 0 {
+            return Err(CommError::EncodeWorker { panicked });
+        }
+        packet.begin_encode(v.len(), w);
+        for (offs, buf) in parts.into_iter().flatten() {
+            let base = w.len_bits();
+            for &o in &offs {
+                packet.mark_layer(base + o);
+            }
+            w.append(&buf);
+        }
+        packet.finish_encode(w);
+        Ok(())
+    }
+}
+
+impl Compressor for QuantCompressor {
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket)
+        -> Result<(), CommError> {
+        self.maybe_scheduled_update();
+        if self.staged {
+            self.encode_staged(v, packet)?;
+        } else {
+            self.encode_fused(v, packet)?;
+        }
         self.total_bits += packet.len_bits() as u64;
         self.total_coords += v.len() as u64;
         self.calls += 1;
+        Ok(())
     }
 
     fn decode_into(
@@ -313,13 +512,20 @@ impl Compressor for QuantCompressor {
             return Err(CommError::DimMismatch { want: self.map.dim, got: packet.dim() });
         }
         let mut r = packet.payload().reader();
-        decode_vector_into(&mut r, &self.map, &self.books, &mut self.dec_qv)?;
-        if r.remaining() != 0 {
-            return Err(CommError::TrailingBits { bits: r.remaining() });
+        if self.staged {
+            decode_vector_into(&mut r, &self.map, &self.books, &mut self.dec_qv)?;
+            if r.remaining() != 0 {
+                return Err(CommError::TrailingBits { bits: r.remaining() });
+            }
+            dequantize_into(&self.dec_qv, &self.cfg, &mut self.out32);
+            out.clear();
+            out.extend(self.out32.iter().map(|&x| x as f64));
+        } else {
+            fused::decode_vector_fused(&mut r, &self.map, &self.books, &self.cfg, out)?;
+            if r.remaining() != 0 {
+                return Err(CommError::TrailingBits { bits: r.remaining() });
+            }
         }
-        dequantize_into(&self.dec_qv, &self.cfg, &mut self.out32);
-        out.clear();
-        out.extend(self.out32.iter().map(|&x| x as f64));
         Ok(())
     }
 
@@ -376,16 +582,18 @@ impl Compressor for QuantCompressor {
 
 /// Entropy-code the layers on `threads` scoped worker threads and splice
 /// the chunk streams back in layer order. Bit-identical to the sequential
-/// path: concatenating per-layer segments IS the sequential stream.
+/// path: concatenating per-layer segments IS the sequential stream. A
+/// panicking worker is contained and reported as
+/// [`CommError::EncodeWorker`]; nothing is spliced in that case.
 fn encode_layers_parallel(
     layers: &[QuantizedLayer],
     books: &Codebooks,
     threads: usize,
     w: &mut BitWriter,
     packet: &mut WirePacket,
-) {
+) -> Result<(), CommError> {
     let chunk = layers.len().div_ceil(threads);
-    let mut parts: Vec<(Vec<usize>, BitBuf)> = Vec::with_capacity(threads);
+    let mut parts: Vec<Option<(Vec<usize>, BitBuf)>> = Vec::with_capacity(threads);
     std::thread::scope(|scope| {
         let handles: Vec<_> = layers
             .chunks(chunk)
@@ -402,16 +610,21 @@ fn encode_layers_parallel(
             })
             .collect();
         for h in handles {
-            parts.push(h.join().expect("encode worker"));
+            parts.push(h.join().ok());
         }
     });
-    for (offs, buf) in &parts {
+    let panicked = parts.iter().filter(|p| p.is_none()).count();
+    if panicked > 0 {
+        return Err(CommError::EncodeWorker { panicked });
+    }
+    for (offs, buf) in parts.into_iter().flatten() {
         let base = w.len_bits();
-        for &o in offs {
+        for &o in &offs {
             packet.mark_layer(base + o);
         }
-        w.append(buf);
+        w.append(&buf);
     }
+    Ok(())
 }
 
 /// Build a default level sequence set for an adaptive start.
@@ -433,14 +646,14 @@ mod tests {
 
     /// encode + self-decode, as a loopback node would.
     fn roundtrip(c: &mut dyn Compressor, v: &[f64]) -> (Vec<f64>, usize) {
-        let packet = c.encode(v);
+        let packet = c.encode(v).expect("loopback encode");
         let out = c.decode(&packet).expect("loopback decode");
         (out, packet.len_bits())
     }
 
     #[test]
     fn identity_costs_32_bits_per_coord() {
-        let mut c = IdentityCompressor;
+        let mut c = IdentityCompressor::new();
         let (out, bits) = roundtrip(&mut c, &[1.0, 2.0, 3.0]);
         assert_eq!(out, vec![1.0, 2.0, 3.0]);
         assert_eq!(bits, 96);
@@ -448,7 +661,7 @@ mod tests {
 
     #[test]
     fn identity_wire_is_f32_rounded() {
-        let mut c = IdentityCompressor;
+        let mut c = IdentityCompressor::new();
         let v = [std::f64::consts::PI];
         let (out, _) = roundtrip(&mut c, &v);
         assert_eq!(out[0], std::f64::consts::PI as f32 as f64);
@@ -475,7 +688,7 @@ mod tests {
             Adaptation::Fixed,
             3,
         );
-        let packet = c.encode(&grad_like(&map, 4));
+        let packet = c.encode(&grad_like(&map, 4)).expect("encode");
         assert_eq!(packet.layer_offsets().len(), map.layers.len());
         assert_eq!(packet.layer_offsets()[0], 0);
         // offsets strictly increase and stay inside the payload
@@ -487,20 +700,83 @@ mod tests {
     }
 
     #[test]
+    fn fused_and_staged_packets_are_bit_identical() {
+        // the cheap in-module pin; the full protocol × adaptation × seed ×
+        // thread grid lives in tests/fused_parity.rs
+        let map = LayerMap::from_spec(&[("a", 700, "ff"), ("b", 300, "emb")]).bucketed(128);
+        let mk = |staged: bool| {
+            let mut c = QuantCompressor::new(
+                map.clone(),
+                QuantConfig::uniform_bits(2, 5, 2.0),
+                ProtocolKind::Main,
+                Adaptation::Fixed,
+                77,
+            );
+            c.staged = staged;
+            c
+        };
+        let (mut cf, mut cs) = (mk(false), mk(true));
+        for step in 0..3 {
+            let v = grad_like(&map, 400 + step);
+            let pf = cf.encode(&v).expect("fused encode");
+            let ps = cs.encode(&v).expect("staged encode");
+            assert_eq!(pf.payload(), ps.payload(), "step {step}");
+            assert_eq!(pf.layer_offsets(), ps.layer_offsets());
+            let df = cf.decode(&pf).expect("fused decode");
+            let ds = cs.decode(&ps).expect("staged decode");
+            assert_eq!(df.len(), ds.len());
+            for (a, b) in df.iter().zip(&ds) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn parallel_layer_encode_is_bit_identical() {
         let map = LayerMap::single(4096).bucketed(128);
         let v = grad_like(&map, 7);
-        let mk = |threads| {
+        let mk = |threads, staged| {
             let mut c = QuantCompressor::global_bits(&map, 5, 128, 11);
             c.encode_threads = threads;
-            c.encode(&v)
+            c.staged = staged;
+            c.encode(&v).expect("encode")
         };
-        let seq = mk(1);
-        for threads in [2, 4] {
-            let par = mk(threads);
-            assert_eq!(par.payload(), seq.payload(), "threads={threads}");
-            assert_eq!(par.layer_offsets(), seq.layer_offsets());
-            assert_eq!(par.len_bits(), seq.len_bits());
+        for staged in [false, true] {
+            let seq = mk(1, staged);
+            for threads in [2, 4] {
+                let par = mk(threads, staged);
+                assert_eq!(par.payload(), seq.payload(), "threads={threads} staged={staged}");
+                assert_eq!(par.layer_offsets(), seq.layer_offsets());
+                assert_eq!(par.len_bits(), seq.len_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn encode_worker_panic_is_an_error() {
+        // force a worker panic by desynchronizing the level sequences from
+        // the built codebooks: symbols beyond the books' alphabet index out
+        // of range inside the workers, which must surface as EncodeWorker
+        // rather than poisoning the engine thread
+        for staged in [false, true] {
+            let map = LayerMap::single(256).bucketed(32).with_single_type();
+            let mut c = QuantCompressor::new(
+                map,
+                QuantConfig::uniform_bits(1, 2, 2.0),
+                ProtocolKind::Main,
+                Adaptation::Fixed,
+                1,
+            );
+            c.encode_threads = 2;
+            c.staged = staged;
+            // books/tables still cover 4 symbols; the sequence now produces
+            // indices up to 63
+            c.cfg.sequences = vec![LevelSequence::bits(6)];
+            let v = vec![1.0f64; 256];
+            match c.encode(&v) {
+                Err(CommError::EncodeWorker { panicked }) => assert!(panicked > 0),
+                other => panic!("want EncodeWorker (staged={staged}), got {other:?}"),
+            }
         }
     }
 
@@ -508,7 +784,7 @@ mod tests {
     fn corrupt_packet_surfaces_comm_error() {
         let map = LayerMap::single(256);
         let mut c = QuantCompressor::global_bits(&map, 5, 128, 5);
-        let packet = c.encode(&grad_like(&map, 6));
+        let packet = c.encode(&grad_like(&map, 6)).expect("encode");
         // truncate the payload to its first 50 bits
         let mut w = BitWriter::new();
         let mut r = packet.payload().reader();
@@ -525,7 +801,7 @@ mod tests {
     fn trailing_bits_are_an_error() {
         let map = LayerMap::single(128);
         let mut c = QuantCompressor::global_bits(&map, 4, 128, 13);
-        let packet = c.encode(&grad_like(&map, 14));
+        let packet = c.encode(&grad_like(&map, 14)).expect("encode");
         // append garbage past the legitimate stream
         let mut w = BitWriter::new();
         let mut r = packet.payload().reader();
@@ -546,7 +822,7 @@ mod tests {
     fn dim_mismatch_is_an_error() {
         let map = LayerMap::single(64);
         let mut c = QuantCompressor::global_bits(&map, 4, 128, 9);
-        let packet = c.encode(&grad_like(&map, 10));
+        let packet = c.encode(&grad_like(&map, 10)).expect("encode");
         let wrong = WirePacket::from_raw(
             packet.payload().clone(),
             packet.layer_offsets().to_vec(),

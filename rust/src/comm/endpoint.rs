@@ -20,9 +20,9 @@ impl CommEndpoint {
 
     /// ENC the node's dual vector into the endpoint's packet; returns the
     /// actual encoded payload size in bits.
-    pub fn send(&mut self, v: &[f64]) -> usize {
-        self.codec.encode_into(v, &mut self.packet);
-        self.packet.len_bits()
+    pub fn send(&mut self, v: &[f64]) -> Result<usize, CommError> {
+        self.codec.encode_into(v, &mut self.packet)?;
+        Ok(self.packet.len_bits())
     }
 
     /// DEC the last sent packet into `out`, exactly as a receiving node
@@ -34,7 +34,7 @@ impl CommEndpoint {
     /// ENC + loopback DEC in one call: the self-decode every node performs
     /// so that all K nodes apply identical values. Returns the wire bits.
     pub fn roundtrip_into(&mut self, v: &[f64], out: &mut Vec<f64>) -> Result<usize, CommError> {
-        let bits = self.send(v);
+        let bits = self.send(v)?;
         self.recv_into(out)?;
         Ok(bits)
     }
@@ -68,7 +68,7 @@ mod tests {
 
     #[test]
     fn endpoint_roundtrip_reports_real_bits() {
-        let mut ep = CommEndpoint::new(Box::new(IdentityCompressor));
+        let mut ep = CommEndpoint::new(Box::new(IdentityCompressor::new()));
         let mut out = Vec::new();
         let bits = ep.roundtrip_into(&[1.0, -2.0], &mut out).unwrap();
         assert_eq!(bits, 64);

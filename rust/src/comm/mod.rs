@@ -12,20 +12,32 @@
 //! encoder, and the engines differ only in transport (simulated clock vs
 //! real threads + channels).
 //!
+//! The ENC/DEC hot path is **fused** (see [`crate::coding::fused`]): encode
+//! is one pass per layer — norm, adaptive statistics, stochastic rounding
+//! and Huffman emission folded together, writing straight into the codec's
+//! reusable [`crate::coding::BitWriter`] — and decode drives a batched
+//! word-level bit cache through the table-driven Huffman lookup,
+//! dequantizing directly into the caller's `f64` buffer. The staged
+//! reference pipeline survives behind `QuantCompressor::staged` and is held
+//! bit-identical by the parity suites, so every optimization stays
+//! falsifiable against the readable implementation.
+//!
 //! Layout:
 //! * [`packet`] — `WirePacket`: encoded `BitBuf` + layer offsets + bit count;
-//! * [`codec`] — the `Compressor` trait (packet production with reusable
-//!   scratch buffers, optional per-layer encode parallelism) and its two
+//! * [`codec`] — the `Compressor` trait (fallible packet production with
+//!   reusable scratch, optional per-layer encode parallelism) and its two
 //!   implementations, [`IdentityCompressor`] (fp32 on the wire) and
 //!   [`QuantCompressor`] (the paper's quantize + entropy-code scheme with
 //!   L-GreCo-style adaptation);
 //! * [`endpoint`] — `CommEndpoint`: one node's codec + packet scratch, the
 //!   unit both engines hold per node.
 //!
-//! Decode is fallible end to end: corrupt or truncated wire bytes surface
-//! as [`CommError`], never a panic. Future transports (sharded allgather,
-//! async collectives, multi-backend) drop in as new packet consumers
-//! without forking the engines.
+//! Both directions are fallible end to end: corrupt or truncated wire bytes
+//! surface as [`CommError`], never a panic, and a panicking encode worker
+//! thread is contained as [`CommError::EncodeWorker`] instead of poisoning
+//! the engine. Future transports (sharded allgather, async collectives,
+//! multi-backend) drop in as new packet consumers without forking the
+//! engines.
 
 pub mod codec;
 pub mod endpoint;
@@ -37,7 +49,7 @@ pub use packet::WirePacket;
 
 use crate::coding::DecodeError;
 
-/// Failure while decoding a [`WirePacket`].
+/// Failure while encoding or decoding a [`WirePacket`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommError {
     /// The entropy-coded payload is corrupt or truncated.
@@ -48,6 +60,9 @@ pub enum CommError {
     /// The payload decoded cleanly but left unconsumed bits — the framing
     /// disagrees with the synchronized state (mis-spliced segments).
     TrailingBits { bits: usize },
+    /// `panicked` parallel entropy-encode workers died; the packet was not
+    /// produced. The codec itself stays usable.
+    EncodeWorker { panicked: usize },
 }
 
 impl From<DecodeError> for CommError {
@@ -65,6 +80,9 @@ impl std::fmt::Display for CommError {
             }
             CommError::TrailingBits { bits } => {
                 write!(f, "packet payload has {bits} unconsumed trailing bits")
+            }
+            CommError::EncodeWorker { panicked } => {
+                write!(f, "{panicked} parallel encode worker(s) panicked; packet dropped")
             }
         }
     }

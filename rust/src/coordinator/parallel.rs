@@ -42,11 +42,12 @@ enum Cmd {
 
 /// Worker reply: the node id, the round the packet belongs to (rounds
 /// interleave on the reply channel under an overlapped exchange), and the
-/// encoded wire packet.
+/// encode outcome — a worker whose encode fails reports the error instead
+/// of dying silently, and the leader surfaces it from the run.
 struct Reply {
     node: usize,
     round: usize,
-    packet: WirePacket,
+    packet: Result<WirePacket, CommError>,
 }
 
 /// Configuration shared by all nodes (the synchronized quantization state).
@@ -217,7 +218,8 @@ pub fn run_rounds_over(
         let mut early: Vec<Reply> = Vec::new();
         let collect_round = |t: usize,
                              slots: &mut [Option<WirePacket>],
-                             early: &mut Vec<Reply>| {
+                             early: &mut Vec<Reply>|
+         -> Result<(), CommError> {
             for s in slots.iter_mut() {
                 *s = None;
             }
@@ -226,7 +228,7 @@ pub fn run_rounds_over(
             while i < early.len() {
                 if early[i].round == t {
                     let r = early.swap_remove(i);
-                    slots[r.node] = Some(r.packet);
+                    slots[r.node] = Some(r.packet?);
                     have += 1;
                 } else {
                     i += 1;
@@ -235,13 +237,14 @@ pub fn run_rounds_over(
             while have < k {
                 let r = reply_rx.recv().expect("reply");
                 if r.round == t {
-                    slots[r.node] = Some(r.packet);
+                    slots[r.node] = Some(r.packet?);
                     have += 1;
                 } else {
                     debug_assert!(r.round > t, "stale reply for round {}", r.round);
                     early.push(r);
                 }
             }
+            Ok(())
         };
 
         // one full exchange for round `t`: collect the round-tagged
@@ -250,7 +253,7 @@ pub fn run_rounds_over(
         // exposed/hidden split. Shared verbatim by both schedule arms, so
         // the golden-parity-critical path exists exactly once.
         let mut exchange_round = |t: usize, mean: &mut Vec<f64>| -> Result<(), CommError> {
-            collect_round(t, &mut slots, &mut early);
+            collect_round(t, &mut slots, &mut early)?;
             let bits: Vec<u64> = slots
                 .iter()
                 .map(|s| s.as_ref().expect("one packet per node").len_bits() as u64)
@@ -396,7 +399,7 @@ mod tests {
             );
             let mut codec = st.codec(worker_codec_seed(seed, node));
             let dual = oracle.sample(&x0);
-            let packet = codec.encode(&dual);
+            let packet = codec.encode(&dual).expect("encode");
             codec.decode_into(&packet, &mut decoded).unwrap();
             for (m, v) in seq_mean.iter_mut().zip(&decoded) {
                 *m += v / k as f64;

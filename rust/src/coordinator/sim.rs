@@ -141,7 +141,7 @@ impl ClusterSim {
         // the one truth
         let mut bits = Vec::with_capacity(k);
         for (ep, dual) in self.endpoints.iter_mut().zip(duals) {
-            bits.push(ep.send(dual) as u64);
+            bits.push(ep.send(dual)? as u64);
         }
         // DEC as every receiving node would, folding in node order
         let mut mean = Vec::with_capacity(d);
@@ -220,7 +220,7 @@ mod tests {
     #[test]
     fn identity_exchange_is_exact_mean_of_f32_wire() {
         let comps: Vec<Box<dyn Compressor>> =
-            (0..4).map(|_| Box::new(IdentityCompressor) as _).collect();
+            (0..4).map(|_| Box::new(IdentityCompressor::new()) as _).collect();
         let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), true);
         let ds = duals(4, 32, 1);
         let (mean, m) = sim.exchange(&ds).unwrap();
@@ -239,7 +239,7 @@ mod tests {
     fn quantized_exchange_smaller_wire_time() {
         let map = LayerMap::single(4096);
         let idc: Vec<Box<dyn Compressor>> =
-            (0..4).map(|_| Box::new(IdentityCompressor) as _).collect();
+            (0..4).map(|_| Box::new(IdentityCompressor::new()) as _).collect();
         let qc: Vec<Box<dyn Compressor>> = (0..4)
             .map(|i| Box::new(QuantCompressor::global_bits(&map, 5, 128, i as u64)) as _)
             .collect();

@@ -111,7 +111,7 @@ fn build_compressors(
     (0..k)
         .map(|i| -> Box<dyn Compressor> {
             match compression {
-                GanCompression::None => Box::new(IdentityCompressor),
+                GanCompression::None => Box::new(IdentityCompressor::new()),
                 GanCompression::Global { bits, bucket } => Box::new(
                     QuantCompressor::global_bits(&model.meta, bits, bucket, seed + i as u64),
                 ),

@@ -120,7 +120,7 @@ pub fn train(model: &LmModel, cfg: &LmTrainConfig) -> Result<LmRunResult> {
     let mut endpoints: Vec<CommEndpoint> = (0..cfg.k_nodes)
         .map(|i| {
             let codec: Box<dyn Compressor> = if uncompressed {
-                Box::new(IdentityCompressor)
+                Box::new(IdentityCompressor::new())
             } else {
                 Box::new(PowerSgdCodec::new(
                     &model.meta,

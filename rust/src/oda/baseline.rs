@@ -221,7 +221,7 @@ mod tests {
     use crate::vi::operator::QuadraticOperator;
 
     fn identity_boxes(k: usize) -> Vec<Box<dyn Compressor>> {
-        (0..k).map(|_| Box::new(IdentityCompressor) as Box<dyn Compressor>).collect()
+        (0..k).map(|_| Box::new(IdentityCompressor::new()) as Box<dyn Compressor>).collect()
     }
 
     #[test]

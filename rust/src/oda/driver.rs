@@ -603,7 +603,7 @@ impl CompressionSpec {
         seed: u64,
     ) -> Box<dyn Compressor> {
         match self {
-            CompressionSpec::None => Box::new(IdentityCompressor),
+            CompressionSpec::None => Box::new(IdentityCompressor::new()),
             CompressionSpec::Global { bits, bucket } => {
                 Box::new(QuantCompressor::global_bits_proto(
                     &LayerMap::single(dim),
@@ -898,7 +898,7 @@ mod tests {
     use crate::vi::noise::NoiseModel;
 
     fn identity_boxes(k: usize) -> Vec<Box<dyn Compressor>> {
-        (0..k).map(|_| Box::new(IdentityCompressor) as Box<dyn Compressor>).collect()
+        (0..k).map(|_| Box::new(IdentityCompressor::new()) as Box<dyn Compressor>).collect()
     }
 
     #[test]

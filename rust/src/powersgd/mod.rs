@@ -406,8 +406,9 @@ impl PowerSgdCodec {
 }
 
 impl Compressor for PowerSgdCodec {
-    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket) {
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket) -> Result<(), CommError> {
         self.ps.encode_into_with_mode(v, &self.mode, packet);
+        Ok(())
     }
 
     fn decode_into(
@@ -533,7 +534,7 @@ mod tests {
         let (dec_inline, bits_inline) = ps.compress_with_quant(&grad, &mode);
         let mut codec = PowerSgdCodec::new(&map, 4, mode, 7);
         let mut packet = WirePacket::new();
-        codec.encode_into(&grad, &mut packet);
+        codec.encode_into(&grad, &mut packet).unwrap();
         let mut dec = Vec::new();
         codec.decode_into(&packet, &mut dec).unwrap();
         assert_eq!(dec, dec_inline);
@@ -555,7 +556,7 @@ mod tests {
             PowerSgdCodec::new(&map, 2, FactorQuantMode::Global { bits: 4 }, 3);
         let grad: Vec<f64> = (0..64).map(|i| i as f64 / 64.0).collect();
         let mut packet = WirePacket::new();
-        codec.encode_into(&grad, &mut packet);
+        codec.encode_into(&grad, &mut packet).unwrap();
         let mut w = BitWriter::new();
         let mut r = packet.payload().reader();
         w.write_bits(r.read_bits(40), 40);

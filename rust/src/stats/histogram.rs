@@ -26,13 +26,21 @@ impl NormalizedHistogram {
     /// Accumulate one sample's normalized magnitudes with weight `w`
     /// (the paper's lambda_z numerator ||g_z||_q^2).
     pub fn add_sample(&mut self, normalized: impl Iterator<Item = f64>, w: f64) {
-        let nb = self.bins.len() as f64;
         for u in normalized {
-            let u = u.clamp(0.0, 1.0);
-            let idx = ((u * nb) as usize).min(self.bins.len() - 1);
-            self.bins[idx] += w;
-            self.total += w;
+            self.add_one(u, w);
         }
+    }
+
+    /// Accumulate a single normalized magnitude with weight `w`. Exactly
+    /// one iteration of `add_sample` — the fused encode kernel folds its
+    /// statistics sweep through this so the two paths stay bit-identical.
+    #[inline]
+    pub fn add_one(&mut self, u: f64, w: f64) {
+        let nb = self.bins.len() as f64;
+        let u = u.clamp(0.0, 1.0);
+        let idx = ((u * nb) as usize).min(self.bins.len() - 1);
+        self.bins[idx] += w;
+        self.total += w;
     }
 
     pub fn is_empty(&self) -> bool {

@@ -5,6 +5,13 @@
 //! regression guard for the old `panic!("corrupt huffman stream")`: decode
 //! operates on untrusted wire data and is fallible end to end.
 //!
+//! The suite also pins the **fused** single-pass ENC/DEC kernels to the
+//! staged reference pipeline: over randomized shapes, level widths,
+//! protocols, adaptation schedules and encode-thread counts, both paths
+//! must produce bit-identical packets, bit-identical decoded vectors, and
+//! — on corrupted input — the *same* `CommError` (same variant, same bit
+//! position), so the batched decoder can never mask or shift a failure.
+//!
 //! Uses the in-tree seeded property harness (`qoda::util::prop`) — the
 //! environment is offline, no proptest; every failing case reports its
 //! replayable seed.
@@ -29,6 +36,57 @@ fn random_map(g: &mut Gen) -> LayerMap {
     let spec_ref: Vec<(&str, usize, &str)> =
         spec.iter().map(|(n, len, ty)| (n.as_str(), *len, ty.as_str())).collect();
     LayerMap::from_spec(&spec_ref)
+}
+
+/// Randomized codec parameters, kept separate from the codec so the fused
+/// and staged twins can be constructed from identical state.
+struct CodecParams {
+    bits: u32,
+    protocol: ProtocolKind,
+    adaptation: Adaptation,
+    seed: u64,
+    threads: usize,
+}
+
+impl CodecParams {
+    fn random(g: &mut Gen) -> Self {
+        let bits = g.usize_in(2, 7) as u32;
+        let protocol = if g.f64_in(0.0, 1.0) < 0.5 {
+            ProtocolKind::Main
+        } else {
+            ProtocolKind::Alternating
+        };
+        let adaptation = match g.usize_in(0, 2) {
+            0 => Adaptation::Fixed,
+            1 => Adaptation::Levels { every: 2 },
+            _ => Adaptation::LGreco {
+                every: 2,
+                budget_bits_per_coord: (bits + 1) as f64,
+                max_bits: 6,
+            },
+        };
+        CodecParams {
+            bits,
+            protocol,
+            adaptation,
+            seed: g.rng.next_u64(),
+            threads: [1, 2, 4][g.usize_in(0, 2)],
+        }
+    }
+
+    fn build(&self, map: &LayerMap, staged: bool) -> QuantCompressor {
+        let cfg = QuantConfig::uniform_bits(map.num_types(), self.bits, 2.0);
+        let mut c = QuantCompressor::new(
+            map.clone(),
+            cfg,
+            self.protocol,
+            self.adaptation.clone(),
+            self.seed,
+        );
+        c.encode_threads = self.threads;
+        c.staged = staged;
+        c
+    }
 }
 
 fn random_codec(g: &mut Gen, map: &LayerMap) -> QuantCompressor {
@@ -68,13 +126,47 @@ fn mutate_payload(
 }
 
 #[test]
+fn fused_and_staged_streams_are_bit_identical() {
+    // the central fusion property: over random shapes, widths, protocols,
+    // adaptation schedules and thread counts, the fused one-pass kernels
+    // and the staged reference produce the same packets, the same decoded
+    // f64 bits, the same wire accounting — across update boundaries
+    for_cases(40, 0xF05ED, |g| {
+        let map = random_map(g);
+        let p = CodecParams::random(g);
+        let mut fused = p.build(&map, false);
+        let mut staged = p.build(&map, true);
+        for step in 0..5 {
+            let scale = g.f64_in(0.05, 8.0);
+            let v = g.vec_f64(map.dim, scale);
+            let pf = fused.encode(&v).expect("fused encode");
+            let ps = staged.encode(&v).expect("staged encode");
+            assert_eq!(pf.payload(), ps.payload(), "payload diverged at step {step}");
+            assert_eq!(pf.layer_offsets(), ps.layer_offsets(), "offsets at step {step}");
+            assert_eq!(pf.len_bits(), ps.len_bits());
+            let df = fused.decode(&pf).expect("fused decode");
+            let ds = staged.decode(&ps).expect("staged decode");
+            assert_eq!(df.len(), ds.len());
+            for (i, (a, b)) in df.iter().zip(&ds).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "coord {i} at step {step}");
+            }
+            // cross-decode: each path reads the other's packet
+            let cross = staged.decode(&pf).expect("staged decodes fused packet");
+            assert_eq!(cross, df);
+        }
+        assert_eq!(fused.total_bits, staged.total_bits);
+        assert_eq!(fused.total_coords, staged.total_coords);
+    });
+}
+
+#[test]
 fn quantized_roundtrip_over_random_shapes_and_levels() {
     for_cases(60, 0xC0DEC, |g| {
         let map = random_map(g);
         let mut codec = random_codec(g, &map);
         let scale = g.f64_in(0.05, 8.0);
         let v = g.vec_f64(map.dim, scale);
-        let packet = codec.encode(&v);
+        let packet = codec.encode(&v).expect("encode");
         // the packet frames the stream: one offset per layer, inside the
         // payload, starting at 0, strictly increasing
         assert_eq!(packet.dim(), map.dim);
@@ -100,8 +192,8 @@ fn identity_roundtrip_is_exact_f32() {
     for_cases(30, 0x1DE27, |g| {
         let n = g.usize_in(1, 400);
         let v = g.vec_f64(n, 3.0);
-        let mut c = IdentityCompressor;
-        let packet = c.encode(&v);
+        let mut c = IdentityCompressor::new();
+        let packet = c.encode(&v).expect("encode");
         assert_eq!(packet.len_bits(), 32 * n);
         let out = c.decode(&packet).expect("identity decode");
         let want: Vec<f64> = v.iter().map(|&x| x as f32 as f64).collect();
@@ -110,12 +202,14 @@ fn identity_roundtrip_is_exact_f32() {
 }
 
 #[test]
-fn truncated_streams_error_and_never_panic() {
+fn truncated_streams_error_identically_on_both_paths() {
     for_cases(60, 0x7213C, |g| {
         let map = random_map(g);
-        let mut codec = random_codec(g, &map);
+        let p = CodecParams::random(g);
+        let mut fused = p.build(&map, false);
+        let mut staged = p.build(&map, true);
         let v = g.vec_f64(map.dim, 1.0);
-        let packet = codec.encode(&v);
+        let packet = fused.encode(&v).expect("encode");
         let n = packet.len_bits();
         // any strict prefix must fail during decode: the full stream is
         // consumed exactly on success, so fewer bits always run dry
@@ -125,11 +219,16 @@ fn truncated_streams_error_and_never_panic() {
             packet.layer_offsets().to_vec(),
             map.dim,
         );
-        match codec.decode(&short) {
+        let ef = fused.decode(&short);
+        let es = staged.decode(&short);
+        match &ef {
             Err(CommError::Decode(DecodeError::Truncated { .. }))
             | Err(CommError::Decode(DecodeError::InvalidCode { .. })) => {}
             other => panic!("truncation at {cut}/{n} must be a decode error, got {other:?}"),
         }
+        // the batched bit cache must report the same error at the same bit
+        // position as the bit-by-bit reference
+        assert_eq!(ef.unwrap_err(), es.unwrap_err(), "cut {cut}/{n}");
     });
 }
 
@@ -138,8 +237,8 @@ fn identity_truncation_is_a_decode_error() {
     for_cases(20, 0x1D7, |g| {
         let n = g.usize_in(1, 128);
         let v = g.vec_f64(n, 1.0);
-        let mut c = IdentityCompressor;
-        let packet = c.encode(&v);
+        let mut c = IdentityCompressor::new();
+        let packet = c.encode(&v).expect("encode");
         let cut = g.usize_in(0, packet.len_bits() - 1);
         let short = WirePacket::from_raw(
             mutate_payload(packet.payload(), cut, None),
@@ -157,15 +256,18 @@ fn identity_truncation_is_a_decode_error() {
 }
 
 #[test]
-fn bit_flipped_streams_never_panic() {
+fn bit_flipped_streams_never_panic_and_paths_agree() {
     // a single flipped wire bit may still decode (huffman may resynchronize
     // onto a valid parse) — the contract is weaker but absolute: decode
-    // returns Ok with the right shape or a CommError, and never panics
+    // returns Ok with the right shape or a CommError, never panics, and the
+    // fused path reaches the exact same outcome as the staged reference
     for_cases(80, 0xF11B, |g| {
         let map = random_map(g);
-        let mut codec = random_codec(g, &map);
+        let p = CodecParams::random(g);
+        let mut fused = p.build(&map, false);
+        let mut staged = p.build(&map, true);
         let v = g.vec_f64(map.dim, 1.0);
-        let packet = codec.encode(&v);
+        let packet = fused.encode(&v).expect("encode");
         let n = packet.len_bits();
         let flip = g.usize_in(0, n - 1);
         let flipped = WirePacket::from_raw(
@@ -173,15 +275,19 @@ fn bit_flipped_streams_never_panic() {
             packet.layer_offsets().to_vec(),
             map.dim,
         );
-        match codec.decode(&flipped) {
-            Ok(out) => {
+        let rf = fused.decode(&flipped);
+        let rs = staged.decode(&flipped);
+        match (&rf, &rs) {
+            (Ok(of), Ok(os)) => {
                 // a flipped norm-header bit can legally yield inf/NaN
                 // values — the guarantee is shape and no panic, not fidelity
-                assert_eq!(out.len(), map.dim);
+                assert_eq!(of.len(), map.dim);
+                for (a, b) in of.iter().zip(os) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "flip {flip}");
+                }
             }
-            Err(CommError::Decode(_))
-            | Err(CommError::TrailingBits { .. })
-            | Err(CommError::DimMismatch { .. }) => {}
+            (Err(ef), Err(es)) => assert_eq!(ef, es, "flip {flip}"),
+            other => panic!("paths disagree on flip {flip}: {other:?}"),
         }
     });
 }
@@ -190,10 +296,12 @@ fn bit_flipped_streams_never_panic() {
 fn garbage_streams_never_panic() {
     // pure noise presented as a packet: decode must fail (or produce a
     // correctly-shaped vector), never panic — the regression guard for the
-    // old `panic!("corrupt huffman stream")`
+    // old `panic!("corrupt huffman stream")` — and both decode paths agree
     for_cases(60, 0x6A12BA6E, |g| {
         let map = random_map(g);
-        let mut codec = random_codec(g, &map);
+        let p = CodecParams::random(g);
+        let mut fused = p.build(&map, false);
+        let mut staged = p.build(&map, true);
         let nbits = g.usize_in(1, 4096);
         let mut w = BitWriter::new();
         let mut left = nbits;
@@ -203,8 +311,15 @@ fn garbage_streams_never_panic() {
             left -= take as usize;
         }
         let junk = WirePacket::from_raw(w.finish(), vec![0], map.dim);
-        if let Ok(out) = codec.decode(&junk) {
-            assert_eq!(out.len(), map.dim);
+        let rf = fused.decode(&junk);
+        let rs = staged.decode(&junk);
+        match (&rf, &rs) {
+            (Ok(of), Ok(os)) => {
+                assert_eq!(of.len(), map.dim);
+                assert_eq!(of.len(), os.len());
+            }
+            (Err(ef), Err(es)) => assert_eq!(ef, es),
+            other => panic!("paths disagree on garbage: {other:?}"),
         }
     });
 }
@@ -215,7 +330,7 @@ fn dim_mismatch_is_always_rejected() {
         let map = random_map(g);
         let mut codec = random_codec(g, &map);
         let v = g.vec_f64(map.dim, 1.0);
-        let packet = codec.encode(&v);
+        let packet = codec.encode(&v).expect("encode");
         let wrong = WirePacket::from_raw(
             packet.payload().clone(),
             packet.layer_offsets().to_vec(),

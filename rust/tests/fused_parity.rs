@@ -1,0 +1,201 @@
+//! Golden parity for the fused ENC/DEC hot path: over the full grid of
+//! wire protocols × adaptation modes × seeds × encode-thread counts, the
+//! fused single-pass kernels (`coding::fused`, the default) and the staged
+//! reference pipeline (`QuantCompressor::staged = true`) must produce
+//!
+//! * bit-identical wire packets (payload, layer offsets, bit count),
+//! * bit-identical decoded `f64` vectors (including cross-decode of each
+//!   other's packets),
+//! * identical wire accounting (`total_bits`, `total_coords`) and
+//!   identical adaptive state trajectories (`current_eps_q` after updates),
+//!
+//! across a multi-step run that crosses adaptation-update boundaries. This
+//! is the contract that makes every fused-path optimization falsifiable:
+//! the staged pipeline is the specification, the fused pipeline is the
+//! implementation, and the wire format is pinned to both.
+
+use qoda::coding::protocol::ProtocolKind;
+use qoda::comm::{Adaptation, Compressor, QuantCompressor};
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::QuantConfig;
+use qoda::stats::rng::Rng;
+
+/// Transformer-flavored heterogeneous map: three layer types, bucketed to
+/// ten layers so every thread count in the grid takes its parallel path.
+fn parity_map() -> LayerMap {
+    LayerMap::from_spec(&[("ff", 700, "ff"), ("emb", 300, "embedding"), ("b", 65, "bias")])
+        .bucketed(128)
+}
+
+fn grad_like(map: &LayerMap, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..map.dim)
+        .map(|i| rng.gaussian() * if i % 3 == 0 { 2.0 } else { 0.05 })
+        .collect()
+}
+
+fn build(
+    map: &LayerMap,
+    protocol: ProtocolKind,
+    adaptation: &Adaptation,
+    seed: u64,
+    threads: usize,
+    staged: bool,
+) -> QuantCompressor {
+    let cfg = QuantConfig::uniform_bits(map.num_types(), 5, 2.0);
+    let mut c =
+        QuantCompressor::new(map.clone(), cfg, protocol, adaptation.clone(), seed);
+    c.encode_threads = threads;
+    c.staged = staged;
+    c
+}
+
+fn adaptations() -> Vec<Adaptation> {
+    vec![
+        Adaptation::Fixed,
+        Adaptation::Levels { every: 2 },
+        Adaptation::LGreco { every: 2, budget_bits_per_coord: 6.0, max_bits: 6 },
+    ]
+}
+
+/// The full grid: both protocols, all three adaptation modes, three seeds,
+/// three thread counts, seven steps (crossing the `every = 2` update
+/// boundary three times).
+#[test]
+fn fused_matches_staged_across_the_full_grid() {
+    let map = parity_map();
+    assert!(map.layers.len() >= 8, "grid needs the 4-thread parallel path");
+    for protocol in [ProtocolKind::Main, ProtocolKind::Alternating] {
+        for adaptation in adaptations() {
+            for seed in [1u64, 42, 977] {
+                for threads in [1usize, 2, 4] {
+                    let mut fused =
+                        build(&map, protocol, &adaptation, seed, threads, false);
+                    let mut staged =
+                        build(&map, protocol, &adaptation, seed, threads, true);
+                    let tag = format!(
+                        "{protocol:?}/{adaptation:?}/seed={seed}/threads={threads}"
+                    );
+                    for step in 0..7 {
+                        let v = grad_like(&map, 1000 + 31 * seed + step);
+                        let pf = fused.encode(&v).expect("fused encode");
+                        let ps = staged.encode(&v).expect("staged encode");
+                        assert_eq!(
+                            pf.payload(),
+                            ps.payload(),
+                            "payload diverged: {tag} step {step}"
+                        );
+                        assert_eq!(
+                            pf.layer_offsets(),
+                            ps.layer_offsets(),
+                            "offsets diverged: {tag} step {step}"
+                        );
+                        assert_eq!(pf.len_bits(), ps.len_bits());
+                        let df = fused.decode(&pf).expect("fused decode");
+                        let ds = staged.decode(&ps).expect("staged decode");
+                        assert_eq!(df.len(), ds.len());
+                        for (i, (a, b)) in df.iter().zip(&ds).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "coord {i} diverged: {tag} step {step}"
+                            );
+                        }
+                        // cross-decode: each pipeline reads the other's bits
+                        let xf = staged.decode(&pf).expect("staged reads fused");
+                        let xs = fused.decode(&ps).expect("fused reads staged");
+                        assert_eq!(xf, df, "{tag} step {step}");
+                        assert_eq!(xs, ds, "{tag} step {step}");
+                    }
+                    assert_eq!(fused.total_bits, staged.total_bits, "{tag}");
+                    assert_eq!(fused.total_coords, staged.total_coords, "{tag}");
+                    assert_eq!(
+                        fused.current_eps_q.to_bits(),
+                        staged.current_eps_q.to_bits(),
+                        "adaptive trajectory diverged: {tag}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Explicit codebook retuning (the lightweight half of an update step) must
+/// leave both paths on the same retuned books.
+#[test]
+fn retuned_books_keep_parity() {
+    let map = parity_map();
+    for protocol in [ProtocolKind::Main, ProtocolKind::Alternating] {
+        let mut fused = build(&map, protocol, &Adaptation::Fixed, 7, 1, false);
+        let mut staged = build(&map, protocol, &Adaptation::Fixed, 7, 1, true);
+        let v = grad_like(&map, 555);
+        let _ = fused.encode(&v).expect("warm fused");
+        let _ = staged.encode(&v).expect("warm staged");
+        fused.retune_books();
+        staged.retune_books();
+        let v2 = grad_like(&map, 556);
+        let pf = fused.encode(&v2).expect("fused encode");
+        let ps = staged.encode(&v2).expect("staged encode");
+        assert_eq!(pf.payload(), ps.payload(), "{protocol:?}");
+        assert_eq!(fused.decode(&pf).unwrap(), staged.decode(&ps).unwrap());
+    }
+}
+
+/// All-zero layers take the no-draw path on both pipelines: same stream,
+/// same decoded zeros, same RNG trajectory afterwards (pinned by the next
+/// non-zero step still matching).
+#[test]
+fn zero_vectors_keep_parity_and_rng_alignment() {
+    let map = parity_map();
+    let mut fused = build(&map, ProtocolKind::Main, &Adaptation::Fixed, 9, 2, false);
+    let mut staged = build(&map, ProtocolKind::Main, &Adaptation::Fixed, 9, 2, true);
+    let zeros = vec![0.0; map.dim];
+    let pf = fused.encode(&zeros).expect("fused encode");
+    let ps = staged.encode(&zeros).expect("staged encode");
+    assert_eq!(pf.payload(), ps.payload());
+    let df = fused.decode(&pf).expect("fused decode");
+    assert!(df.iter().all(|&x| x == 0.0));
+    assert_eq!(df, staged.decode(&ps).expect("staged decode"));
+    // a zero step consumes no randomness on either path: the next real
+    // packet still matches bit-for-bit
+    let v = grad_like(&map, 777);
+    let pf2 = fused.encode(&v).expect("fused encode");
+    let ps2 = staged.encode(&v).expect("staged encode");
+    assert_eq!(pf2.payload(), ps2.payload());
+}
+
+/// Mixed-path exchange: a cluster where some nodes run fused and some run
+/// staged codecs stays coherent. All nodes observe the same duals (which is
+/// what keeps adaptive state synchronized without shipping codebooks), each
+/// encodes with its own RNG seed, and every node must decode every packet
+/// to the same bits — the aggregate is independent of which pipeline
+/// produced or consumed the stream, across scheduled update boundaries.
+#[test]
+fn mixed_fused_staged_cluster_agrees() {
+    let map = parity_map();
+    let mut nodes: Vec<QuantCompressor> = (0..4)
+        .map(|i| {
+            build(&map, ProtocolKind::Main, &Adaptation::Levels { every: 2 }, 100 + i, 1, i % 2 == 1)
+        })
+        .collect();
+    for step in 0..5 {
+        let v = grad_like(&map, 2000 + step);
+        let packets: Vec<_> =
+            nodes.iter_mut().map(|n| n.encode(&v).expect("encode")).collect();
+        // every node decodes every packet identically
+        for packet in &packets {
+            let mut want: Option<Vec<f64>> = None;
+            for n in nodes.iter_mut() {
+                let got = n.decode(packet).expect("decode");
+                match &want {
+                    None => want = Some(got),
+                    Some(w) => {
+                        for (a, b) in w.iter().zip(&got) {
+                            assert_eq!(a.to_bits(), b.to_bits(), "step {step}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

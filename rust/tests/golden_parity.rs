@@ -278,7 +278,7 @@ fn quant_boxes(d: usize, bits: u32, k: usize, seed0: u64) -> Vec<Box<dyn Compres
 }
 
 fn identity_boxes(k: usize) -> Vec<Box<dyn Compressor>> {
-    (0..k).map(|_| Box::new(IdentityCompressor) as Box<dyn Compressor>).collect()
+    (0..k).map(|_| Box::new(IdentityCompressor::new()) as Box<dyn Compressor>).collect()
 }
 
 #[test]

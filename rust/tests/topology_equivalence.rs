@@ -148,7 +148,7 @@ fn wire_bits_match_analytic_formulas() {
             let mut oracle = Oracle::new(&op, noise, worker_oracle_seed(seed, n));
             let mut codec = st.codec(worker_codec_seed(seed, n));
             let dual = oracle.sample(&x0);
-            codec.encode(&dual).len_bits() as u64
+            codec.encode(&dual).expect("encode").len_bits() as u64
         })
         .collect();
     let total: u64 = b.iter().sum();
@@ -201,7 +201,7 @@ fn fp32_reduce_wire_formulas() {
         (0..k).map(|_| (0..d).map(|_| rng.gaussian()).collect()).collect()
     };
     let mk = || -> Vec<Box<dyn Compressor>> {
-        (0..k).map(|_| Box::new(IdentityCompressor) as _).collect()
+        (0..k).map(|_| Box::new(IdentityCompressor::new()) as _).collect()
     };
     let net = NetworkModel::genesis_cloud(5.0);
 

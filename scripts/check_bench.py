@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_comm.json against the committed baseline.
+
+The comm benches (``cargo bench --bench quantize --bench comm_pipeline
+--bench topology_comm``) merge machine-readable records into
+``results/BENCH_comm.json``. CI's perf gate copies the committed file aside,
+re-runs the benches, and calls this script to enforce:
+
+* **presence** — every ``--require PREFIX`` must match at least one fresh
+  record, so a bench can't silently stop emitting the numbers the gate
+  watches;
+* **no regression** — for every record present in both files with an
+  ``ns_per_step`` field, the fresh time must stay within
+  ``--tolerance`` × the baseline time (absolute ns/step across runners is
+  noisy, so the band is wide; the committed baseline pins the *trajectory*,
+  not the exact nanosecond);
+* **fusion floor** — every fresh record whose name starts with a
+  ``--speedup-prefix`` and carries a ``speedup`` field must stay above
+  ``min(--min-speedup, 0.7 × baseline speedup)``: the fused kernels must
+  not quietly decay back toward the staged path. Speedup is a same-machine
+  ratio, which makes it the robust, runner-independent signal.
+
+Records whose name starts with ``_`` are metadata (e.g. the provisional
+marker on an estimated baseline) and are ignored. Exit code 0 = gate
+passes; 1 = regression or missing record; 2 = usage/IO error.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(records, list):
+        print(f"check_bench: {path} is not a JSON array", file=sys.stderr)
+        sys.exit(2)
+    out = {}
+    for r in records:
+        if isinstance(r, dict) and isinstance(r.get("name"), str):
+            out[r["name"]] = r
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed BENCH_comm.json")
+    ap.add_argument("--fresh", required=True, help="freshly generated BENCH_comm.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=3.0,
+        help="fresh ns_per_step may be at most this factor above baseline (default 3.0)",
+    )
+    ap.add_argument(
+        "--require",
+        action="append",
+        default=[],
+        metavar="PREFIX",
+        help="fresh file must contain at least one record with this name prefix",
+    )
+    ap.add_argument(
+        "--min-speedup",
+        type=float,
+        default=None,
+        help="floor for fresh `speedup` records under every --speedup-prefix",
+    )
+    ap.add_argument(
+        "--speedup-prefix",
+        action="append",
+        default=[],
+        metavar="PREFIX",
+        help="name prefixes whose `speedup` field is checked against the floor",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    failures = []
+
+    provisional = bool(base.get("_meta", {}).get("provisional"))
+    if provisional:
+        print("note: committed baseline is marked provisional (estimated numbers)")
+
+    for prefix in args.require:
+        hits = [n for n in fresh if n.startswith(prefix)]
+        if not hits:
+            failures.append(f"missing: no fresh record matches prefix {prefix!r}")
+        else:
+            print(f"present: {prefix!r} -> {len(hits)} record(s)")
+
+    compared = 0
+    for name, b in sorted(base.items()):
+        if name.startswith("_"):
+            continue
+        b_ns = b.get("ns_per_step")
+        f_rec = fresh.get(name)
+        if b_ns is None or f_rec is None:
+            continue
+        f_ns = f_rec.get("ns_per_step")
+        if f_ns is None:
+            continue
+        compared += 1
+        ratio = f_ns / b_ns if b_ns > 0 else float("inf")
+        verdict = "ok" if ratio <= args.tolerance else "REGRESSION"
+        print(f"{verdict:>10}  {name}: {b_ns:.0f} -> {f_ns:.0f} ns/step ({ratio:.2f}x)")
+        if ratio > args.tolerance:
+            failures.append(
+                f"regression: {name} is {ratio:.2f}x the baseline "
+                f"(tolerance {args.tolerance:.2f}x)"
+            )
+    print(f"compared {compared} ns/step record(s) at tolerance {args.tolerance:.2f}x")
+
+    if args.min_speedup is not None:
+        checked = 0
+        for prefix in args.speedup_prefix or [""]:
+            for name, f_rec in sorted(fresh.items()):
+                if not name.startswith(prefix) or "speedup" not in f_rec:
+                    continue
+                checked += 1
+                got = float(f_rec["speedup"])
+                floor = args.min_speedup
+                b_rec = base.get(name)
+                if b_rec is not None and "speedup" in b_rec:
+                    # a committed measured speedup tightens or loosens the
+                    # floor to 70% of itself, absorbing runner variance
+                    floor = min(floor, 0.7 * float(b_rec["speedup"]))
+                verdict = "ok" if got >= floor else "TOO SLOW"
+                print(f"{verdict:>10}  {name}: speedup {got:.2f}x (floor {floor:.2f}x)")
+                if got < floor:
+                    failures.append(
+                        f"fusion floor: {name} speedup {got:.2f}x < {floor:.2f}x"
+                    )
+        if checked == 0:
+            failures.append(
+                "fusion floor: no fresh speedup records matched "
+                f"{args.speedup_prefix!r}"
+            )
+
+    if failures:
+        print("\nperf gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print("perf gate passed")
+
+
+if __name__ == "__main__":
+    main()
