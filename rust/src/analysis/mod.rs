@@ -1,0 +1,126 @@
+//! In-tree static analysis: the `qoda audit` invariant auditor.
+//!
+//! Every claim this repro makes — the paper's variance and code-length
+//! bounds, the fused-vs-staged speedups, the cross-engine golden-parity pins
+//! — rests on the wire stream being **bit-identical** across engines,
+//! topologies, seeds and thread counts. The parity suites defend that
+//! property after the fact; this module defends it *statically*, by scanning
+//! `rust/src/` for the hazard patterns that historically break bit-exactness
+//! long before a lucky seed trips them:
+//!
+//! * [`rules::RULE_HASH`] (`hash-container`) — `HashMap`/`HashSet` in a
+//!   wire-affecting module. Hash iteration order is nondeterministic across
+//!   builds; if it leaks into a Huffman codebook or a layer walk, two nodes
+//!   disagree on the stream. Protected suites: `golden_parity`,
+//!   `topology_equivalence`.
+//! * [`rules::RULE_PANIC`] (`panic-path`) — `unwrap`/`expect`/`panic!`/
+//!   `unreachable!` on decode/comm paths. Corrupt wire input must surface as
+//!   [`crate::comm::CommError`], never abort a node. Protected suite:
+//!   `comm_fuzz` (corruption never panics).
+//! * [`rules::RULE_RNG`] (`rng-clone`) — `Rng` clones outside justified
+//!   parallel-splice sites. An unaccounted clone desynchronizes the leader
+//!   draw stream from the sequential reference. Protected suite:
+//!   `fused_parity` (parallel == sequential encode, bit for bit).
+//! * [`rules::RULE_CAST`] (`lossy-cast`) — truncating `as f32`/`as u8`/
+//!   `as u16` outside the quantizer/bitio owner modules that define the
+//!   wire's value widths. Protected invariant: C_q (fp32 norm header) and
+//!   u8 symbol forms stay confined to the modules the protocol docs name.
+//!
+//! Findings are suppressed only by an explicit, *verified* pragma:
+//!
+//! ```text
+//! // audit:allow(<rule>) — <reason>
+//! ```
+//!
+//! trailing on the offending line or standalone directly above it. A pragma
+//! that no longer suppresses anything is itself an error, so allows cannot
+//! go stale. Test code (`#[cfg(test)]` / `#[test]` items) is exempt from all
+//! rules.
+//!
+//! The scanner ([`scanner`]) is a hand-rolled token-level lexer — zero
+//! dependencies, no `syn` — that understands comments, string/char/raw
+//! literals and lifetimes, which is exactly enough for these rules to be
+//! reliable. The dynamic complement lives in CI: nightly **Miri** over the
+//! `coding/` + `stats/` unit tests (UB check on the word-level bit cache)
+//! and **ThreadSanitizer** over the `coordinator/parallel` tests.
+
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+pub use report::{AuditReport, FileAudit, Finding, PragmaIssue};
+pub use rules::audit_file;
+
+use crate::util::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Walk `root` (a crate `src/` directory), audit every `.rs` file, and
+/// aggregate the results. Files are visited in sorted path order so the
+/// report (and its JSON rendering) is deterministic.
+pub fn run_audit(root: &Path) -> Result<AuditReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+
+    let mut report = AuditReport::default();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .map_err(|_| Error::msg(format!("path {} escapes audit root", path.display())))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
+        report.absorb(audit_file(&rel, &text));
+    }
+    Ok(report)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::msg(format!("read_dir {}: {e}", dir.display())))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| Error::msg(format!("read_dir {}: {e}", dir.display())))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map_or(false, |x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// The source root `qoda audit` scans by default: the crate's own `src/`,
+/// resolved relative to the working directory (`src` when run from `rust/`,
+/// `rust/src` from the repo root), falling back to the build-time manifest
+/// path for `cargo run` from arbitrary directories.
+pub fn default_root() -> PathBuf {
+    for cand in ["src", "rust/src"] {
+        let p = Path::new(cand);
+        if p.join("lib.rs").is_file() {
+            return p.to_path_buf();
+        }
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_root_points_at_a_lib() {
+        assert!(default_root().join("lib.rs").is_file());
+    }
+
+    #[test]
+    fn run_audit_counts_files_deterministically() {
+        let root = default_root();
+        let a = run_audit(&root).expect("audit walks the live tree");
+        let b = run_audit(&root).expect("audit walks the live tree");
+        assert!(a.files_scanned > 10);
+        assert_eq!(a.files_scanned, b.files_scanned);
+        assert_eq!(a.to_json(), b.to_json());
+    }
+}

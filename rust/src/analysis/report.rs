@@ -1,0 +1,267 @@
+//! Audit results: findings, pragma issues, and the aggregate report with
+//! human-readable and machine-readable (JSON) renderings.
+//!
+//! The JSON schema is versioned (`qoda-audit/1`) and hand-rolled like the
+//! bench harness's writer — the crate stays zero-dependency. CI uploads the
+//! report as an artifact next to the bench JSON.
+
+use super::rules;
+
+/// One rule match at a source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule name (one of [`rules::RULES`]).
+    pub rule: &'static str,
+    /// Path relative to the audited source root, e.g. `comm/codec.rs`.
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    pub message: String,
+    /// True when an `audit:allow` pragma suppresses this finding.
+    pub allowed: bool,
+    /// The pragma's justification, when allowed.
+    pub reason: Option<String>,
+}
+
+/// A rejected `audit:allow` pragma: stale, unknown rule, or missing reason.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PragmaIssue {
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub problem: String,
+}
+
+/// Audit result for a single file.
+#[derive(Debug, Default)]
+pub struct FileAudit {
+    pub findings: Vec<Finding>,
+    pub pragma_issues: Vec<PragmaIssue>,
+}
+
+/// Aggregate over a whole source tree.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub pragma_issues: Vec<PragmaIssue>,
+}
+
+impl AuditReport {
+    pub fn absorb(&mut self, file: FileAudit) {
+        self.files_scanned += 1;
+        self.findings.extend(file.findings);
+        self.pragma_issues.extend(file.pragma_issues);
+    }
+
+    /// Findings not suppressed by a pragma.
+    pub fn violations(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.allowed)
+    }
+
+    /// Findings suppressed by a verified pragma.
+    pub fn allowed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.allowed)
+    }
+
+    /// True when the tree passes: no violations and no rejected pragmas.
+    pub fn clean(&self) -> bool {
+        self.violations().next().is_none() && self.pragma_issues.is_empty()
+    }
+
+    /// Human-readable report (one `file:line` diagnostic per finding).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let nviol = self.violations().count();
+        let nallow = self.allowed().count();
+        for f in self.violations() {
+            s.push_str(&format!(
+                "error[{}]: {}:{}: {}\n",
+                f.rule, f.file, f.line, f.message
+            ));
+        }
+        for p in &self.pragma_issues {
+            s.push_str(&format!(
+                "error[pragma]: {}:{}: audit:allow({}) {}\n",
+                p.file, p.line, p.rule, p.problem
+            ));
+        }
+        s.push_str(&format!(
+            "audit: {} file(s) scanned, {} violation(s), {} allowed finding(s), {} pragma issue(s)\n",
+            self.files_scanned,
+            nviol,
+            nallow,
+            self.pragma_issues.len()
+        ));
+        s.push_str(if self.clean() { "audit: PASS\n" } else { "audit: FAIL\n" });
+        s
+    }
+
+    /// Machine-readable report (schema `qoda-audit/1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"qoda-audit/1\",\n");
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!("  \"clean\": {},\n", self.clean()));
+
+        s.push_str("  \"rules\": {\n");
+        for (k, (name, desc)) in rules::RULES.iter().enumerate() {
+            let comma = if k + 1 < rules::RULES.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    \"{}\": \"{}\"{}\n",
+                esc(name),
+                esc(desc),
+                comma
+            ));
+        }
+        s.push_str("  },\n");
+
+        push_findings(&mut s, "violations", self.violations());
+        s.push(',');
+        s.push('\n');
+        push_findings(&mut s, "allowed", self.allowed());
+        s.push(',');
+        s.push('\n');
+
+        s.push_str("  \"pragma_issues\": [\n");
+        let n = self.pragma_issues.len();
+        for (k, p) in self.pragma_issues.iter().enumerate() {
+            let comma = if k + 1 < n { "," } else { "" };
+            s.push_str(&format!(
+                "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"problem\": \"{}\"}}{}\n",
+                esc(&p.file),
+                p.line,
+                esc(&p.rule),
+                esc(&p.problem),
+                comma
+            ));
+        }
+        s.push_str("  ]\n");
+        s.push_str("}\n");
+        s
+    }
+}
+
+fn push_findings<'a>(s: &mut String, key: &str, it: impl Iterator<Item = &'a Finding>) {
+    let items: Vec<&Finding> = it.collect();
+    s.push_str(&format!("  \"{key}\": [\n"));
+    let n = items.len();
+    for (k, f) in items.iter().enumerate() {
+        let comma = if k + 1 < n { "," } else { "" };
+        let reason = match &f.reason {
+            Some(r) => format!(", \"reason\": \"{}\"", esc(r)),
+            None => String::new(),
+        };
+        s.push_str(&format!(
+            "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"{}}}{}\n",
+            esc(f.rule),
+            esc(&f.file),
+            f.line,
+            esc(&f.message),
+            reason,
+            comma
+        ));
+    }
+    s.push_str("  ]");
+}
+
+/// Minimal JSON string escape (backslash, quote, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AuditReport {
+        let mut r = AuditReport::default();
+        r.absorb(FileAudit {
+            findings: vec![
+                Finding {
+                    rule: rules::RULE_PANIC,
+                    file: "comm/codec.rs".into(),
+                    line: 10,
+                    message: "`.unwrap()` on a decode path".into(),
+                    allowed: false,
+                    reason: None,
+                },
+                Finding {
+                    rule: rules::RULE_CAST,
+                    file: "comm/codec.rs".into(),
+                    line: 20,
+                    message: "truncating `as f32`".into(),
+                    allowed: true,
+                    reason: Some("fp32 wire contract".into()),
+                },
+            ],
+            pragma_issues: vec![PragmaIssue {
+                file: "comm/codec.rs".into(),
+                line: 30,
+                rule: "panic-path".into(),
+                problem: "stale: suppresses no finding on its target line".into(),
+            }],
+        });
+        r
+    }
+
+    #[test]
+    fn clean_logic() {
+        let r = sample();
+        assert!(!r.clean());
+        assert_eq!(r.violations().count(), 1);
+        assert_eq!(r.allowed().count(), 1);
+
+        let mut ok = AuditReport::default();
+        ok.absorb(FileAudit::default());
+        assert!(ok.clean());
+    }
+
+    #[test]
+    fn render_mentions_each_problem() {
+        let text = sample().render();
+        assert!(text.contains("error[panic-path]: comm/codec.rs:10"));
+        assert!(text.contains("error[pragma]: comm/codec.rs:30"));
+        assert!(text.contains("audit: FAIL"));
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let j = sample().to_json();
+        assert!(j.contains("\"schema\": \"qoda-audit/1\""));
+        assert!(j.contains("\"clean\": false"));
+        assert!(j.contains("\"violations\""));
+        assert!(j.contains("\"reason\": \"fp32 wire contract\""));
+        // backtick messages survive; embedded quotes are escaped
+        let mut r = AuditReport::default();
+        r.absorb(FileAudit {
+            findings: vec![Finding {
+                rule: rules::RULE_HASH,
+                file: "comm/x.rs".into(),
+                line: 1,
+                message: "say \"hi\"\\".into(),
+                allowed: false,
+                reason: None,
+            }],
+            pragma_issues: vec![],
+        });
+        assert!(r.to_json().contains("say \\\"hi\\\"\\\\"));
+        // brace balance as a cheap well-formedness probe
+        let open = j.matches('{').count();
+        let close = j.matches('}').count();
+        assert_eq!(open, close);
+    }
+}

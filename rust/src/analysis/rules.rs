@@ -1,0 +1,366 @@
+//! The audit rules: what they match, where they apply, how pragmas suppress.
+//!
+//! All four rules are scoped to the wire-affecting module trees
+//! ([`WIRE_DIRS`]): code whose behavior reaches the encoded bit stream or the
+//! cross-node exchange. Outside those trees (CLI plumbing, bench harness,
+//! util) the rules are silent — a `HashMap` in `util/cli.rs` cannot perturb
+//! a codebook.
+//!
+//! Suppression is explicit and verified: a finding is allowed only by an
+//! `// audit:allow(<rule>) — <reason>` pragma on the same line (trailing) or
+//! on the line directly above (standalone, covering the next code line). A
+//! pragma that suppresses nothing is itself an error — allows cannot go
+//! stale when the code they justified is refactored away.
+
+use super::report::{FileAudit, Finding, PragmaIssue};
+use super::scanner::{self, Tok};
+
+/// Determinism: no hash-ordered containers on wire-affecting paths.
+pub const RULE_HASH: &str = "hash-container";
+/// Panic-freedom: no `unwrap`/`expect`/`panic!`/`unreachable!` in library
+/// decode/comm paths.
+pub const RULE_PANIC: &str = "panic-path";
+/// RNG discipline: `*rng*.clone()` only at justified parallel-splice sites.
+pub const RULE_RNG: &str = "rng-clone";
+/// Lossy-cast containment: truncating `as f32`/`as u8`/`as u16` only inside
+/// the quantizer/bitio modules that own the wire's value widths.
+pub const RULE_CAST: &str = "lossy-cast";
+
+/// Every rule the auditor knows, with a one-line description (surfaced in
+/// `qoda audit --json` and the CLI help).
+pub const RULES: &[(&str, &str)] = &[
+    (
+        RULE_HASH,
+        "no HashMap/HashSet in wire-affecting modules: iteration order would leak into codebooks and streams; use BTreeMap or a sorted Vec",
+    ),
+    (
+        RULE_PANIC,
+        "no unwrap/expect/panic!/unreachable! on decode/comm paths: corrupt wire input or a lost worker must surface as CommError, never a panic",
+    ),
+    (
+        RULE_RNG,
+        "Rng clones only at justified parallel-splice sites where layer_draws accounting advances the leader stream",
+    ),
+    (
+        RULE_CAST,
+        "truncating `as f32`/`as u8`/`as u16` casts only inside the quantizer/bitio owner modules",
+    ),
+];
+
+/// Module trees whose code can affect the encoded wire stream.
+pub const WIRE_DIRS: &[&str] = &["coding/", "comm/", "quant/", "coordinator/"];
+
+/// Files that *own* the wire's lossy value widths: the quantizer maps f64
+/// activations onto the level ladder, bitio/fused write the u8/u16 wire
+/// forms. Truncation there is the contract, not a hazard.
+pub const CAST_OWNERS: &[&str] = &[
+    "coding/bitio.rs",
+    "coding/fused.rs",
+    "quant/quantizer.rs",
+    "quant/levels.rs",
+];
+
+/// Cast targets the lossy-cast rule flags. `as u32`/`as usize` are excluded:
+/// in this codebase they are overwhelmingly widening (u8 lengths into u32
+/// shift counts, bit positions into usize) and flagging them would bury the
+/// real truncations.
+const LOSSY_TARGETS: &[&str] = &["f32", "u8", "u16"];
+
+fn is_wire_path(rel: &str) -> bool {
+    WIRE_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+fn is_cast_owner(rel: &str) -> bool {
+    CAST_OWNERS.contains(&rel)
+}
+
+pub fn known_rule(name: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == name)
+}
+
+/// Audit a single file's source text. Pure (no I/O) so fixture tests and the
+/// live-tree meta-test share the exact same code path.
+pub fn audit_file(rel: &str, text: &str) -> FileAudit {
+    let mut out = FileAudit::default();
+    if !is_wire_path(rel) {
+        return out;
+    }
+
+    let scan = scanner::scan(text);
+    let regions = scanner::test_regions(&scan.toks);
+    let region_lines = scanner::region_lines(&scan.toks, &regions);
+    let in_test = |ti: usize| regions.iter().any(|&(a, z)| ti >= a && ti < z);
+    let line_in_test = |l: u32| region_lines.iter().any(|&(a, z)| l >= a && l <= z);
+
+    let mut findings = raw_findings(rel, &scan.toks, &in_test);
+
+    // Resolve pragmas: mark suppressed findings, reject stale/malformed ones.
+    for p in &scan.pragmas {
+        if line_in_test(p.line) {
+            continue; // comments inside test mods are not audited
+        }
+        if !known_rule(&p.rule) {
+            out.pragma_issues.push(PragmaIssue {
+                file: rel.to_string(),
+                line: p.line,
+                rule: p.rule.clone(),
+                problem: "unknown rule name".to_string(),
+            });
+            continue;
+        }
+        if p.reason.is_empty() {
+            out.pragma_issues.push(PragmaIssue {
+                file: rel.to_string(),
+                line: p.line,
+                rule: p.rule.clone(),
+                problem: "missing justification after the rule name".to_string(),
+            });
+            continue;
+        }
+        // A trailing pragma covers its own line; a standalone pragma covers
+        // the next line that holds any code token.
+        let target = if p.trailing {
+            Some(p.line)
+        } else {
+            scan.toks.iter().map(|t| t.line).find(|&l| l > p.line)
+        };
+        let mut suppressed = 0usize;
+        if let Some(target) = target {
+            for f in findings.iter_mut() {
+                if f.rule == p.rule && f.line == target && !f.allowed {
+                    f.allowed = true;
+                    f.reason = Some(p.reason.clone());
+                    suppressed += 1;
+                }
+            }
+        }
+        if suppressed == 0 {
+            out.pragma_issues.push(PragmaIssue {
+                file: rel.to_string(),
+                line: p.line,
+                rule: p.rule.clone(),
+                problem: "stale: suppresses no finding on its target line".to_string(),
+            });
+        }
+    }
+
+    out.findings = findings;
+    out
+}
+
+/// Scan the token stream for rule matches, before pragma resolution.
+fn raw_findings(rel: &str, toks: &[Tok], in_test: &dyn Fn(usize) -> bool) -> Vec<Finding> {
+    let cast_owner = is_cast_owner(rel);
+    let mut found: Vec<Finding> = Vec::new();
+    let mut push = |rule: &'static str, line: u32, msg: String| {
+        found.push(Finding {
+            rule,
+            file: rel.to_string(),
+            line,
+            message: msg,
+            allowed: false,
+            reason: None,
+        });
+    };
+
+    for (i, t) in toks.iter().enumerate() {
+        if in_test(i) {
+            continue;
+        }
+        let Some(id) = t.ident() else { continue };
+        let next_punct = |k: usize, c: char| toks.get(k).map_or(false, |n| n.is_punct(c));
+        let next_ident = |k: usize| toks.get(k).and_then(|n| n.ident());
+
+        match id {
+            "HashMap" | "HashSet" => {
+                push(
+                    RULE_HASH,
+                    t.line,
+                    format!("`{id}` in a wire-affecting module (hash iteration order would leak into the stream); use BTreeMap or a sorted Vec"),
+                );
+            }
+            "unwrap" | "expect" => {
+                // Method call: `.unwrap(` / `.expect(`. Plain idents named
+                // unwrap (e.g. a local fn) are not panic sites.
+                let is_method = i > 0 && toks[i - 1].is_punct('.') && next_punct(i + 1, '(');
+                if is_method {
+                    push(
+                        RULE_PANIC,
+                        t.line,
+                        format!("`.{id}()` on a decode/comm path; propagate a CommError (or justify with an audit:allow pragma)"),
+                    );
+                }
+            }
+            "panic" | "unreachable" => {
+                if next_punct(i + 1, '!') {
+                    push(
+                        RULE_PANIC,
+                        t.line,
+                        format!("`{id}!` on a decode/comm path; corrupt input must surface as an error, not abort the node"),
+                    );
+                }
+            }
+            "as" => {
+                if !cast_owner {
+                    if let Some(tgt) = next_ident(i + 1) {
+                        if LOSSY_TARGETS.contains(&tgt) {
+                            push(
+                                RULE_CAST,
+                                t.line,
+                                format!("truncating `as {tgt}` cast outside the quantizer/bitio owner modules"),
+                            );
+                        }
+                    }
+                }
+            }
+            _ => {
+                // rng-clone: `<ident containing rng>.clone()`
+                if id.to_ascii_lowercase().contains("rng")
+                    && next_punct(i + 1, '.')
+                    && next_ident(i + 2) == Some("clone")
+                    && next_punct(i + 3, '(')
+                {
+                    push(
+                        RULE_RNG,
+                        t.line,
+                        format!("`{id}.clone()`: an unaccounted Rng clone desynchronizes the leader draw stream; justify splice sites with an audit:allow pragma"),
+                    );
+                }
+            }
+        }
+    }
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn violations(a: &FileAudit) -> Vec<(&'static str, u32)> {
+        a.findings
+            .iter()
+            .filter(|f| !f.allowed)
+            .map(|f| (f.rule, f.line))
+            .collect()
+    }
+
+    #[test]
+    fn out_of_scope_file_is_silent() {
+        let a = audit_file("util/cli.rs", "use std::collections::HashMap;\nfn f() { x.unwrap(); }\n");
+        assert!(a.findings.is_empty() && a.pragma_issues.is_empty());
+    }
+
+    #[test]
+    fn hash_container_detected_in_scope() {
+        let a = audit_file("comm/codec.rs", "use std::collections::HashMap;\n");
+        assert_eq!(violations(&a), vec![(RULE_HASH, 1)]);
+    }
+
+    #[test]
+    fn panic_rule_matches_methods_and_macros_only() {
+        let src = concat!(
+            "fn f(v: Option<u32>) -> u32 {\n",
+            "    let a = v.unwrap();\n",          // line 2: finding
+            "    let b = v.unwrap_or(0);\n",      // no finding
+            "    if a > b { panic!(\"no\"); }\n", // line 4: finding
+            "    unreachable!()\n",               // line 5: finding
+            "}\n",
+        );
+        let a = audit_file("coding/protocol.rs", src);
+        assert_eq!(
+            violations(&a),
+            vec![(RULE_PANIC, 2), (RULE_PANIC, 4), (RULE_PANIC, 5)]
+        );
+    }
+
+    #[test]
+    fn trailing_pragma_suppresses_and_is_counted() {
+        let src = "fn f() { v.unwrap(); } // audit:allow(panic-path) — ctor guarantees Some\n";
+        let a = audit_file("coding/protocol.rs", src);
+        assert!(violations(&a).is_empty());
+        assert_eq!(a.findings.len(), 1);
+        assert!(a.findings[0].allowed);
+        assert_eq!(a.findings[0].reason.as_deref(), Some("ctor guarantees Some"));
+        assert!(a.pragma_issues.is_empty());
+    }
+
+    #[test]
+    fn standalone_pragma_covers_next_code_line() {
+        let src = concat!(
+            "// audit:allow(lossy-cast) — wire norm header is fp32 by contract\n",
+            "fn f(x: f64) -> f32 { x as f32 }\n",
+        );
+        let a = audit_file("comm/codec.rs", src);
+        assert!(violations(&a).is_empty());
+        assert!(a.pragma_issues.is_empty());
+    }
+
+    #[test]
+    fn stale_pragma_rejected() {
+        let src = "// audit:allow(panic-path) — nothing here anymore\nfn f() {}\n";
+        let a = audit_file("comm/codec.rs", src);
+        assert_eq!(a.pragma_issues.len(), 1);
+        assert!(a.pragma_issues[0].problem.starts_with("stale"));
+    }
+
+    #[test]
+    fn unknown_rule_and_missing_reason_rejected() {
+        let src = concat!(
+            "// audit:allow(made-up-rule) — whatever\n",
+            "fn f() { v.unwrap(); }\n",
+            "// audit:allow(panic-path)\n",
+            "fn g() { w.unwrap(); }\n",
+        );
+        let a = audit_file("comm/codec.rs", src);
+        assert_eq!(a.pragma_issues.len(), 2);
+        assert_eq!(a.pragma_issues[0].problem, "unknown rule name");
+        assert!(a.pragma_issues[1].problem.contains("missing justification"));
+        // neither pragma suppresses, so both unwraps stay as violations
+        assert_eq!(violations(&a).len(), 2);
+    }
+
+    #[test]
+    fn cfg_test_code_is_exempt() {
+        let src = concat!(
+            "pub fn live() -> u32 { 1 }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    use std::collections::HashMap;\n",
+            "    #[test]\n",
+            "    fn t() { Some(1).unwrap(); let _ = 1.0f64 as f32; }\n",
+            "}\n",
+        );
+        let a = audit_file("coding/huffman.rs", src);
+        assert!(violations(&a).is_empty(), "{:?}", a.findings);
+    }
+
+    #[test]
+    fn rng_clone_detected_and_allowed() {
+        let src = concat!(
+            "fn bad(rng: &Rng) { let r = rng.clone(); }\n",
+            "fn good(splice_rng: &Rng) {\n",
+            "    // audit:allow(rng-clone) — leader stream advanced by layer_draws below\n",
+            "    let w = splice_rng.clone();\n",
+            "}\n",
+        );
+        let a = audit_file("coordinator/parallel.rs", src);
+        assert_eq!(violations(&a), vec![(RULE_RNG, 1)]);
+        assert!(a.pragma_issues.is_empty());
+        assert_eq!(a.findings.iter().filter(|f| f.allowed).count(), 1);
+    }
+
+    #[test]
+    fn cast_owner_files_are_exempt() {
+        let src = "pub fn q(x: f64) -> f32 { x as f32 }\n";
+        let owner = audit_file("quant/quantizer.rs", src);
+        assert!(owner.findings.is_empty());
+        let outsider = audit_file("quant/lgreco.rs", src);
+        assert_eq!(violations(&outsider), vec![(RULE_CAST, 1)]);
+    }
+
+    #[test]
+    fn widening_casts_not_flagged() {
+        let a = audit_file("coding/huffman.rs", "fn f(l: u8) -> u32 { l as u32 }\n");
+        assert!(a.findings.is_empty());
+    }
+}

@@ -1,0 +1,519 @@
+//! Token-level Rust scanner for the in-tree auditor.
+//!
+//! A deliberately small, zero-dependency lexer: it understands exactly enough
+//! Rust surface syntax to make the audit rules reliable — line/nested-block
+//! comments, string / raw-string / byte-string / char literals (so `"HashMap"`
+//! inside a string never trips a rule), lifetimes vs char literals, and number
+//! literals with type suffixes (so `0f32` is not an identifier). Everything
+//! else is emitted as a stream of [`Tok`]s: identifiers and single-character
+//! punctuation, each tagged with its 1-based source line.
+//!
+//! On top of the token stream the scanner derives two structural facts the
+//! rules need:
+//!
+//! * **pragmas** — `// audit:allow(<rule>) — <reason>` line comments, with
+//!   trailing-vs-standalone position so a pragma can cover either its own
+//!   line or the next line of code;
+//! * **test regions** — token ranges under `#[cfg(test)]` / `#[test]` items,
+//!   which every rule skips (tests are allowed to unwrap and to build hash
+//!   maps; only library code on the wire path is held to the invariants).
+
+/// One lexed token: an identifier or a single punctuation character.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tok {
+    /// 1-based source line the token starts on.
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident(String),
+    Punct(char),
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.kind, TokKind::Ident(i) if i == s)
+    }
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(&self.kind, TokKind::Punct(p) if *p == c)
+    }
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(i) => Some(i.as_str()),
+            TokKind::Punct(_) => None,
+        }
+    }
+}
+
+/// An `// audit:allow(<rule>) — <reason>` pragma found in a line comment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pragma {
+    /// Line the pragma comment sits on.
+    pub line: u32,
+    /// True when code tokens precede the comment on the same line (the pragma
+    /// then covers its own line; otherwise it covers the next code line).
+    pub trailing: bool,
+    /// Rule name between the parentheses, e.g. `panic-path`.
+    pub rule: String,
+    /// Justification text after the closing paren (separator stripped).
+    pub reason: String,
+}
+
+/// Result of lexing one file.
+#[derive(Debug, Default)]
+pub struct Scan {
+    pub toks: Vec<Tok>,
+    pub pragmas: Vec<Pragma>,
+}
+
+/// Lex `text` into tokens + pragmas. Never panics: unexpected bytes are
+/// skipped, unterminated literals simply end the scan at EOF.
+pub fn scan(text: &str) -> Scan {
+    let b = text.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    // line of the most recent token — tells a line comment whether code
+    // precedes it on the same line (trailing pragma) or not (standalone).
+    let mut last_tok_line = 0u32;
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            _ if c.is_ascii_whitespace() => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                // Line comment (includes doc comments). Capture for pragmas.
+                let start = i + 2;
+                let mut j = start;
+                while j < b.len() && b[j] != b'\n' {
+                    j += 1;
+                }
+                if let Some((rule, reason)) = parse_pragma(&text[start..j]) {
+                    pragmas.push(Pragma {
+                        line,
+                        trailing: last_tok_line == line,
+                        rule,
+                        reason,
+                    });
+                }
+                i = j;
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // Block comment; Rust block comments nest.
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => i = skip_string(b, i, &mut line),
+            b'\'' => i = skip_char_or_lifetime(b, i, &mut line),
+            _ if c == b'r' || c == b'b' => {
+                // Possible raw/byte string or byte-char prefix; falls back to
+                // a plain identifier when the prefix shape does not match.
+                if let Some(ni) = try_skip_prefixed_literal(b, i, &mut line) {
+                    i = ni;
+                } else {
+                    i = lex_ident(text, b, i, line, &mut toks);
+                    last_tok_line = line;
+                }
+            }
+            _ if c.is_ascii_alphabetic() || c == b'_' => {
+                i = lex_ident(text, b, i, line, &mut toks);
+                last_tok_line = line;
+            }
+            _ if c.is_ascii_digit() => {
+                // Number literal with optional suffix (`1.0f64`, `0x5A`,
+                // `1e-3` lexes as number / punct / number — harmless).
+                while i < b.len() {
+                    let d = b[i];
+                    if d.is_ascii_alphanumeric() || d == b'_' {
+                        i += 1;
+                    } else if d == b'.' && b.get(i + 1).map_or(false, |n| n.is_ascii_digit()) {
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            _ if c.is_ascii() => {
+                toks.push(Tok {
+                    line,
+                    kind: TokKind::Punct(c as char),
+                });
+                last_tok_line = line;
+                i += 1;
+            }
+            // Non-ASCII outside strings/comments is not valid Rust code;
+            // skip the byte rather than guess (continuation bytes are never
+            // b'\n', so line counting stays correct).
+            _ => i += 1,
+        }
+    }
+
+    Scan { toks, pragmas }
+}
+
+fn lex_ident(text: &str, b: &[u8], mut i: usize, line: u32, toks: &mut Vec<Tok>) -> usize {
+    let start = i;
+    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+        i += 1;
+    }
+    toks.push(Tok {
+        line,
+        kind: TokKind::Ident(text[start..i].to_string()),
+    });
+    i
+}
+
+/// Skip a normal `"..."` string starting at the opening quote.
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a char literal or a lifetime starting at the `'`.
+fn skip_char_or_lifetime(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    // Lifetime: 'ident not followed by a closing quote ('a' is a char).
+    let next_is_ident = b
+        .get(i + 1)
+        .map_or(false, |&n| n.is_ascii_alphabetic() || n == b'_');
+    let closes = b.get(i + 2) == Some(&b'\'');
+    if next_is_ident && !closes {
+        i += 1;
+        while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+            i += 1;
+        }
+        return i;
+    }
+    // Char literal: skip escape (if any), then scan to the closing quote.
+    i += 1;
+    if b.get(i) == Some(&b'\\') {
+        i += 2;
+    }
+    while i < b.len() && b[i] != b'\'' {
+        if b[i] == b'\n' {
+            *line += 1;
+        }
+        i += 1;
+    }
+    i + 1
+}
+
+/// At a `r` or `b`: skip `r"…"`, `r#"…"#`, `b"…"`, `b'…'`, `br"…"` / `br#"…"#`
+/// literals. Returns `None` when this is actually an identifier (including
+/// raw identifiers like `r#type`, which re-lex as punct + ident — fine).
+fn try_skip_prefixed_literal(b: &[u8], i: usize, line: &mut u32) -> Option<usize> {
+    match b[i] {
+        b'r' => match b.get(i + 1) {
+            Some(b'"') | Some(b'#') => skip_raw_string(b, i + 1, line),
+            _ => None,
+        },
+        b'b' => match b.get(i + 1) {
+            Some(b'"') => Some(skip_string(b, i + 1, line)),
+            Some(b'\'') => Some(skip_char_or_lifetime(b, i + 1, line)),
+            Some(b'r') => match b.get(i + 2) {
+                Some(b'"') | Some(b'#') => skip_raw_string(b, i + 2, line),
+                _ => None,
+            },
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// At the first `#` or `"` of a raw string body. Returns `None` when the
+/// hashes are not followed by a quote (then it was a raw identifier, not a
+/// raw string).
+fn skip_raw_string(b: &[u8], mut i: usize, line: &mut u32) -> Option<usize> {
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == b'#' {
+        hashes += 1;
+        i += 1;
+    }
+    if b.get(i) != Some(&b'"') {
+        return None;
+    }
+    i += 1;
+    while i < b.len() {
+        if b[i] == b'\n' {
+            *line += 1;
+            i += 1;
+        } else if b[i] == b'"' && b[i + 1..].len() >= hashes && b[i + 1..i + 1 + hashes].iter().all(|&h| h == b'#') {
+            return Some(i + 1 + hashes);
+        } else {
+            i += 1;
+        }
+    }
+    Some(i)
+}
+
+/// Parse `audit:allow(<rule>)<sep><reason>` out of a line-comment body.
+fn parse_pragma(comment: &str) -> Option<(String, String)> {
+    const KEY: &str = "audit:allow(";
+    let at = comment.find(KEY)?;
+    let rest = &comment[at + KEY.len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    // Separator between `)` and the reason: whitespace plus an optional
+    // em-dash, hyphen-run or colon.
+    let reason = rest[close + 1..]
+        .trim_start()
+        .trim_start_matches(&['—', '-', ':'][..])
+        .trim()
+        .to_string();
+    Some((rule, reason))
+}
+
+/// Token-index ranges `[start, end)` covered by `#[cfg(test)]` or `#[test]`
+/// items. The attribute tokens themselves are included in the range, and the
+/// range extends through the item's brace-matched body (or to its `;` for a
+/// bodiless item). `#[cfg(not(test))]` does **not** match — the pattern is
+/// the exact token sequence `# [ cfg ( test ) ]`.
+pub fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    let ident_at = |k: usize, s: &str| toks.get(k).map_or(false, |t| t.is_ident(s));
+    let punct_at = |k: usize, c: char| toks.get(k).map_or(false, |t| t.is_punct(c));
+
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(punct_at(i, '#') && punct_at(i + 1, '[')) {
+            i += 1;
+            continue;
+        }
+        // `#[cfg(test)]` => # [ cfg ( test ) ]   (7 tokens)
+        // `#[test]`      => # [ test ]           (4 tokens)
+        let attr_end = if ident_at(i + 2, "cfg")
+            && punct_at(i + 3, '(')
+            && ident_at(i + 4, "test")
+            && punct_at(i + 5, ')')
+            && punct_at(i + 6, ']')
+        {
+            Some(i + 6)
+        } else if ident_at(i + 2, "test") && punct_at(i + 3, ']') {
+            Some(i + 3)
+        } else {
+            None
+        };
+        let Some(attr_end) = attr_end else {
+            i += 2;
+            continue;
+        };
+        // Scan forward to the item body: the first `{` opens it (brace-match
+        // to its close), a `;` first means a bodiless item. Intervening
+        // attributes like `#[should_panic(expected = "…")]` contain neither,
+        // so they are crossed transparently.
+        let mut j = attr_end + 1;
+        let mut end = toks.len();
+        while j < toks.len() {
+            if punct_at(j, ';') {
+                end = j + 1;
+                break;
+            }
+            if punct_at(j, '{') {
+                let mut depth = 1usize;
+                let mut k = j + 1;
+                while k < toks.len() && depth > 0 {
+                    if punct_at(k, '{') {
+                        depth += 1;
+                    } else if punct_at(k, '}') {
+                        depth -= 1;
+                    }
+                    k += 1;
+                }
+                end = k;
+                break;
+            }
+            j += 1;
+        }
+        regions.push((i, end));
+        i = end;
+    }
+    regions
+}
+
+/// Map test-region token ranges to inclusive line ranges, so pragmas (which
+/// live in comments, not tokens) can also be excluded inside tests.
+pub fn region_lines(toks: &[Tok], regions: &[(usize, usize)]) -> Vec<(u32, u32)> {
+    regions
+        .iter()
+        .filter_map(|&(a, z)| {
+            let first = toks.get(a)?.line;
+            let last = toks.get(z.saturating_sub(1))?.line;
+            Some((first, last))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(s: &Scan) -> Vec<&str> {
+        s.toks.iter().filter_map(|t| t.ident()).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_tokens() {
+        let s = scan(concat!(
+            "let a = \"HashMap // not a comment\";\n",
+            "/* HashSet\n   /* nested */ still comment */\n",
+            "let b = r#\"unwrap()\"#;\n",
+            "let c = 'x'; let d: &'static str = \"\";\n",
+        ));
+        let ids = idents(&s);
+        assert!(ids.contains(&"a") && ids.contains(&"b") && ids.contains(&"c"));
+        assert!(!ids.contains(&"HashMap"));
+        assert!(!ids.contains(&"HashSet"));
+        assert!(!ids.contains(&"unwrap"));
+        // 'static lexes as a lifetime, not a char + ident
+        assert!(!ids.contains(&"static"));
+        assert!(ids.contains(&"str"));
+    }
+
+    #[test]
+    fn escaped_char_literals() {
+        let s = scan("let q = '\\''; let n = '\\n'; let u = '\\u{1F600}'; let e = 'é';");
+        let ids = idents(&s);
+        assert_eq!(
+            ids.iter().filter(|&&i| i == "let").count(),
+            4,
+            "all four statements lexed: {ids:?}"
+        );
+    }
+
+    #[test]
+    fn number_suffixes_are_not_idents() {
+        let s = scan("let x = 1.0f64 + 0f32; let y = 0x5A_u16;");
+        let ids = idents(&s);
+        assert!(!ids.contains(&"f64"));
+        assert!(!ids.contains(&"f32"));
+        assert!(!ids.contains(&"u16"));
+        // ...but a cast target is a real ident
+        let s2 = scan("let z = w as f32;");
+        assert!(idents(&s2).contains(&"f32"));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let s = scan("let a = \"x\ny\";\n/* c\nc */\nlet b = 1;\n");
+        let b = s.toks.iter().find(|t| t.is_ident("b")).map(|t| t.line);
+        assert_eq!(b, Some(5));
+    }
+
+    #[test]
+    fn pragma_trailing_vs_standalone() {
+        let s = scan(concat!(
+            "let x = v.unwrap(); // audit:allow(panic-path) — bounded by ctor\n",
+            "// audit:allow(lossy-cast) — wire norms are fp32 by contract\n",
+            "let y = n as f32;\n",
+        ));
+        assert_eq!(s.pragmas.len(), 2);
+        assert!(s.pragmas[0].trailing);
+        assert_eq!(s.pragmas[0].rule, "panic-path");
+        assert_eq!(s.pragmas[0].reason, "bounded by ctor");
+        assert!(!s.pragmas[1].trailing);
+        assert_eq!(s.pragmas[1].rule, "lossy-cast");
+        assert_eq!(s.pragmas[1].line, 2);
+    }
+
+    #[test]
+    fn pragma_colon_separator_and_empty_reason() {
+        let s = scan("// audit:allow(rng-clone): splice accounting advances the leader\nlet a = 1;\n// audit:allow(panic-path)\n");
+        assert_eq!(s.pragmas.len(), 2);
+        assert_eq!(s.pragmas[0].reason, "splice accounting advances the leader");
+        assert_eq!(s.pragmas[1].reason, "");
+    }
+
+    #[test]
+    fn cfg_test_region_covers_mod_body() {
+        let src = concat!(
+            "fn live() { v.unwrap(); }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    use std::collections::HashMap;\n",
+            "    #[test]\n",
+            "    fn t() { x.unwrap(); }\n",
+            "}\n",
+            "fn after() { y.unwrap(); }\n",
+        );
+        let s = scan(src);
+        let regions = test_regions(&s.toks);
+        assert_eq!(regions.len(), 1);
+        let (a, z) = regions[0];
+        let in_region = |name: &str| {
+            s.toks
+                .iter()
+                .enumerate()
+                .any(|(k, t)| t.is_ident(name) && k >= a && k < z)
+        };
+        assert!(in_region("HashMap"));
+        let unwraps: Vec<usize> = s
+            .toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_ident("unwrap"))
+            .map(|(k, _)| k)
+            .collect();
+        assert_eq!(unwraps.len(), 3);
+        assert!(unwraps[0] < a, "live() unwrap outside region");
+        assert!(unwraps[1] >= a && unwraps[1] < z, "test unwrap inside");
+        assert!(unwraps[2] >= z, "after() unwrap outside region");
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let s = scan("#[cfg(not(test))]\nfn live() { v.unwrap(); }\n");
+        assert!(test_regions(&s.toks).is_empty());
+    }
+
+    #[test]
+    fn test_attr_with_should_panic() {
+        let s = scan(concat!(
+            "#[test]\n",
+            "#[should_panic(expected = \"boom {\")]\n",
+            "fn t() { x.unwrap(); }\n",
+            "fn live() { y.unwrap(); }\n",
+        ));
+        let regions = test_regions(&s.toks);
+        assert_eq!(regions.len(), 1);
+        let (a, z) = regions[0];
+        let last_unwrap = s
+            .toks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_ident("unwrap"))
+            .map(|(k, _)| k)
+            .max();
+        assert!(last_unwrap.map_or(false, |k| k >= z || k < a), "live unwrap outside");
+    }
+}

@@ -57,10 +57,11 @@ impl Huffman {
                 }
                 impl Ord for Node {
                     fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-                        // min-heap via reverse; tie-break on id for determinism
-                        o.w.partial_cmp(&self.w)
-                            .unwrap()
-                            .then_with(|| o.id.cmp(&self.id))
+                        // min-heap via reverse; tie-break on id for
+                        // determinism. total_cmp is IEEE total order — same
+                        // result as partial_cmp on these weights (positive,
+                        // never NaN), but total
+                        o.w.total_cmp(&self.w).then_with(|| o.id.cmp(&self.id))
                     }
                 }
                 let mut heap = std::collections::BinaryHeap::new();
@@ -71,13 +72,15 @@ impl Huffman {
                 }
                 let mut next_id = n;
                 while heap.len() > 1 {
-                    let a = heap.pop().unwrap();
-                    let b = heap.pop().unwrap();
+                    let (a, b) = match (heap.pop(), heap.pop()) {
+                        (Some(a), Some(b)) => (a, b),
+                        _ => break, // unreachable: len > 1 was just checked
+                    };
                     children.push((a.id, b.id));
                     heap.push(Node { w: a.w + b.w, id: next_id });
                     next_id += 1;
                 }
-                let root = heap.pop().unwrap().id;
+                let root = heap.pop().map_or(0, |n| n.id);
                 // depth-first assign lengths
                 let mut stack = vec![(root, 0u32)];
                 while let Some((id, depth)) = stack.pop() {
@@ -96,6 +99,11 @@ impl Huffman {
 
     /// Canonical code from the length vector.
     pub fn from_lengths(lengths: Vec<u32>) -> Self {
+        assert!(
+            lengths.len() <= u16::MAX as usize,
+            "alphabet too large for u16 symbol ids ({})",
+            lengths.len()
+        );
         let max_len = lengths.iter().copied().max().unwrap_or(0);
         assert!(max_len <= 63, "codeword too long ({max_len})");
         let ml = max_len as usize;
@@ -113,6 +121,7 @@ impl Huffman {
             first_code[len] = code;
         }
         // symbols sorted by (length, symbol)
+        // audit:allow(lossy-cast) — alphabet size asserted ≤ u16::MAX above
         let mut sorted_syms: Vec<u16> = (0..lengths.len() as u16)
             .filter(|&s| lengths[s as usize] > 0)
             .collect();
@@ -157,6 +166,7 @@ impl Huffman {
             let step = 1usize << l;
             let mut idx = rc as usize;
             while idx < table.len() {
+                // audit:allow(lossy-cast) — s < alphabet ≤ u16::MAX, l ≤ table_bits ≤ 11
                 table[idx] = (s as u16, l as u8);
                 idx += step;
             }

@@ -41,12 +41,19 @@ pub struct Codebooks {
     pub kind: ProtocolKind,
     /// number of symbols per type
     sizes: Vec<usize>,
+    code: Code,
+}
+
+/// The protocol-specific code: the variant is fixed by `kind` at build time,
+/// so every accessor is a total match — no `Option` unwraps on the decode
+/// path.
+#[derive(Clone, Debug)]
+enum Code {
     /// Main: one code over ranks 0..max_size
-    main: Option<Huffman>,
+    Merged(Huffman),
     /// Alternating: one code over the union alphabet; type m's symbol j is
     /// `offsets[m] + j`
-    alt: Option<Huffman>,
-    offsets: Vec<usize>,
+    Joint { huff: Huffman, offsets: Vec<usize> },
 }
 
 const FLOOR: f64 = 1e-6;
@@ -59,15 +66,15 @@ impl Codebooks {
         let sizes: Vec<usize> = probs_per_type.iter().map(|p| p.len()).collect();
         match kind {
             ProtocolKind::Main => {
-                let max = *sizes.iter().max().unwrap();
+                let max = sizes.iter().copied().max().unwrap_or(0);
                 let mut merged = vec![0.0f64; max];
                 for (probs, &mu) in probs_per_type.iter().zip(proportions) {
                     for (j, &p) in probs.iter().enumerate() {
                         merged[j] += mu * p.max(FLOOR);
                     }
                 }
-                let main = Huffman::from_weights(&normalize(&merged));
-                Codebooks { kind, sizes, main: Some(main), alt: None, offsets: vec![] }
+                let huff = Huffman::from_weights(&normalize(&merged));
+                Codebooks { kind, sizes, code: Code::Merged(huff) }
             }
             ProtocolKind::Alternating => {
                 let mut offsets = Vec::with_capacity(sizes.len());
@@ -78,8 +85,8 @@ impl Codebooks {
                         joint.push(mu.max(FLOOR) * p.max(FLOOR));
                     }
                 }
-                let alt = Huffman::from_weights(&normalize(&joint));
-                Codebooks { kind, sizes, main: None, alt: Some(alt), offsets }
+                let huff = Huffman::from_weights(&normalize(&joint));
+                Codebooks { kind, sizes, code: Code::Joint { huff, offsets } }
             }
         }
     }
@@ -96,22 +103,18 @@ impl Codebooks {
 
     #[inline]
     fn encode_symbol(&self, w: &mut BitWriter, type_id: usize, sym: usize) {
-        match self.kind {
-            ProtocolKind::Main => self.main.as_ref().unwrap().encode(w, sym),
-            ProtocolKind::Alternating => self
-                .alt
-                .as_ref()
-                .unwrap()
-                .encode(w, self.offsets[type_id] + sym),
+        match &self.code {
+            Code::Merged(huff) => huff.encode(w, sym),
+            Code::Joint { huff, offsets } => huff.encode(w, offsets[type_id] + sym),
         }
     }
 
     #[inline]
     fn decode_symbol(&self, r: &mut BitReader, type_id: usize) -> Result<usize, DecodeError> {
-        match self.kind {
-            ProtocolKind::Main => {
-                let bit_pos = r.bit_pos();
-                let sym = self.main.as_ref().unwrap().decode(r)?;
+        let bit_pos = r.bit_pos();
+        match &self.code {
+            Code::Merged(huff) => {
+                let sym = huff.decode(r)?;
                 if sym >= self.sizes[type_id] {
                     // rank exists in the merged codebook but not for this
                     // type: corrupt or desynchronized stream (previously an
@@ -120,17 +123,14 @@ impl Codebooks {
                 }
                 Ok(sym)
             }
-            ProtocolKind::Alternating => {
-                let bit_pos = r.bit_pos();
-                let joint = self.alt.as_ref().unwrap().decode(r)?;
-                if joint < self.offsets[type_id]
-                    || joint >= self.offsets[type_id] + self.sizes[type_id]
-                {
+            Code::Joint { huff, offsets } => {
+                let joint = huff.decode(r)?;
+                if joint < offsets[type_id] || joint >= offsets[type_id] + self.sizes[type_id] {
                     // a decodable codeword of the *wrong* type: the stream
                     // desynchronized (or the layer map disagrees)
                     return Err(DecodeError::InvalidCode { bit_pos });
                 }
-                Ok(joint - self.offsets[type_id])
+                Ok(joint - offsets[type_id])
             }
         }
     }
@@ -141,15 +141,13 @@ impl Codebooks {
     /// encoder rebuilds these flat tables whenever the codebooks change.
     pub fn fill_code_table(&self, type_id: usize, out: &mut Vec<(u64, u32)>) {
         out.clear();
-        match self.kind {
-            ProtocolKind::Main => {
-                let h = self.main.as_ref().unwrap();
-                out.extend((0..self.sizes[type_id]).map(|j| h.code_bits(j)));
+        match &self.code {
+            Code::Merged(huff) => {
+                out.extend((0..self.sizes[type_id]).map(|j| huff.code_bits(j)));
             }
-            ProtocolKind::Alternating => {
-                let h = self.alt.as_ref().unwrap();
-                let off = self.offsets[type_id];
-                out.extend((0..self.sizes[type_id]).map(|j| h.code_bits(off + j)));
+            Code::Joint { huff, offsets } => {
+                let off = offsets[type_id];
+                out.extend((0..self.sizes[type_id]).map(|j| huff.code_bits(off + j)));
             }
         }
     }
@@ -160,30 +158,21 @@ impl Codebooks {
     /// of the union alphabet). The batched decoder range-checks against the
     /// window exactly like `decode_symbol`.
     pub(crate) fn decode_surface(&self, type_id: usize) -> (&Huffman, usize, usize) {
-        match self.kind {
-            ProtocolKind::Main => {
-                (self.main.as_ref().unwrap(), 0, self.sizes[type_id])
-            }
-            ProtocolKind::Alternating => (
-                self.alt.as_ref().unwrap(),
-                self.offsets[type_id],
-                self.sizes[type_id],
-            ),
+        match &self.code {
+            Code::Merged(huff) => (huff, 0, self.sizes[type_id]),
+            Code::Joint { huff, offsets } => (huff, offsets[type_id], self.sizes[type_id]),
         }
     }
 
     /// Expected bits per coordinate of type m (excluding sign/norm).
     pub fn expected_symbol_bits(&self, type_id: usize, probs: &[f64]) -> f64 {
-        match self.kind {
-            ProtocolKind::Main => self.main.as_ref().unwrap().expected_length(probs),
-            ProtocolKind::Alternating => {
-                let h = self.alt.as_ref().unwrap();
-                probs
-                    .iter()
-                    .enumerate()
-                    .map(|(j, &p)| p * h.code_len(self.offsets[type_id] + j) as f64)
-                    .sum()
-            }
+        match &self.code {
+            Code::Merged(huff) => huff.expected_length(probs),
+            Code::Joint { huff, offsets } => probs
+                .iter()
+                .enumerate()
+                .map(|(j, &p)| p * huff.code_len(offsets[type_id] + j) as f64)
+                .sum(),
         }
     }
 }
@@ -192,6 +181,7 @@ impl Codebooks {
 /// sign bits on nonzero levels. The layer segments are independent, which
 /// is what lets `comm` encode layers on worker threads and splice streams.
 pub fn encode_layer(layer: &QuantizedLayer, books: &Codebooks, w: &mut BitWriter) {
+    // audit:allow(lossy-cast) — the norm header is fp32 on the wire by contract (C_q = 32)
     w.write_f32(layer.norm as f32);
     for i in 0..layer.len {
         let sym = layer.indices[i] as usize;
@@ -234,6 +224,7 @@ pub fn decode_layer_into(
     out.signs.resize(len.div_ceil(64), 0);
     for i in 0..len {
         let sym = books.decode_symbol(r, type_id)?;
+        // audit:allow(lossy-cast) — decode_symbol range-checks against sizes[type_id] ≤ 255
         out.indices[i] = sym as u8;
         if sym != 0 {
             match r.try_read_bits(1) {

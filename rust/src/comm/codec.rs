@@ -98,6 +98,7 @@ impl Compressor for IdentityCompressor {
         packet.begin_encode(v.len(), w);
         packet.mark_layer(0);
         for &x in v {
+            // audit:allow(lossy-cast) — identity codec ships fp32 on the wire by definition
             w.write_f32(x as f32);
         }
         packet.finish_encode(w);
@@ -117,9 +118,12 @@ impl Compressor for IdentityCompressor {
             match r.try_read_bits(32) {
                 Some(bits) => out.push(f32::from_bits(bits as u32) as f64),
                 None => {
-                    return Err(CommError::Decode(crate::coding::DecodeError::Truncated {
+                    let e = CommError::Decode(crate::coding::DecodeError::Truncated {
                         bit_pos: r.bit_pos(),
-                    }))
+                    });
+                    #[cfg(debug_assertions)]
+                    debug_check_decode_error(packet, &r, &e);
+                    return Err(e);
                 }
             }
         }
@@ -329,6 +333,7 @@ impl QuantCompressor {
     fn encode_staged(&mut self, v: &[f64], packet: &mut WirePacket)
         -> Result<(), CommError> {
         self.v32.clear();
+        // audit:allow(lossy-cast) — the staged reference quantizes from fp32, like the wire contract
         self.v32.extend(v.iter().map(|&x| x as f32));
         {
             // per-type statistics for the next update step
@@ -424,21 +429,23 @@ impl QuantCompressor {
         // preceding chunks (one `next_u64` per coordinate of every layer
         // with a positive f32-rounded norm)
         let mut worker_rngs: Vec<Rng> = Vec::with_capacity(threads);
-        let mut cursor = rng.clone();
+        // audit:allow(rng-clone) — parallel-splice site: the cursor below replays the leader stream
+        let mut splice_rng = rng.clone();
         for (chunk_layers, chunk_norms) in
             map.layers.chunks(chunk).zip(layer_norms.chunks(chunk))
         {
-            worker_rngs.push(cursor.clone());
+            // audit:allow(rng-clone) — worker seed = leader stream advanced past all prior chunks' draws
+            worker_rngs.push(splice_rng.clone());
             let draws: usize = chunk_layers
                 .iter()
                 .zip(chunk_norms)
                 .map(|(l, &raw)| fused::layer_draws(raw, l.len))
                 .sum();
             for _ in 0..draws {
-                cursor.next_u64();
+                splice_rng.next_u64();
             }
         }
-        *rng = cursor; // final state == sequential encode's end state
+        *rng = splice_rng; // final state == sequential encode's end state
 
         let mut parts: Vec<Option<(Vec<usize>, BitBuf)>> = Vec::with_capacity(threads);
         std::thread::scope(|scope| {
@@ -486,6 +493,58 @@ impl QuantCompressor {
         packet.finish_encode(w);
         Ok(())
     }
+
+    /// DEC body shared by the staged and fused paths; split out so
+    /// `decode_into` can inspect the reader position when it errors.
+    fn decode_body(
+        &mut self,
+        r: &mut crate::coding::bitio::BitReader<'_>,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        if self.staged {
+            decode_vector_into(r, &self.map, &self.books, &mut self.dec_qv)?;
+            if r.remaining() != 0 {
+                return Err(CommError::TrailingBits { bits: r.remaining() });
+            }
+            dequantize_into(&self.dec_qv, &self.cfg, &mut self.out32);
+            out.clear();
+            out.extend(self.out32.iter().map(|&x| x as f64));
+        } else {
+            fused::decode_vector_fused(r, &self.map, &self.books, &self.cfg, out)?;
+            if r.remaining() != 0 {
+                return Err(CommError::TrailingBits { bits: r.remaining() });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Decode-error invariant (debug builds): whatever the failure, the reader
+/// must have stopped inside the payload, and the error's reported bit
+/// position must point inside it too — a decoder that runs past the end or
+/// reports a phantom position is a bug even when it correctly errors.
+#[cfg(debug_assertions)]
+fn debug_check_decode_error(
+    packet: &WirePacket,
+    r: &crate::coding::bitio::BitReader<'_>,
+    e: &CommError,
+) {
+    let len = packet.len_bits();
+    debug_assert!(
+        r.bit_pos() <= len,
+        "decode error left the reader at bit {} of a {len}-bit payload",
+        r.bit_pos()
+    );
+    if let CommError::Decode(d) = e {
+        let reported = match *d {
+            crate::coding::DecodeError::Truncated { bit_pos }
+            | crate::coding::DecodeError::InvalidCode { bit_pos } => bit_pos,
+        };
+        debug_assert!(
+            reported <= len,
+            "decode error reports bit {reported} outside the {len}-bit payload"
+        );
+    }
 }
 
 impl Compressor for QuantCompressor {
@@ -512,21 +571,12 @@ impl Compressor for QuantCompressor {
             return Err(CommError::DimMismatch { want: self.map.dim, got: packet.dim() });
         }
         let mut r = packet.payload().reader();
-        if self.staged {
-            decode_vector_into(&mut r, &self.map, &self.books, &mut self.dec_qv)?;
-            if r.remaining() != 0 {
-                return Err(CommError::TrailingBits { bits: r.remaining() });
-            }
-            dequantize_into(&self.dec_qv, &self.cfg, &mut self.out32);
-            out.clear();
-            out.extend(self.out32.iter().map(|&x| x as f64));
-        } else {
-            fused::decode_vector_fused(&mut r, &self.map, &self.books, &self.cfg, out)?;
-            if r.remaining() != 0 {
-                return Err(CommError::TrailingBits { bits: r.remaining() });
-            }
+        let res = self.decode_body(&mut r, out);
+        #[cfg(debug_assertions)]
+        if let Err(ref e) = res {
+            debug_check_decode_error(packet, &r, e);
         }
-        Ok(())
+        res
     }
 
     fn update_levels(&mut self) {

@@ -63,6 +63,9 @@ pub enum CommError {
     /// `panicked` parallel entropy-encode workers died; the packet was not
     /// produced. The codec itself stays usable.
     EncodeWorker { panicked: usize },
+    /// A node's worker thread (or its channel) went away before delivering
+    /// its round's packet — the exchange cannot complete.
+    WorkerLost,
 }
 
 impl From<DecodeError> for CommError {
@@ -83,6 +86,9 @@ impl std::fmt::Display for CommError {
             }
             CommError::EncodeWorker { panicked } => {
                 write!(f, "{panicked} parallel encode worker(s) panicked; packet dropped")
+            }
+            CommError::WorkerLost => {
+                write!(f, "a worker thread exited before delivering its round's packet")
             }
         }
     }

@@ -68,8 +68,48 @@ impl WirePacket {
     }
 
     /// Finish an encode: move the written bits into the payload.
+    ///
+    /// Debug builds validate the framing invariants here — and only here:
+    /// [`WirePacket::from_raw`] stays unchecked so corruption tests can
+    /// assemble deliberately malformed packets.
     pub(crate) fn finish_encode(&mut self, w: &mut BitWriter) {
+        #[cfg(debug_assertions)]
+        let written_bits = w.len_bits();
         w.finish_into(&mut self.payload);
+        #[cfg(debug_assertions)]
+        self.debug_validate(written_bits);
+    }
+
+    /// Encode-side invariants (debug builds): exact-bit-count consistency
+    /// between the writer and the finished payload, and layer-offset
+    /// monotonicity — offsets strictly increase, start at bit 0, and stay
+    /// inside the payload. The dynamic complement to the static
+    /// `qoda audit` rules (see `crate::analysis`).
+    #[cfg(debug_assertions)]
+    fn debug_validate(&self, written_bits: usize) {
+        debug_assert_eq!(
+            self.payload.len_bits(),
+            written_bits,
+            "finish_encode changed the bit count: writer had {written_bits}, payload has {}",
+            self.payload.len_bits()
+        );
+        if let Some(&first) = self.layer_offsets.first() {
+            debug_assert_eq!(first, 0, "first layer segment must start at bit 0");
+        }
+        for pair in self.layer_offsets.windows(2) {
+            debug_assert!(
+                pair[0] < pair[1],
+                "layer offsets must be strictly increasing: {:?}",
+                self.layer_offsets
+            );
+        }
+        if let Some(&last) = self.layer_offsets.last() {
+            debug_assert!(
+                last <= self.payload.len_bits(),
+                "layer offset {last} past payload end ({} bits)",
+                self.payload.len_bits()
+            );
+        }
     }
 }
 

@@ -235,7 +235,9 @@ pub fn run_rounds_over(
                 }
             }
             while have < k {
-                let r = reply_rx.recv().expect("reply");
+                // a dead worker (hung up without replying) is an exchange
+                // failure, not a leader panic
+                let r = reply_rx.recv().map_err(|_| CommError::WorkerLost)?;
                 if r.round == t {
                     slots[r.node] = Some(r.packet?);
                     have += 1;
@@ -254,13 +256,20 @@ pub fn run_rounds_over(
         // the golden-parity-critical path exists exactly once.
         let mut exchange_round = |t: usize, mean: &mut Vec<f64>| -> Result<(), CommError> {
             collect_round(t, &mut slots, &mut early)?;
-            let bits: Vec<u64> = slots
-                .iter()
-                .map(|s| s.as_ref().expect("one packet per node").len_bits() as u64)
-                .collect();
+            // collect_round filled every slot for round t; an empty slot
+            // here means the accounting broke — surface it, don't panic
+            let mut bits: Vec<u64> = Vec::with_capacity(k);
+            for s in slots.iter() {
+                match s {
+                    Some(p) => bits.push(p.len_bits() as u64),
+                    None => return Err(CommError::WorkerLost),
+                }
+            }
             decode_aggregate_into(k, d, mean, &mut decoded, |node, out| {
-                let packet = slots[node].as_ref().expect("one packet per node");
-                decoder.decode_into(packet, out)
+                match slots[node].as_ref() {
+                    Some(packet) => decoder.decode_into(packet, out),
+                    None => Err(CommError::WorkerLost),
+                }
             })?;
             let charge = transport.charge(
                 &bits,
@@ -282,7 +291,7 @@ pub fn run_rounds_over(
             ExchangeMode::Synchronous => {
                 for t in 1..=steps {
                     for tx in &to_workers {
-                        tx.send(Cmd::Eval(x.clone())).expect("worker alive");
+                        tx.send(Cmd::Eval(x.clone())).map_err(|_| CommError::WorkerLost)?;
                     }
                     exchange_round(t, &mut mean)?;
                     update(&mut x, &mean, t);
@@ -297,7 +306,7 @@ pub fn run_rounds_over(
                     std::collections::VecDeque::new();
                 if steps > 0 {
                     for tx in &to_workers {
-                        tx.send(Cmd::Eval(x.clone())).expect("worker alive");
+                        tx.send(Cmd::Eval(x.clone())).map_err(|_| CommError::WorkerLost)?;
                     }
                 }
                 for t in 1..=steps {
@@ -306,14 +315,13 @@ pub fn run_rounds_over(
                     // depth window and queue round t+1 — workers proceed
                     // while the leader decodes.
                     if t < steps {
-                        if let Some(&(r, _)) = staged.front() {
-                            if r + depth <= t {
-                                let (r, m) = staged.pop_front().expect("front exists");
+                        if staged.front().map_or(false, |&(r, _)| r + depth <= t) {
+                            if let Some((r, m)) = staged.pop_front() {
                                 update(&mut x, &m, r);
                             }
                         }
                         for tx in &to_workers {
-                            tx.send(Cmd::Eval(x.clone())).expect("worker alive");
+                            tx.send(Cmd::Eval(x.clone())).map_err(|_| CommError::WorkerLost)?;
                         }
                     }
                     exchange_round(t, &mut mean)?;

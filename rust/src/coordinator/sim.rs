@@ -176,11 +176,12 @@ impl ClusterSim {
             ExchangeMode::Overlapped { depth } => {
                 self.staged.push_back(mean);
                 if self.staged.len() > depth.max(1) {
-                    self.staged.pop_front().expect("staged non-empty")
+                    self.staged.pop_front()
                 } else {
-                    // the pipe is still filling: nothing has arrived yet
-                    vec![0.0; d]
+                    None
                 }
+                // the pipe is still filling: nothing has arrived yet
+                .unwrap_or_else(|| vec![0.0; d])
             }
         };
         Ok((out, metrics))

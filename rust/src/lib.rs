@@ -44,8 +44,29 @@
 //!   [`powersgd`];
 //! * [`bench_harness`], [`net`], [`vi`], [`stats`], [`util`] — experiment
 //!   harnesses, the analytic cluster network model, VI substrate and shared
-//!   infrastructure.
+//!   infrastructure;
+//! * [`analysis`] — the in-tree static auditor behind `qoda audit`.
+//!
+//! ## Invariant catalog
+//!
+//! The bit-exactness the parity suites pin is also enforced *statically* by
+//! `qoda audit` (see [`analysis`]) over the wire-affecting trees `coding/`,
+//! `comm/`, `quant/`, `coordinator/`:
+//!
+//! | rule | invariant | parity suite it protects |
+//! |------|-----------|--------------------------|
+//! | `hash-container` | no `HashMap`/`HashSet` on wire paths — hash iteration order must never reach a codebook or layer walk | `golden_parity`, `topology_equivalence` |
+//! | `panic-path` | decode/comm paths return [`comm::CommError`], never panic — corrupt bytes cannot poison a node | `comm_fuzz` |
+//! | `rng-clone` | `Rng` clones only at justified parallel-splice sites with `layer_draws` accounting | `fused_parity` (parallel == sequential encode) |
+//! | `lossy-cast` | truncating `as f32`/`as u8`/`as u16` confined to quantizer/bitio owner modules | protocol wire-width contract (`C_q` fp32 norms, u8 symbols) |
+//!
+//! Exceptions are explicit `// audit:allow(<rule>) — <reason>` pragmas that
+//! the auditor verifies still suppress a finding (stale allows fail the
+//! build). The dynamic complement runs in CI: Miri over `coding/` + `stats/`
+//! tests and ThreadSanitizer over `coordinator/parallel` tests, plus the
+//! `#[cfg(debug_assertions)]` packet invariants in [`comm::packet`].
 
+pub mod analysis;
 pub mod bench_harness;
 pub mod coding;
 pub mod comm;

@@ -18,10 +18,13 @@
 //!   ablations         adaptation-knob ablation (static/adaptive/L-GreCo)
 //!   train-gan         single WGAN training run
 //!   train-lm          single transformer-LM training run
+//!   audit             static invariant audit of rust/src (see `analysis`)
+//!                     [--json] [--out FILE.json] [--root DIR]
 //!   all               run the non-PJRT suite (writes results/*.csv)
 //!
 //! Malformed flags print the error plus this usage and exit with status 2 —
-//! no panics, no backtraces.
+//! no panics, no backtraces. `audit` exits 1 when the tree has unallowed
+//! findings or stale pragmas (CI's blocking `audit` job keys off that).
 //!
 //! `run` flags (all optional):
 //!   --solver qoda|qgenx|adam|oadam    --op quadratic|bilinear  --dim N --mu F
@@ -53,7 +56,7 @@ use qoda::vi::noise::NoiseModel;
 
 fn usage() -> &'static str {
     "usage: qoda <run|table1|table2|topology|overlap|fig4|table3|fig5|rates|verify-variance|\
-     verify-codelen|verify-mqv|protocols|optimism|ablations|train-gan|train-lm|all> \
+     verify-codelen|verify-mqv|protocols|optimism|ablations|train-gan|train-lm|audit|all> \
      [flags]\n(see `qoda help` or the module docs for per-command flags)"
 }
 
@@ -395,6 +398,28 @@ fn dispatch(args: &Args) -> Result<()> {
                 "final ppl {:.2}  compression rate {:.2}x",
                 run.final_ppl, run.compression_rate
             );
+        }
+        "audit" => {
+            let root = match args.get("root") {
+                Some(r) => std::path::PathBuf::from(r),
+                None => qoda::analysis::default_root(),
+            };
+            let report = qoda::analysis::run_audit(&root)?;
+            if let Some(path) = args.get("out") {
+                std::fs::write(path, report.to_json())
+                    .map_err(|e| Error::msg(format!("write {path}: {e}")))?;
+                eprintln!("audit: JSON report -> {path}");
+            }
+            if args.has("json") {
+                println!("{}", report.to_json());
+            } else {
+                print!("{}", report.render());
+            }
+            // distinct from the usage-error status 2: findings are a
+            // *verdict*, not a malformed invocation
+            if !report.clean() {
+                std::process::exit(1);
+            }
         }
         "all" => {
             for (name, t) in [

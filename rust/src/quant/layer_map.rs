@@ -96,7 +96,7 @@ impl LayerMap {
                 continue;
             }
             let mut it = line.split_whitespace();
-            let key = it.next().unwrap();
+            let Some(key) = it.next() else { continue };
             match key {
                 "dim" => {
                     dim = Some(

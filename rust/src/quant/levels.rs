@@ -21,7 +21,7 @@ impl LevelSequence {
     pub fn new(levels: Vec<f64>) -> Self {
         assert!(levels.len() >= 2, "need at least [0, 1]");
         assert_eq!(levels[0], 0.0, "l_0 must be 0");
-        assert_eq!(*levels.last().unwrap(), 1.0, "l_{{alpha+1}} must be 1");
+        assert_eq!(levels.last().copied(), Some(1.0), "l_{{alpha+1}} must be 1");
         for w in levels.windows(2) {
             assert!(w[1] > w[0], "levels must be strictly increasing: {levels:?}");
         }

@@ -82,6 +82,7 @@ pub fn allocate(layers: &[LayerProblem], budget_bits: f64) -> Allocation {
                 if prev.is_finite() && prev + err < dp2[u] {
                     dp2[u] = prev + err;
                     let mut b = back[u - cost_units].clone();
+                    // audit:allow(lossy-cast) — candidate index into the small alpha ladder
                     b.push(ci as u16);
                     back2[u] = b;
                 }
@@ -106,9 +107,9 @@ pub fn allocate(layers: &[LayerProblem], budget_bits: f64) -> Allocation {
                 l.candidates
                     .iter()
                     .enumerate()
-                    .min_by(|a, b| a.1.bits.partial_cmp(&b.1.bits).unwrap())
-                    .unwrap()
-                    .0
+                    .min_by(|a, b| a.1.bits.total_cmp(&b.1.bits))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
             })
             .collect();
         let total_bits = layers

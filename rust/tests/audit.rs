@@ -1,0 +1,160 @@
+//! The auditor audited: fixture-based self-tests for every `qoda audit`
+//! rule (detection, pragma suppression, stale-pragma rejection) plus the
+//! meta-test that the live tree is clean — the test CI's blocking `audit`
+//! job re-runs through the CLI.
+//!
+//! The fixture files under `tests/audit_fixtures/src/` are *data*, not
+//! code: cargo only compiles top-level `tests/*.rs`, so the deliberately
+//! broken sources in the subdirectory never build.
+
+use qoda::analysis::{run_audit, rules, AuditReport};
+use std::path::Path;
+
+fn fixture_root() -> &'static Path {
+    Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/audit_fixtures/src"
+    ))
+}
+
+fn live_root() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))
+}
+
+fn fixture_report() -> AuditReport {
+    run_audit(fixture_root()).expect("fixture tree walks")
+}
+
+fn violations(r: &AuditReport) -> Vec<(&'static str, String, u32)> {
+    r.violations()
+        .map(|f| (f.rule, f.file.clone(), f.line))
+        .collect()
+}
+
+#[test]
+fn every_rule_detects_its_fixture() {
+    let r = fixture_report();
+    let v = violations(&r);
+    let expect: &[(&str, &str, u32)] = &[
+        // hash-container: import + type + construction
+        (rules::RULE_HASH, "comm/determinism_bad.rs", 4),
+        (rules::RULE_HASH, "comm/determinism_bad.rs", 6),
+        (rules::RULE_HASH, "comm/determinism_bad.rs", 7),
+        // panic-path: unwrap, expect, panic!, unreachable!
+        (rules::RULE_PANIC, "coding/panic_bad.rs", 5),
+        (rules::RULE_PANIC, "coding/panic_bad.rs", 6),
+        (rules::RULE_PANIC, "coding/panic_bad.rs", 8),
+        (rules::RULE_PANIC, "coding/panic_bad.rs", 12),
+        // rng-clone: the unjustified clone only
+        (rules::RULE_RNG, "coordinator/rng_bad.rs", 14),
+        // lossy-cast: f32 + u16 narrowing, not the u8->u32 widening
+        (rules::RULE_CAST, "quant/cast_bad.rs", 5),
+        (rules::RULE_CAST, "quant/cast_bad.rs", 9),
+    ];
+    for (rule, file, line) in expect {
+        assert!(
+            v.iter().any(|(r2, f2, l2)| r2 == rule && f2 == file && l2 == line),
+            "missing expected finding {rule} {file}:{line}; got {v:?}"
+        );
+    }
+    assert_eq!(v.len(), expect.len(), "unexpected extra findings: {v:?}");
+}
+
+#[test]
+fn negative_fixtures_stay_silent() {
+    let r = fixture_report();
+    for silent in [
+        "comm/determinism_ok.rs",   // BTreeMap + hash names in strings/comments/tests
+        "quant/quantizer.rs",       // lossy-cast owner module
+        "util/outside.rs",          // outside the wire-affecting scope
+    ] {
+        assert!(
+            !r.violations().any(|f| f.file == silent),
+            "{silent} should produce no violations"
+        );
+    }
+}
+
+#[test]
+fn pragmas_suppress_and_record_reasons() {
+    let r = fixture_report();
+    let allowed: Vec<_> = r.allowed().collect();
+    assert_eq!(allowed.len(), 3, "{allowed:?}");
+    // trailing form
+    assert!(allowed.iter().any(|f| {
+        f.file == "coding/panic_allowed.rs"
+            && f.line == 5
+            && f.reason.as_deref() == Some("caller guarantees non-empty")
+    }));
+    // standalone form covers the next code line
+    assert!(allowed.iter().any(|f| {
+        f.file == "coding/panic_allowed.rs"
+            && f.line == 10
+            && f.reason.as_deref() == Some("constructor always sets this field")
+    }));
+    // justified rng splice site
+    assert!(allowed
+        .iter()
+        .any(|f| f.file == "coordinator/rng_bad.rs" && f.rule == rules::RULE_RNG));
+    // suppressed findings are not violations
+    assert!(!r.violations().any(|f| f.file == "coding/panic_allowed.rs"));
+}
+
+#[test]
+fn bad_pragmas_are_rejected() {
+    let r = fixture_report();
+    let issues: Vec<_> = r
+        .pragma_issues
+        .iter()
+        .filter(|p| p.file == "coding/stale_pragma.rs")
+        .collect();
+    assert_eq!(issues.len(), 3, "{issues:?}");
+    assert!(issues
+        .iter()
+        .any(|p| p.line == 4 && p.problem.starts_with("stale")));
+    assert!(issues
+        .iter()
+        .any(|p| p.line == 9 && p.problem.contains("unknown rule")));
+    assert!(issues
+        .iter()
+        .any(|p| p.line == 12 && p.problem.contains("missing justification")));
+    // any pragma issue fails the audit even with zero violations elsewhere
+    assert!(!r.clean());
+}
+
+#[test]
+fn live_tree_is_clean() {
+    let r = run_audit(live_root()).expect("live tree walks");
+    let mut complaints = String::new();
+    for f in r.violations() {
+        complaints.push_str(&format!("  {}:{} [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    for p in &r.pragma_issues {
+        complaints.push_str(&format!(
+            "  {}:{} pragma audit:allow({}) {}\n",
+            p.file, p.line, p.rule, p.problem
+        ));
+    }
+    assert!(
+        r.clean(),
+        "`qoda audit` must pass on the live tree; fix or justify:\n{complaints}"
+    );
+    // the justified exceptions stay few and deliberate — if this number
+    // grows, each new allow needs the same scrutiny as a parity change
+    assert!(
+        r.allowed().count() <= 16,
+        "allowed findings ballooned: {}",
+        r.allowed().count()
+    );
+}
+
+#[test]
+fn json_report_is_well_formed_and_stable() {
+    let r = fixture_report();
+    let j = r.to_json();
+    assert!(j.contains("\"schema\": \"qoda-audit/1\""));
+    assert!(j.contains("\"clean\": false"));
+    assert_eq!(j.matches('{').count(), j.matches('}').count());
+    // deterministic across runs (sorted file walk)
+    assert_eq!(j, fixture_report().to_json());
+}

@@ -1,0 +1,11 @@
+//! Fixture: pragma suppression — trailing and standalone forms.
+//! NOT compiled — data for `tests/audit.rs` only.
+
+pub fn trailing(v: &[u32]) -> u32 {
+    *v.last().unwrap() // audit:allow(panic-path) — caller guarantees non-empty
+}
+
+pub fn standalone(v: Option<u32>) -> u32 {
+    // audit:allow(panic-path) — constructor always sets this field
+    v.unwrap()
+}

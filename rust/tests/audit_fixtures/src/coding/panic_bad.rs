@@ -1,0 +1,19 @@
+//! Fixture: panic-path violations on a decode path.
+//! NOT compiled — data for `tests/audit.rs` only.
+
+pub fn decode_header(bytes: &[u8]) -> u32 {
+    let first = bytes.first().unwrap();
+    let second = bytes.get(1).expect("second byte");
+    if *first == 0 {
+        panic!("zero header");
+    }
+    match second {
+        0..=254 => (*first as u32) << 8 | *second as u32,
+        _ => unreachable!(),
+    }
+}
+
+pub fn not_a_panic(v: Option<u32>) -> u32 {
+    // unwrap_or_else is its own identifier, not a `.unwrap()` call
+    v.unwrap_or_else(|| 0)
+}

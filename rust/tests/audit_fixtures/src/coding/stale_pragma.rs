@@ -1,0 +1,13 @@
+//! Fixture: pragma rejection — stale, unknown rule, missing reason.
+//! NOT compiled — data for `tests/audit.rs` only.
+
+// audit:allow(panic-path) — the unwrap this justified was refactored away
+pub fn now_clean(v: Option<u32>) -> u32 {
+    v.unwrap_or(0)
+}
+
+// audit:allow(no-such-rule) — rule name does not exist
+pub fn also_clean() {}
+
+// audit:allow(hash-container)
+pub fn missing_reason() {}

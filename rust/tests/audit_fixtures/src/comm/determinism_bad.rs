@@ -1,0 +1,12 @@
+//! Fixture: hash-container violations in a wire-scoped module.
+//! NOT compiled — data for `tests/audit.rs` only.
+
+use std::collections::HashMap;
+
+pub fn build_codebook_badly(symbols: &[usize]) -> HashMap<usize, u64> {
+    let mut m = HashMap::new();
+    for (code, &s) in symbols.iter().enumerate() {
+        m.insert(s, code as u64);
+    }
+    m
+}

@@ -1,0 +1,20 @@
+//! Fixture: rng-clone — an unjustified clone is a finding, a justified
+//! parallel-splice clone is allowed.
+//! NOT compiled — data for `tests/audit.rs` only.
+
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn clone(&self) -> Rng {
+        Rng(self.0)
+    }
+}
+
+pub fn desync(rng: &Rng) -> Rng {
+    rng.clone()
+}
+
+pub fn splice(worker_rng: &Rng) -> Rng {
+    // audit:allow(rng-clone) — splice site: leader stream advanced past this chunk's draws
+    worker_rng.clone()
+}

@@ -1,0 +1,14 @@
+//! Fixture: lossy-cast violations outside the owner modules.
+//! NOT compiled — data for `tests/audit.rs` only.
+
+pub fn shrink(x: f64) -> f32 {
+    x as f32
+}
+
+pub fn index(n: usize) -> u16 {
+    n as u16
+}
+
+pub fn widen_is_fine(l: u8) -> u32 {
+    l as u32
+}

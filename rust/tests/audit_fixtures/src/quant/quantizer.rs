@@ -1,0 +1,11 @@
+//! Fixture: quant/quantizer.rs is a lossy-cast OWNER — truncation here is
+//! the contract (mapping f64 activations onto the fp32 level ladder).
+//! NOT compiled — data for `tests/audit.rs` only.
+
+pub fn to_wire(x: f64) -> f32 {
+    x as f32
+}
+
+pub fn symbol(sym: usize) -> u8 {
+    sym as u8
+}

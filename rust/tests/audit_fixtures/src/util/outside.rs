@@ -1,0 +1,11 @@
+//! Fixture: util/ is outside the wire-affecting scope — none of the rules
+//! apply here, whatever the code does.
+//! NOT compiled — data for `tests/audit.rs` only.
+
+use std::collections::HashMap;
+
+pub fn scratch(v: Option<u32>) -> u32 {
+    let mut m: HashMap<u32, f32> = HashMap::new();
+    m.insert(1, 2.0f64 as f32);
+    v.unwrap()
+}
