@@ -47,8 +47,11 @@ pub const RULES: &[(&str, &str)] = &[
     ),
 ];
 
-/// Module trees whose code can affect the encoded wire stream.
-pub const WIRE_DIRS: &[&str] = &["coding/", "comm/", "quant/", "coordinator/"];
+/// Module trees whose code can affect the encoded wire stream. `wire/` is
+/// the measured-TCP runtime: its frames carry the coded packets verbatim,
+/// so it is held to the same panic-free / no-hash-container bar as the
+/// in-process engines.
+pub const WIRE_DIRS: &[&str] = &["coding/", "comm/", "quant/", "coordinator/", "wire/"];
 
 /// Files that *own* the wire's lossy value widths: the quantizer maps f64
 /// activations onto the level ladder, bitio/fused write the u8/u16 wire

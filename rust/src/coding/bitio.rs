@@ -130,6 +130,25 @@ impl BitBuf {
         w.words.clear();
         w.bits = 0;
     }
+
+    /// The backing 64-bit words (bit 0 of the stream is the LSB of word 0).
+    /// A transport serializing the buffer ships these little-endian plus
+    /// `len_bits`; [`BitBuf::from_words`] reconstructs on the far side.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Reassemble a buffer from its backing words and exact bit count (the
+    /// wire-transport counterpart of [`BitBuf::words`]). Returns `None`
+    /// when the word count does not match the bit count — a framing error,
+    /// not a panic.
+    pub fn from_words(words: Vec<u64>, bits: usize) -> Option<BitBuf> {
+        if words.len() == bits.div_ceil(64) {
+            Some(BitBuf { words, bits })
+        } else {
+            None
+        }
+    }
 }
 
 /// Sequential bit reader.

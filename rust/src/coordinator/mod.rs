@@ -54,6 +54,13 @@
 //!                against `sim` across all topologies, both protocols and
 //!                multiple seeds — in both exchange modes.
 //!
+//! A third engine lives outside this module: [`wire`](crate::wire) runs the
+//! same exchange over real localhost TCP sockets — every node an OS thread,
+//! the coded packets shipped as actual bytes — and *measures* `comm_s` with
+//! monotonic clocks instead of charging the analytic model. It consumes the
+//! same [`core`] decode-aggregate rule, so its aggregates are pinned
+//! bit-identical to both engines here by `tests/wire_e2e.rs`.
+//!
 //! Decode failures surface as `comm::CommError` from both engines — corrupt
 //! wire bytes can never panic the coordinator. A new transport is a new
 //! [`Transport`] implementation (one file), not an engine fork: the engines

@@ -42,6 +42,13 @@
 //! * [`runtime`] — the native model backend (WGAN game + transformer-LM
 //!   stand-in) driving the Section 7 workloads via [`gan`], [`lm`] and
 //!   [`powersgd`];
+//! * [`wire`] — the measured-wire TCP runtime: a third coordinator engine
+//!   where every node is a real OS thread shipping the actual coded
+//!   [`comm::WirePacket`] bytes over localhost sockets and `comm_s` is a
+//!   monotonic-clock *measurement* around real socket I/O (the analytic
+//!   charge model is never consulted on this path); aggregates reuse the
+//!   same decode-aggregate core, so they stay bit-identical to the
+//!   simulated engines (pinned by `tests/wire_e2e.rs`);
 //! * [`bench_harness`], [`net`], [`vi`], [`stats`], [`util`] — experiment
 //!   harnesses, the analytic cluster network model, VI substrate and shared
 //!   infrastructure;
@@ -51,7 +58,7 @@
 //!
 //! The bit-exactness the parity suites pin is also enforced *statically* by
 //! `qoda audit` (see [`analysis`]) over the wire-affecting trees `coding/`,
-//! `comm/`, `quant/`, `coordinator/`:
+//! `comm/`, `quant/`, `coordinator/`, `wire/`:
 //!
 //! | rule | invariant | parity suite it protects |
 //! |------|-----------|--------------------------|
@@ -81,3 +88,4 @@ pub mod runtime;
 pub mod stats;
 pub mod util;
 pub mod vi;
+pub mod wire;

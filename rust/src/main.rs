@@ -16,6 +16,12 @@
 //!   protocols         Main vs Alternating under jitter (V6)
 //!   optimism          QODA vs Q-GenX oracle/wire cost
 //!   ablations         adaptation-knob ablation (static/adaptive/L-GreCo)
+//!   wire              measured-wire TCP runtime: fp32 vs coded exchanges
+//!                     over real localhost sockets per K, comm_s from
+//!                     monotonic clocks (never the analytic charge model)
+//!                     [--nodes N | --ks 4,8,12] [--steps T] [--dim D]
+//!                     [--bits B --bucket N] [--exchange sync|overlap]
+//!                     [--depth D] [--compute-ms MS] [--seed S] [--out F]
 //!   train-gan         single WGAN training run
 //!   train-lm          single transformer-LM training run
 //!   audit             static invariant audit of rust/src (see `analysis`)
@@ -39,9 +45,9 @@
 //!   --exchange sync|overlap           --depth D (overlap pipeline depth)
 //!   --compute-ms MS (modeled compute per step the overlap hides behind)
 
-use qoda::bench_harness::{experiments, model_experiments};
+use qoda::bench_harness::{experiments, model_experiments, JsonBench};
 use qoda::coding::protocol::ProtocolKind;
-use qoda::coordinator::{ExchangeMode, TopologySpec};
+use qoda::coordinator::{ExchangeMode, ExchangePlan, TopologySpec};
 use qoda::gan::trainer::{GanCompression, GanOptimizer, GanTrainConfig};
 use qoda::lm::trainer::{LmTrainConfig, QuantTarget};
 use qoda::net::NetworkModel;
@@ -53,10 +59,11 @@ use qoda::util::cli::Args;
 use qoda::util::error::{Error, Result};
 use qoda::util::table::{save_series_csv, Table};
 use qoda::vi::noise::NoiseModel;
+use qoda::wire::{run_wire, WireCodecSpec, WireOptions, Workload};
 
 fn usage() -> &'static str {
     "usage: qoda <run|table1|table2|topology|overlap|fig4|table3|fig5|rates|verify-variance|\
-     verify-codelen|verify-mqv|protocols|optimism|ablations|train-gan|train-lm|audit|all> \
+     verify-codelen|verify-mqv|protocols|optimism|ablations|wire|train-gan|train-lm|audit|all> \
      [flags]\n(see `qoda help` or the module docs for per-command flags)"
 }
 
@@ -218,6 +225,124 @@ fn run_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `qoda wire` — drive the measured-wire TCP runtime: fp32 vs entropy-coded
+/// exchanges over real localhost sockets at each K, flat and hierarchical,
+/// with `comm_s` measured by monotonic clocks around the actual socket I/O
+/// (the analytic charge model is never consulted on this path). Measured
+/// records land as `wire/*` entries in `results/` for CI artifacts;
+/// `scripts/check_bench.py` treats them as informational, not regression
+/// floors, since socket latency varies across runners.
+fn wire_cmd(args: &Args) -> Result<()> {
+    let ks: Vec<usize> = if args.has("nodes") {
+        vec![args.usize_or("nodes", 4)?]
+    } else {
+        args.list_or("ks", vec![4usize, 8, 12])?
+    };
+    let steps = args.usize_or("steps", 30)?;
+    let dim = args.usize_or("dim", 1 << 18)?;
+    let bits = args.usize_or("bits", 4)? as u32;
+    let bucket = args.usize_or("bucket", 128)?;
+    let seed = args.u64_or("seed", 1)?;
+    // overlapped by default: the whole point of the measured runtime is to
+    // overlap real latency, and the leader's read-before-write lookahead is
+    // what keeps kernel socket buffers drained at the larger K
+    let exchange = args.get_or("exchange", "overlap");
+    let mode = ExchangeMode::parse(&exchange, args.usize_or("depth", 1)?).ok_or_else(|| {
+        Error::msg(format!("--exchange expects sync|overlap, got {exchange:?}"))
+    })?;
+    let plan = ExchangePlan {
+        mode,
+        compute_s_per_step: args.f64_or("compute-ms", 0.0)? * 1e-3,
+    };
+    let out = args.get_or("out", "WIRE_timing.json");
+
+    let fp32 = CompressionSpec::None.wire_codec(dim, ProtocolKind::Main);
+    let coded = CompressionSpec::Global { bits, bucket }.wire_codec(dim, ProtocolKind::Main);
+    let x0 = vec![0.0f64; dim];
+    let update = |x: &mut Vec<f64>, mean: &[f64], _t: usize| {
+        for (xi, m) in x.iter_mut().zip(mean) {
+            *xi -= 0.05 * m;
+        }
+    };
+
+    let mut t = Table::new(
+        "wire — measured localhost comm (monotonic clocks around real sockets)",
+        &["K", "variant", "Mbit/round", "comm ms/round", "exposed ms/round", "wire MB total"],
+    );
+    let mut bench = JsonBench::new();
+    for &k in &ks {
+        let variants: Vec<(&str, &WireCodecSpec, TopologySpec)> = vec![
+            ("fp32-flat", &fp32, TopologySpec::BroadcastAllGather),
+            ("coded-flat", &coded, TopologySpec::BroadcastAllGather),
+            ("coded-hier", &coded, TopologySpec::hierarchical_for(k)),
+        ];
+        let mut comm_ms_of: Vec<(String, f64)> = Vec::new();
+        for (label, codec, topo) in variants {
+            let report = run_wire(
+                Workload::Synthetic { dim, scale: 1.0 },
+                k,
+                codec,
+                &x0,
+                steps,
+                seed,
+                &topo,
+                plan,
+                &WireOptions::default(),
+                &update,
+            )
+            .map_err(|e| Error::msg(format!("wire {label} K={k}: {e:?}")))?;
+            let rounds = report.rounds.len().max(1) as f64;
+            let mbit_per_round = report.payload_bits as f64 / rounds / 1e6;
+            let comm_ms = report.comm_s / rounds * 1e3;
+            let exposed_ms = report.comm_exposed_s / rounds * 1e3;
+            let wire_mb = report.frame_bytes as f64 / 1e6;
+            t.row(&[
+                format!("{k}"),
+                label.to_string(),
+                format!("{mbit_per_round:.3}"),
+                format!("{comm_ms:.3}"),
+                format!("{exposed_ms:.3}"),
+                format!("{wire_mb:.1}"),
+            ]);
+            bench.push(
+                &format!("wire/k{k}/{label}"),
+                &[
+                    ("nodes", format!("{k}")),
+                    ("steps", format!("{steps}")),
+                    ("dim", format!("{dim}")),
+                    ("topology", format!("{:?}", topo.label())),
+                    ("exchange", format!("{:?}", exchange)),
+                    ("measured_comm_ms_per_round", format!("{comm_ms:.3}")),
+                    ("measured_exposed_ms_per_round", format!("{exposed_ms:.3}")),
+                    ("payload_mbit_per_round", format!("{mbit_per_round:.3}")),
+                    ("frame_mb_total", format!("{wire_mb:.3}")),
+                ],
+            );
+            comm_ms_of.push((label.to_string(), comm_ms));
+        }
+        let ms = |name: &str| {
+            comm_ms_of
+                .iter()
+                .find(|(l, _)| l == name)
+                .map(|&(_, v)| v)
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "K={k}: coded gives {:.2}x the fp32 measured comm rate (flat); \
+             hierarchical is {:.2}x flat (coded)",
+            ms("fp32-flat") / ms("coded-flat"),
+            ms("coded-flat") / ms("coded-hier"),
+        );
+    }
+    t.print();
+    t.save_csv("wire.csv")?;
+    let path = bench
+        .save_merged(&out)
+        .map_err(|e| Error::msg(format!("write {out}: {e}")))?;
+    println!("measured wire records -> {}", path.display());
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -316,6 +441,9 @@ fn dispatch(args: &Args) -> Result<()> {
             let t = experiments::optimism_table();
             t.print();
             t.save_csv("optimism.csv")?;
+        }
+        "wire" => {
+            wire_cmd(args)?;
         }
         "train-gan" => {
             let rt = Runtime::cpu()?;

@@ -1,9 +1,28 @@
-//! Network model for the multi-node Genesis-Cloud-style environment of the
+//! The **modeled** half of the repo's comm-seconds story: an analytic
+//! network clock for the multi-node Genesis-Cloud-style environment of the
 //! paper's Section 7.1 (4–16 single-GPU nodes, 1–5 Gbps inter-node links,
 //! OpenMPI for quantized payloads / NCCL ring-allreduce for fp32).
 //!
-//! The coder produces *real encoded byte counts*; this module converts them
-//! to wall-clock the way a bandwidth-bound cluster does. It models:
+//! `comm_s` in this codebase comes from one of two places, and the split is
+//! architectural:
+//!
+//! * **Modeled** (this module) — the coder produces *real encoded byte
+//!   counts* and this module converts them to wall-clock analytically, the
+//!   way a bandwidth-bound cluster does. Deterministic, machine-independent,
+//!   parameterized (bandwidth, link classes, stragglers, jitter) — what the
+//!   Table 1/2 harnesses sweep, because a sweep over bandwidths needs a
+//!   clock you can dial.
+//! * **Measured** ([`crate::wire`]) — the same coded packets shipped as
+//!   actual bytes over real localhost TCP sockets, with `comm_s` read off a
+//!   monotonic clock around the socket I/O. Machine-dependent by design;
+//!   nothing under `wire/` consults this module's charge model, and nothing
+//!   here ever touches a socket. The two paths share only the packets, the
+//!   decode-aggregate core and the exposed-vs-hidden split arithmetic
+//!   ([`crate::coordinator::topology::ExchangePlan::split`]), so measured
+//!   runs validate the model's *orderings* (coded vs fp32, hierarchical vs
+//!   flat, overlap hiding) without inheriting its assumptions.
+//!
+//! The model side covers:
 //!
 //! * the flat ring collectives ([`Collective`]), per-hop latency, jitter
 //!   (Remark D.3) and the baseline's scaling degradation that Table 2

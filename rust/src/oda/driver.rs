@@ -38,7 +38,10 @@ use super::qgenx::QGenX;
 use super::qoda::Qoda;
 use super::source::OracleSource;
 use crate::coding::protocol::ProtocolKind;
-use crate::comm::{Adaptation, CommEndpoint, Compressor, IdentityCompressor, QuantCompressor};
+use crate::comm::{
+    Adaptation, CommEndpoint, CommError, Compressor, IdentityCompressor, QuantCompressor,
+};
+use crate::coordinator::parallel::SharedQuantState;
 use crate::coordinator::topology::{
     ExchangeMode, ExchangePlan, TopologySpec, Transport, WireCharge,
 };
@@ -50,6 +53,7 @@ use crate::stats::vecops::{l2_norm64, sub};
 use crate::vi::gap::GapEvaluator;
 use crate::vi::noise::NoiseModel;
 use crate::vi::operator::{BilinearGame, Operator, QuadraticOperator};
+use crate::wire::{run_wire_observed, WireCodecSpec, WireOptions, WireReport, Workload};
 
 // ---------------------------------------------------------------------------
 // The step-wise solver contract
@@ -630,6 +634,39 @@ impl CompressionSpec {
             }
         }
     }
+
+    /// The [`WireCodecSpec`] equivalent of this compression for the
+    /// measured-wire TCP runtime ([`crate::wire`]): the same layer maps and
+    /// level widths, pinned to `Adaptation::Fixed`. Wire nodes carry no
+    /// codebook control channel, so adaptive schedules (L-GreCo) map to
+    /// their fixed-level equivalents — bit widths and bucket structure are
+    /// preserved, in-run level adaptation is not.
+    pub fn wire_codec(&self, dim: usize, protocol: ProtocolKind) -> WireCodecSpec {
+        match self {
+            CompressionSpec::None => WireCodecSpec::Identity,
+            // mirror `QuantCompressor::global_bits_proto`: one global type
+            // over bucket-sized segments
+            CompressionSpec::Global { bits, bucket } => {
+                WireCodecSpec::Quant(SharedQuantState {
+                    map: LayerMap::single(dim).bucketed(*bucket).with_single_type(),
+                    cfg: QuantConfig::uniform_bits(1, *bits, 2.0),
+                    protocol,
+                })
+            }
+            CompressionSpec::Layerwise { map, bits, bucket, .. } => {
+                let m = map.bucketed(*bucket);
+                let cfg = QuantConfig::uniform_bits(m.num_types(), *bits, 2.0);
+                WireCodecSpec::Quant(SharedQuantState { map: m, cfg, protocol })
+            }
+            CompressionSpec::Quantized { map, bits, .. } => {
+                WireCodecSpec::Quant(SharedQuantState {
+                    map: map.clone(),
+                    cfg: QuantConfig::uniform_bits(map.num_types(), *bits, 2.0),
+                    protocol,
+                })
+            }
+        }
+    }
 }
 
 /// Learning-rate schedule for a [`RunSpec`] (ignored by the Adam solvers,
@@ -822,6 +859,55 @@ impl RunSpec {
     /// Build everything and drive the run.
     pub fn run(&self) -> RunReport {
         self.run_observed(&mut [])
+    }
+
+    /// Drive this spec's exchange over the measured-wire TCP runtime
+    /// ([`crate::wire`]): every node a real OS thread, the coded packets on
+    /// real localhost sockets, `comm_s` a monotonic-clock measurement.
+    ///
+    /// The wire engine runs the mean-descent exchange (decode all K
+    /// packets, average, constant-γ descent on the mean) — it exists to
+    /// *measure* communication, so `solver`, `gap`, `network` and the
+    /// checkpoint schedule are ignored on this path; `lr` contributes only
+    /// a constant γ ([`LrSpec::Constant`], else 0.05). Compression maps
+    /// through [`CompressionSpec::wire_codec`].
+    pub fn wire(&self) -> Result<WireReport, CommError> {
+        self.wire_observed(&mut [])
+    }
+
+    /// [`Self::wire`], streaming a measured per-round [`StepRecord`] to the
+    /// given sinks.
+    pub fn wire_observed(
+        &self,
+        sinks: &mut [&mut dyn MetricsSink],
+    ) -> Result<WireReport, CommError> {
+        let op = self.operator.build();
+        let d = op.dim();
+        let x0 = self.x0.clone().unwrap_or_else(|| vec![0.0; d]);
+        assert_eq!(x0.len(), d, "x0 dimension must match the operator");
+        let codec = self.compression.wire_codec(d, self.protocol);
+        let gamma = match self.lr {
+            LrSpec::Constant { gamma, .. } => gamma,
+            _ => 0.05,
+        };
+        let update = move |x: &mut Vec<f64>, mean: &[f64], _t: usize| {
+            for (xi, m) in x.iter_mut().zip(mean) {
+                *xi -= gamma * m;
+            }
+        };
+        run_wire_observed(
+            Workload::Oracle { op: op.as_ref(), noise: self.noise },
+            self.nodes,
+            &codec,
+            &x0,
+            self.steps,
+            self.seed,
+            &self.topology,
+            self.exchange,
+            &WireOptions::default(),
+            &update,
+            sinks,
+        )
     }
 
     /// Build everything and drive the run, streaming to the given sinks.

@@ -1,0 +1,885 @@
+//! The measured-wire cluster engine: leader + K workers as real OS threads
+//! shipping entropy-coded [`WirePacket`] bytes over localhost TCP.
+//!
+//! This is the repo's third coordinator engine. The other two charge an
+//! analytic clock; here `comm_s` is **measured** — a monotonic
+//! [`Instant`] wraps every socket send/recv phase, and nothing in this
+//! module (or anywhere under `wire/`) calls the analytic charge model.
+//! The split into exposed vs hidden seconds reuses
+//! [`ExchangePlan::split`], exactly the accounting `PhaseTimeline` applies
+//! to modeled charges — same semantics, measured input.
+//!
+//! Aggregates stay bit-identical to `ClusterSim` and the threaded engine
+//! *by construction*: every node decodes the full packet set through
+//! [`decode_aggregate_into`] (node order, `v/k` folds) with codecs seeded
+//! by the shared [`worker_codec_seed`] / [`worker_oracle_seed`] formulas —
+//! there is no wire-local copy of the aggregation arithmetic.
+//!
+//! Round flow (flat star): every worker encodes its dual and sends a
+//! round-tagged `Packet` to the leader; the leader gathers all K, then
+//! multicasts the full set back down as one `Bundle`; every node decodes
+//! all K packets locally and applies the same deterministic update — an
+//! allgather, so the downlink carries coded bytes, not f64 iterates.
+//! Hierarchical: members send to their rack leader, rack leaders forward
+//! gathered bundles up, the leader multicasts the full set to rack leaders
+//! only, and rack leaders fan it down — the leader's serialized egress
+//! shrinks from K to R copies with the fan-out parallelized across racks,
+//! which is where the measured hierarchical win at K = 12 comes from.
+//!
+//! Overlapped exchanges follow the threaded engine's depth-stale schedule
+//! verbatim (send round t+1 before consuming round t, stage aggregates,
+//! drain at the end). To keep the pipeline deadlock-free against finite
+//! kernel socket buffers, the leader reads round t+1's uplink *before*
+//! writing round t's downlink — every peer that could be mid-write is
+//! drained before a large write heads their way.
+
+use super::frame::{
+    bundle_frame_bytes, packet_frame_bytes, read_frame, read_frame_bytes,
+    write_all_bytes, write_frame, Frame,
+};
+use super::socket::{accept_configured, bind_ephemeral, connect_with_backoff, SocketConfig};
+use crate::comm::{CommError, Compressor, IdentityCompressor, WirePacket};
+use crate::coordinator::core::decode_aggregate_into;
+use crate::coordinator::parallel::{worker_codec_seed, worker_oracle_seed, SharedQuantState};
+use crate::coordinator::topology::{rack_spans, ExchangeMode, ExchangePlan, TopologySpec};
+use crate::oda::driver::{MetricsSink, StepRecord, StepStats};
+use crate::stats::rng::Rng;
+use crate::vi::noise::{NoiseModel, Oracle};
+use crate::vi::operator::Operator;
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+/// What each worker feeds the codec every round.
+#[derive(Clone, Copy)]
+pub enum Workload<'a> {
+    /// A VI oracle: `g = A(x) + noise`, seeded with the engines' shared
+    /// per-node formula — the parity-pinned mode.
+    Oracle { op: &'a dyn Operator, noise: NoiseModel },
+    /// Seeded Gaussian duals of dimension `dim`, independent of `x` — the
+    /// timing-bench mode, where `dim` can be paper-sized without paying a
+    /// dense operator apply.
+    Synthetic { dim: usize, scale: f64 },
+}
+
+impl Workload<'_> {
+    pub fn dim(&self) -> usize {
+        match self {
+            Workload::Oracle { op, .. } => op.dim(),
+            Workload::Synthetic { dim, .. } => *dim,
+        }
+    }
+}
+
+/// The synchronized codec every node builds locally (codebooks never travel
+/// on the wire — same contract as the in-process engines).
+#[derive(Clone)]
+pub enum WireCodecSpec {
+    /// fp32 on the wire: the uncompressed collective baseline.
+    Identity,
+    /// The paper's quantize + entropy-code scheme under synchronized fixed
+    /// state; per-node encoder RNGs use [`worker_codec_seed`].
+    Quant(SharedQuantState),
+}
+
+impl WireCodecSpec {
+    fn encoder(&self, seed: u64, node: usize) -> Box<dyn Compressor> {
+        match self {
+            WireCodecSpec::Identity => Box::new(IdentityCompressor::new()),
+            WireCodecSpec::Quant(st) => Box::new(st.codec(worker_codec_seed(seed, node))),
+        }
+    }
+
+    fn decoder(&self) -> Box<dyn Compressor> {
+        match self {
+            WireCodecSpec::Identity => Box::new(IdentityCompressor::new()),
+            // decode draws no randomness; seed 0 mirrors the threaded
+            // engine's leader decoder
+            WireCodecSpec::Quant(st) => Box::new(st.codec(0)),
+        }
+    }
+}
+
+/// Engine knobs beyond the socket layer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireOptions {
+    pub socket: SocketConfig,
+    /// Test hook: `(node, round)` — that worker drops its connections
+    /// instead of producing that round's packet, so the suite can prove a
+    /// mid-round death surfaces as [`CommError::WorkerLost`] within the
+    /// read timeout instead of deadlocking.
+    pub kill: Option<(usize, usize)>,
+}
+
+impl WireOptions {
+    pub fn with_kill(mut self, node: usize, round: usize) -> Self {
+        self.kill = Some((node, round));
+        self
+    }
+}
+
+/// Per-round measured timing, all from the leader's monotonic clock.
+#[derive(Clone, Copy, Debug)]
+pub struct WireRoundRecord {
+    pub round: usize,
+    /// seconds the leader spent blocked in socket reads this round
+    /// (under an overlapped exchange this includes the next round's
+    /// drained uplink — total comm is exact, per-round attribution is the
+    /// pipeline's)
+    pub gather_s: f64,
+    /// seconds the leader spent writing the full-set downlink
+    pub broadcast_s: f64,
+    /// `gather_s + broadcast_s`
+    pub comm_s: f64,
+    /// exposed share under the run's [`ExchangePlan`]
+    pub comm_exposed_s: f64,
+    /// hidden share (`comm_exposed_s + comm_hidden_s == comm_s`)
+    pub comm_hidden_s: f64,
+    /// sum of the K packets' exact payload bits — the same number the
+    /// analytic engines charge for a flat exchange
+    pub payload_bits: u64,
+    /// framed bytes the leader itself moved (sent + received) this round
+    pub frame_bytes: u64,
+}
+
+/// What a measured wire run produced.
+#[derive(Clone, Debug)]
+pub struct WireReport {
+    /// final iterate (the leader's replica; every worker's copy is
+    /// debug-asserted identical)
+    pub x: Vec<f64>,
+    /// mean decoded vector of the last round
+    pub last_mean: Vec<f64>,
+    /// each node's decoded dual of the last round (parity pinning)
+    pub last_decoded: Vec<Vec<f64>>,
+    /// total payload bits across rounds (flat accounting: each packet
+    /// counted once — comparable to `ClusterSim`'s flat `wire_bits`)
+    pub payload_bits: u64,
+    /// total framed bytes sent across every socket by every thread
+    pub frame_bytes: u64,
+    /// total measured comm seconds (leader clock)
+    pub comm_s: f64,
+    pub comm_exposed_s: f64,
+    pub comm_hidden_s: f64,
+    /// per-round measured records
+    pub rounds: Vec<WireRoundRecord>,
+    /// each node's OS-assigned ephemeral source port, collected during the
+    /// handshake (no fixed ports anywhere)
+    pub node_ports: Vec<u16>,
+}
+
+/// A node's role in the physical star, derived from the run's topology.
+#[derive(Clone, Debug)]
+enum Role {
+    /// talks straight to the leader (flat and parameter-server plans)
+    Flat,
+    /// talks to the leader and relays for `members`
+    RackLeader { members: Vec<usize> },
+    /// talks to its rack leader (port learned via the handshake)
+    Member,
+}
+
+struct WorkerExit {
+    x: Vec<f64>,
+    sent: u64,
+}
+
+enum WorkerSource<'a> {
+    Oracle(Oracle<'a>),
+    Synthetic { rng: Rng, dim: usize, scale: f64 },
+}
+
+impl<'a> WorkerSource<'a> {
+    fn new(w: &Workload<'a>, seed: u64, node: usize) -> WorkerSource<'a> {
+        match *w {
+            Workload::Oracle { op, noise } => {
+                WorkerSource::Oracle(Oracle::new(op, noise, worker_oracle_seed(seed, node)))
+            }
+            Workload::Synthetic { dim, scale } => WorkerSource::Synthetic {
+                rng: Rng::new(worker_oracle_seed(seed, node)),
+                dim,
+                scale,
+            },
+        }
+    }
+
+    fn sample(&mut self, x: &[f64]) -> Vec<f64> {
+        match self {
+            WorkerSource::Oracle(o) => o.sample(x),
+            WorkerSource::Synthetic { rng, dim, scale } => {
+                (0..*dim).map(|_| *scale * rng.gaussian()).collect()
+            }
+        }
+    }
+}
+
+/// Receive one round-tagged packet from every member, in member order
+/// (per-socket FIFO means the first unread frame is always the expected
+/// round; a mismatch is a protocol break — the peer counts as lost).
+fn recv_member_packets(
+    members: &mut [(usize, TcpStream)],
+    round: usize,
+) -> Result<Vec<(u32, WirePacket)>, CommError> {
+    let mut out = Vec::with_capacity(members.len());
+    for (node, s) in members.iter_mut() {
+        match read_frame(s)? {
+            (Frame::Packet { node: n, round: r, packet }, _)
+                if n as usize == *node && r == round as u64 =>
+            {
+                out.push((n, packet))
+            }
+            _ => return Err(CommError::WorkerLost),
+        }
+    }
+    Ok(out)
+}
+
+/// Receive the full-set bundle for `round` from the parent, returning the
+/// node-indexed set plus the raw frame bytes (for verbatim fan-down).
+fn recv_full_set(
+    parent: &mut TcpStream,
+    round: usize,
+    k: usize,
+) -> Result<(Vec<Option<WirePacket>>, Vec<u8>), CommError> {
+    let (frame, raw) = read_frame_bytes(parent)?;
+    match frame {
+        Frame::Bundle { round: r, packets } if r == round as u64 => {
+            let mut set: Vec<Option<WirePacket>> = (0..k).map(|_| None).collect();
+            for (n, p) in packets {
+                let idx = n as usize;
+                if idx >= k || set[idx].is_some() {
+                    return Err(CommError::WorkerLost);
+                }
+                set[idx] = Some(p);
+            }
+            if set.iter().any(|s| s.is_none()) {
+                return Err(CommError::WorkerLost);
+            }
+            Ok((set, raw))
+        }
+        _ => Err(CommError::WorkerLost),
+    }
+}
+
+/// Decode all K packets in node order through the shared aggregate core.
+fn aggregate_set(
+    set: &[Option<WirePacket>],
+    dec: &mut dyn Compressor,
+    k: usize,
+    d: usize,
+    mean: &mut Vec<f64>,
+    scratch: &mut Vec<f64>,
+) -> Result<(), CommError> {
+    decode_aggregate_into(k, d, mean, scratch, |node, out| match set[node].as_ref() {
+        Some(p) => dec.decode_into(p, out),
+        None => Err(CommError::WorkerLost),
+    })
+}
+
+/// Encode this node's round-`t` dual at `x` and ship it up: a `Packet`
+/// frame for plain workers, a gathered `Bundle` (own + members, node
+/// order) for rack leaders. Returns `Ok(false)` when the kill hook fired.
+#[allow(clippy::too_many_arguments)]
+fn send_up(
+    t: usize,
+    node: usize,
+    is_rack_leader: bool,
+    members: &mut [(usize, TcpStream)],
+    parent: &mut TcpStream,
+    source: &mut WorkerSource<'_>,
+    enc: &mut dyn Compressor,
+    own: &mut WirePacket,
+    x: &[f64],
+    kill: Option<(usize, usize)>,
+    sent: &mut u64,
+) -> Result<bool, CommError> {
+    if kill == Some((node, t)) {
+        return Ok(false);
+    }
+    let dual = source.sample(x);
+    enc.encode_into(&dual, own)?;
+    if is_rack_leader {
+        let kids = recv_member_packets(members, t)?;
+        let mut refs: Vec<(u32, &WirePacket)> = Vec::with_capacity(1 + kids.len());
+        refs.push((node as u32, own));
+        for (n, p) in &kids {
+            refs.push((*n, p));
+        }
+        refs.sort_by_key(|(n, _)| *n);
+        let bytes = bundle_frame_bytes(t as u64, &refs)?;
+        *sent += write_all_bytes(parent, &bytes)?;
+    } else {
+        let bytes = packet_frame_bytes(node as u32, t as u64, own)?;
+        *sent += write_all_bytes(parent, &bytes)?;
+    }
+    Ok(true)
+}
+
+struct WorkerCfg<'a> {
+    node: usize,
+    k: usize,
+    leader_addr: SocketAddr,
+    role: Role,
+    workload: Workload<'a>,
+    codec: &'a WireCodecSpec,
+    x0: &'a [f64],
+    steps: usize,
+    seed: u64,
+    plan: ExchangePlan,
+    opts: WireOptions,
+    update: &'a (dyn Fn(&mut Vec<f64>, &[f64], usize) + Sync),
+}
+
+fn worker_main(cfg: WorkerCfg<'_>) -> Result<WorkerExit, CommError> {
+    let d = cfg.workload.dim();
+    let sock = cfg.opts.socket;
+    let is_rack_leader = matches!(cfg.role, Role::RackLeader { .. });
+
+    // rack leaders bind their member-facing listener *before* dialing in
+    // so the OS-assigned port rides in the Hello
+    let listener = match &cfg.role {
+        Role::RackLeader { members } if !members.is_empty() => Some(bind_ephemeral()?),
+        _ => None,
+    };
+    let listen_port = listener.as_ref().map_or(0, |(_, p)| *p);
+
+    let mut leader = connect_with_backoff(cfg.leader_addr, &sock)?;
+    let mut sent = 0u64;
+    sent += write_frame(&mut leader, &Frame::Hello { node: cfg.node as u32, listen_port })?;
+    let parent_port = match read_frame(&mut leader)? {
+        (Frame::Welcome { node, parent_port }, _) if node as usize == cfg.node => parent_port,
+        _ => return Err(CommError::WorkerLost),
+    };
+
+    // establish the data plane
+    let mut parent: TcpStream;
+    let mut members: Vec<(usize, TcpStream)> = Vec::new();
+    match &cfg.role {
+        Role::Member => {
+            // the leader stream was handshake-only; rounds go via the rack
+            // leader's collected port
+            let addr: SocketAddr = ([127, 0, 0, 1], parent_port).into();
+            parent = connect_with_backoff(addr, &sock)?;
+            sent += write_frame(
+                &mut parent,
+                &Frame::Hello { node: cfg.node as u32, listen_port: 0 },
+            )?;
+            drop(leader);
+        }
+        Role::Flat => parent = leader,
+        Role::RackLeader { members: want } => {
+            parent = leader;
+            if let Some((l, _)) = &listener {
+                for _ in 0..want.len() {
+                    let mut s = accept_configured(l, &sock)?;
+                    let who = match read_frame(&mut s)? {
+                        (Frame::Hello { node, .. }, _) => node as usize,
+                        _ => return Err(CommError::WorkerLost),
+                    };
+                    if !want.contains(&who) {
+                        return Err(CommError::WorkerLost);
+                    }
+                    members.push((who, s));
+                }
+                members.sort_by_key(|(n, _)| *n);
+            }
+        }
+    }
+    drop(listener);
+
+    let mut enc = cfg.codec.encoder(cfg.seed, cfg.node);
+    let mut dec = cfg.codec.decoder();
+    let mut source = WorkerSource::new(&cfg.workload, cfg.seed, cfg.node);
+    let mut x = cfg.x0.to_vec();
+    let mut own = WirePacket::new();
+    let mut mean: Vec<f64> = Vec::new();
+    let mut scratch: Vec<f64> = Vec::new();
+    let kill = cfg.opts.kill;
+    let update = cfg.update;
+
+    match cfg.plan.mode {
+        ExchangeMode::Synchronous => {
+            for t in 1..=cfg.steps {
+                if !send_up(
+                    t,
+                    cfg.node,
+                    is_rack_leader,
+                    &mut members,
+                    &mut parent,
+                    &mut source,
+                    enc.as_mut(),
+                    &mut own,
+                    &x,
+                    kill,
+                    &mut sent,
+                )? {
+                    return Ok(WorkerExit { x, sent });
+                }
+                let (set, raw) = recv_full_set(&mut parent, t, cfg.k)?;
+                for (_, s) in members.iter_mut() {
+                    sent += write_all_bytes(s, &raw)?;
+                }
+                aggregate_set(&set, dec.as_mut(), cfg.k, d, &mut mean, &mut scratch)?;
+                update(&mut x, &mean, t);
+            }
+        }
+        ExchangeMode::Overlapped { depth } => {
+            let depth = depth.max(1);
+            // aggregates decoded but not yet applied: the node-side double
+            // buffer, identical to the threaded engine's schedule
+            let mut staged: VecDeque<(usize, Vec<f64>)> = VecDeque::new();
+            if cfg.steps > 0
+                && !send_up(
+                    1,
+                    cfg.node,
+                    is_rack_leader,
+                    &mut members,
+                    &mut parent,
+                    &mut source,
+                    enc.as_mut(),
+                    &mut own,
+                    &x,
+                    kill,
+                    &mut sent,
+                )?
+            {
+                return Ok(WorkerExit { x, sent });
+            }
+            for t in 1..=cfg.steps {
+                if t < cfg.steps {
+                    if staged.front().map_or(false, |&(r, _)| r + depth <= t) {
+                        if let Some((r, m)) = staged.pop_front() {
+                            update(&mut x, &m, r);
+                        }
+                    }
+                    // round t+1 goes up *before* round t's downlink is
+                    // consumed — this is the genuine overlap, and the
+                    // leader drains it before writing the big bundle
+                    if !send_up(
+                        t + 1,
+                        cfg.node,
+                        is_rack_leader,
+                        &mut members,
+                        &mut parent,
+                        &mut source,
+                        enc.as_mut(),
+                        &mut own,
+                        &x,
+                        kill,
+                        &mut sent,
+                    )? {
+                        return Ok(WorkerExit { x, sent });
+                    }
+                }
+                let (set, raw) = recv_full_set(&mut parent, t, cfg.k)?;
+                for (_, s) in members.iter_mut() {
+                    sent += write_all_bytes(s, &raw)?;
+                }
+                aggregate_set(&set, dec.as_mut(), cfg.k, d, &mut mean, &mut scratch)?;
+                staged.push_back((t, mean.clone()));
+            }
+            while let Some((r, m)) = staged.pop_front() {
+                update(&mut x, &m, r);
+            }
+        }
+    }
+    Ok(WorkerExit { x, sent })
+}
+
+/// One round's gathered uplink at the leader.
+struct RoundIn {
+    set: Vec<Option<WirePacket>>,
+    payload_bits: u64,
+    recv_bytes: u64,
+}
+
+/// Run a measured wire exchange: `steps` rounds over real localhost TCP
+/// with `k` worker threads, each node holding an identical iterate replica
+/// advanced by `update`. See the module docs for the round flow; see
+/// [`run_wire_observed`] for streaming per-round records to sinks.
+#[allow(clippy::too_many_arguments)]
+pub fn run_wire(
+    workload: Workload<'_>,
+    k: usize,
+    codec: &WireCodecSpec,
+    x0: &[f64],
+    steps: usize,
+    seed: u64,
+    topology: &TopologySpec,
+    plan: ExchangePlan,
+    opts: &WireOptions,
+    update: &(dyn Fn(&mut Vec<f64>, &[f64], usize) + Sync),
+) -> Result<WireReport, CommError> {
+    run_wire_observed(
+        workload, k, codec, x0, steps, seed, topology, plan, opts, update, &mut [],
+    )
+}
+
+/// [`run_wire`] with live [`MetricsSink`] streaming: every round emits a
+/// [`StepRecord`] whose `comm_s` / exposed / hidden fields are *measured*
+/// seconds from the leader's monotonic clock.
+#[allow(clippy::too_many_arguments)]
+pub fn run_wire_observed(
+    workload: Workload<'_>,
+    k: usize,
+    codec: &WireCodecSpec,
+    x0: &[f64],
+    steps: usize,
+    seed: u64,
+    topology: &TopologySpec,
+    plan: ExchangePlan,
+    opts: &WireOptions,
+    update: &(dyn Fn(&mut Vec<f64>, &[f64], usize) + Sync),
+    sinks: &mut [&mut dyn MetricsSink],
+) -> Result<WireReport, CommError> {
+    let d = workload.dim();
+    assert!(k >= 1, "a wire run needs at least one worker");
+    assert_eq!(x0.len(), d, "x0 dimension must match the workload");
+
+    // the physical plan: contiguous rack spans for hierarchical runs, the
+    // plain star otherwise (parameter-server already *is* a star)
+    let spans: Option<Vec<(usize, usize)>> = match topology {
+        TopologySpec::Hierarchical { racks } => Some(rack_spans(k, *racks)),
+        _ => None,
+    };
+    let role_of = |node: usize| -> Role {
+        match &spans {
+            None => Role::Flat,
+            Some(spans) => {
+                for &(start, end) in spans {
+                    if node == start {
+                        return Role::RackLeader { members: (start + 1..end).collect() };
+                    }
+                    if node > start && node < end {
+                        return Role::Member;
+                    }
+                }
+                Role::Flat
+            }
+        }
+    };
+    let child_nodes: Vec<usize> = match &spans {
+        None => (0..k).collect(),
+        Some(spans) => spans.iter().map(|&(start, _)| start).collect(),
+    };
+
+    let (listener, _port) = bind_ephemeral()?;
+    let leader_addr = listener.local_addr().map_err(|_| CommError::WorkerLost)?;
+
+    let mut report = WireReport {
+        x: x0.to_vec(),
+        last_mean: vec![0.0; d],
+        last_decoded: Vec::new(),
+        payload_bits: 0,
+        frame_bytes: 0,
+        comm_s: 0.0,
+        comm_exposed_s: 0.0,
+        comm_hidden_s: 0.0,
+        rounds: Vec::with_capacity(steps),
+        node_ports: vec![0; k],
+    };
+    let mut leader_sent = 0u64;
+    let mut dec = codec.decoder();
+    let mut mean: Vec<f64> = Vec::new();
+    let mut scratch: Vec<f64> = Vec::new();
+
+    let mut worker_err: Option<CommError> = None;
+    let mut worker_xs: Vec<Option<Vec<f64>>> = (0..k).map(|_| None).collect();
+
+    let run: Result<(), CommError> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(k);
+        for node in 0..k {
+            let cfg = WorkerCfg {
+                node,
+                k,
+                leader_addr,
+                role: role_of(node),
+                workload,
+                codec,
+                x0,
+                steps,
+                seed,
+                plan,
+                opts: *opts,
+                update,
+            };
+            handles.push(scope.spawn(move || worker_main(cfg)));
+        }
+
+        let loop_result: Result<(), CommError> = (|| {
+            // ---- handshake: collect every node's Hello (and its
+            // OS-assigned ports), then reply with each node's parent port
+            let mut conns: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+            let mut listen_ports = vec![0u16; k];
+            for _ in 0..k {
+                let mut s = accept_configured(&listener, &opts.socket)?;
+                match read_frame(&mut s)? {
+                    (Frame::Hello { node, listen_port }, _) => {
+                        let n = node as usize;
+                        if n >= k || conns[n].is_some() {
+                            return Err(CommError::WorkerLost);
+                        }
+                        listen_ports[n] = listen_port;
+                        report.node_ports[n] =
+                            s.peer_addr().map_err(|_| CommError::WorkerLost)?.port();
+                        conns[n] = Some(s);
+                    }
+                    _ => return Err(CommError::WorkerLost),
+                }
+            }
+            for node in 0..k {
+                let parent_port = match role_of(node) {
+                    Role::Member => match &spans {
+                        Some(spans) => spans
+                            .iter()
+                            .find(|&&(start, end)| node > start && node < end)
+                            .map(|&(start, _)| listen_ports[start])
+                            .ok_or(CommError::WorkerLost)?,
+                        None => return Err(CommError::WorkerLost),
+                    },
+                    _ => 0,
+                };
+                match conns[node].as_mut() {
+                    Some(s) => {
+                        leader_sent += write_frame(
+                            s,
+                            &Frame::Welcome { node: node as u32, parent_port },
+                        )?;
+                    }
+                    None => return Err(CommError::WorkerLost),
+                }
+            }
+            // data plane: keep only the direct children, in node order;
+            // member streams were handshake-only
+            let mut children: Vec<(usize, TcpStream)> = Vec::with_capacity(child_nodes.len());
+            for &node in &child_nodes {
+                match conns[node].take() {
+                    Some(s) => children.push((node, s)),
+                    None => return Err(CommError::WorkerLost),
+                }
+            }
+            drop(conns);
+
+            // ---- round machinery
+            let hierarchical = spans.is_some();
+            let recv_round = |t: usize,
+                              children: &mut Vec<(usize, TcpStream)>|
+             -> Result<RoundIn, CommError> {
+                let mut set: Vec<Option<WirePacket>> = (0..k).map(|_| None).collect();
+                let mut recv_bytes = 0u64;
+                for (node, s) in children.iter_mut() {
+                    let (frame, n) = read_frame(s)?;
+                    recv_bytes += n;
+                    match frame {
+                        Frame::Packet { node: pn, round, packet }
+                            if !hierarchical
+                                && pn as usize == *node
+                                && round == t as u64 =>
+                        {
+                            set[*node] = Some(packet);
+                        }
+                        Frame::Bundle { round, packets }
+                            if hierarchical && round == t as u64 =>
+                        {
+                            for (pn, p) in packets {
+                                let idx = pn as usize;
+                                if idx >= k || set[idx].is_some() {
+                                    return Err(CommError::WorkerLost);
+                                }
+                                set[idx] = Some(p);
+                            }
+                        }
+                        _ => return Err(CommError::WorkerLost),
+                    }
+                }
+                let mut payload_bits = 0u64;
+                for s in set.iter() {
+                    match s {
+                        Some(p) => payload_bits += p.len_bits() as u64,
+                        None => return Err(CommError::WorkerLost),
+                    }
+                }
+                Ok(RoundIn { set, payload_bits, recv_bytes })
+            };
+
+            let send_round = |t: usize,
+                              set: &[Option<WirePacket>],
+                              children: &mut Vec<(usize, TcpStream)>|
+             -> Result<u64, CommError> {
+                let mut refs: Vec<(u32, &WirePacket)> = Vec::with_capacity(k);
+                for (i, s) in set.iter().enumerate() {
+                    match s {
+                        Some(p) => refs.push((i as u32, p)),
+                        None => return Err(CommError::WorkerLost),
+                    }
+                }
+                let bytes = bundle_frame_bytes(t as u64, &refs)?;
+                let mut sent = 0u64;
+                for (_, s) in children.iter_mut() {
+                    sent += write_all_bytes(s, &bytes)?;
+                }
+                Ok(sent)
+            };
+
+            let mut total_bits = 0u64;
+            let mut finish_round = |t: usize,
+                                    rin: RoundIn,
+                                    gather_s: f64,
+                                    broadcast_s: f64,
+                                    sent_bytes: u64,
+                                    report: &mut WireReport,
+                                    dec: &mut dyn Compressor,
+                                    mean: &mut Vec<f64>,
+                                    scratch: &mut Vec<f64>,
+                                    sinks: &mut [&mut dyn MetricsSink]|
+             -> Result<(), CommError> {
+                decode_aggregate_into(k, d, mean, scratch, |node, out| {
+                    match rin.set[node].as_ref() {
+                        Some(p) => {
+                            dec.decode_into(p, out)?;
+                            if t == steps {
+                                report.last_decoded.push(out.clone());
+                            }
+                            Ok(())
+                        }
+                        None => Err(CommError::WorkerLost),
+                    }
+                })?;
+                // the leader's replica applies every aggregate exactly once
+                // in round order — the same fold every worker performs, so
+                // the final iterates agree under both schedules
+                let x = &mut report.x;
+                (update)(x, mean, t);
+                let comm_s = gather_s + broadcast_s;
+                let (exposed, hidden) = plan.split(comm_s);
+                report.comm_s += comm_s;
+                report.comm_exposed_s += exposed;
+                report.comm_hidden_s += hidden;
+                report.payload_bits += rin.payload_bits;
+                total_bits += rin.payload_bits;
+                report.rounds.push(WireRoundRecord {
+                    round: t,
+                    gather_s,
+                    broadcast_s,
+                    comm_s,
+                    comm_exposed_s: exposed,
+                    comm_hidden_s: hidden,
+                    payload_bits: rin.payload_bits,
+                    frame_bytes: rin.recv_bytes + sent_bytes,
+                });
+                if t == steps {
+                    report.last_mean.clone_from(mean);
+                }
+                let rec = StepRecord {
+                    t,
+                    stats: StepStats {
+                        bits: rin.payload_bits,
+                        quant_err_sq: 0.0,
+                        dual_norm_sq: 0.0,
+                    },
+                    total_bits,
+                    oracle_calls: (k * t) as u64,
+                    gap: None,
+                    comm_s,
+                    comm_exposed_s: exposed,
+                    comm_hidden_s: hidden,
+                };
+                for sink in sinks.iter_mut() {
+                    sink.on_step(&rec);
+                }
+                Ok(())
+            };
+
+            match plan.mode {
+                ExchangeMode::Synchronous => {
+                    for t in 1..=steps {
+                        let g0 = Instant::now();
+                        let rin = recv_round(t, &mut children)?;
+                        let gather_s = g0.elapsed().as_secs_f64();
+                        let b0 = Instant::now();
+                        let sent_bytes = send_round(t, &rin.set, &mut children)?;
+                        leader_sent += sent_bytes;
+                        let broadcast_s = b0.elapsed().as_secs_f64();
+                        finish_round(
+                            t,
+                            rin,
+                            gather_s,
+                            broadcast_s,
+                            sent_bytes,
+                            &mut report,
+                            dec.as_mut(),
+                            &mut mean,
+                            &mut scratch,
+                            sinks,
+                        )?;
+                    }
+                }
+                ExchangeMode::Overlapped { .. } => {
+                    // drain round t+1's uplink before writing round t's
+                    // downlink: peers write-then-read, so the leader must
+                    // read-then-write or finite socket buffers could wedge
+                    // both sides mid-write
+                    let mut pending: Option<RoundIn> = None;
+                    for t in 1..=steps {
+                        let g0 = Instant::now();
+                        let rin = match pending.take() {
+                            Some(r) => r,
+                            None => recv_round(t, &mut children)?,
+                        };
+                        if t < steps {
+                            pending = Some(recv_round(t + 1, &mut children)?);
+                        }
+                        let gather_s = g0.elapsed().as_secs_f64();
+                        let b0 = Instant::now();
+                        let sent_bytes = send_round(t, &rin.set, &mut children)?;
+                        leader_sent += sent_bytes;
+                        let broadcast_s = b0.elapsed().as_secs_f64();
+                        finish_round(
+                            t,
+                            rin,
+                            gather_s,
+                            broadcast_s,
+                            sent_bytes,
+                            &mut report,
+                            dec.as_mut(),
+                            &mut mean,
+                            &mut scratch,
+                            sinks,
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        })();
+
+        // tear the data plane down (workers unblock on EOF if we errored
+        // mid-round), then collect every worker's exit
+        drop(listener);
+        for h in handles {
+            match h.join() {
+                Ok(Ok(exit)) => {
+                    report.frame_bytes += exit.sent;
+                    let node = worker_xs.iter().position(|w| w.is_none());
+                    if let Some(i) = node {
+                        worker_xs[i] = Some(exit.x);
+                    }
+                }
+                Ok(Err(e)) => worker_err = Some(e),
+                Err(_) => worker_err = Some(CommError::WorkerLost),
+            }
+        }
+        loop_result
+    });
+
+    run?;
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
+    report.frame_bytes += leader_sent;
+    // replica invariant: every node ran the same fold over the same
+    // decoded aggregates, so all final iterates are bit-identical
+    for wx in worker_xs.iter().flatten() {
+        debug_assert_eq!(wx, &report.x, "wire replicas diverged");
+    }
+    Ok(report)
+}

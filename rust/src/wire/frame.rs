@@ -1,0 +1,409 @@
+//! Length-prefixed frames over a byte stream: the wire form of the
+//! handshake and of entropy-coded [`WirePacket`]s.
+//!
+//! Every frame is `magic (u32 LE) | body_len (u32 LE) | body`, where the
+//! body starts with a one-byte kind tag. Integers are little-endian; a
+//! packet blob ships its exact bit count plus the backing 64-bit words of
+//! the [`crate::coding::BitBuf`], so the receiver reconstructs the payload
+//! bit-for-bit (the parity tests hold decoded aggregates identical to the
+//! in-process engines).
+//!
+//! Framing violations — bad magic, oversized bodies, truncated blobs,
+//! mismatched word counts — are *peer* failures: they surface as
+//! [`CommError::WorkerLost`] (the peer is unusable from here on), never a
+//! panic and never an unbounded allocation.
+
+use crate::coding::bitio::BitBuf;
+use crate::comm::{CommError, WirePacket};
+use std::io::{Read, Write};
+
+/// Frame magic: `QODW` little-endian.
+pub const MAGIC: u32 = 0x5744_4f51;
+
+/// Wire protocol version carried by [`Frame::Hello`].
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on a frame body (1 GiB) — a garbage length prefix must not
+/// turn into an allocation.
+pub const MAX_BODY_BYTES: u32 = 1 << 30;
+
+const KIND_HELLO: u8 = 1;
+const KIND_WELCOME: u8 = 2;
+const KIND_PACKET: u8 = 3;
+const KIND_BUNDLE: u8 = 4;
+
+/// One frame of the wire protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// First frame on every connection: who is dialing in, which protocol
+    /// revision it speaks, and (for a rack leader) the port its own
+    /// member-facing listener was assigned by the OS — this is how the
+    /// leader *collects* the port-0 bindings instead of configuring them.
+    Hello { node: u32, listen_port: u16 },
+    /// Leader's handshake reply: the port this node's upstream parent
+    /// listens on (`0` = keep talking to the leader on this stream).
+    Welcome { node: u32, parent_port: u16 },
+    /// One node's entropy-coded dual for one round: node id, round tag and
+    /// the packet blob (its exact bit count rides in the blob header).
+    Packet { node: u32, round: u64, packet: WirePacket },
+    /// A round-tagged set of node-tagged packets: a rack's gathered bundle
+    /// on the way up, the full cluster set on the way down.
+    Bundle { round: u64, packets: Vec<(u32, WirePacket)> },
+}
+
+/// The peer broke the framing contract — treat it as lost.
+fn protocol_err() -> CommError {
+    CommError::WorkerLost
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Byte-stream cursor over a received frame body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CommError> {
+        let end = self.pos.checked_add(n).ok_or_else(protocol_err)?;
+        if end > self.buf.len() {
+            return Err(protocol_err());
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CommError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, CommError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, CommError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CommError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn usize64(&mut self) -> Result<usize, CommError> {
+        usize::try_from(self.u64()?).map_err(|_| protocol_err())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Serialize a packet blob: `dim (u64) | n_offsets (u32) | offsets (u64 ea)
+/// | bits (u64) | words (u64 ea, exactly ceil(bits/64))`.
+fn put_packet(out: &mut Vec<u8>, p: &WirePacket) {
+    put_u64(out, p.dim() as u64);
+    put_u32(out, p.layer_offsets().len() as u32);
+    for &off in p.layer_offsets() {
+        put_u64(out, off as u64);
+    }
+    put_u64(out, p.len_bits() as u64);
+    for &w in p.payload().words() {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+fn get_packet(c: &mut Cursor<'_>) -> Result<WirePacket, CommError> {
+    let dim = c.usize64()?;
+    let n_offsets = c.u32()?;
+    // a packet never has more layer segments than coordinates (+1 slack
+    // for degenerate empty layers); cap before allocating
+    if n_offsets as usize > dim.saturating_add(1) {
+        return Err(protocol_err());
+    }
+    let mut offsets = Vec::with_capacity(n_offsets as usize);
+    for _ in 0..n_offsets {
+        offsets.push(c.usize64()?);
+    }
+    let bits = c.usize64()?;
+    let n_words = bits.div_ceil(64);
+    let mut words = Vec::with_capacity(n_words);
+    for _ in 0..n_words {
+        words.push(c.u64()?);
+    }
+    let payload = BitBuf::from_words(words, bits).ok_or_else(protocol_err)?;
+    Ok(WirePacket::from_raw(payload, offsets, dim))
+}
+
+impl Frame {
+    /// Serialize into a single contiguous byte vector (header + body), the
+    /// unit one `write_all` ships.
+    pub fn to_bytes(&self) -> Result<Vec<u8>, CommError> {
+        let mut body = Vec::new();
+        match self {
+            Frame::Hello { node, listen_port } => {
+                body.push(KIND_HELLO);
+                put_u32(&mut body, PROTO_VERSION);
+                put_u32(&mut body, *node);
+                put_u16(&mut body, *listen_port);
+            }
+            Frame::Welcome { node, parent_port } => {
+                body.push(KIND_WELCOME);
+                put_u32(&mut body, *node);
+                put_u16(&mut body, *parent_port);
+            }
+            Frame::Packet { node, round, packet } => {
+                body.push(KIND_PACKET);
+                put_u32(&mut body, *node);
+                put_u64(&mut body, *round);
+                put_packet(&mut body, packet);
+            }
+            Frame::Bundle { round, packets } => {
+                body.push(KIND_BUNDLE);
+                put_u64(&mut body, *round);
+                put_u32(&mut body, packets.len() as u32);
+                for (node, p) in packets {
+                    put_u32(&mut body, *node);
+                    put_packet(&mut body, p);
+                }
+            }
+        }
+        seal(body)
+    }
+
+    /// Parse a frame body (everything after the 8-byte header). Rejects
+    /// trailing bytes: a frame is exactly its fields.
+    pub fn from_body(body: &[u8]) -> Result<Frame, CommError> {
+        let mut c = Cursor { buf: body, pos: 0 };
+        let frame = match c.u8()? {
+            KIND_HELLO => {
+                let version = c.u32()?;
+                if version != PROTO_VERSION {
+                    return Err(protocol_err());
+                }
+                Frame::Hello { node: c.u32()?, listen_port: c.u16()? }
+            }
+            KIND_WELCOME => Frame::Welcome { node: c.u32()?, parent_port: c.u16()? },
+            KIND_PACKET => {
+                let node = c.u32()?;
+                let round = c.u64()?;
+                Frame::Packet { node, round, packet: get_packet(&mut c)? }
+            }
+            KIND_BUNDLE => {
+                let round = c.u64()?;
+                let count = c.u32()?;
+                // sanity cap: a bundle carries at most one packet per node
+                // of a plausibly-sized cluster
+                if count > 1 << 16 {
+                    return Err(protocol_err());
+                }
+                let mut packets = Vec::with_capacity(count as usize);
+                for _ in 0..count {
+                    let node = c.u32()?;
+                    packets.push((node, get_packet(&mut c)?));
+                }
+                Frame::Bundle { round, packets }
+            }
+            _ => return Err(protocol_err()),
+        };
+        if !c.done() {
+            return Err(protocol_err());
+        }
+        Ok(frame)
+    }
+}
+
+fn seal(body: Vec<u8>) -> Result<Vec<u8>, CommError> {
+    let len = u32::try_from(body.len()).map_err(|_| protocol_err())?;
+    if len > MAX_BODY_BYTES {
+        return Err(protocol_err());
+    }
+    let mut out = Vec::with_capacity(8 + body.len());
+    put_u32(&mut out, MAGIC);
+    put_u32(&mut out, len);
+    out.extend_from_slice(&body);
+    Ok(out)
+}
+
+/// Serialize a [`Frame::Packet`] without taking ownership of the packet —
+/// the per-round hot path (workers re-encode into the same scratch packet
+/// every round and must not clone it to ship it).
+pub fn packet_frame_bytes(
+    node: u32,
+    round: u64,
+    p: &WirePacket,
+) -> Result<Vec<u8>, CommError> {
+    let mut body = Vec::new();
+    body.push(KIND_PACKET);
+    put_u32(&mut body, node);
+    put_u64(&mut body, round);
+    put_packet(&mut body, p);
+    seal(body)
+}
+
+/// Serialize a [`Frame::Bundle`] from borrowed packets (rack gather on the
+/// way up, the full cluster set on the way down).
+pub fn bundle_frame_bytes(
+    round: u64,
+    packets: &[(u32, &WirePacket)],
+) -> Result<Vec<u8>, CommError> {
+    let mut body = Vec::new();
+    body.push(KIND_BUNDLE);
+    put_u64(&mut body, round);
+    put_u32(&mut body, packets.len() as u32);
+    for (node, p) in packets {
+        put_u32(&mut body, *node);
+        put_packet(&mut body, p);
+    }
+    seal(body)
+}
+
+/// Ship pre-serialized frame bytes; returns the byte count on success.
+pub fn write_all_bytes(w: &mut impl Write, bytes: &[u8]) -> Result<u64, CommError> {
+    w.write_all(bytes).map_err(|_| CommError::WorkerLost)?;
+    w.flush().map_err(|_| CommError::WorkerLost)?;
+    Ok(bytes.len() as u64)
+}
+
+/// Write one frame to `w`; returns the bytes shipped. Any I/O failure
+/// (including a write timeout) means the peer is gone: [`CommError::WorkerLost`].
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64, CommError> {
+    let bytes = frame.to_bytes()?;
+    w.write_all(&bytes).map_err(|_| CommError::WorkerLost)?;
+    w.flush().map_err(|_| CommError::WorkerLost)?;
+    Ok(bytes.len() as u64)
+}
+
+/// Read one frame from `r`; returns the frame and the bytes consumed. EOF,
+/// a read timeout, bad magic or an oversized body all surface as
+/// [`CommError::WorkerLost`] — a blocking read can never hang past the
+/// stream's configured timeout, and a dead peer never deadlocks a round.
+pub fn read_frame(r: &mut impl Read) -> Result<(Frame, u64), CommError> {
+    let (frame, raw) = read_frame_bytes(r)?;
+    Ok((frame, raw.len() as u64))
+}
+
+/// [`read_frame`], also returning the raw wire bytes (header + body) so a
+/// relay — a rack leader fanning the leader's full-set bundle down to its
+/// members — can forward the frame verbatim without re-serializing it.
+pub fn read_frame_bytes(r: &mut impl Read) -> Result<(Frame, Vec<u8>), CommError> {
+    let mut header = [0u8; 8];
+    r.read_exact(&mut header).map_err(|_| CommError::WorkerLost)?;
+    let magic = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+    if magic != MAGIC || len > MAX_BODY_BYTES {
+        return Err(protocol_err());
+    }
+    let mut raw = vec![0u8; 8 + len as usize];
+    raw[..8].copy_from_slice(&header);
+    r.read_exact(&mut raw[8..]).map_err(|_| CommError::WorkerLost)?;
+    let frame = Frame::from_body(&raw[8..])?;
+    Ok((frame, raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Compressor, IdentityCompressor};
+
+    fn sample_packet() -> WirePacket {
+        let mut codec = IdentityCompressor::new();
+        codec.encode(&[1.5, -2.25, 0.0, 42.0]).expect("encode")
+    }
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = f.to_bytes().expect("to_bytes");
+        let mut r = &bytes[..];
+        let (got, n) = read_frame(&mut r).expect("read_frame");
+        assert_eq!(n, bytes.len() as u64);
+        got
+    }
+
+    #[test]
+    fn handshake_frames_roundtrip() {
+        for f in [
+            Frame::Hello { node: 7, listen_port: 45231 },
+            Frame::Welcome { node: 7, parent_port: 0 },
+        ] {
+            assert_eq!(roundtrip(&f), f);
+        }
+    }
+
+    #[test]
+    fn packet_frame_roundtrips_bit_exact() {
+        let p = sample_packet();
+        let f = Frame::Packet { node: 3, round: 99, packet: p.clone() };
+        match roundtrip(&f) {
+            Frame::Packet { node, round, packet } => {
+                assert_eq!((node, round), (3, 99));
+                assert_eq!(packet.len_bits(), p.len_bits());
+                assert_eq!(packet.dim(), p.dim());
+                assert_eq!(packet.layer_offsets(), p.layer_offsets());
+                assert_eq!(packet.payload().words(), p.payload().words());
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bundle_frame_roundtrips() {
+        let f = Frame::Bundle {
+            round: 5,
+            packets: vec![(0, sample_packet()), (2, sample_packet())],
+        };
+        assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn garbage_is_worker_lost_not_panic() {
+        // bad magic
+        let mut bytes = Frame::Hello { node: 0, listen_port: 0 }.to_bytes().unwrap();
+        bytes[0] ^= 0xFF;
+        assert_eq!(read_frame(&mut &bytes[..]).unwrap_err(), CommError::WorkerLost);
+        // truncated body
+        let bytes = Frame::Packet { node: 1, round: 1, packet: sample_packet() }
+            .to_bytes()
+            .unwrap();
+        let cut = &bytes[..bytes.len() - 3];
+        assert_eq!(read_frame(&mut &cut[..]).unwrap_err(), CommError::WorkerLost);
+        // oversized length prefix must not allocate
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&MAGIC.to_le_bytes());
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(read_frame(&mut &huge[..]).unwrap_err(), CommError::WorkerLost);
+        // trailing bytes after a valid body
+        let mut padded = Frame::Welcome { node: 1, parent_port: 2 }.to_bytes().unwrap();
+        padded.push(0);
+        let len = (padded.len() - 8) as u32;
+        padded[4..8].copy_from_slice(&len.to_le_bytes());
+        assert_eq!(read_frame(&mut &padded[..]).unwrap_err(), CommError::WorkerLost);
+        // unknown kind
+        let mut unk = Vec::new();
+        unk.extend_from_slice(&MAGIC.to_le_bytes());
+        unk.extend_from_slice(&1u32.to_le_bytes());
+        unk.push(0xEE);
+        assert_eq!(read_frame(&mut &unk[..]).unwrap_err(), CommError::WorkerLost);
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected() {
+        let mut bytes = Frame::Hello { node: 0, listen_port: 1 }.to_bytes().unwrap();
+        // bump the version field (first body u32 after the kind byte)
+        bytes[9] ^= 0x01;
+        assert_eq!(read_frame(&mut &bytes[..]).unwrap_err(), CommError::WorkerLost);
+    }
+}

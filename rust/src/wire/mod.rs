@@ -1,0 +1,80 @@
+//! Measured-wire TCP runtime: the repo's third coordinator engine, where
+//! `comm_s` is a **measurement**, not a model.
+//!
+//! Everything else in this repo that reports communication seconds charges
+//! an analytic clock ([`crate::net::NetworkModel`] routed through a
+//! [`crate::coordinator::topology::Transport`]). This subsystem ships the
+//! *actual* entropy-coded [`crate::comm::WirePacket`] bytes over real
+//! localhost TCP sockets — every node a real OS thread — and wraps each
+//! socket phase in a monotonic [`std::time::Instant`]. Nothing under
+//! `wire/` calls the charge model; the invariant is pinned by the module
+//! layout (no `net::` charging import exists here) and audited by the
+//! `qoda audit` wire-module rules, which cover this directory.
+//!
+//! # Frame format
+//!
+//! Every frame on every stream is
+//!
+//! ```text
+//! magic (u32 LE = "QODW") | body_len (u32 LE) | body
+//! ```
+//!
+//! where the body starts with a one-byte kind tag: `Hello` / `Welcome`
+//! (handshake), `Packet` (one node's round-tagged entropy-coded dual) and
+//! `Bundle` (a round-tagged set of node-tagged packets — a rack's gather on
+//! the way up, the full cluster set on the way down). A packet blob carries
+//! its exact bit count plus the backing 64-bit words of the
+//! [`crate::coding::BitBuf`], so the receiver reconstructs the payload
+//! bit-for-bit and decoded aggregates stay identical to the in-process
+//! engines (the `wire_e2e` suite pins this across protocols and seeds).
+//! See [`frame`] for the full grammar and its hardening (body-size cap,
+//! no-alloc rejection of garbage length prefixes, trailing-byte rejection).
+//!
+//! # Handshake and deterministic socket setup
+//!
+//! No fixed ports anywhere: every listener binds port 0 and the
+//! OS-assigned ports travel *through the protocol*. The leader binds an
+//! ephemeral listener; each worker dials it (bounded-backoff retries, then
+//! [`crate::comm::CommError::WorkerLost`]) and sends `Hello { node,
+//! listen_port }` — where `listen_port` is the worker's own member-facing
+//! listener if the topology makes it a rack leader, else 0. The leader
+//! collects all K Hellos, then answers each with `Welcome { node,
+//! parent_port }`: 0 means "keep talking to me on this stream", a rack
+//! member instead receives its rack leader's collected port, dials it, and
+//! drops the leader stream. Handshake complete; round frames flow only on
+//! the data plane.
+//!
+//! # Measured-clock semantics
+//!
+//! The leader's round loop times two phases with a monotonic clock: the
+//! **gather** (blocked in socket reads until all K round-tagged packets
+//! arrived) and the **broadcast** (writing the full coded packet set back
+//! down). Their sum is the round's `comm_s`; the exposed-vs-hidden split
+//! reuses [`crate::coordinator::topology::ExchangePlan::split`] — the same
+//! arithmetic `PhaseTimeline` applies to modeled charges, fed measured
+//! seconds. Under an overlapped plan the engine overlaps *actual* latency:
+//! workers ship round t+1 before consuming round t, and the leader drains
+//! the t+1 uplink before writing the t downlink (read-before-write keeps
+//! finite kernel socket buffers from wedging the pipeline). Dead peers
+//! never hang a round: every stream carries read/write timeouts and every
+//! failure surfaces as `CommError::WorkerLost`.
+//!
+//! The exchange is an allgather over a star (flat) or a two-level tree
+//! (hierarchical, via [`crate::coordinator::topology::rack_spans`]): the
+//! downlink carries the *coded packet set*, not fp32 iterates, so the
+//! coded-vs-uncompressed wire ratio survives on both directions, and every
+//! node decodes all K packets through the one shared
+//! [`crate::coordinator::core::decode_aggregate_into`] rule — aggregates
+//! are bit-identical to `ClusterSim` and the threaded engine by
+//! construction, not by tuning.
+
+pub mod cluster;
+pub mod frame;
+pub mod socket;
+
+pub use cluster::{
+    run_wire, run_wire_observed, WireCodecSpec, WireOptions, WireReport,
+    WireRoundRecord, Workload,
+};
+pub use frame::Frame;
+pub use socket::SocketConfig;

@@ -1,0 +1,149 @@
+//! Deterministic socket setup for the measured-wire runtime.
+//!
+//! Every listener binds port 0 and lets the OS pick — there are no fixed
+//! ports anywhere, so concurrent CI runs can never collide. The assigned
+//! ports travel through the [`super::frame::Frame::Hello`] handshake: a
+//! rack leader reports its member-facing listener port to the cluster
+//! leader, which relays it to the rack's members in their `Welcome`.
+//!
+//! Connecting retries with bounded exponential backoff (a member may dial
+//! its rack leader before that listener exists); once the budget is spent
+//! the peer counts as lost — [`CommError::WorkerLost`], never a hang.
+
+use crate::comm::CommError;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Socket behavior knobs shared by every node of a wire run.
+#[derive(Clone, Copy, Debug)]
+pub struct SocketConfig {
+    /// Per-read deadline on every stream: a dead peer surfaces as
+    /// [`CommError::WorkerLost`] within this bound instead of hanging the
+    /// round.
+    pub read_timeout: Duration,
+    /// Per-write deadline (a peer that stopped draining counts as lost).
+    pub write_timeout: Duration,
+    /// How many times to retry a refused connection before giving up.
+    pub connect_retries: u32,
+    /// Initial retry backoff; doubles per attempt, capped at 100 ms.
+    pub connect_backoff: Duration,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        SocketConfig {
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            connect_retries: 40,
+            connect_backoff: Duration::from_millis(2),
+        }
+    }
+}
+
+impl SocketConfig {
+    /// Apply the read/write deadlines to a connected stream and disable
+    /// Nagle (the runtime ships whole frames; latency matters, batching
+    /// does not).
+    pub fn configure(&self, stream: &TcpStream) -> Result<(), CommError> {
+        stream
+            .set_read_timeout(Some(self.read_timeout))
+            .map_err(|_| CommError::WorkerLost)?;
+        stream
+            .set_write_timeout(Some(self.write_timeout))
+            .map_err(|_| CommError::WorkerLost)?;
+        stream.set_nodelay(true).map_err(|_| CommError::WorkerLost)?;
+        Ok(())
+    }
+}
+
+/// Bind a fresh localhost listener on an OS-assigned port. Returns the
+/// listener and the port the OS picked (what the handshake reports).
+pub fn bind_ephemeral() -> Result<(TcpListener, u16), CommError> {
+    let listener =
+        TcpListener::bind(("127.0.0.1", 0)).map_err(|_| CommError::WorkerLost)?;
+    let port = listener
+        .local_addr()
+        .map_err(|_| CommError::WorkerLost)?
+        .port();
+    Ok((listener, port))
+}
+
+/// Dial `addr` with bounded exponential backoff; configure deadlines on
+/// success. Exhausting the retry budget is [`CommError::WorkerLost`].
+pub fn connect_with_backoff(
+    addr: SocketAddr,
+    cfg: &SocketConfig,
+) -> Result<TcpStream, CommError> {
+    let mut backoff = cfg.connect_backoff;
+    let cap = Duration::from_millis(100);
+    for attempt in 0..=cfg.connect_retries {
+        match TcpStream::connect_timeout(&addr, cfg.read_timeout) {
+            Ok(stream) => {
+                cfg.configure(&stream)?;
+                return Ok(stream);
+            }
+            Err(_) if attempt < cfg.connect_retries => {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(cap);
+            }
+            Err(_) => break,
+        }
+    }
+    Err(CommError::WorkerLost)
+}
+
+/// Accept one inbound connection and configure its deadlines. The listener
+/// must have a read timeout story of its own: accept blocks, so the caller
+/// bounds total setup time via the retry/backoff budget on the dialing
+/// side plus this listener's scope.
+pub fn accept_configured(
+    listener: &TcpListener,
+    cfg: &SocketConfig,
+) -> Result<TcpStream, CommError> {
+    let (stream, _) = listener.accept().map_err(|_| CommError::WorkerLost)?;
+    cfg.configure(&stream)?;
+    Ok(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ephemeral_bind_yields_distinct_live_ports() {
+        let (a, pa) = bind_ephemeral().unwrap();
+        let (b, pb) = bind_ephemeral().unwrap();
+        assert_ne!(pa, 0);
+        assert_ne!(pb, 0);
+        assert_ne!(pa, pb);
+        drop((a, b));
+    }
+
+    #[test]
+    fn connect_backoff_eventually_gives_up() {
+        // bind-then-drop leaves a port that refuses connections
+        let (listener, port) = bind_ephemeral().unwrap();
+        drop(listener);
+        let cfg = SocketConfig {
+            connect_retries: 3,
+            connect_backoff: Duration::from_millis(1),
+            ..SocketConfig::default()
+        };
+        let addr: SocketAddr = ([127, 0, 0, 1], port).into();
+        assert_eq!(connect_with_backoff(addr, &cfg).unwrap_err(), CommError::WorkerLost);
+    }
+
+    #[test]
+    fn connect_succeeds_against_live_listener() {
+        let (listener, port) = bind_ephemeral().unwrap();
+        let cfg = SocketConfig::default();
+        let addr: SocketAddr = ([127, 0, 0, 1], port).into();
+        let dial = std::thread::spawn(move || connect_with_backoff(addr, &cfg));
+        let accepted = accept_configured(&listener, &SocketConfig::default()).unwrap();
+        let dialed = dial.join().expect("dial thread").unwrap();
+        assert_eq!(
+            accepted.local_addr().unwrap().port(),
+            dialed.peer_addr().unwrap().port()
+        );
+    }
+}

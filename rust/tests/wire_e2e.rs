@@ -1,0 +1,427 @@
+//! Integration: the measured-wire TCP engine vs the in-process engines.
+//!
+//! The acceptance bar mirrors `distributed_e2e`: driven by the same seeds
+//! through the same `comm` codecs, a real-socket run must produce
+//! bit-identical aggregates, identical final iterates and identical wire
+//! bit counts — across both coding protocols, several seeds, flat and
+//! hierarchical topologies, and both exchange schedules. On top of that,
+//! the wire-only guarantees: measured per-round records are internally
+//! consistent, decoded duals are deterministic across reruns, and a worker
+//! dying mid-round surfaces as `CommError::WorkerLost` promptly instead of
+//! deadlocking the cluster.
+
+use qoda::coding::protocol::ProtocolKind;
+use qoda::comm::{CommError, Compressor, IdentityCompressor};
+use qoda::coordinator::parallel::{
+    run_rounds_over, worker_codec_seed, worker_oracle_seed, SharedQuantState,
+};
+use qoda::coordinator::sim::ClusterSim;
+use qoda::coordinator::{ExchangePlan, TopologySpec};
+use qoda::net::NetworkModel;
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::{LevelSequence, QuantConfig};
+use qoda::stats::rng::Rng;
+use qoda::vi::noise::{NoiseModel, Oracle};
+use qoda::vi::operator::QuadraticOperator;
+use qoda::wire::{run_wire, SocketConfig, WireCodecSpec, WireOptions, Workload};
+use std::time::{Duration, Instant};
+
+const D: usize = 24;
+const K: usize = 3;
+const STEPS: usize = 4;
+const LR: f64 = 0.07;
+
+fn descent(x: &mut Vec<f64>, mean: &[f64], _t: usize) {
+    for (xi, g) in x.iter_mut().zip(mean) {
+        *xi -= LR * g;
+    }
+}
+
+fn test_op() -> QuadraticOperator {
+    let mut rng = Rng::new(99);
+    QuadraticOperator::random(D, 0.5, &mut rng)
+}
+
+fn quant_state(protocol: ProtocolKind) -> SharedQuantState {
+    SharedQuantState {
+        map: LayerMap::from_spec(&[("a", 16, "ff"), ("b", 8, "emb")]).bucketed(8),
+        cfg: QuantConfig {
+            sequences: vec![LevelSequence::bits(4), LevelSequence::bits(6)],
+            q: 2.0,
+        },
+        protocol,
+    }
+}
+
+/// The reference: the deterministic sim driven exactly like the wire
+/// workers (shared per-node codec + oracle seed formulas, same update).
+/// Returns (final x, total wire bits, mean decoded vector of last round).
+fn sim_reference(
+    op: &QuadraticOperator,
+    noise: NoiseModel,
+    k: usize,
+    codecs: Vec<Box<dyn Compressor>>,
+    x0: &[f64],
+    steps: usize,
+    seed: u64,
+) -> (Vec<f64>, u64, Vec<f64>) {
+    let mut sim = ClusterSim::new(codecs, NetworkModel::genesis_cloud(5.0), false);
+    let mut oracles: Vec<Oracle> = (0..k)
+        .map(|n| Oracle::new(op, noise, worker_oracle_seed(seed, n)))
+        .collect();
+    let mut x = x0.to_vec();
+    let mut bits = 0u64;
+    let mut last_mean = vec![0.0; x0.len()];
+    for t in 1..=steps {
+        let duals: Vec<Vec<f64>> = oracles.iter_mut().map(|o| o.sample(&x)).collect();
+        let (mean, m) = sim.exchange(&duals).expect("sim exchange");
+        bits += m.wire_bits;
+        descent(&mut x, &mean, t);
+        last_mean = mean;
+    }
+    (x, bits, last_mean)
+}
+
+/// The headline parity pin: a real-TCP run is bit-identical to `ClusterSim`
+/// on the final iterate, the last aggregate AND the total wire bit count —
+/// for both coding protocols and several seeds.
+#[test]
+fn wire_and_sim_agree_bitwise_across_protocols_and_seeds() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let x0 = vec![0.3; D];
+
+    for protocol in [ProtocolKind::Main, ProtocolKind::Alternating] {
+        for seed in [11u64, 29, 47] {
+            let st = quant_state(protocol);
+            let report = run_wire(
+                Workload::Oracle { op: &op, noise },
+                K,
+                &WireCodecSpec::Quant(st.clone()),
+                &x0,
+                STEPS,
+                seed,
+                &TopologySpec::BroadcastAllGather,
+                ExchangePlan::synchronous(),
+                &WireOptions::default(),
+                &descent,
+            )
+            .expect("wire run");
+
+            let codecs: Vec<Box<dyn Compressor>> = (0..K)
+                .map(|n| Box::new(st.codec(worker_codec_seed(seed, n))) as _)
+                .collect();
+            let (x_sim, bits_sim, mean_sim) =
+                sim_reference(&op, noise, K, codecs, &x0, STEPS, seed);
+
+            assert_eq!(
+                report.last_mean, mean_sim,
+                "aggregate mismatch ({protocol:?}, seed {seed})"
+            );
+            assert_eq!(report.x, x_sim, "iterate mismatch ({protocol:?}, seed {seed})");
+            assert_eq!(
+                report.payload_bits, bits_sim,
+                "wire bit count mismatch ({protocol:?}, seed {seed})"
+            );
+            assert!(report.payload_bits > 0);
+            assert_eq!(report.last_decoded.len(), K);
+        }
+    }
+}
+
+/// fp32 (identity codec) parity: the uncompressed baseline travels the same
+/// frames and must agree with the sim's identity endpoints bit-for-bit.
+#[test]
+fn identity_wire_matches_sim_fp32() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let x0 = vec![0.3; D];
+    let seed = 7u64;
+
+    let report = run_wire(
+        Workload::Oracle { op: &op, noise },
+        K,
+        &WireCodecSpec::Identity,
+        &x0,
+        STEPS,
+        seed,
+        &TopologySpec::BroadcastAllGather,
+        ExchangePlan::synchronous(),
+        &WireOptions::default(),
+        &descent,
+    )
+    .expect("identity wire run");
+
+    let codecs: Vec<Box<dyn Compressor>> = (0..K)
+        .map(|_| Box::new(IdentityCompressor::new()) as _)
+        .collect();
+    let (x_sim, bits_sim, mean_sim) = sim_reference(&op, noise, K, codecs, &x0, STEPS, seed);
+
+    assert_eq!(report.last_mean, mean_sim);
+    assert_eq!(report.x, x_sim);
+    assert_eq!(report.payload_bits, bits_sim);
+}
+
+/// Hierarchical routing is a physical plan, not a math change: the two-level
+/// wire run (members -> rack leaders -> leader) must be bit-identical to the
+/// flat wire run and the sim on every pinned quantity, including each node's
+/// decoded dual of the last round.
+#[test]
+fn hierarchical_wire_is_bit_identical_to_flat() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let k = 6;
+    let x0 = vec![0.3; D];
+    let seed = 29u64;
+    let st = quant_state(ProtocolKind::Main);
+
+    let run = |topology: &TopologySpec| {
+        run_wire(
+            Workload::Oracle { op: &op, noise },
+            k,
+            &WireCodecSpec::Quant(st.clone()),
+            &x0,
+            STEPS,
+            seed,
+            topology,
+            ExchangePlan::synchronous(),
+            &WireOptions::default(),
+            &descent,
+        )
+        .expect("wire run")
+    };
+    let flat = run(&TopologySpec::BroadcastAllGather);
+    let hier = run(&TopologySpec::Hierarchical { racks: 2 });
+
+    assert_eq!(hier.last_mean, flat.last_mean);
+    assert_eq!(hier.x, flat.x);
+    assert_eq!(hier.payload_bits, flat.payload_bits);
+    assert_eq!(hier.last_decoded, flat.last_decoded);
+
+    let codecs: Vec<Box<dyn Compressor>> = (0..k)
+        .map(|n| Box::new(st.codec(worker_codec_seed(seed, n))) as _)
+        .collect();
+    let (x_sim, bits_sim, mean_sim) = sim_reference(&op, noise, k, codecs, &x0, STEPS, seed);
+    assert_eq!(hier.last_mean, mean_sim);
+    assert_eq!(hier.x, x_sim);
+    assert_eq!(hier.payload_bits, bits_sim);
+}
+
+/// The overlapped schedule over real sockets follows the threaded engine's
+/// depth-stale schedule exactly: same final iterate, same last aggregate,
+/// same wire bits as `run_rounds_over` under the same plan.
+#[test]
+fn overlapped_wire_matches_overlapped_threaded_engine() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let x0 = vec![0.3; D];
+    let seed = 47u64;
+    let steps = 6;
+    let st = quant_state(ProtocolKind::Main);
+
+    for depth in [1usize, 2] {
+        let plan = ExchangePlan::overlapped(depth, 0.0);
+        let report = run_wire(
+            Workload::Oracle { op: &op, noise },
+            K,
+            &WireCodecSpec::Quant(st.clone()),
+            &x0,
+            steps,
+            seed,
+            &TopologySpec::BroadcastAllGather,
+            plan,
+            &WireOptions::default(),
+            &descent,
+        )
+        .expect("overlapped wire run");
+
+        let threaded = run_rounds_over(
+            &op,
+            noise,
+            K,
+            &st,
+            x0.clone(),
+            steps,
+            seed,
+            &TopologySpec::BroadcastAllGather,
+            &NetworkModel::genesis_cloud(5.0),
+            plan,
+            |x, mean, t| descent(x, mean, t),
+        )
+        .expect("threaded run");
+
+        assert_eq!(report.last_mean, threaded.last_mean, "depth {depth}");
+        assert_eq!(report.x, threaded.x, "depth {depth}");
+        assert_eq!(report.payload_bits, threaded.wire_bits, "depth {depth}");
+    }
+}
+
+/// Wire-only pins: decoded duals of the last round are deterministic across
+/// reruns of the same spec, and folding them through the `v / k` rule in
+/// node order reproduces the reported aggregate bit-for-bit (the wire
+/// engine really is `decode_aggregate_into`, not a private copy).
+#[test]
+fn decoded_duals_are_deterministic_and_fold_to_the_mean() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let x0 = vec![0.3; D];
+    let st = quant_state(ProtocolKind::Alternating);
+
+    let run = || {
+        run_wire(
+            Workload::Oracle { op: &op, noise },
+            K,
+            &WireCodecSpec::Quant(st.clone()),
+            &x0,
+            STEPS,
+            11,
+            &TopologySpec::BroadcastAllGather,
+            ExchangePlan::synchronous(),
+            &WireOptions::default(),
+            &descent,
+        )
+        .expect("wire run")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.last_decoded, b.last_decoded);
+    assert_eq!(a.last_mean, b.last_mean);
+    assert_eq!(a.x, b.x);
+
+    let kf = K as f64;
+    let mut fold = vec![0.0f64; D];
+    for dec in &a.last_decoded {
+        assert_eq!(dec.len(), D);
+        for (m, v) in fold.iter_mut().zip(dec) {
+            *m += v / kf;
+        }
+    }
+    assert_eq!(fold, a.last_mean);
+}
+
+/// Measured-clock bookkeeping: one record per round, per-round splits sum
+/// exactly, totals match the per-round sums, and every node's OS-assigned
+/// handshake port was actually collected.
+#[test]
+fn measured_records_are_internally_consistent() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let x0 = vec![0.3; D];
+
+    let report = run_wire(
+        Workload::Oracle { op: &op, noise },
+        K,
+        &WireCodecSpec::Quant(quant_state(ProtocolKind::Main)),
+        &x0,
+        STEPS,
+        11,
+        &TopologySpec::BroadcastAllGather,
+        ExchangePlan::overlapped(1, 0.0),
+        &WireOptions::default(),
+        &descent,
+    )
+    .expect("wire run");
+
+    assert_eq!(report.rounds.len(), STEPS);
+    let mut comm = 0.0;
+    let mut bits = 0u64;
+    for r in &report.rounds {
+        assert!(r.gather_s >= 0.0 && r.broadcast_s >= 0.0);
+        assert_eq!(r.comm_s, r.gather_s + r.broadcast_s, "round {}", r.round);
+        assert_eq!(
+            r.comm_exposed_s + r.comm_hidden_s,
+            r.comm_s,
+            "round {}",
+            r.round
+        );
+        assert!(r.payload_bits > 0);
+        assert!(r.frame_bytes > 0);
+        comm += r.comm_s;
+        bits += r.payload_bits;
+    }
+    assert_eq!(report.payload_bits, bits);
+    assert!((report.comm_s - comm).abs() <= 1e-12 * comm.max(1.0));
+    assert!(report.comm_s > 0.0, "a real socket exchange takes nonzero time");
+    assert!(report.frame_bytes > 0);
+    assert_eq!(report.node_ports.len(), K);
+    assert!(report.node_ports.iter().all(|&p| p != 0));
+
+    // synthetic workloads measure without an operator (the timing-bench
+    // mode `qoda wire` uses at paper-sized dims)
+    let x0s = vec![0.0f64; 64];
+    let synth = run_wire(
+        Workload::Synthetic { dim: 64, scale: 1.0 },
+        2,
+        &WireCodecSpec::Identity,
+        &x0s,
+        3,
+        5,
+        &TopologySpec::BroadcastAllGather,
+        ExchangePlan::synchronous(),
+        &WireOptions::default(),
+        &descent,
+    )
+    .expect("synthetic wire run");
+    assert_eq!(synth.rounds.len(), 3);
+    assert!(synth.payload_bits > 0);
+}
+
+/// A worker dying mid-round must surface as `CommError::WorkerLost` —
+/// quickly, on every topology and schedule, with no deadlock: the remaining
+/// nodes unblock via EOF/timeout cascades, never by hanging the suite.
+#[test]
+fn killed_worker_surfaces_worker_lost_not_deadlock() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let x0 = vec![0.3; D];
+    let opts = WireOptions {
+        socket: SocketConfig {
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            ..SocketConfig::default()
+        },
+        kill: None,
+    };
+    let st = quant_state(ProtocolKind::Main);
+
+    // (k, victim, round, topology, plan)
+    let cases: Vec<(usize, usize, usize, TopologySpec, ExchangePlan)> = vec![
+        // flat, synchronous: the leader's gather EOFs
+        (3, 1, 2, TopologySpec::BroadcastAllGather, ExchangePlan::synchronous()),
+        // flat, overlapped: the lookahead recv EOFs
+        (3, 2, 3, TopologySpec::BroadcastAllGather, ExchangePlan::overlapped(1, 0.0)),
+        // hierarchical, rack *member* dies: its rack leader's gather EOFs
+        // and the loss cascades up
+        (5, 4, 2, TopologySpec::Hierarchical { racks: 2 }, ExchangePlan::synchronous()),
+        // hierarchical, rack *leader* dies: both its members and the
+        // cluster leader lose a peer
+        (5, 3, 2, TopologySpec::Hierarchical { racks: 2 }, ExchangePlan::synchronous()),
+    ];
+    for (k, victim, round, topology, plan) in cases {
+        let t0 = Instant::now();
+        let err = run_wire(
+            Workload::Oracle { op: &op, noise },
+            k,
+            &WireCodecSpec::Quant(st.clone()),
+            &x0,
+            STEPS,
+            11,
+            &topology,
+            plan,
+            &opts.with_kill(victim, round),
+            &descent,
+        )
+        .expect_err("a killed worker must fail the run");
+        let elapsed = t0.elapsed();
+        assert_eq!(
+            err,
+            CommError::WorkerLost,
+            "k={k} victim={victim} round={round} {topology:?}"
+        );
+        assert!(
+            elapsed < Duration::from_secs(10),
+            "cleanup took {elapsed:?} — a deadlock bounded only by timeouts \
+             (k={k} victim={victim} {topology:?})"
+        );
+    }
+}

@@ -21,8 +21,13 @@ re-runs the benches, and calls this script to enforce:
   ratio, which makes it the robust, runner-independent signal.
 
 Records whose name starts with ``_`` are metadata (e.g. the provisional
-marker on an estimated baseline) and are ignored. Exit code 0 = gate
-passes; 1 = regression or missing record; 2 = usage/IO error.
+marker on an estimated baseline) and are ignored. Records whose name starts
+with ``wire/`` are *measured* socket latency from the TCP runtime
+(``qoda wire``): real wall-clock on whatever runner produced them, so they
+are listed as informational and never compared against a baseline — an old
+baseline without them (or with different timings) cannot fail the gate.
+A ``--require wire/`` can still assert they are being emitted. Exit code
+0 = gate passes; 1 = regression or missing record; 2 = usage/IO error.
 """
 
 import argparse
@@ -94,9 +99,20 @@ def main():
         else:
             print(f"present: {prefix!r} -> {len(hits)} record(s)")
 
+    wire = [n for n in sorted(fresh) if n.startswith("wire/")]
+    if wire:
+        print(
+            f"informational: {len(wire)} measured wire/* record(s) "
+            "(real socket latency, runner-dependent — never gated)"
+        )
+        for n in wire:
+            ms = fresh[n].get("measured_comm_ms_per_round")
+            note = f" {ms} ms/round" if ms is not None else ""
+            print(f"  measured  {n}:{note}")
+
     compared = 0
     for name, b in sorted(base.items()):
-        if name.startswith("_"):
+        if name.startswith("_") or name.startswith("wire/"):
             continue
         b_ns = b.get("ns_per_step")
         f_rec = fresh.get(name)
