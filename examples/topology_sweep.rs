@@ -1,14 +1,17 @@
 //! Weak-scaling sweep across communication topologies: the Table 2 regime
-//! (fp32 baseline vs QODA5, K = 4..16, 5 Gbps cross-rack links) replayed
+//! (fp32 baseline vs QODA5, K = 4..64, 5 Gbps cross-rack links) replayed
 //! under flat broadcast-allgather, hierarchical two-level aggregation
-//! (K/4 racks over 50 Gbps rack-local links) and a parameter-server hub —
-//! the scaling scenarios the pluggable transport layer exists for.
+//! (K/4 racks over 50 Gbps rack-local links), a parameter-server hub, the
+//! sharded reduce-scatter → allgather and the classic ring — the scaling
+//! scenarios the pluggable transport layer exists for.
 //!
 //! The regime to see: the flat fp32 baseline degrades with K (incast),
 //! the parameter server collapses (serialized hub egress), hierarchical
 //! aggregation keeps scaling — and beats broadcast from K = 12 on, for the
-//! quantized payloads too. A straggler injection at the end shows the
-//! topology-aware charging: a slow rack-local link barely moves the
+//! quantized payloads too. From K = 32 the star-shaped plans all hit the
+//! per-link wall and the sharded collective takes over, with a peak
+//! per-link load ≤ 1.5/K of flat's. A straggler injection at the end shows
+//! the topology-aware charging: a slow rack-local link barely moves the
 //! two-level step time, a slow *leader* link drags the whole exchange.
 //!
 //! Run: `cargo run --release --example topology_sweep -- [--bandwidth 5]`
@@ -27,7 +30,7 @@ use qoda::vi::noise::NoiseModel;
 fn main() -> qoda::util::error::Result<()> {
     let args = Args::from_env();
     let bw = args.f64_or("bandwidth", 5.0)?;
-    let ks = args.list_or("ks", vec![4usize, 8, 12, 16])?;
+    let ks = args.list_or("ks", vec![4usize, 8, 16, 32, 64])?;
 
     // --- the weak-scaling regime, all three topologies -----------------------
     let t = topology_table(&ks, bw);
@@ -47,6 +50,44 @@ fn main() -> qoda::util::error::Result<()> {
         );
     }
     println!("\nhierarchical beats broadcast at K >= 12 (quantized payloads, 5 Gbps): ok");
+
+    // from K = 32 on, the sharded collective must beat every star-shaped
+    // plan on modeled step time AND keep its busiest link under 1.5/K of
+    // flat's — the PR-9 acceptance regime
+    for k in [32usize, 64] {
+        let sharded =
+            step_time_ms_topo(k, 5.0, true, bpc, &TopologySpec::ShardedReduceScatter);
+        for old in [
+            TopologySpec::BroadcastAllGather,
+            TopologySpec::hierarchical_for(k),
+            TopologySpec::ParameterServer,
+        ] {
+            let t = step_time_ms_topo(k, 5.0, true, bpc, &old);
+            assert!(
+                sharded < t,
+                "sharded must beat {} at K={k}, 5 Gbps: {sharded} vs {t}",
+                old.label()
+            );
+        }
+        let d = 1usize << 16;
+        let bits = vec![360_000u64; k];
+        let net = NetworkModel::genesis_cloud(5.0);
+        let mut rng = Rng::new(11);
+        let flat_peak = TopologySpec::BroadcastAllGather
+            .build()
+            .charge(&bits, d, &net, false, true, &mut rng)
+            .peak_link_bytes;
+        let mut rng = Rng::new(11);
+        let sharded_peak = TopologySpec::ShardedReduceScatter
+            .build()
+            .charge(&bits, d, &net, false, true, &mut rng)
+            .peak_link_bytes;
+        assert!(
+            sharded_peak <= 1.5 / k as f64 * flat_peak,
+            "K={k}: sharded peak link {sharded_peak} B above 1.5/K x flat ({flat_peak} B)"
+        );
+    }
+    println!("sharded beats flat/hier/PS at K >= 32 with peak link <= 1.5/K of flat's: ok");
 
     // --- straggler injection: the phase structure shows ----------------------
     let k = 16;
@@ -74,12 +115,14 @@ fn main() -> qoda::util::error::Result<()> {
     // --- the same topologies threaded through a real driven run --------------
     let mut rt = Table::new(
         "RunSpec x topology (QODA, quadratic d=32, K=8, 200 steps)",
-        &["topology", "wire Mbits (routed)", "comm ms (modeled)", "GAP"],
+        &["topology", "wire Mbits (routed)", "comm ms (modeled)", "peak link KB", "GAP"],
     );
     for topo in [
         TopologySpec::BroadcastAllGather,
         TopologySpec::hierarchical_for(8),
         TopologySpec::ParameterServer,
+        TopologySpec::ShardedReduceScatter,
+        TopologySpec::Ring,
     ] {
         let report = RunSpec::new(
             SolverKind::Qoda,
@@ -98,6 +141,7 @@ fn main() -> qoda::util::error::Result<()> {
             topo.label().to_string(),
             format!("{:.3}", report.net_wire_bits as f64 / 1e6),
             format!("{:.1}", report.comm_s * 1e3),
+            format!("{:.3}", report.peak_link_bytes / 1e3),
             format!("{:.5}", report.final_gap().unwrap_or(f64::NAN)),
         ]);
     }

@@ -2,9 +2,10 @@
 //! and bytes/step (topology-charged wire traffic) for one cluster exchange
 //! under each [`TopologySpec`], plus the modeled per-step comm milliseconds
 //! of the Table 1/2 regime — synchronous AND overlapped (exposed vs hidden
-//! against the weak-scaling compute window). Emits the machine-readable
-//! `results/BENCH_comm.json` so CI and regression tooling can diff the
-//! numbers without scraping stdout.
+//! against the weak-scaling compute window), plus the deterministic
+//! `topology/{sharded,ring}/K=*` per-link records that CI gates against
+//! flat's peak. Emits the machine-readable `results/BENCH_comm.json` so CI
+//! and regression tooling can diff the numbers without scraping stdout.
 
 use qoda::bench_harness::experiments::{
     overlap_sweep, table2_compute_window_s, topology_sweep,
@@ -12,7 +13,7 @@ use qoda::bench_harness::experiments::{
 use qoda::bench_harness::{bench, JsonBench};
 use qoda::comm::{Compressor, QuantCompressor};
 use qoda::coordinator::sim::ClusterSim;
-use qoda::coordinator::{ExchangePlan, TopologySpec};
+use qoda::coordinator::{ExchangePlan, TopologySpec, Transport};
 use qoda::net::NetworkModel;
 use qoda::quant::layer_map::LayerMap;
 use qoda::stats::rng::Rng;
@@ -32,6 +33,8 @@ fn main() {
         TopologySpec::BroadcastAllGather,
         TopologySpec::hierarchical_for(k),
         TopologySpec::ParameterServer,
+        TopologySpec::ShardedReduceScatter,
+        TopologySpec::Ring,
     ] {
         let comps: Vec<Box<dyn Compressor>> = (0..k)
             .map(|i| Box::new(QuantCompressor::global_bits(&map, 5, 128, i as u64)) as _)
@@ -51,6 +54,7 @@ fn main() {
                 ("k", format!("{k}")),
                 ("ns_per_step", format!("{:.1}", res.mean_ns)),
                 ("bytes_per_step", format!("{:.1}", metrics.wire_bits as f64 / 8.0)),
+                ("peak_link_bytes", format!("{:.2}", metrics.peak_link_bytes)),
                 ("modeled_comm_ms", format!("{:.4}", metrics.comm_s * 1e3)),
                 ("comm_exposed_ms", format!("{:.4}", exposed_s * 1e3)),
                 ("comm_hidden_ms", format!("{:.4}", hidden_s * 1e3)),
@@ -66,8 +70,38 @@ fn main() {
                 ("k", format!("{}", row.k)),
                 ("baseline_ms", format!("{:.2}", row.baseline_ms)),
                 ("qoda5_ms", format!("{:.2}", row.qoda5_ms)),
+                ("peak_link_bytes", format!("{:.2}", row.peak_link_bytes)),
             ],
         );
+    }
+
+    // per-link accounting for the new collectives, pinned against flat's:
+    // pure `Transport::charge` arithmetic (no timers, no rng draws — see
+    // `new_transports_never_draw_from_the_shared_rng`), so these records
+    // are exact and runner-independent. check_bench.py gates every
+    // `topology/sharded/*` record at `peak <= 1.5/K x flat's peak`.
+    let net = NetworkModel::genesis_cloud(5.0);
+    for &kk in &[8usize, 16, 32, 64] {
+        let bits = vec![360_000u64; kk]; // 45 kB coded payload per node
+        let d64 = 1usize << 16;
+        let mut rng = Rng::new(9);
+        let flat = TopologySpec::BroadcastAllGather
+            .build()
+            .charge(&bits, d64, &net, false, true, &mut rng);
+        for spec in [TopologySpec::ShardedReduceScatter, TopologySpec::Ring] {
+            let mut rng = Rng::new(9);
+            let c = spec.build().charge(&bits, d64, &net, false, true, &mut rng);
+            json.push(
+                &format!("topology/{}/K={kk}", spec.label()),
+                &[
+                    ("k", format!("{kk}")),
+                    ("peak_link_bytes", format!("{:.2}", c.peak_link_bytes)),
+                    ("flat_peak_link_bytes", format!("{:.2}", flat.peak_link_bytes)),
+                    ("wire_bits", format!("{}", c.wire_bits)),
+                    ("comm_ms", format!("{:.4}", c.comm_s * 1e3)),
+                ],
+            );
+        }
     }
 
     // the same regime under the overlapped exchange: exposed/hidden comm

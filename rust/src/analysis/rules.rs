@@ -362,6 +362,17 @@ mod tests {
     }
 
     #[test]
+    fn new_transport_modules_are_in_scope() {
+        // the sharded/ring collectives and the mesh wire runtime are
+        // wire-affecting: they slice, route and fold the coded stream, so
+        // they must stay under the same rules as the codecs
+        for rel in ["coordinator/collectives.rs", "wire/cluster.rs"] {
+            let a = audit_file(rel, "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n");
+            assert_eq!(violations(&a), vec![(RULE_PANIC, 1)], "{rel}");
+        }
+    }
+
+    #[test]
     fn widening_casts_not_flagged() {
         let a = audit_file("coding/huffman.rs", "fn f(l: u8) -> u32 { l as u32 }\n");
         assert!(a.findings.is_empty());

@@ -121,7 +121,8 @@ pub fn step_time_ms(k: usize, bandwidth_gbps: f64, qoda5: bool, bytes_per_coord:
 /// Peers a node synchronizes with per step under a topology (the fp32
 /// baseline's per-peer sync overhead): all K-1 under flat broadcast, rack
 /// peers + rack leaders under hierarchical, just the hub under a parameter
-/// server.
+/// server, the full mesh under sharded reduce-scatter (shards travel to
+/// every owner), and the two ring neighbours under ring routing.
 fn sync_peers(topo: &TopologySpec, k: usize) -> usize {
     match *topo {
         TopologySpec::BroadcastAllGather => k.saturating_sub(1),
@@ -134,6 +135,8 @@ fn sync_peers(topo: &TopologySpec, k: usize) -> usize {
             (m - 1) + spans.len().saturating_sub(1)
         }
         TopologySpec::ParameterServer => 1,
+        TopologySpec::ShardedReduceScatter => k.saturating_sub(1),
+        TopologySpec::Ring => 2.min(k.saturating_sub(1)),
     }
 }
 
@@ -170,12 +173,17 @@ pub struct TopologySweepRow {
     pub topology: TopologySpec,
     pub baseline_ms: f64,
     pub qoda5_ms: f64,
+    /// peak bytes any single link carries per QODA5 step under this plan —
+    /// the hot-spot metric the sharded/ring plans exist to shrink
+    pub peak_link_bytes: f64,
 }
 
-/// The weak-scaling regime across all three topologies: per node count,
+/// The weak-scaling regime across all five topologies: per node count,
 /// step time for the fp32 baseline and QODA5 under flat broadcast,
-/// hierarchical (K/4 racks) and parameter-server routing. Drives the
-/// `topology_sweep` example and the `BENCH_comm.json` emitter.
+/// hierarchical (K/4 racks), parameter-server, sharded reduce-scatter and
+/// ring routing, plus each plan's peak per-link load. Drives the
+/// `topology_sweep` example, `qoda topology` and the `BENCH_comm.json`
+/// emitter.
 pub fn topology_sweep(ks: &[usize], bandwidth_gbps: f64) -> Vec<TopologySweepRow> {
     let bpc = measure_qoda5_bytes_per_coord(1 << 16, 42);
     let mut rows = Vec::new();
@@ -184,12 +192,16 @@ pub fn topology_sweep(ks: &[usize], bandwidth_gbps: f64) -> Vec<TopologySweepRow
             TopologySpec::BroadcastAllGather,
             TopologySpec::hierarchical_for(k),
             TopologySpec::ParameterServer,
+            TopologySpec::ShardedReduceScatter,
+            TopologySpec::Ring,
         ] {
+            let charge = qoda5_charge(k, bandwidth_gbps, bpc, &spec);
             rows.push(TopologySweepRow {
                 k,
                 topology: spec,
                 baseline_ms: step_time_ms_topo(k, bandwidth_gbps, false, bpc, &spec),
                 qoda5_ms: step_time_ms_topo(k, bandwidth_gbps, true, bpc, &spec),
+                peak_link_bytes: charge.peak_link_bytes,
             });
         }
     }
@@ -197,13 +209,13 @@ pub fn topology_sweep(ks: &[usize], bandwidth_gbps: f64) -> Vec<TopologySweepRow
 }
 
 /// Render [`topology_sweep`] as a table (the weak-scaling Table 2 with a
-/// topology axis).
+/// topology axis) — the body of `qoda topology`.
 pub fn topology_table(ks: &[usize], bandwidth_gbps: f64) -> Table {
     let mut t = Table::new(
         &format!(
             "Weak scaling x topology — time per step (ms), {bandwidth_gbps} Gbps cross-rack"
         ),
-        &["K", "topology", "baseline", "QODA5", "speedup"],
+        &["K", "topology", "baseline", "QODA5", "speedup", "peak link KB/step"],
     );
     for row in topology_sweep(ks, bandwidth_gbps) {
         t.row(&[
@@ -212,6 +224,7 @@ pub fn topology_table(ks: &[usize], bandwidth_gbps: f64) -> Table {
             format!("{:.0}", row.baseline_ms),
             format!("{:.0}", row.qoda5_ms),
             format!("{:.2}x", row.baseline_ms / row.qoda5_ms),
+            format!("{:.2}", row.peak_link_bytes / 1e3),
         ]);
     }
     t

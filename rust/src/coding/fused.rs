@@ -333,6 +333,39 @@ pub fn decode_vector_fused(
     res
 }
 
+/// Fused decode of a contiguous run of layers into `out` (cleared first) —
+/// the shard-decode entry point of the sharded reduce-scatter transport.
+/// `layers` is a validated sub-slice of a `LayerMap`'s layers (e.g.
+/// `&map.layers[lo..hi]`) and the reader holds *exactly* those layers'
+/// coded bits, as produced by
+/// [`WirePacket::shard`](crate::comm::WirePacket::shard): sharding slices
+/// at layer bit-offset boundaries, so a shard's payload is the same byte
+/// stream a sequential decode would have consumed for that range —
+/// decoding shard-by-shard and concatenating is bit-identical to
+/// [`decode_vector_fused`] on the whole packet. Error semantics match the
+/// full decode (same variants, positions relative to the shard payload).
+pub fn decode_layers_fused(
+    r: &mut BitReader,
+    layers: &[crate::quant::layer_map::Layer],
+    books: &Codebooks,
+    cfg: &QuantConfig,
+    out: &mut Vec<f64>,
+) -> Result<(), DecodeError> {
+    out.clear();
+    out.reserve(layers.iter().map(|l| l.len).sum());
+    let mut c = BitCache::new(r);
+    let mut res = Ok(());
+    for l in layers {
+        let seq = &cfg.sequences[l.type_id];
+        if let Err(e) = decode_layer_fused(&mut c, books, l.type_id, l.len, seq, out) {
+            res = Err(e);
+            break;
+        }
+    }
+    c.spill();
+    res
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -491,6 +524,72 @@ mod tests {
             assert_eq!(r2.remaining(), 0, "fused decode must consume the stream");
             assert_eq!(staged.len(), fused.len());
             for (i, (a, b)) in staged.iter().zip(&fused).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "coord {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn ranged_decode_concatenates_to_the_full_decode() {
+        // decode_layers_fused over [0, split) then [split, L) — with each
+        // range's payload re-sliced at layer bit boundaries exactly like
+        // WirePacket::shard — must reproduce the full fused decode bit for
+        // bit, including the degenerate empty ranges at either end
+        for_cases(20, 0x5A4D, |g| {
+            let map = LayerMap::from_spec(&[
+                ("a", g.usize_in(1, 120), "x"),
+                ("b", g.usize_in(1, 120), "y"),
+                ("c", g.usize_in(1, 120), "x"),
+            ]);
+            let cfg = QuantConfig::uniform_bits(2, g.usize_in(2, 5) as u32, 2.0);
+            let books = Codebooks::uniform(ProtocolKind::Main, &cfg, &map.type_proportions());
+            let v = g.vec_f64(map.dim, 2.0);
+            let mut rng = Rng::new(g.rng.next_u64());
+            let mut w = BitWriter::new();
+            let mut offsets = Vec::new();
+            for l in &map.layers {
+                let s = &v[l.offset..l.offset + l.len];
+                let mut codes = Vec::new();
+                books.fill_code_table(l.type_id, &mut codes);
+                offsets.push(w.len_bits());
+                encode_layer_body(
+                    s,
+                    &cfg.sequences[l.type_id],
+                    layer_norm_f32(s, cfg.q),
+                    &codes,
+                    &mut rng,
+                    &mut w,
+                );
+            }
+            let buf = w.finish();
+            let mut full = Vec::new();
+            let mut r = buf.reader();
+            decode_vector_fused(&mut r, &map, &books, &cfg, &mut full).expect("full decode");
+
+            let split = g.usize_in(0, map.layers.len());
+            let mut cat: Vec<f64> = Vec::new();
+            for (lo, hi) in [(0, split), (split, map.layers.len())] {
+                let lo_bit = offsets.get(lo).copied().unwrap_or(buf.len_bits());
+                let hi_bit = offsets.get(hi).copied().unwrap_or(buf.len_bits());
+                let mut rr = buf.reader();
+                rr.skip(lo_bit as u32);
+                let mut sw = BitWriter::with_capacity_bits(hi_bit - lo_bit);
+                let mut left = hi_bit - lo_bit;
+                while left > 0 {
+                    let take = left.min(64) as u32;
+                    sw.write_bits(rr.read_bits(take), take);
+                    left -= take as usize;
+                }
+                let shard = sw.finish();
+                let mut sr = shard.reader();
+                let mut part = Vec::new();
+                decode_layers_fused(&mut sr, &map.layers[lo..hi], &books, &cfg, &mut part)
+                    .expect("ranged decode");
+                assert_eq!(sr.remaining(), 0, "range ({lo},{hi}) left bits behind");
+                cat.extend(part);
+            }
+            assert_eq!(cat.len(), full.len());
+            for (i, (a, b)) in full.iter().zip(&cat).enumerate() {
                 assert_eq!(a.to_bits(), b.to_bits(), "coord {i}");
             }
         });

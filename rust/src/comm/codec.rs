@@ -54,6 +54,24 @@ pub trait Compressor: Send {
     fn decode_into(&mut self, packet: &WirePacket, out: &mut Vec<f64>)
         -> Result<(), CommError>;
 
+    /// Partial DEC: reconstruct only the coordinates of the contiguous
+    /// layer range `layers` from a shard produced by
+    /// [`WirePacket::shard`] over that same range — the owner-side decode
+    /// of the sharded reduce-scatter plan. Decoding every shard of a
+    /// partition and concatenating in range order is bit-identical to
+    /// [`Compressor::decode_into`] on the unsharded packet. Codecs without
+    /// layer framing may decline with [`CommError::Unsupported`] (the
+    /// default).
+    fn decode_layers_into(
+        &mut self,
+        packet: &WirePacket,
+        layers: std::ops::Range<usize>,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        let _ = (packet, layers, out);
+        Err(CommError::Unsupported { what: "partial decode" })
+    }
+
     /// Hook for Algorithm 1's update steps (t in U): re-estimate level
     /// sequences / codebooks from the statistics gathered since the last
     /// update. Default: no-op. Must only be called between exchanges —
@@ -131,6 +149,20 @@ impl Compressor for IdentityCompressor {
             return Err(CommError::TrailingBits { bits: r.remaining() });
         }
         Ok(())
+    }
+
+    /// Identity packets frame the whole vector as one layer, so the only
+    /// supported range is the full one (`0..1`); everything else declines.
+    fn decode_layers_into(
+        &mut self,
+        packet: &WirePacket,
+        layers: std::ops::Range<usize>,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        if layers == (0..1) {
+            return self.decode_into(packet, out);
+        }
+        Err(CommError::Unsupported { what: "identity partial decode" })
     }
 
     fn name(&self) -> &'static str {
@@ -579,6 +611,44 @@ impl Compressor for QuantCompressor {
         res
     }
 
+    /// Shard DEC through the fused ranged kernel. The fused path is pinned
+    /// bit-identical to the staged one, so this serves both `staged`
+    /// settings: shard decodes concatenate to exactly what either full
+    /// decode produces.
+    fn decode_layers_into(
+        &mut self,
+        packet: &WirePacket,
+        layers: std::ops::Range<usize>,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        let total = self.map.layers.len();
+        if layers.start > layers.end || layers.end > total {
+            return Err(CommError::ShardRange {
+                start: layers.start,
+                end: layers.end,
+                layers: total,
+            });
+        }
+        let run = &self.map.layers[layers];
+        let want: usize = run.iter().map(|l| l.len).sum();
+        if packet.dim() != want {
+            return Err(CommError::DimMismatch { want, got: packet.dim() });
+        }
+        let mut r = packet.payload().reader();
+        let res = (|| {
+            fused::decode_layers_fused(&mut r, run, &self.books, &self.cfg, out)?;
+            if r.remaining() != 0 {
+                return Err(CommError::TrailingBits { bits: r.remaining() });
+            }
+            Ok(())
+        })();
+        #[cfg(debug_assertions)]
+        if let Err(ref e) = res {
+            debug_check_decode_error(packet, &r, e);
+        }
+        res
+    }
+
     fn update_levels(&mut self) {
         match self.adaptation {
             Adaptation::Fixed => {}
@@ -779,6 +849,61 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn shard_decodes_concatenate_to_the_full_decode() {
+        let map = LayerMap::from_spec(&[("a", 500, "ff"), ("b", 250, "emb")]);
+        let mut c = QuantCompressor::global_bits(&map, 5, 64, 17);
+        let v = grad_like(&map, 18);
+        let packet = c.encode(&v).expect("encode");
+        let full = c.decode(&packet).expect("full decode");
+        let nl = c.map.layers.len();
+        assert!(nl >= 3, "bucketing should split the map, got {nl} layer(s)");
+        // partition the layers into three contiguous owner ranges, decode
+        // each range's shard independently, concatenate in range order
+        let cuts = [0, nl / 3, 2 * nl / 3, nl];
+        let mut cat: Vec<f64> = Vec::new();
+        for w in cuts.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let dim: usize = c.map.layers[lo..hi].iter().map(|l| l.len).sum();
+            let shard = packet.shard(lo..hi, dim).expect("shard");
+            let mut part = Vec::new();
+            c.decode_layers_into(&shard, lo..hi, &mut part).expect("shard decode");
+            assert_eq!(part.len(), dim);
+            cat.extend(part);
+        }
+        assert_eq!(cat.len(), full.len());
+        for (i, (a, b)) in full.iter().zip(&cat).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "coord {i}");
+        }
+    }
+
+    #[test]
+    fn ranged_decode_validates_range_and_dim() {
+        let map = LayerMap::from_spec(&[("a", 128, "ff")]);
+        let mut c = QuantCompressor::global_bits(&map, 4, 32, 3);
+        let packet = c.encode(&grad_like(&map, 4)).expect("encode");
+        let nl = c.map.layers.len();
+        let mut out = Vec::new();
+        assert!(matches!(
+            c.decode_layers_into(&packet, 0..nl + 1, &mut out),
+            Err(CommError::ShardRange { .. })
+        ));
+        // the full packet under a sub-range: coordinate widths disagree
+        assert!(matches!(
+            c.decode_layers_into(&packet, 0..1, &mut out),
+            Err(CommError::DimMismatch { .. })
+        ));
+        // identity codecs decline everything but the full single-layer range
+        let mut id = IdentityCompressor::new();
+        let idp = id.encode(&[1.0, 2.0]).expect("encode");
+        id.decode_layers_into(&idp, 0..1, &mut out).expect("full range");
+        assert_eq!(out, vec![1.0, 2.0]);
+        assert!(matches!(
+            id.decode_layers_into(&idp, 0..0, &mut out),
+            Err(CommError::Unsupported { .. })
+        ));
     }
 
     #[test]

@@ -35,9 +35,11 @@
 //! Both directions are fallible end to end: corrupt or truncated wire bytes
 //! surface as [`CommError`], never a panic, and a panicking encode worker
 //! thread is contained as [`CommError::EncodeWorker`] instead of poisoning
-//! the engine. Future transports (sharded allgather, async collectives,
-//! multi-backend) drop in as new packet consumers without forking the
-//! engines.
+//! the engine. The per-layer bit offsets carried by every packet make the
+//! payload shardable at layer boundaries ([`WirePacket::shard`]) without
+//! re-coding — the mechanism behind the sharded reduce-scatter transport —
+//! and further transports drop in as new packet consumers without forking
+//! the engines.
 
 pub mod codec;
 pub mod endpoint;
@@ -66,6 +68,17 @@ pub enum CommError {
     /// A node's worker thread (or its channel) went away before delivering
     /// its round's packet — the exchange cannot complete.
     WorkerLost,
+    /// A [`WirePacket::shard`] request named a layer range that the packet's
+    /// framing cannot satisfy: reversed bounds, layers past the last marked
+    /// segment, or offsets that escape the payload.
+    ShardRange { start: usize, end: usize, layers: usize },
+    /// A transport plan was combined with a rack-structured spec it does not
+    /// support (sharded / ring plans are rack-free peer meshes).
+    UnsupportedRacks { racks: usize },
+    /// The requested operation is not available on this codec or runtime
+    /// (e.g. partial decode on a codec without layer framing, or a wire
+    /// schedule the measured runtime does not implement).
+    Unsupported { what: &'static str },
 }
 
 impl From<DecodeError> for CommError {
@@ -90,6 +103,16 @@ impl std::fmt::Display for CommError {
             CommError::WorkerLost => {
                 write!(f, "a worker thread exited before delivering its round's packet")
             }
+            CommError::ShardRange { start, end, layers } => {
+                write!(f, "shard range {start}..{end} invalid for packet with {layers} layer(s)")
+            }
+            CommError::UnsupportedRacks { racks } => {
+                write!(
+                    f,
+                    "sharded/ring transports are rack-free peer meshes; got a spec with {racks} rack(s)"
+                )
+            }
+            CommError::Unsupported { what } => write!(f, "unsupported operation: {what}"),
         }
     }
 }

@@ -1,6 +1,21 @@
 //! The wire packet: one node's fully encoded broadcast payload.
+//!
+//! # Shard-boundary semantics
+//!
+//! Every packet records the starting bit offset of each layer segment, and
+//! each segment is self-contained given the shared codebooks (it opens with
+//! its own f32 norm header). That makes layer boundaries the natural —
+//! and only — shard boundaries: [`WirePacket::shard`] slices the coded
+//! payload at `layer_offsets[start]..layer_offsets[end]` *without
+//! re-coding*, rebasing the retained offsets to bit 0 so the shard is
+//! itself a well-formed packet containing exactly layers `start..end`.
+//! Requests that are not aligned to layer boundaries cannot be expressed
+//! (the API takes a layer range, not a bit range), and ranges outside the
+//! packet's framing fail with [`CommError::ShardRange`] — never a panic,
+//! even on hand-assembled malformed packets from [`WirePacket::from_raw`].
 
 use crate::coding::bitio::{BitBuf, BitWriter};
+use crate::comm::CommError;
 
 /// An encoded dual vector as it travels between nodes: the entropy-coded
 /// payload, the bit offset of every layer segment, and the flat coordinate
@@ -52,6 +67,77 @@ impl WirePacket {
 
     pub fn payload(&self) -> &BitBuf {
         &self.payload
+    }
+
+    /// Exact coded size of each layer segment in bits — offset diffs, with
+    /// the last segment running to the end of the payload. This is the
+    /// per-layer size table the sharded transport balances owners over.
+    pub fn layer_bits(&self) -> Vec<u64> {
+        let n = self.layer_offsets.len();
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let hi = if i + 1 < n { self.layer_offsets[i + 1] } else { self.payload.len_bits() };
+            out.push(hi.saturating_sub(self.layer_offsets[i]) as u64);
+        }
+        out
+    }
+
+    /// Slice the coded payload at layer bit-offset boundaries: the returned
+    /// packet contains exactly layers `layers.start..layers.end` of this
+    /// one, with offsets rebased to bit 0 and an exact bit count. No
+    /// re-coding happens — the segments are copied verbatim, so a shard
+    /// concatenation reproduces the original payload bit for bit.
+    ///
+    /// `shard_dim` is the flat coordinate count of the retained layers; the
+    /// packet does not know the layer map, so the caller (who does) supplies
+    /// it. Empty ranges are valid and yield an empty packet — owners can
+    /// legitimately own zero layers when there are fewer layers than peers.
+    ///
+    /// Fails with [`CommError::ShardRange`] on reversed bounds, ranges past
+    /// the framed layer count, or framing that escapes the payload
+    /// (possible only via [`WirePacket::from_raw`]). Never panics.
+    pub fn shard(
+        &self,
+        layers: std::ops::Range<usize>,
+        shard_dim: usize,
+    ) -> Result<WirePacket, CommError> {
+        let n = self.layer_offsets.len();
+        let err = CommError::ShardRange { start: layers.start, end: layers.end, layers: n };
+        if layers.start > layers.end || layers.end > n {
+            return Err(err);
+        }
+        if layers.start == layers.end {
+            return Ok(WirePacket { payload: BitBuf::default(), layer_offsets: Vec::new(), dim: shard_dim });
+        }
+        let len_bits = self.payload.len_bits();
+        let lo_bit = self.layer_offsets[layers.start];
+        let hi_bit =
+            if layers.end < n { self.layer_offsets[layers.end] } else { len_bits };
+        let window = &self.layer_offsets[layers.start..layers.end];
+        let monotone = window.windows(2).all(|p| p[0] <= p[1]);
+        if !monotone || lo_bit > hi_bit || hi_bit > len_bits {
+            return Err(err);
+        }
+        let mut r = self.payload.reader();
+        let mut to_skip = lo_bit;
+        while to_skip > 0 {
+            let step = to_skip.min(u32::MAX as usize);
+            r.skip(step as u32);
+            to_skip -= step;
+        }
+        let total = hi_bit - lo_bit;
+        let mut w = BitWriter::with_capacity_bits(total);
+        let mut left = total;
+        while left > 0 {
+            let take = left.min(64);
+            match r.try_read_bits(take as u32) {
+                Some(bits) => w.write_bits(bits, take as u32),
+                None => return Err(err),
+            }
+            left -= take;
+        }
+        let rebased: Vec<usize> = window.iter().map(|&o| o - lo_bit).collect();
+        Ok(WirePacket { payload: w.finish(), layer_offsets: rebased, dim: shard_dim })
     }
 
     /// Start a fresh encode: hand the payload allocation to `w` and reset
@@ -135,5 +221,87 @@ mod tests {
             assert_eq!(r.read_bits(5), round);
             assert_eq!(r.read_bits(9), round + 1);
         }
+    }
+
+    /// Build a 3-layer packet with segment sizes 7, 13 and 21 bits whose
+    /// payload is a known bit pattern.
+    fn three_layer_packet() -> WirePacket {
+        let mut p = WirePacket::new();
+        let mut w = BitWriter::new();
+        p.begin_encode(12, &mut w);
+        p.mark_layer(w.len_bits());
+        w.write_bits(0b1010_101, 7);
+        p.mark_layer(w.len_bits());
+        w.write_bits(0b1_0011_0111_0101, 13);
+        p.mark_layer(w.len_bits());
+        w.write_bits(0x15_5555, 21);
+        p.finish_encode(&mut w);
+        p
+    }
+
+    #[test]
+    fn layer_bits_are_offset_diffs() {
+        let p = three_layer_packet();
+        assert_eq!(p.layer_bits(), vec![7, 13, 21]);
+        assert_eq!(p.layer_bits().iter().sum::<u64>(), p.len_bits() as u64);
+    }
+
+    #[test]
+    fn shard_slices_at_layer_boundaries_and_rebases() {
+        let p = three_layer_packet();
+        let s = p.shard(1..3, 9).unwrap();
+        assert_eq!(s.dim(), 9);
+        assert_eq!(s.layer_offsets(), &[0, 13]);
+        assert_eq!(s.len_bits(), 34);
+        let mut r = s.payload().reader();
+        assert_eq!(r.read_bits(13), 0b1_0011_0111_0101);
+        assert_eq!(r.read_bits(21), 0x15_5555);
+    }
+
+    #[test]
+    fn shards_concatenate_back_to_the_original_payload() {
+        let p = three_layer_packet();
+        let mut w = BitWriter::with_capacity_bits(p.len_bits());
+        let mut offsets = Vec::new();
+        for lo in 0..3 {
+            let s = p.shard(lo..lo + 1, 4).unwrap();
+            offsets.push(w.len_bits());
+            w.append(s.payload());
+        }
+        let buf = w.finish();
+        assert_eq!(buf.words(), p.payload().words());
+        assert_eq!(buf.len_bits(), p.len_bits());
+        assert_eq!(offsets, p.layer_offsets());
+    }
+
+    #[test]
+    fn empty_shard_range_is_a_valid_empty_packet() {
+        let p = three_layer_packet();
+        let s = p.shard(2..2, 0).unwrap();
+        assert_eq!(s.len_bits(), 0);
+        assert_eq!(s.dim(), 0);
+        assert!(s.layer_offsets().is_empty());
+    }
+
+    #[test]
+    fn bad_shard_ranges_error_never_panic() {
+        let p = three_layer_packet();
+        for (start, end) in [(0usize, 4usize), (2, 1), (4, 4)] {
+            assert_eq!(
+                p.shard(start..end, 4).err(),
+                Some(CommError::ShardRange { start, end, layers: 3 })
+            );
+        }
+        // framing that escapes the payload (only constructible via from_raw)
+        let bogus = WirePacket::from_raw(p.payload().clone(), vec![0, 5, 10_000], 12);
+        assert_eq!(
+            bogus.shard(2..3, 4).err(),
+            Some(CommError::ShardRange { start: 2, end: 3, layers: 3 })
+        );
+        let reversed = WirePacket::from_raw(p.payload().clone(), vec![0, 20, 7], 12);
+        assert_eq!(
+            reversed.shard(1..3, 8).err(),
+            Some(CommError::ShardRange { start: 1, end: 3, layers: 3 })
+        );
     }
 }

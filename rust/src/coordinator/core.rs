@@ -37,6 +37,39 @@ pub fn decode_aggregate_into(
     Ok(())
 }
 
+/// Decode every node's *shard* of one owner's slice in node order and fold
+/// it into `mean` — the partial-reduce half of the sharded reduce-scatter
+/// transport.
+///
+/// This is [`decode_aggregate_into`] restricted to a `slice_len`-coordinate
+/// window: same node order, same running mean, same `v / k` fold, so
+/// concatenating every owner's slice reproduces the full-fold aggregate
+/// bit for bit (each coordinate sees the identical sequence of float
+/// operations either way). `decode(node, out)` materializes node `node`'s
+/// decoded shard — exactly the owner's layers — into `out`; a shard of the
+/// wrong width surfaces as [`CommError::DimMismatch`].
+pub fn decode_aggregate_slice_into(
+    k: usize,
+    slice_len: usize,
+    mean: &mut Vec<f64>,
+    scratch: &mut Vec<f64>,
+    mut decode: impl FnMut(usize, &mut Vec<f64>) -> Result<(), CommError>,
+) -> Result<(), CommError> {
+    mean.clear();
+    mean.resize(slice_len, 0.0);
+    let kf = k as f64;
+    for node in 0..k {
+        decode(node, scratch)?;
+        if scratch.len() != slice_len {
+            return Err(CommError::DimMismatch { want: slice_len, got: scratch.len() });
+        }
+        for (m, v) in mean.iter_mut().zip(scratch.iter()) {
+            *m += v / kf;
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,5 +110,49 @@ mod tests {
             }
         });
         assert_eq!(err, Err(CommError::DimMismatch { want: 4, got: 3 }));
+    }
+
+    #[test]
+    fn concatenated_slice_folds_equal_the_full_fold_bitwise() {
+        // 3 nodes, 7 coordinates, split into slices [0..3), [3..5), [5..7)
+        let inputs = [
+            vec![0.1, -2.0, 3.5, 0.25, 1.0 / 3.0, -7.125, 0.9],
+            vec![5.0, 0.125, -0.6, 2.5, 1e-3, 4.0, -0.33],
+            vec![-1.5, 2.25, 0.75, -3.125, 8.0, 0.5, 1.0 / 7.0],
+        ];
+        let mut full = Vec::new();
+        let mut scratch = Vec::new();
+        decode_aggregate_into(3, 7, &mut full, &mut scratch, |node, out| {
+            out.clear();
+            out.extend_from_slice(&inputs[node]);
+            Ok(())
+        })
+        .unwrap();
+
+        let mut concat = Vec::new();
+        for (lo, hi) in [(0usize, 3usize), (3, 5), (5, 7)] {
+            let mut slice_mean = Vec::new();
+            decode_aggregate_slice_into(3, hi - lo, &mut slice_mean, &mut scratch, |node, out| {
+                out.clear();
+                out.extend_from_slice(&inputs[node][lo..hi]);
+                Ok(())
+            })
+            .unwrap();
+            concat.extend_from_slice(&slice_mean);
+        }
+        // bit-identical, not approximately equal: same fold order per coord
+        assert_eq!(full, concat);
+    }
+
+    #[test]
+    fn slice_fold_rejects_wrong_width_shards() {
+        let mut mean = Vec::new();
+        let mut scratch = Vec::new();
+        let err = decode_aggregate_slice_into(2, 3, &mut mean, &mut scratch, |_, out| {
+            out.clear();
+            out.extend_from_slice(&[1.0, 2.0]);
+            Ok(())
+        });
+        assert_eq!(err, Err(CommError::DimMismatch { want: 3, got: 2 }));
     }
 }

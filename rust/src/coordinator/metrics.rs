@@ -22,6 +22,9 @@ pub struct StepMetrics {
     /// exact total wire bits across all nodes this step (summed off the
     /// actual `WirePacket` payloads)
     pub wire_bits: u64,
+    /// peak bytes any single point-to-point link carried this step, per the
+    /// topology's charge (the hot-spot metric sharded/ring plans shrink)
+    pub peak_link_bytes: f64,
     /// workload-specific scalars (losses, w-dist, fid...)
     pub scalars: Vec<(String, f64)>,
 }
@@ -97,6 +100,7 @@ mod tests {
                 comm_hidden_s: 0.0,
                 bytes_per_node: 100.0,
                 wire_bits: 800,
+                peak_link_bytes: 75.0,
                 scalars: vec![],
             };
             m.push_scalar("loss", i as f64);

@@ -17,14 +17,28 @@
 //! * **Topology** — [`topology`] is the pluggable transport layer: a
 //!   [`Transport`] is a routing/charging plan over the per-node packets,
 //!   selected by a [`TopologySpec`] that travels through `RunSpec`, the
-//!   `qoda run` CLI and the bench harnesses. Three ship today:
-//!   broadcast-allgather (flat ring collectives — the original behavior,
-//!   golden-parity tested), hierarchical two-level aggregation (rack-local
-//!   gather over fast PCIe-class links, leaders-only cross-rack exchange),
-//!   and a parameter-server hub. Every charge also decomposes into a
+//!   `qoda run` CLI and the bench harnesses. Five plans ship, spanning the
+//!   per-link-load spectrum:
+//!
+//!   | plan | peak bytes/link/step | latency terms | wins when |
+//!   |---|---|---|---|
+//!   | broadcast-allgather | `(K−1)/K·ΣB` — linear in K | 1 collective | small K |
+//!   | hierarchical | full bundle set on leader links | 3 phases | racks exist, K ≈ 12–16 |
+//!   | param-server | `ΣB` on the hub link | 2 phases | toy K only |
+//!   | sharded reduce-scatter | `~ΣB/K` — 1/K of flat | 2 phases | weak scaling, K ≥ 32 |
+//!   | ring | `~2·B` — constant in K | 2(K−1) steps | huge payloads |
+//!
+//!   The first three live in [`topology`]; the bandwidth-optimal pair lives
+//!   in [`collectives`], built on
+//!   [`comm::WirePacket::shard`](crate::comm::WirePacket::shard)
+//!   (entropy-coded payloads slice at layer bit-offset boundaries, no
+//!   re-coding) with layer ownership balanced on the previous round's
+//!   *measured coded bits* per layer. Every charge also decomposes into a
 //!   [`net::PhaseTimeline`](crate::net::PhaseTimeline) of rack-local /
 //!   cross-rack intervals against the heterogeneous link classes and
-//!   injectable stragglers of [`net::NetworkModel`](crate::net::NetworkModel).
+//!   injectable stragglers of [`net::NetworkModel`](crate::net::NetworkModel),
+//!   and reports the peak per-link bytes of its hottest link
+//!   ([`WireCharge::peak_link_bytes`]).
 //! * **Exchange schedule** — an [`ExchangePlan`] decides how each charge
 //!   meets the clock. [`ExchangeMode::Synchronous`] is lock-step: the full
 //!   `comm_s` sits on the critical path, and the engines are bit- and
@@ -67,6 +81,7 @@
 //! never see topology internals, only the [`WireCharge`] they are billed
 //! and the timeline the overlap scheduler splits.
 
+pub mod collectives;
 pub mod core;
 pub mod metrics;
 pub mod parallel;

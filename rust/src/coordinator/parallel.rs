@@ -271,6 +271,15 @@ pub fn run_rounds_over(
                     None => Err(CommError::WorkerLost),
                 }
             })?;
+            // layer-observing transports (sharded) balance ownership on the
+            // measured per-layer coded bits of the packets just collected
+            if transport.observes_layers() {
+                let tables: Vec<Vec<u64>> = slots
+                    .iter()
+                    .map(|s| s.as_ref().map(|p| p.layer_bits()).unwrap_or_default())
+                    .collect();
+                transport.observe_packet_layers(&tables);
+            }
             let charge = transport.charge(
                 &bits,
                 d,
@@ -472,14 +481,29 @@ mod tests {
         let flat = run(&TopologySpec::BroadcastAllGather);
         let hier = run(&TopologySpec::Hierarchical { racks: 3 });
         let ps = run(&TopologySpec::ParameterServer);
+        let sharded = run(&TopologySpec::ShardedReduceScatter);
+        let ring = run(&TopologySpec::Ring);
         assert_eq!(flat.x, hier.x);
         assert_eq!(flat.x, ps.x);
+        assert_eq!(flat.x, sharded.x);
+        assert_eq!(flat.x, ring.x);
         assert_eq!(flat.last_mean, hier.last_mean);
+        assert_eq!(flat.last_mean, sharded.last_mean);
+        assert_eq!(flat.last_mean, ring.last_mean);
         assert!(hier.wire_bits > flat.wire_bits);
         assert!(ps.wire_bits > flat.wire_bits);
-        assert!(flat.comm_s > 0.0 && hier.comm_s > 0.0 && ps.comm_s > 0.0);
+        // the bandwidth-optimal plans route differently from flat too
+        assert_ne!(sharded.wire_bits, flat.wire_bits);
+        assert_ne!(ring.wire_bits, flat.wire_bits);
+        assert!(
+            flat.comm_s > 0.0
+                && hier.comm_s > 0.0
+                && ps.comm_s > 0.0
+                && sharded.comm_s > 0.0
+                && ring.comm_s > 0.0
+        );
         // synchronous accounting: everything exposed, nothing hidden
-        for r in [&flat, &hier, &ps] {
+        for r in [&flat, &hier, &ps, &sharded, &ring] {
             assert_eq!(r.comm_exposed_s, r.comm_s);
             assert_eq!(r.comm_hidden_s, 0.0);
         }

@@ -150,6 +150,14 @@ impl ClusterSim {
             endpoints[node].recv_into(out)
         })?;
         let codec_s = t0.elapsed().as_secs_f64();
+        // layer-observing transports (sharded) balance ownership on the
+        // measured per-layer coded bits; feed them the tables right before
+        // the charge
+        if self.topology.observes_layers() {
+            let tables: Vec<Vec<u64>> =
+                self.endpoints.iter().map(|e| e.packet().layer_bits()).collect();
+            self.topology.observe_packet_layers(&tables);
+        }
         let charge = self.topology.charge(
             &bits,
             d,
@@ -169,6 +177,7 @@ impl ClusterSim {
             comm_hidden_s,
             bytes_per_node: payload_bits as f64 / 8.0 / k as f64,
             wire_bits: charge.wire_bits,
+            peak_link_bytes: charge.peak_link_bytes,
             scalars: Vec::new(),
         };
         let out = match self.plan.mode {
@@ -305,6 +314,8 @@ mod tests {
             TopologySpec::BroadcastAllGather,
             TopologySpec::Hierarchical { racks: 3 },
             TopologySpec::ParameterServer,
+            TopologySpec::ShardedReduceScatter,
+            TopologySpec::Ring,
         ] {
             let mut sim =
                 ClusterSim::new(mk(), net.clone(), false).with_topology(&spec);
@@ -312,13 +323,24 @@ mod tests {
             outs.push(sim.exchange(&ds).unwrap());
         }
         // bit-identical aggregates under every topology...
-        assert_eq!(outs[0].0, outs[1].0);
-        assert_eq!(outs[0].0, outs[2].0);
+        for o in &outs[1..] {
+            assert_eq!(outs[0].0, o.0);
+        }
         // ...but distinct wire-bit totals (the routing differs)
         assert!(outs[1].1.wire_bits > outs[0].1.wire_bits);
         assert!(outs[2].1.wire_bits > outs[0].1.wire_bits);
+        // sharded ships strictly less than flat (own shards stay local)...
+        assert!(outs[3].1.wire_bits < outs[0].1.wire_bits + 32 * 512);
+        assert!(outs[3].1.wire_bits > 0);
+        // ...and its peak link load undercuts every full-bundle plan
+        for o in &outs[..3] {
+            assert!(outs[3].1.peak_link_bytes < o.1.peak_link_bytes);
+        }
+        assert!(outs[4].1.wire_bits > 0);
         // payload-per-node metric is topology-independent
-        assert_eq!(outs[0].1.bytes_per_node, outs[1].1.bytes_per_node);
+        for o in &outs[1..] {
+            assert_eq!(outs[0].1.bytes_per_node, o.1.bytes_per_node);
+        }
     }
 
     #[test]

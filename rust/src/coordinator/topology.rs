@@ -16,17 +16,39 @@
 //!   incast/straggler penalties, and which carry the entropy-coded payloads
 //!   that the jitter model (Remark D.3) taxes.
 //!
-//! Three topologies ship:
+//! Five topologies ship — the plan matrix (per-link load, latency terms,
+//! when each wins):
 //!
 //! * [`BroadcastAllGather`] — every node broadcasts its packet to every
 //!   other node over the cross-rack network (today's ring collectives;
-//!   golden-parity tested against the pre-topology engines);
+//!   golden-parity tested against the pre-topology engines). Peak per-link
+//!   load `(K−1)/K · ΣB` grows linearly with K; wins only at small K.
 //! * [`Hierarchical`] — two-level aggregation as on real multi-GPU nodes:
 //!   rack-local gather onto a rack leader over fast PCIe-class links, a
-//!   leaders-only cross-rack exchange, then a rack-local broadcast down;
+//!   leaders-only cross-rack exchange, then a rack-local broadcast down.
+//!   Trades cross-rack volume for rack-local bandwidth; wins once racks
+//!   exist and cross-rack links are the bottleneck (K ≈ 12–16), but the
+//!   leader links still carry full bundles, so it plateaus with K.
 //! * [`ParameterServer`] — a hub ingests all K packets and unicasts the
 //!   fp32 aggregate back, serializing on its egress link (the classic PS
-//!   scaling wall).
+//!   scaling wall). Lowest latency-term count (2 phases); loses everywhere
+//!   beyond toy K.
+//! * [`crate::coordinator::collectives::ShardedReduceScatter`] — each of K
+//!   peers owns ~1/K of the *coded bits*; peers ship only the owner's shard
+//!   to that owner, owners decode-and-reduce their slice, then an fp32
+//!   allgather distributes reduced slices. Peak per-link load ~`ΣB/K`
+//!   — 1/K of flat's — at 2 phase latencies; wins in the weak-scaling
+//!   regime (K ≥ 32).
+//! * [`crate::coordinator::collectives::Ring`] — K−1 reduce-scatter +
+//!   K−1 allgather steps around a ring of coded-chunk links: per-link load
+//!   ~constant in K (≈ `2·max_chunk` per step), at the cost of `2(K−1)`
+//!   link latencies. The bandwidth-optimal asymptote for huge payloads;
+//!   latency-bound for small ones.
+//!
+//! Sharded and ring plans are rack-free peer meshes — combining them with a
+//! rack-structured spec is rejected with
+//! [`CommError::UnsupportedRacks`](crate::comm::CommError) (see
+//! [`TopologySpec::validate_racks`]).
 //!
 //! Every charge also decomposes into a
 //! [`PhaseTimeline`](crate::net::PhaseTimeline) via
@@ -58,6 +80,12 @@ pub enum TopologySpec {
     Hierarchical { racks: usize },
     /// all packets to one hub; the hub unicasts the fp32 aggregate back
     ParameterServer,
+    /// each of K peers owns ~1/K of the coded bits: shard to owners,
+    /// partial decode-reduce, fp32 slice allgather back
+    ShardedReduceScatter,
+    /// K−1 reduce-scatter + K−1 allgather steps around a ring: per-link
+    /// load ~constant in K
+    Ring,
 }
 
 impl TopologySpec {
@@ -67,6 +95,24 @@ impl TopologySpec {
             TopologySpec::BroadcastAllGather => Box::new(BroadcastAllGather),
             TopologySpec::Hierarchical { racks } => Box::new(Hierarchical { racks }),
             TopologySpec::ParameterServer => Box::new(ParameterServer),
+            TopologySpec::ShardedReduceScatter => {
+                Box::new(super::collectives::ShardedReduceScatter::new())
+            }
+            TopologySpec::Ring => Box::new(super::collectives::Ring),
+        }
+    }
+
+    /// Sharded and ring plans are rack-free peer meshes: a rack-structured
+    /// spec (`racks != 0`, i.e. anything but the "resolve at runtime"
+    /// sentinel) cannot be routed by them yet and is rejected with a typed
+    /// [`CommError::UnsupportedRacks`] instead of being silently ignored.
+    /// Rack-aware plans accept any rack request ([`resolve_racks`] clamps).
+    pub fn validate_racks(&self, racks: usize) -> Result<(), crate::comm::CommError> {
+        match self {
+            TopologySpec::ShardedReduceScatter | TopologySpec::Ring if racks != 0 => {
+                Err(crate::comm::CommError::UnsupportedRacks { racks })
+            }
+            _ => Ok(()),
         }
     }
 
@@ -93,6 +139,8 @@ impl TopologySpec {
             "ps" | "hub" | "param-server" | "parameter-server" => {
                 Some(TopologySpec::ParameterServer)
             }
+            "sharded" | "reduce-scatter" => Some(TopologySpec::ShardedReduceScatter),
+            "ring" => Some(TopologySpec::Ring),
             _ => None,
         }
     }
@@ -102,6 +150,8 @@ impl TopologySpec {
             TopologySpec::BroadcastAllGather => "broadcast-allgather",
             TopologySpec::Hierarchical { .. } => "hierarchical",
             TopologySpec::ParameterServer => "param-server",
+            TopologySpec::ShardedReduceScatter => "sharded",
+            TopologySpec::Ring => "ring",
         }
     }
 }
@@ -219,6 +269,10 @@ pub struct WireCharge {
     pub wire_bits: u64,
     /// simulated network-clock seconds for the exchange
     pub comm_s: f64,
+    /// peak bytes any single point-to-point link carried this exchange —
+    /// the per-link hot-spot metric the sharded/ring plans shrink (flat's
+    /// grows linearly with K, sharded's falls as ~1/K, ring's is ~constant)
+    pub peak_link_bytes: f64,
 }
 
 /// A routing/charging plan for one exchange of per-node packets.
@@ -230,6 +284,22 @@ pub trait Transport: Send {
     fn name(&self) -> &'static str {
         // default to the spec label; concrete transports may refine
         self.spec().label()
+    }
+
+    /// Does this transport want per-layer coded-bit tables before each
+    /// charge? Only the sharded plan does (it balances layer ownership on
+    /// measured coded bits); engines skip building the tables otherwise.
+    fn observes_layers(&self) -> bool {
+        false
+    }
+
+    /// Feed the transport the per-node, per-layer coded-bit tables of the
+    /// packets about to be exchanged (`layer_bits[node][layer]`, from
+    /// [`crate::comm::WirePacket::layer_bits`]). Called by the engines
+    /// immediately before [`Transport::charge`] when
+    /// [`Transport::observes_layers`] is true. Default: ignored.
+    fn observe_packet_layers(&mut self, layer_bits: &[Vec<u64>]) {
+        let _ = layer_bits;
     }
 
     /// Charge one exchange and decompose it into per-phase intervals:
@@ -344,8 +414,13 @@ impl Transport for BroadcastAllGather {
             Collective::RingAllGather
         };
         let comm_s = net.sample_collective_seconds(kind, &bytes, main_protocol, rng);
+        // ring collectives stream (k−1)/k of the total payload through
+        // every link — the per-link load that grows linearly with K
+        let k = packet_bits.len().max(1) as f64;
+        let total_bytes: f64 = bytes.iter().sum();
+        let peak_link_bytes = (k - 1.0) / k * total_bytes;
         (
-            WireCharge { wire_bits: packet_bits.iter().sum(), comm_s },
+            WireCharge { wire_bits: packet_bits.iter().sum(), comm_s, peak_link_bytes },
             // one flat ring over the cross-rack links: a single phase
             PhaseTimeline::single(PhaseKind::CrossRack, comm_s),
         )
@@ -413,6 +488,7 @@ impl Transport for Hierarchical {
         let agg_bits = 32u64 * agg_dim as u64;
 
         let mut wire_bits = 0u64;
+        let mut peak_link_bytes = 0.0f64;
         // --- phase 1: rack-local gather onto the leader ---------------------
         let mut t_up = 0.0f64;
         for &(start, end) in &spans {
@@ -423,6 +499,10 @@ impl Transport for Hierarchical {
                 let t = up_bits as f64 / 8.0 / net.intra_bytes_per_sec() * slow
                     + net.intra_rack_latency_us * 1e-6;
                 t_up = t_up.max(t);
+                // each member's point-to-point uplink carries its own packet
+                for &b in &packet_bits[start + 1..end] {
+                    peak_link_bytes = peak_link_bytes.max(b as f64 / 8.0);
+                }
             }
         }
 
@@ -441,6 +521,7 @@ impl Transport for Hierarchical {
             let straggler = net.straggler_ms_per_node_mb * 1e-3 * (a_bytes / 1e6)
                 * (r_eff - 1.0);
             t_cross = wire * slow_x + straggler;
+            peak_link_bytes = peak_link_bytes.max(2.0 * (r_eff - 1.0) / r_eff * a_bytes);
         } else {
             // leaders ring-allgather their rack bundles (store-and-forward)
             let bundles: Vec<f64> = spans
@@ -455,6 +536,8 @@ impl Transport for Hierarchical {
                 net.straggler_ms_per_node_mb * 1e-3 * (max_b / 1e6) * (r_eff - 1.0);
             // entropy-coded bundles pay the expected jitter overhead
             t_cross = (wire * slow_x + straggler) * net.jitter_multiplier(main_protocol);
+            // each leader link streams (R−1)/R of the full bundle set
+            peak_link_bytes = peak_link_bytes.max((r_eff - 1.0) / r_eff * sum_b);
         }
 
         // --- phase 3: rack-local broadcast down ------------------------------
@@ -474,6 +557,8 @@ impl Transport for Hierarchical {
                 let t = down_bits as f64 / 8.0 / net.intra_bytes_per_sec() * slow
                     + net.intra_rack_latency_us * 1e-6;
                 t_down = t_down.max(t);
+                // the multicast stream crosses each member link once
+                peak_link_bytes = peak_link_bytes.max(down_bits as f64 / 8.0);
             }
         }
 
@@ -483,7 +568,7 @@ impl Transport for Hierarchical {
         timeline.push(PhaseKind::RackLocalGather, t_up + setup);
         timeline.push(PhaseKind::CrossRack, t_cross + setup);
         timeline.push(PhaseKind::RackLocalBroadcast, t_down + setup);
-        (WireCharge { wire_bits, comm_s }, timeline)
+        (WireCharge { wire_bits, comm_s, peak_link_bytes }, timeline)
     }
 }
 
@@ -538,7 +623,14 @@ impl Transport for ParameterServer {
         // both hub phases ride the cross-rack network
         timeline.push(PhaseKind::CrossRack, t_up + setup);
         timeline.push(PhaseKind::CrossRack, t_down + setup);
-        (WireCharge { wire_bits: total_bits + k as u64 * agg_bits, comm_s }, timeline)
+        // the hub's own link is the hot spot: all K payloads in, K
+        // aggregate copies out
+        let peak_link_bytes =
+            (total_bits as f64 / 8.0).max(kf * agg_bits as f64 / 8.0);
+        (
+            WireCharge { wire_bits: total_bits + k as u64 * agg_bits, comm_s, peak_link_bytes },
+            timeline,
+        )
     }
 }
 
@@ -592,6 +684,36 @@ mod tests {
         // parameter server: up = 6*512, down = K*A = 6*512
         let ps = charge(&TopologySpec::ParameterServer, &bits, 16, &net, false);
         assert_eq!(ps.wire_bits, 6 * 512 + 6 * 512);
+
+        // sharded (idealized 1/K split, no observation): each node keeps its
+        // own shard, ships the other 5/6 = 5*512; fp32 slice allgather adds
+        // 32*d = 512 counted once
+        let sharded = charge(&TopologySpec::ShardedReduceScatter, &bits, 16, &net, false);
+        assert_eq!(sharded.wire_bits, 5 * 512 + 512);
+
+        // ring: chunk slots sum to 512 bits, 2*(K-1) steps relay each slot
+        let ring = charge(&TopologySpec::Ring, &bits, 16, &net, false);
+        assert_eq!(ring.wire_bits, 2 * 5 * 512);
+    }
+
+    #[test]
+    fn sharded_and_ring_reject_rack_structured_specs() {
+        use crate::comm::CommError;
+        for spec in [TopologySpec::ShardedReduceScatter, TopologySpec::Ring] {
+            // the runtime-resolve sentinel (0) is the only acceptable value
+            assert_eq!(spec.validate_racks(0), Ok(()));
+            for racks in [1usize, 2, 8] {
+                assert_eq!(
+                    spec.validate_racks(racks),
+                    Err(CommError::UnsupportedRacks { racks }),
+                    "{spec:?} racks={racks}"
+                );
+            }
+        }
+        // rack-aware plans accept anything (resolve_racks clamps)
+        assert_eq!(TopologySpec::Hierarchical { racks: 3 }.validate_racks(3), Ok(()));
+        assert_eq!(TopologySpec::BroadcastAllGather.validate_racks(7), Ok(()));
+        assert_eq!(TopologySpec::ParameterServer.validate_racks(7), Ok(()));
     }
 
     #[test]
@@ -666,6 +788,17 @@ mod tests {
             TopologySpec::parse("ps", 0),
             Some(TopologySpec::ParameterServer)
         );
+        assert_eq!(
+            TopologySpec::parse("sharded", 0),
+            Some(TopologySpec::ShardedReduceScatter)
+        );
+        assert_eq!(
+            TopologySpec::parse("reduce-scatter", 0),
+            Some(TopologySpec::ShardedReduceScatter)
+        );
+        assert_eq!(TopologySpec::parse("ring", 0), Some(TopologySpec::Ring));
+        assert_eq!(TopologySpec::ShardedReduceScatter.label(), "sharded");
+        assert_eq!(TopologySpec::Ring.label(), "ring");
         assert_eq!(TopologySpec::parse("mesh", 0), None);
     }
 
@@ -771,6 +904,8 @@ mod tests {
             TopologySpec::BroadcastAllGather,
             TopologySpec::Hierarchical { racks: 2 },
             TopologySpec::ParameterServer,
+            TopologySpec::ShardedReduceScatter,
+            TopologySpec::Ring,
         ] {
             let mut rng = Rng::new(7);
             let (c, tl) =
@@ -815,5 +950,13 @@ mod tests {
         );
         assert_eq!(ps.phases.len(), 2);
         assert!(ps.phases.iter().all(|&(k, _)| k == PhaseKind::CrossRack));
+        // sharded pays a scatter + an allgather phase, the ring its two
+        // halves — all on the cross-rack links
+        for spec in [TopologySpec::ShardedReduceScatter, TopologySpec::Ring] {
+            let (_, tl) =
+                spec.build().charge_timeline(&bits, d, &net, false, true, &mut rng);
+            assert_eq!(tl.phases.len(), 2, "{spec:?}");
+            assert!(tl.phases.iter().all(|&(k, _)| k == PhaseKind::CrossRack), "{spec:?}");
+        }
     }
 }

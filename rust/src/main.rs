@@ -4,7 +4,8 @@
 //!   run               drive an arbitrary solver RunSpec from flags
 //!   table1            step time vs bandwidth (Table 1)
 //!   table2            weak scaling (Table 2)
-//!   topology          weak scaling x topology (flat / hierarchical / PS)
+//!   topology          weak scaling x topology (flat / hier / PS / sharded
+//!                     / ring) with each plan's peak per-link KB per step
 //!   overlap           weak scaling x exchange schedule (sync vs overlapped)
 //!   fig4              WGAN FID curves: Adam vs QODA global vs layerwise
 //!   table3            transformer: PowerSGD x quantization (Table 3)
@@ -40,7 +41,7 @@
 //!   --protocol main|alternating       --steps T
 //!   --checkpoints t1,t2,...           --update-every N
 //!   --gap true|false                  --gap-every N --gap-stop THRESH
-//!   --topology flat|hier|ps           --racks R (hier; 0 = K/4)
+//!   --topology flat|hier|ps|sharded|ring   --racks R (hier; 0 = K/4)
 //!   --bandwidth GBPS (attach the network clock and report comm seconds)
 //!   --exchange sync|overlap           --depth D (overlap pipeline depth)
 //!   --compute-ms MS (modeled compute per step the overlap hides behind)
@@ -77,12 +78,17 @@ fn exchange_from_args(args: &Args) -> Result<ExchangeMode> {
     })
 }
 
-/// Resolve `--topology` / `--racks` against the node count.
+/// Resolve `--topology` / `--racks` against the node count. The sharded
+/// and ring plans are rack-free peer meshes, so pairing them with an
+/// explicit `--racks` is a typed error, not a silently dropped flag.
 fn topology_from_args(args: &Args, k: usize) -> Result<TopologySpec> {
     let name = args.get_or("topology", "flat");
     let racks = args.usize_or("racks", 0)?;
-    let spec = TopologySpec::parse(&name, racks)
-        .ok_or_else(|| Error::msg(format!("--topology expects flat|hier|ps, got {name:?}")))?;
+    let spec = TopologySpec::parse(&name, racks).ok_or_else(|| {
+        Error::msg(format!("--topology expects flat|hier|ps|sharded|ring, got {name:?}"))
+    })?;
+    spec.validate_racks(racks)
+        .map_err(|e| Error::msg(format!("--topology {name}: {e}")))?;
     Ok(match spec {
         TopologySpec::Hierarchical { racks: 0 } => TopologySpec::hierarchical_for(k),
         other => other,
@@ -267,7 +273,10 @@ fn wire_cmd(args: &Args) -> Result<()> {
 
     let mut t = Table::new(
         "wire — measured localhost comm (monotonic clocks around real sockets)",
-        &["K", "variant", "Mbit/round", "comm ms/round", "exposed ms/round", "wire MB total"],
+        &[
+            "K", "variant", "Mbit/round", "comm ms/round", "exposed ms/round",
+            "peak link KB", "wire MB total",
+        ],
     );
     let mut bench = JsonBench::new();
     for &k in &ks {
@@ -275,9 +284,19 @@ fn wire_cmd(args: &Args) -> Result<()> {
             ("fp32-flat", &fp32, TopologySpec::BroadcastAllGather),
             ("coded-flat", &coded, TopologySpec::BroadcastAllGather),
             ("coded-hier", &coded, TopologySpec::hierarchical_for(k)),
+            ("coded-sharded", &coded, TopologySpec::ShardedReduceScatter),
         ];
         let mut comm_ms_of: Vec<(String, f64)> = Vec::new();
+        let mut peak_kb_of: Vec<(String, f64)> = Vec::new();
         for (label, codec, topo) in variants {
+            // the sharded mesh is sync-only by design — force it rather
+            // than failing the whole sweep when --exchange overlap (the
+            // default) is in effect
+            let plan = if matches!(topo, TopologySpec::ShardedReduceScatter) {
+                ExchangePlan { mode: ExchangeMode::Synchronous, ..plan }
+            } else {
+                plan
+            };
             let report = run_wire(
                 Workload::Synthetic { dim, scale: 1.0 },
                 k,
@@ -295,6 +314,7 @@ fn wire_cmd(args: &Args) -> Result<()> {
             let mbit_per_round = report.payload_bits as f64 / rounds / 1e6;
             let comm_ms = report.comm_s / rounds * 1e3;
             let exposed_ms = report.comm_exposed_s / rounds * 1e3;
+            let peak_kb = report.peak_link_bytes / 1e3;
             let wire_mb = report.frame_bytes as f64 / 1e6;
             t.row(&[
                 format!("{k}"),
@@ -302,6 +322,7 @@ fn wire_cmd(args: &Args) -> Result<()> {
                 format!("{mbit_per_round:.3}"),
                 format!("{comm_ms:.3}"),
                 format!("{exposed_ms:.3}"),
+                format!("{peak_kb:.1}"),
                 format!("{wire_mb:.1}"),
             ]);
             bench.push(
@@ -315,13 +336,15 @@ fn wire_cmd(args: &Args) -> Result<()> {
                     ("measured_comm_ms_per_round", format!("{comm_ms:.3}")),
                     ("measured_exposed_ms_per_round", format!("{exposed_ms:.3}")),
                     ("payload_mbit_per_round", format!("{mbit_per_round:.3}")),
+                    ("measured_peak_link_kb", format!("{peak_kb:.3}")),
                     ("frame_mb_total", format!("{wire_mb:.3}")),
                 ],
             );
             comm_ms_of.push((label.to_string(), comm_ms));
+            peak_kb_of.push((label.to_string(), peak_kb));
         }
-        let ms = |name: &str| {
-            comm_ms_of
+        let of = |table: &[(String, f64)], name: &str| {
+            table
                 .iter()
                 .find(|(l, _)| l == name)
                 .map(|&(_, v)| v)
@@ -329,9 +352,11 @@ fn wire_cmd(args: &Args) -> Result<()> {
         };
         println!(
             "K={k}: coded gives {:.2}x the fp32 measured comm rate (flat); \
-             hierarchical is {:.2}x flat (coded)",
-            ms("fp32-flat") / ms("coded-flat"),
-            ms("coded-flat") / ms("coded-hier"),
+             hierarchical is {:.2}x flat (coded); sharded peak link carries \
+             {:.1}% of flat's bytes",
+            of(&comm_ms_of, "fp32-flat") / of(&comm_ms_of, "coded-flat"),
+            of(&comm_ms_of, "coded-flat") / of(&comm_ms_of, "coded-hier"),
+            100.0 * of(&peak_kb_of, "coded-sharded") / of(&peak_kb_of, "coded-flat"),
         );
     }
     t.print();

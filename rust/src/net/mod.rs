@@ -45,6 +45,26 @@
 //!   remainder — the calibration tests below pin which phases a given
 //!   compute budget can hide and which a straggling leader re-exposes.
 //!
+//! Five transport plans charge their phases against this clock
+//! ([`crate::coordinator::topology`] for the star-shaped three,
+//! [`crate::coordinator::collectives`] for the bandwidth-optimal two).
+//! With K nodes, per-node coded payloads `b_j` (total `B` bytes) and
+//! aggregate dimension `d`, per step:
+//!
+//! | plan | wire bits | peak per-link bytes | shape |
+//! |------|-----------|---------------------|-------|
+//! | flat broadcast-allgather | `Σ b_j` | `(K−1)/K · B` — grows ~linearly with K | one collective over the cross-rack class |
+//! | hierarchical (R racks) | up + cross + down bundle traffic | the busiest leader link | 3 phases over 2 link classes |
+//! | parameter server | `Σ b_j + K·32d` | the hub's serialized egress | 2 phases, hub-bottlenecked |
+//! | sharded reduce-scatter | `Σ_j (b_j − s_jj) + 32d` | `≈ B/K` — **~1/K of flat's** | 2 phases, every link carries one shard + one fp32 slice |
+//! | ring | `2(K−1)·Σ_o chunk_o` | `2(K−1)·chunk_max ≈ 2·b` — **constant in K** | 2(K−1) serialized steps |
+//!
+//! The first three pin the paper's measured regimes (Tables 1/2); the last
+//! two are the weak-scaling escape hatch — past K ≈ 32 the star plans all
+//! push a full payload set over some link while the sharded plan's hottest
+//! link carries ~1/K of that (`WireCharge::peak_link_bytes` reports it,
+//! `qoda topology` prints it, and `scripts/check_bench.py` gates it).
+//!
 //! The topology layer asks this module for primitive phase costs
 //! ([`NetworkModel::link_seconds`], [`NetworkModel::collective_seconds`],
 //! [`NetworkModel::max_slowdown_over`]) and composes them into a charge

@@ -188,6 +188,10 @@ pub struct RunReport {
     /// wire bits as charged by the topology's routing (equals `total_bits`
     /// for broadcast-allgather; 0 without a [`NetClock`])
     pub net_wire_bits: u64,
+    /// hottest single link of the run: the max over steps of the charge's
+    /// peak per-link bytes ([`WireCharge::peak_link_bytes`]) — the hot-spot
+    /// metric the sharded/ring plans shrink (0.0 without a [`NetClock`])
+    pub peak_link_bytes: f64,
 }
 
 impl RunReport {
@@ -233,6 +237,9 @@ pub struct StepRecord {
     /// the share of `comm_s` hidden behind the compute window
     /// (`comm_exposed_s + comm_hidden_s == comm_s`)
     pub comm_hidden_s: f64,
+    /// peak bytes any single link carried this step, per the topology's
+    /// charge (0.0 without a [`NetClock`])
+    pub peak_link_bytes: f64,
 }
 
 /// Observer of a live run. All hooks default to no-ops except `on_step`.
@@ -436,6 +443,7 @@ impl<'a> RunDriver<'a> {
         let mut comm_exposed_s = 0.0f64;
         let mut comm_hidden_s = 0.0f64;
         let mut net_wire_bits = 0u64;
+        let mut peak_link_bytes = 0.0f64;
         let mut out_ckpts = Vec::new();
         let mut gap_trace = Vec::new();
         let mut stopped_early = false;
@@ -450,16 +458,19 @@ impl<'a> RunDriver<'a> {
             let mut step_comm_s = 0.0;
             let mut step_exposed_s = 0.0;
             let mut step_hidden_s = 0.0;
+            let mut step_peak_link = 0.0;
             if let Some(clock) = self.net.as_mut() {
                 let charge = clock.charge_step(stats.bits, k, d);
                 let (exposed, hidden) = clock.plan.split(charge.comm_s);
                 step_comm_s = charge.comm_s;
                 step_exposed_s = exposed;
                 step_hidden_s = hidden;
+                step_peak_link = charge.peak_link_bytes;
                 comm_s += charge.comm_s;
                 comm_exposed_s += exposed;
                 comm_hidden_s += hidden;
                 net_wire_bits += charge.wire_bits;
+                peak_link_bytes = peak_link_bytes.max(charge.peak_link_bytes);
             }
             {
                 let st = solver.state();
@@ -495,6 +506,7 @@ impl<'a> RunDriver<'a> {
                 comm_s: step_comm_s,
                 comm_exposed_s: step_exposed_s,
                 comm_hidden_s: step_hidden_s,
+                peak_link_bytes: step_peak_link,
             };
             for sink in sinks.iter_mut() {
                 sink.on_step(&rec);
@@ -537,6 +549,7 @@ impl<'a> RunDriver<'a> {
             comm_exposed_s,
             comm_hidden_s,
             net_wire_bits,
+            peak_link_bytes,
         };
         for sink in sinks.iter_mut() {
             sink.on_finish(&report);

@@ -32,14 +32,31 @@
 //! kernel socket buffers, the leader reads round t+1's uplink *before*
 //! writing round t's downlink — every peer that could be mid-write is
 //! drained before a large write heads their way.
+//!
+//! Sharded reduce-scatter ([`TopologySpec::ShardedReduceScatter`]): the
+//! leader stays pure control plane and coded bytes move only over a full
+//! worker-to-worker TCP mesh. Ownership is the static coordinate-count
+//! split of [`assign_layers_by_bits`] — identical on every node, so no
+//! assignment traffic (the sim engines' measured-bits rebalancing is a
+//! model-side refinement; ownership never changes the aggregate). Each
+//! round every node ships each owner only that owner's layer range of its
+//! coded packet ([`WirePacket::shard`]), owners fold their slice through
+//! the shared slice core, and bit-exact reduced f64 slices allgather back
+//! over the mesh — peak per-link traffic drops toward ~1/K of the flat
+//! star's. Phase seconds are measured on every node and folded by the
+//! leader as max-over-nodes: a synchronous round cannot finish before its
+//! slowest node does. Sync-only — ring and overlapped sharded wire
+//! exchanges decline with [`CommError::Unsupported`] rather than
+//! pretending an unimplemented schedule was measured.
 
 use super::frame::{
     bundle_frame_bytes, packet_frame_bytes, read_frame, read_frame_bytes,
-    write_all_bytes, write_frame, Frame,
+    shard_frame_bytes, slice_frame_bytes, write_all_bytes, write_frame, Frame,
 };
 use super::socket::{accept_configured, bind_ephemeral, connect_with_backoff, SocketConfig};
 use crate::comm::{CommError, Compressor, IdentityCompressor, WirePacket};
-use crate::coordinator::core::decode_aggregate_into;
+use crate::coordinator::collectives::assign_layers_by_bits;
+use crate::coordinator::core::{decode_aggregate_into, decode_aggregate_slice_into};
 use crate::coordinator::parallel::{worker_codec_seed, worker_oracle_seed, SharedQuantState};
 use crate::coordinator::topology::{rack_spans, ExchangeMode, ExchangePlan, TopologySpec};
 use crate::oda::driver::{MetricsSink, StepRecord, StepStats};
@@ -140,6 +157,11 @@ pub struct WireRoundRecord {
     pub payload_bits: u64,
     /// framed bytes the leader itself moved (sent + received) this round
     pub frame_bytes: u64,
+    /// most framed bytes any single link carried this round: the busiest
+    /// leader-adjacent link (uplink + its share of the downlink) for the
+    /// star plans, the busiest mesh link (max over nodes of their
+    /// per-peer totals) for the sharded plan
+    pub peak_link_bytes: f64,
 }
 
 /// What a measured wire run produced.
@@ -150,7 +172,9 @@ pub struct WireReport {
     pub x: Vec<f64>,
     /// mean decoded vector of the last round
     pub last_mean: Vec<f64>,
-    /// each node's decoded dual of the last round (parity pinning)
+    /// each node's decoded dual of the last round (parity pinning; filled
+    /// by the star plans only — under the sharded mesh no single node
+    /// decodes every full packet, so this stays empty)
     pub last_decoded: Vec<Vec<f64>>,
     /// total payload bits across rounds (flat accounting: each packet
     /// counted once — comparable to `ClusterSim`'s flat `wire_bits`)
@@ -161,6 +185,9 @@ pub struct WireReport {
     pub comm_s: f64,
     pub comm_exposed_s: f64,
     pub comm_hidden_s: f64,
+    /// hottest single link of the run (max over rounds of the per-round
+    /// [`WireRoundRecord::peak_link_bytes`])
+    pub peak_link_bytes: f64,
     /// per-round measured records
     pub rounds: Vec<WireRoundRecord>,
     /// each node's OS-assigned ephemeral source port, collected during the
@@ -491,6 +518,8 @@ struct RoundIn {
     set: Vec<Option<WirePacket>>,
     payload_bits: u64,
     recv_bytes: u64,
+    /// most framed bytes read off any single child link this round
+    max_link_recv: u64,
 }
 
 /// Run a measured wire exchange: `steps` rounds over real localhost TCP
@@ -536,6 +565,25 @@ pub fn run_wire_observed(
     assert!(k >= 1, "a wire run needs at least one worker");
     assert_eq!(x0.len(), d, "x0 dimension must match the workload");
 
+    match topology {
+        // a measured ring schedule is future work — decline rather than
+        // silently run a different wire plan than the caller asked for
+        TopologySpec::Ring => {
+            return Err(CommError::Unsupported { what: "ring wire exchange" });
+        }
+        TopologySpec::ShardedReduceScatter => {
+            if matches!(plan.mode, ExchangeMode::Overlapped { .. }) {
+                return Err(CommError::Unsupported {
+                    what: "overlapped sharded wire exchange",
+                });
+            }
+            return run_wire_sharded(
+                workload, k, codec, x0, steps, seed, plan, opts, update, sinks,
+            );
+        }
+        _ => {}
+    }
+
     // the physical plan: contiguous rack spans for hierarchical runs, the
     // plain star otherwise (parameter-server already *is* a star)
     let spans: Option<Vec<(usize, usize)>> = match topology {
@@ -575,6 +623,7 @@ pub fn run_wire_observed(
         comm_s: 0.0,
         comm_exposed_s: 0.0,
         comm_hidden_s: 0.0,
+        peak_link_bytes: 0.0,
         rounds: Vec::with_capacity(steps),
         node_ports: vec![0; k],
     };
@@ -667,9 +716,11 @@ pub fn run_wire_observed(
              -> Result<RoundIn, CommError> {
                 let mut set: Vec<Option<WirePacket>> = (0..k).map(|_| None).collect();
                 let mut recv_bytes = 0u64;
+                let mut max_link_recv = 0u64;
                 for (node, s) in children.iter_mut() {
                     let (frame, n) = read_frame(s)?;
                     recv_bytes += n;
+                    max_link_recv = max_link_recv.max(n);
                     match frame {
                         Frame::Packet { node: pn, round, packet }
                             if !hierarchical
@@ -699,7 +750,7 @@ pub fn run_wire_observed(
                         None => return Err(CommError::WorkerLost),
                     }
                 }
-                Ok(RoundIn { set, payload_bits, recv_bytes })
+                Ok(RoundIn { set, payload_bits, recv_bytes, max_link_recv })
             };
 
             let send_round = |t: usize,
@@ -727,6 +778,7 @@ pub fn run_wire_observed(
                                     gather_s: f64,
                                     broadcast_s: f64,
                                     sent_bytes: u64,
+                                    peak_link_bytes: f64,
                                     report: &mut WireReport,
                                     dec: &mut dyn Compressor,
                                     mean: &mut Vec<f64>,
@@ -756,6 +808,7 @@ pub fn run_wire_observed(
                 report.comm_exposed_s += exposed;
                 report.comm_hidden_s += hidden;
                 report.payload_bits += rin.payload_bits;
+                report.peak_link_bytes = report.peak_link_bytes.max(peak_link_bytes);
                 total_bits += rin.payload_bits;
                 report.rounds.push(WireRoundRecord {
                     round: t,
@@ -766,6 +819,7 @@ pub fn run_wire_observed(
                     comm_hidden_s: hidden,
                     payload_bits: rin.payload_bits,
                     frame_bytes: rin.recv_bytes + sent_bytes,
+                    peak_link_bytes,
                 });
                 if t == steps {
                     report.last_mean.clone_from(mean);
@@ -783,6 +837,7 @@ pub fn run_wire_observed(
                     comm_s,
                     comm_exposed_s: exposed,
                     comm_hidden_s: hidden,
+                    peak_link_bytes,
                 };
                 for sink in sinks.iter_mut() {
                     sink.on_step(&rec);
@@ -800,12 +855,17 @@ pub fn run_wire_observed(
                         let sent_bytes = send_round(t, &rin.set, &mut children)?;
                         leader_sent += sent_bytes;
                         let broadcast_s = b0.elapsed().as_secs_f64();
+                        // busiest leader-adjacent link: the fattest uplink
+                        // plus that child's share of the fanned-out downlink
+                        let peak = rin.max_link_recv as f64
+                            + sent_bytes as f64 / children.len() as f64;
                         finish_round(
                             t,
                             rin,
                             gather_s,
                             broadcast_s,
                             sent_bytes,
+                            peak,
                             &mut report,
                             dec.as_mut(),
                             &mut mean,
@@ -834,12 +894,15 @@ pub fn run_wire_observed(
                         let sent_bytes = send_round(t, &rin.set, &mut children)?;
                         leader_sent += sent_bytes;
                         let broadcast_s = b0.elapsed().as_secs_f64();
+                        let peak = rin.max_link_recv as f64
+                            + sent_bytes as f64 / children.len() as f64;
                         finish_round(
                             t,
                             rin,
                             gather_s,
                             broadcast_s,
                             sent_bytes,
+                            peak,
                             &mut report,
                             dec.as_mut(),
                             &mut mean,
@@ -880,6 +943,444 @@ pub fn run_wire_observed(
     // decoded aggregates, so all final iterates are bit-identical
     for wx in worker_xs.iter().flatten() {
         debug_assert_eq!(wx, &report.x, "wire replicas diverged");
+    }
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// Sharded reduce-scatter mesh
+// ---------------------------------------------------------------------------
+
+/// Static owner plan for the sharded mesh: owner → contiguous layer range
+/// plus the matching coordinate window, derived from the codec's layer
+/// map (identity frames the whole vector as one layer). Every node
+/// computes the identical plan locally, so ownership never travels on the
+/// wire and cannot perturb the aggregate.
+struct ShardPlan {
+    /// owner → `[start, end)` layer range (may be empty when K exceeds
+    /// the layer count)
+    ranges: Vec<std::ops::Range<usize>>,
+    /// owner → first coordinate of its slice
+    coord_lo: Vec<usize>,
+    /// owner → coordinates in its slice
+    coord_len: Vec<usize>,
+}
+
+fn shard_plan(codec: &WireCodecSpec, d: usize, k: usize) -> ShardPlan {
+    // static basis: per-layer coordinate counts — round-invariant, unlike
+    // the sim engines' measured-bits rebalancing (a model-side refinement)
+    let lens: Vec<u64> = match codec {
+        WireCodecSpec::Identity => vec![d as u64],
+        WireCodecSpec::Quant(st) => st.map.layers.iter().map(|l| l.len as u64).collect(),
+    };
+    let assign = assign_layers_by_bits(&lens, k);
+    let mut offsets = Vec::with_capacity(lens.len() + 1);
+    let mut acc = 0usize;
+    for &l in &lens {
+        offsets.push(acc);
+        acc += l as usize;
+    }
+    offsets.push(acc);
+    let mut ranges = Vec::with_capacity(k);
+    let mut coord_lo = Vec::with_capacity(k);
+    let mut coord_len = Vec::with_capacity(k);
+    for &(start, end) in &assign {
+        ranges.push(start..end);
+        coord_lo.push(offsets[start]);
+        coord_len.push(offsets[end] - offsets[start]);
+    }
+    ShardPlan { ranges, coord_lo, coord_len }
+}
+
+/// One node of the sharded mesh. Control plane: Hello/Welcome/Peers with
+/// the leader, then one [`Frame::ShardReport`] per round. Data plane: a
+/// full TCP mesh — this node dials every lower-numbered peer and accepts
+/// every higher-numbered one. Every listener is bound before any node's
+/// `Hello` goes up, and the leader releases the port table only after all
+/// K handshakes, so mesh dials always land in a live accept backlog.
+fn sharded_worker_main(cfg: WorkerCfg<'_>, plan: &ShardPlan) -> Result<WorkerExit, CommError> {
+    let d = cfg.workload.dim();
+    let k = cfg.k;
+    let node = cfg.node;
+    let sock = cfg.opts.socket;
+
+    let (listener, listen_port) = if node + 1 < k {
+        let (l, p) = bind_ephemeral()?;
+        (Some(l), p)
+    } else {
+        (None, 0)
+    };
+
+    let mut leader = connect_with_backoff(cfg.leader_addr, &sock)?;
+    let mut sent = 0u64;
+    sent += write_frame(&mut leader, &Frame::Hello { node: node as u32, listen_port })?;
+    match read_frame(&mut leader)? {
+        (Frame::Welcome { node: n, .. }, _) if n as usize == node => {}
+        _ => return Err(CommError::WorkerLost),
+    }
+    let ports = match read_frame(&mut leader)? {
+        (Frame::Peers { ports }, _) if ports.len() == k => ports,
+        _ => return Err(CommError::WorkerLost),
+    };
+
+    // mesh bring-up: dial down, accept up
+    let mut peers: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+    for (j, port) in ports.iter().enumerate().take(node) {
+        let addr: SocketAddr = ([127, 0, 0, 1], *port).into();
+        let mut s = connect_with_backoff(addr, &sock)?;
+        sent += write_frame(&mut s, &Frame::Hello { node: node as u32, listen_port: 0 })?;
+        peers[j] = Some(s);
+    }
+    if let Some(l) = &listener {
+        for _ in node + 1..k {
+            let mut s = accept_configured(l, &sock)?;
+            let who = match read_frame(&mut s)? {
+                (Frame::Hello { node: n, .. }, _) => n as usize,
+                _ => return Err(CommError::WorkerLost),
+            };
+            if who <= node || who >= k || peers[who].is_some() {
+                return Err(CommError::WorkerLost);
+            }
+            peers[who] = Some(s);
+        }
+    }
+    drop(listener);
+
+    let mut enc = cfg.codec.encoder(cfg.seed, node);
+    let mut dec = cfg.codec.decoder();
+    let mut source = WorkerSource::new(&cfg.workload, cfg.seed, node);
+    let mut x = cfg.x0.to_vec();
+    let mut own = WirePacket::new();
+    let mut mean = vec![0.0f64; d];
+    let mut slice_mean: Vec<f64> = Vec::new();
+    let mut scratch: Vec<f64> = Vec::new();
+    let own_range = plan.ranges[node].clone();
+    let own_lo = plan.coord_lo[node];
+    let own_dim = plan.coord_len[node];
+    let update = cfg.update;
+
+    for t in 1..=cfg.steps {
+        if cfg.opts.kill == Some((node, t)) {
+            return Ok(WorkerExit { x, sent });
+        }
+        let dual = source.sample(&x);
+        enc.encode_into(&dual, &mut own)?;
+        let payload_bits = own.len_bits() as u64;
+        // framed bytes this node pushed or pulled over each mesh link
+        let mut link_bytes = vec![0u64; k];
+
+        // phase 1 (timed): ship each owner its layer range of the coded
+        // packet, collect every peer's shard of this node's slice.
+        // Write-all-then-read-all per phase: per-link frames stay FIFO
+        // (shard before slice within a round) and payloads are far below
+        // kernel socket buffering, with read timeouts as the backstop.
+        let t0 = Instant::now();
+        let mut shards: Vec<Option<WirePacket>> = (0..k).map(|_| None).collect();
+        for o in 0..k {
+            let shard = own.shard(plan.ranges[o].clone(), plan.coord_len[o])?;
+            if o == node {
+                shards[o] = Some(shard);
+                continue;
+            }
+            let bytes = shard_frame_bytes(node as u32, t as u64, &shard)?;
+            let s = peers[o].as_mut().ok_or(CommError::WorkerLost)?;
+            let n = write_all_bytes(s, &bytes)?;
+            sent += n;
+            link_bytes[o] += n;
+        }
+        for (o, slot) in peers.iter_mut().enumerate() {
+            let s = match slot {
+                Some(s) => s,
+                None => continue,
+            };
+            let (frame, n) = read_frame(s)?;
+            link_bytes[o] += n;
+            match frame {
+                Frame::Shard { node: pn, round, packet }
+                    if pn as usize == o && round == t as u64 =>
+                {
+                    shards[o] = Some(packet);
+                }
+                _ => return Err(CommError::WorkerLost),
+            }
+        }
+        let shard_s = t0.elapsed().as_secs_f64();
+
+        // untimed fold of the owned slice — mirrors the star plans, whose
+        // leader decode also lives outside the measured socket windows
+        if own_dim > 0 {
+            decode_aggregate_slice_into(k, own_dim, &mut slice_mean, &mut scratch, |i, out| {
+                match shards[i].as_ref() {
+                    Some(p) => dec.decode_layers_into(p, own_range.clone(), out),
+                    None => Err(CommError::WorkerLost),
+                }
+            })?;
+        } else {
+            slice_mean.clear();
+        }
+        mean[own_lo..own_lo + own_dim].copy_from_slice(&slice_mean);
+
+        // phase 2 (timed): allgather the reduced slices as exact f64 bits
+        let t1 = Instant::now();
+        let bytes =
+            slice_frame_bytes(node as u32, t as u64, own_lo as u64, &slice_mean)?;
+        for (o, slot) in peers.iter_mut().enumerate() {
+            let s = match slot {
+                Some(s) => s,
+                None => continue,
+            };
+            let n = write_all_bytes(s, &bytes)?;
+            sent += n;
+            link_bytes[o] += n;
+        }
+        for (o, slot) in peers.iter_mut().enumerate() {
+            let s = match slot {
+                Some(s) => s,
+                None => continue,
+            };
+            let (frame, n) = read_frame(s)?;
+            link_bytes[o] += n;
+            match frame {
+                Frame::Slice { node: pn, round, lo, values }
+                    if pn as usize == o
+                        && round == t as u64
+                        && lo as usize == plan.coord_lo[o]
+                        && values.len() == plan.coord_len[o] =>
+                {
+                    mean[plan.coord_lo[o]..plan.coord_lo[o] + values.len()]
+                        .copy_from_slice(&values);
+                }
+                _ => return Err(CommError::WorkerLost),
+            }
+        }
+        let slice_s = t1.elapsed().as_secs_f64();
+
+        update(&mut x, &mean, t);
+        let max_link = link_bytes.iter().fold(0u64, |a, &b| a.max(b));
+        sent += write_frame(
+            &mut leader,
+            &Frame::ShardReport {
+                node: node as u32,
+                round: t as u64,
+                payload_bits,
+                comm_shard_s: shard_s,
+                comm_slice_s: slice_s,
+                max_link_bytes: max_link,
+                mean: if node == 0 { mean.clone() } else { Vec::new() },
+            },
+        )?;
+    }
+    Ok(WorkerExit { x, sent })
+}
+
+/// The sharded-mesh driver behind [`run_wire_observed`] for
+/// [`TopologySpec::ShardedReduceScatter`]. The leader is pure control
+/// plane: after the handshake it only collects one `ShardReport` per node
+/// per round. `gather_s` is the slowest node's measured shard-exchange
+/// phase and `broadcast_s` the slowest slice-allgather phase — a
+/// synchronous round cannot finish before its slowest node, so the
+/// max-over-nodes fold is the round's wall time. `payload_bits` sums each
+/// node's *full* coded packet (the flat-comparable accounting); the
+/// per-link win shows up in `peak_link_bytes`, not in total bits.
+#[allow(clippy::too_many_arguments)]
+fn run_wire_sharded(
+    workload: Workload<'_>,
+    k: usize,
+    codec: &WireCodecSpec,
+    x0: &[f64],
+    steps: usize,
+    seed: u64,
+    plan: ExchangePlan,
+    opts: &WireOptions,
+    update: &(dyn Fn(&mut Vec<f64>, &[f64], usize) + Sync),
+    sinks: &mut [&mut dyn MetricsSink],
+) -> Result<WireReport, CommError> {
+    let d = workload.dim();
+    let shard = shard_plan(codec, d, k);
+    let (listener, _port) = bind_ephemeral()?;
+    let leader_addr = listener.local_addr().map_err(|_| CommError::WorkerLost)?;
+
+    let mut report = WireReport {
+        x: x0.to_vec(),
+        last_mean: vec![0.0; d],
+        last_decoded: Vec::new(),
+        payload_bits: 0,
+        frame_bytes: 0,
+        comm_s: 0.0,
+        comm_exposed_s: 0.0,
+        comm_hidden_s: 0.0,
+        peak_link_bytes: 0.0,
+        rounds: Vec::with_capacity(steps),
+        node_ports: vec![0; k],
+    };
+    let mut leader_sent = 0u64;
+    let mut worker_err: Option<CommError> = None;
+    let mut worker_xs: Vec<Option<Vec<f64>>> = (0..k).map(|_| None).collect();
+
+    let run: Result<(), CommError> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(k);
+        for node in 0..k {
+            let cfg = WorkerCfg {
+                node,
+                k,
+                leader_addr,
+                role: Role::Flat,
+                workload,
+                codec,
+                x0,
+                steps,
+                seed,
+                plan,
+                opts: *opts,
+                update,
+            };
+            let shard = &shard;
+            handles.push(scope.spawn(move || sharded_worker_main(cfg, shard)));
+        }
+
+        let loop_result: Result<(), CommError> = (|| {
+            // handshake: Hellos up, then Welcome + the mesh port table down
+            // (released only once every listener is known to be bound)
+            let mut conns: Vec<Option<TcpStream>> = (0..k).map(|_| None).collect();
+            let mut listen_ports = vec![0u16; k];
+            for _ in 0..k {
+                let mut s = accept_configured(&listener, &opts.socket)?;
+                match read_frame(&mut s)? {
+                    (Frame::Hello { node, listen_port }, _) => {
+                        let n = node as usize;
+                        if n >= k || conns[n].is_some() {
+                            return Err(CommError::WorkerLost);
+                        }
+                        listen_ports[n] = listen_port;
+                        report.node_ports[n] =
+                            s.peer_addr().map_err(|_| CommError::WorkerLost)?.port();
+                        conns[n] = Some(s);
+                    }
+                    _ => return Err(CommError::WorkerLost),
+                }
+            }
+            let peers = Frame::Peers { ports: listen_ports };
+            let mut children: Vec<(usize, TcpStream)> = Vec::with_capacity(k);
+            for node in 0..k {
+                match conns[node].take() {
+                    Some(mut s) => {
+                        leader_sent += write_frame(
+                            &mut s,
+                            &Frame::Welcome { node: node as u32, parent_port: 0 },
+                        )?;
+                        leader_sent += write_frame(&mut s, &peers)?;
+                        children.push((node, s));
+                    }
+                    None => return Err(CommError::WorkerLost),
+                }
+            }
+
+            let mut total_bits = 0u64;
+            for t in 1..=steps {
+                let mut gather_s = 0.0f64;
+                let mut broadcast_s = 0.0f64;
+                let mut payload_bits = 0u64;
+                let mut peak_link = 0.0f64;
+                let mut report_bytes = 0u64;
+                let mut round_mean: Vec<f64> = Vec::new();
+                for (node, s) in children.iter_mut() {
+                    let (frame, n) = read_frame(s)?;
+                    report_bytes += n;
+                    match frame {
+                        Frame::ShardReport {
+                            node: pn,
+                            round,
+                            payload_bits: bits,
+                            comm_shard_s,
+                            comm_slice_s,
+                            max_link_bytes,
+                            mean,
+                        } if pn as usize == *node && round == t as u64 => {
+                            gather_s = gather_s.max(comm_shard_s);
+                            broadcast_s = broadcast_s.max(comm_slice_s);
+                            payload_bits += bits;
+                            peak_link = peak_link.max(max_link_bytes as f64);
+                            if *node == 0 {
+                                round_mean = mean;
+                            }
+                        }
+                        _ => return Err(CommError::WorkerLost),
+                    }
+                }
+                if round_mean.len() != d {
+                    return Err(CommError::WorkerLost);
+                }
+                // the replica applies node 0's reported aggregate — every
+                // mesh node assembled the identical mean, so the final
+                // iterates still agree bit for bit
+                (update)(&mut report.x, &round_mean, t);
+                let comm_s = gather_s + broadcast_s;
+                let (exposed, hidden) = plan.split(comm_s);
+                report.comm_s += comm_s;
+                report.comm_exposed_s += exposed;
+                report.comm_hidden_s += hidden;
+                report.payload_bits += payload_bits;
+                report.peak_link_bytes = report.peak_link_bytes.max(peak_link);
+                total_bits += payload_bits;
+                report.rounds.push(WireRoundRecord {
+                    round: t,
+                    gather_s,
+                    broadcast_s,
+                    comm_s,
+                    comm_exposed_s: exposed,
+                    comm_hidden_s: hidden,
+                    payload_bits,
+                    frame_bytes: report_bytes,
+                    peak_link_bytes: peak_link,
+                });
+                if t == steps {
+                    report.last_mean.clone_from(&round_mean);
+                }
+                let rec = StepRecord {
+                    t,
+                    stats: StepStats {
+                        bits: payload_bits,
+                        quant_err_sq: 0.0,
+                        dual_norm_sq: 0.0,
+                    },
+                    total_bits,
+                    oracle_calls: (k * t) as u64,
+                    gap: None,
+                    comm_s,
+                    comm_exposed_s: exposed,
+                    comm_hidden_s: hidden,
+                    peak_link_bytes: peak_link,
+                };
+                for sink in sinks.iter_mut() {
+                    sink.on_step(&rec);
+                }
+            }
+            Ok(())
+        })();
+
+        drop(listener);
+        for h in handles {
+            match h.join() {
+                Ok(Ok(exit)) => {
+                    report.frame_bytes += exit.sent;
+                    if let Some(i) = worker_xs.iter().position(|w| w.is_none()) {
+                        worker_xs[i] = Some(exit.x);
+                    }
+                }
+                Ok(Err(e)) => worker_err = Some(e),
+                Err(_) => worker_err = Some(CommError::WorkerLost),
+            }
+        }
+        loop_result
+    });
+
+    run?;
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
+    report.frame_bytes += leader_sent;
+    for wx in worker_xs.iter().flatten() {
+        debug_assert_eq!(wx, &report.x, "sharded wire replicas diverged");
     }
     Ok(report)
 }

@@ -31,6 +31,10 @@ const KIND_HELLO: u8 = 1;
 const KIND_WELCOME: u8 = 2;
 const KIND_PACKET: u8 = 3;
 const KIND_BUNDLE: u8 = 4;
+const KIND_SHARD: u8 = 5;
+const KIND_SLICE: u8 = 6;
+const KIND_REPORT: u8 = 7;
+const KIND_PEERS: u8 = 8;
 
 /// One frame of the wire protocol.
 #[derive(Clone, Debug, PartialEq)]
@@ -49,6 +53,34 @@ pub enum Frame {
     /// A round-tagged set of node-tagged packets: a rack's gathered bundle
     /// on the way up, the full cluster set on the way down.
     Bundle { round: u64, packets: Vec<(u32, WirePacket)> },
+    /// One node's coded shard for one owner of a sharded reduce-scatter
+    /// round: the sender's sliced [`WirePacket`]
+    /// ([`WirePacket::shard`](crate::comm::WirePacket::shard)) covering the
+    /// receiving owner's layer range. Same blob layout as `Packet`; the
+    /// distinct kind catches plan confusion at the framing layer.
+    Shard { node: u32, round: u64, packet: WirePacket },
+    /// An owner's reduced slice on the allgather leg: `lo` is the slice's
+    /// first coordinate, `values` the bit-exact reduced aggregate over
+    /// the owner's range (f64 bit patterns, LE).
+    Slice { node: u32, round: u64, lo: u64, values: Vec<f64> },
+    /// Control-plane round report from a sharded-exchange node to the
+    /// leader: its own full packet's exact payload bits, its *measured*
+    /// shard-exchange and slice-allgather seconds, the most bytes it
+    /// shipped over any single mesh link, and (when non-empty) the full
+    /// aggregate the leader's replica applies. Never counted as data-plane
+    /// traffic.
+    ShardReport {
+        node: u32,
+        round: u64,
+        payload_bits: u64,
+        comm_shard_s: f64,
+        comm_slice_s: f64,
+        max_link_bytes: u64,
+        mean: Vec<f64>,
+    },
+    /// Leader → every node after the handshake of a sharded run: the full
+    /// table of OS-assigned mesh listener ports, indexed by node.
+    Peers { ports: Vec<u16> },
 }
 
 /// The peer broke the framing contract — treat it as lost.
@@ -111,6 +143,32 @@ impl<'a> Cursor<'a> {
     fn done(&self) -> bool {
         self.pos == self.buf.len()
     }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Serialize an f64 slice: `count (u32) | bit patterns (u64 LE each)` —
+/// exact, no decimal round-trip.
+fn put_f64s(out: &mut Vec<u8>, values: &[f64]) {
+    put_u32(out, values.len() as u32);
+    for &v in values {
+        put_u64(out, v.to_bits());
+    }
+}
+
+fn get_f64s(c: &mut Cursor<'_>) -> Result<Vec<f64>, CommError> {
+    let count = c.u32()? as usize;
+    // 8 bytes per value: a garbage count can never out-allocate the body
+    if count > c.remaining() / 8 {
+        return Err(protocol_err());
+    }
+    let mut values = Vec::with_capacity(count);
+    for _ in 0..count {
+        values.push(f64::from_bits(c.u64()?));
+    }
+    Ok(values)
 }
 
 /// Serialize a packet blob: `dim (u64) | n_offsets (u32) | offsets (u64 ea)
@@ -181,6 +239,44 @@ impl Frame {
                     put_packet(&mut body, p);
                 }
             }
+            Frame::Shard { node, round, packet } => {
+                body.push(KIND_SHARD);
+                put_u32(&mut body, *node);
+                put_u64(&mut body, *round);
+                put_packet(&mut body, packet);
+            }
+            Frame::Slice { node, round, lo, values } => {
+                body.push(KIND_SLICE);
+                put_u32(&mut body, *node);
+                put_u64(&mut body, *round);
+                put_u64(&mut body, *lo);
+                put_f64s(&mut body, values);
+            }
+            Frame::ShardReport {
+                node,
+                round,
+                payload_bits,
+                comm_shard_s,
+                comm_slice_s,
+                max_link_bytes,
+                mean,
+            } => {
+                body.push(KIND_REPORT);
+                put_u32(&mut body, *node);
+                put_u64(&mut body, *round);
+                put_u64(&mut body, *payload_bits);
+                put_u64(&mut body, comm_shard_s.to_bits());
+                put_u64(&mut body, comm_slice_s.to_bits());
+                put_u64(&mut body, *max_link_bytes);
+                put_f64s(&mut body, mean);
+            }
+            Frame::Peers { ports } => {
+                body.push(KIND_PEERS);
+                put_u32(&mut body, ports.len() as u32);
+                for &p in ports {
+                    put_u16(&mut body, p);
+                }
+            }
         }
         seal(body)
     }
@@ -217,6 +313,39 @@ impl Frame {
                     packets.push((node, get_packet(&mut c)?));
                 }
                 Frame::Bundle { round, packets }
+            }
+            KIND_SHARD => {
+                let node = c.u32()?;
+                let round = c.u64()?;
+                Frame::Shard { node, round, packet: get_packet(&mut c)? }
+            }
+            KIND_SLICE => {
+                let node = c.u32()?;
+                let round = c.u64()?;
+                let lo = c.u64()?;
+                Frame::Slice { node, round, lo, values: get_f64s(&mut c)? }
+            }
+            KIND_REPORT => Frame::ShardReport {
+                node: c.u32()?,
+                round: c.u64()?,
+                payload_bits: c.u64()?,
+                comm_shard_s: f64::from_bits(c.u64()?),
+                comm_slice_s: f64::from_bits(c.u64()?),
+                max_link_bytes: c.u64()?,
+                mean: get_f64s(&mut c)?,
+            },
+            KIND_PEERS => {
+                let count = c.u32()? as usize;
+                // ports are 2 bytes each; the count can never exceed what
+                // the body actually holds
+                if count > c.remaining() / 2 {
+                    return Err(protocol_err());
+                }
+                let mut ports = Vec::with_capacity(count);
+                for _ in 0..count {
+                    ports.push(c.u16()?);
+                }
+                Frame::Peers { ports }
             }
             _ => return Err(protocol_err()),
         };
@@ -269,6 +398,37 @@ pub fn bundle_frame_bytes(
         put_u32(&mut body, *node);
         put_packet(&mut body, p);
     }
+    seal(body)
+}
+
+/// Serialize a [`Frame::Shard`] from a borrowed sliced packet — the
+/// per-round hot path of the sharded mesh exchange.
+pub fn shard_frame_bytes(
+    node: u32,
+    round: u64,
+    p: &WirePacket,
+) -> Result<Vec<u8>, CommError> {
+    let mut body = Vec::new();
+    body.push(KIND_SHARD);
+    put_u32(&mut body, node);
+    put_u64(&mut body, round);
+    put_packet(&mut body, p);
+    seal(body)
+}
+
+/// Serialize a [`Frame::Slice`] from a borrowed reduced slice.
+pub fn slice_frame_bytes(
+    node: u32,
+    round: u64,
+    lo: u64,
+    values: &[f64],
+) -> Result<Vec<u8>, CommError> {
+    let mut body = Vec::new();
+    body.push(KIND_SLICE);
+    put_u32(&mut body, node);
+    put_u64(&mut body, round);
+    put_u64(&mut body, lo);
+    put_f64s(&mut body, values);
     seal(body)
 }
 
@@ -366,6 +526,58 @@ mod tests {
             packets: vec![(0, sample_packet()), (2, sample_packet())],
         };
         assert_eq!(roundtrip(&f), f);
+    }
+
+    #[test]
+    fn sharded_mesh_frames_roundtrip() {
+        let p = sample_packet();
+        let shard = Frame::Shard { node: 5, round: 12, packet: p.clone() };
+        assert_eq!(roundtrip(&shard), shard);
+        // borrowed serializer matches the owned one byte for byte
+        assert_eq!(
+            shard_frame_bytes(5, 12, &p).unwrap(),
+            shard.to_bytes().unwrap()
+        );
+        let slice = Frame::Slice {
+            node: 2,
+            round: 12,
+            lo: 640,
+            values: vec![1.5, -0.25, f64::MIN_POSITIVE],
+        };
+        assert_eq!(roundtrip(&slice), slice);
+        assert_eq!(
+            slice_frame_bytes(2, 12, 640, &[1.5, -0.25, f64::MIN_POSITIVE]).unwrap(),
+            slice.to_bytes().unwrap()
+        );
+        let report = Frame::ShardReport {
+            node: 0,
+            round: 3,
+            payload_bits: 8191,
+            comm_shard_s: 0.0125,
+            comm_slice_s: 0.0075,
+            max_link_bytes: 4096,
+            mean: vec![0.5; 4],
+        };
+        assert_eq!(roundtrip(&report), report);
+        let peers = Frame::Peers { ports: vec![50123, 50124, 0, 65535] };
+        assert_eq!(roundtrip(&peers), peers);
+    }
+
+    #[test]
+    fn mesh_frame_counts_cannot_out_allocate_the_body() {
+        // a Slice whose value count claims far more f64s than the body
+        // holds must be rejected before allocating
+        let mut bytes =
+            Frame::Slice { node: 1, round: 1, lo: 0, values: vec![1.0] }.to_bytes().unwrap();
+        // value-count u32 sits right after kind(1)+node(4)+round(8)+lo(8)
+        let at = 8 + 1 + 4 + 8 + 8;
+        bytes[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(read_frame(&mut &bytes[..]).unwrap_err(), CommError::WorkerLost);
+        // same for the Peers port table
+        let mut bytes = Frame::Peers { ports: vec![1, 2] }.to_bytes().unwrap();
+        let at = 8 + 1;
+        bytes[at..at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(read_frame(&mut &bytes[..]).unwrap_err(), CommError::WorkerLost);
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! — on corrupted input — the *same* `CommError` (same variant, same bit
 //! position), so the batched decoder can never mask or shift a failure.
 //!
+//! The sharded-collective mechanics ride the same harness: shard-then-
+//! concat partial decodes must be bit-identical to the full decode over
+//! random ownership partitions, and malformed shard requests (reversed,
+//! out-of-range, misaligned windows) must surface typed errors, never
+//! panic.
+//!
 //! Uses the in-tree seeded property harness (`qoda::util::prop`) — the
 //! environment is offline, no proptest; every failing case reports its
 //! replayable seed.
@@ -22,6 +28,7 @@ use qoda::coding::DecodeError;
 use qoda::comm::{
     Adaptation, CommError, Compressor, IdentityCompressor, QuantCompressor, WirePacket,
 };
+use qoda::coordinator::collectives::assign_layers_by_bits;
 use qoda::quant::layer_map::LayerMap;
 use qoda::quant::QuantConfig;
 use qoda::util::prop::{for_cases, Gen};
@@ -320,6 +327,76 @@ fn garbage_streams_never_panic() {
             }
             (Err(ef), Err(es)) => assert_eq!(ef, es),
             other => panic!("paths disagree on garbage: {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn shard_decodes_concatenate_bit_identically() {
+    // the sharded reduce-scatter correctness property: slice a coded packet
+    // at layer boundaries into a random bit-balanced ownership partition,
+    // partial-decode every shard, concatenate in range order — the result
+    // must match the unsharded decode bit for bit (empty owner ranges
+    // included)
+    for_cases(60, 0x5A4D, |g| {
+        let map = random_map(g);
+        let mut codec = random_codec(g, &map);
+        let v = g.vec_f64(map.dim, g.f64_in(0.05, 4.0));
+        let packet = codec.encode(&v).expect("encode");
+        let full = codec.decode(&packet).expect("full decode");
+        let k = g.usize_in(1, 5);
+        let ranges = assign_layers_by_bits(&packet.layer_bits(), k);
+        let mut concat: Vec<f64> = Vec::with_capacity(map.dim);
+        for &(lo, hi) in &ranges {
+            let dim: usize = map.layers[lo..hi].iter().map(|l| l.len).sum();
+            let shard = packet.shard(lo..hi, dim).expect("shard");
+            let mut out = Vec::with_capacity(dim);
+            codec.decode_layers_into(&shard, lo..hi, &mut out).expect("shard decode");
+            assert_eq!(out.len(), dim);
+            concat.extend_from_slice(&out);
+        }
+        assert_eq!(concat.len(), full.len());
+        for (i, (a, b)) in concat.iter().zip(&full).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "coord {i} diverged under sharding");
+        }
+    });
+}
+
+#[test]
+fn bad_shard_requests_error_never_panic() {
+    for_cases(40, 0xBAD5, |g| {
+        let map = random_map(g);
+        let mut codec = random_codec(g, &map);
+        let v = g.vec_f64(map.dim, 1.0);
+        let packet = codec.encode(&v).expect("encode");
+        let n = map.layers.len();
+        // past-the-end and reversed ranges are typed errors on the packet
+        assert!(matches!(
+            packet.shard(0..n + 1 + g.usize_in(0, 3), 4),
+            Err(CommError::ShardRange { .. })
+        ));
+        assert!(matches!(packet.shard(2..1, 1), Err(CommError::ShardRange { .. })));
+        // a layer-0 shard presented for the wrong window: out-of-range is a
+        // ShardRange, a wider window is a DimMismatch — never a panic
+        let dim0 = map.layers[0].len;
+        let shard = packet.shard(0..1, dim0).expect("shard");
+        let mut out = Vec::new();
+        assert!(matches!(
+            codec.decode_layers_into(&shard, n..n + 2, &mut out),
+            Err(CommError::ShardRange { .. })
+        ));
+        if n >= 2 {
+            assert!(matches!(
+                codec.decode_layers_into(&shard, 0..n, &mut out),
+                Err(CommError::DimMismatch { .. })
+            ));
+            // misaligned window of the right layer count: either a typed
+            // error (mismatched coord count) or a shape-correct decode of
+            // the wrong bits (equal-length layers) — both legal, no panic
+            let r = codec.decode_layers_into(&shard, 1..2, &mut out);
+            if map.layers[1].len != dim0 {
+                assert!(matches!(r, Err(CommError::DimMismatch { .. })), "{r:?}");
+            }
         }
     });
 }

@@ -6,6 +6,7 @@
 
 use qoda::coding::protocol::ProtocolKind;
 use qoda::comm::Compressor;
+use qoda::coordinator::collectives::{assign_layers_by_bits, split_share};
 use qoda::coordinator::parallel::{
     run_rounds_over, worker_codec_seed, worker_oracle_seed, SharedQuantState,
 };
@@ -32,11 +33,13 @@ fn shared_state() -> SharedQuantState {
     }
 }
 
-fn topologies() -> [TopologySpec; 3] {
+fn topologies() -> [TopologySpec; 5] {
     [
         TopologySpec::BroadcastAllGather,
         TopologySpec::Hierarchical { racks: 3 },
         TopologySpec::ParameterServer,
+        TopologySpec::ShardedReduceScatter,
+        TopologySpec::Ring,
     ]
 }
 
@@ -141,16 +144,17 @@ fn wire_bits_match_analytic_formulas() {
     let x0 = vec![0.25; D];
     let net = NetworkModel::genesis_cloud(5.0);
 
-    // per-node packet bits of the single round, from fresh codecs seeded
+    // per-node packets of the single round, from fresh codecs seeded
     // exactly like the engines' workers
-    let b: Vec<u64> = (0..K)
+    let packets: Vec<_> = (0..K)
         .map(|n| {
             let mut oracle = Oracle::new(&op, noise, worker_oracle_seed(seed, n));
             let mut codec = st.codec(worker_codec_seed(seed, n));
             let dual = oracle.sample(&x0);
-            codec.encode(&dual).expect("encode").len_bits() as u64
+            codec.encode(&dual).expect("encode")
         })
         .collect();
+    let b: Vec<u64> = packets.iter().map(|p| p.len_bits() as u64).collect();
     let total: u64 = b.iter().sum();
     let agg_bits = 32 * D as u64;
 
@@ -159,10 +163,32 @@ fn wire_bits_match_analytic_formulas() {
     let expected_hier: u64 = (b[1] + b[3] + b[5]) // up: non-leaders
         + total                                   // cross: bundles, once each
         + 3 * total; // down: full packet set per multi-member rack
+    // sharded: ownership balances on the summed per-layer coded bits the
+    // engines observe; node j keeps its own shard, ships the rest, and the
+    // fp32 slice allgather crosses once -> W = sum_j (b_j - s_jj) + 32 d
+    let tables: Vec<Vec<u64>> = packets.iter().map(|p| p.layer_bits()).collect();
+    let sums: Vec<u64> = (0..tables[0].len())
+        .map(|l| tables.iter().map(|t| t[l]).sum())
+        .collect();
+    let ranges = assign_layers_by_bits(&sums, K);
+    let own_total: u64 = tables
+        .iter()
+        .enumerate()
+        .map(|(j, t)| t[ranges[j].0..ranges[j].1].iter().sum::<u64>())
+        .sum();
+    let expected_sharded = total - own_total + agg_bits;
+    // ring: K fixed chunk slots sized by the worst packet's share, each
+    // crossing 2 (K-1) times -> W = 2 (K-1) sum_o max_j split(b_j, o, K)
+    let chunk_sum: u64 = (0..K)
+        .map(|o| b.iter().map(|&bits| split_share(bits, o, K)).max().unwrap_or(0))
+        .sum();
+    let expected_ring = 2 * (K as u64 - 1) * chunk_sum;
     let expected = [
         (TopologySpec::BroadcastAllGather, total),
         (TopologySpec::Hierarchical { racks: 3 }, expected_hier),
         (TopologySpec::ParameterServer, total + K as u64 * agg_bits),
+        (TopologySpec::ShardedReduceScatter, expected_sharded),
+        (TopologySpec::Ring, expected_ring),
     ];
 
     for (spec, want) in expected {
@@ -216,11 +242,27 @@ fn fp32_reduce_wire_formulas() {
     // down = 3 aggregate multicasts — all aggregate-sized
     assert_eq!(hier.wire_bits, 3 * a + 3 * a + 3 * a);
 
-    let (_, ps) = ClusterSim::new(mk(), net, true)
+    let (_, ps) = ClusterSim::new(mk(), net.clone(), true)
         .with_topology(&TopologySpec::ParameterServer)
         .exchange(&duals)
         .unwrap();
     assert_eq!(ps.wire_bits, k as u64 * a + k as u64 * a);
+
+    // identity packets carry one layer window, so sharding degenerates to a
+    // single owner: 5 shipped packets plus one aggregate-sized allgather —
+    // coincidentally exactly flat's total
+    let (_, sharded) = ClusterSim::new(mk(), net.clone(), true)
+        .with_topology(&TopologySpec::ShardedReduceScatter)
+        .exchange(&duals)
+        .unwrap();
+    assert_eq!(sharded.wire_bits, k as u64 * a);
+
+    // ring: K chunk slots summing to one packet, each crossing 2(K-1) links
+    let (_, ring) = ClusterSim::new(mk(), net, true)
+        .with_topology(&TopologySpec::Ring)
+        .exchange(&duals)
+        .unwrap();
+    assert_eq!(ring.wire_bits, 2 * (k as u64 - 1) * a);
 }
 
 /// Golden parity of the network clock: the flat topology must charge the

@@ -3,8 +3,10 @@
 //! The acceptance bar mirrors `distributed_e2e`: driven by the same seeds
 //! through the same `comm` codecs, a real-socket run must produce
 //! bit-identical aggregates, identical final iterates and identical wire
-//! bit counts — across both coding protocols, several seeds, flat and
-//! hierarchical topologies, and both exchange schedules. On top of that,
+//! bit counts — across both coding protocols, several seeds, flat,
+//! hierarchical and sharded-mesh topologies, and both exchange schedules
+//! (the mesh is synchronous-only and declines overlap with a typed error).
+//! On top of that,
 //! the wire-only guarantees: measured per-round records are internally
 //! consistent, decoded duals are deterministic across reruns, and a worker
 //! dying mid-round surfaces as `CommError::WorkerLost` promptly instead of
@@ -207,6 +209,135 @@ fn hierarchical_wire_is_bit_identical_to_flat() {
     assert_eq!(hier.payload_bits, bits_sim);
 }
 
+/// The sharded reduce-scatter over real sockets — a genuine peer-to-peer
+/// mesh, not a star — must still be bit-identical to the flat wire run and
+/// the sim on the aggregate, the iterate and the payload-bit ledger: owners
+/// partial-decode only their slice, yet concatenated slice folds equal the
+/// full fold exactly. `last_decoded` stays empty (no node ever holds all
+/// K decoded duals), and the mesh reports a nonzero measured peak link.
+#[test]
+fn sharded_wire_is_bit_identical_to_flat() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let k = 6;
+    let x0 = vec![0.3; D];
+    let seed = 29u64;
+    let st = quant_state(ProtocolKind::Main);
+
+    let run = |topology: &TopologySpec| {
+        run_wire(
+            Workload::Oracle { op: &op, noise },
+            k,
+            &WireCodecSpec::Quant(st.clone()),
+            &x0,
+            STEPS,
+            seed,
+            topology,
+            ExchangePlan::synchronous(),
+            &WireOptions::default(),
+            &descent,
+        )
+        .expect("wire run")
+    };
+    let flat = run(&TopologySpec::BroadcastAllGather);
+    let sharded = run(&TopologySpec::ShardedReduceScatter);
+
+    assert_eq!(sharded.last_mean, flat.last_mean);
+    assert_eq!(sharded.x, flat.x);
+    assert_eq!(sharded.payload_bits, flat.payload_bits);
+    assert!(sharded.last_decoded.is_empty(), "no mesh node decodes all K duals");
+    assert!(sharded.peak_link_bytes > 0.0);
+    assert_eq!(sharded.rounds.len(), STEPS);
+    for r in &sharded.rounds {
+        assert!(r.peak_link_bytes > 0.0, "round {}", r.round);
+    }
+
+    let codecs: Vec<Box<dyn Compressor>> = (0..k)
+        .map(|n| Box::new(st.codec(worker_codec_seed(seed, n))) as _)
+        .collect();
+    let (x_sim, bits_sim, mean_sim) = sim_reference(&op, noise, k, codecs, &x0, STEPS, seed);
+    assert_eq!(sharded.last_mean, mean_sim);
+    assert_eq!(sharded.x, x_sim);
+    assert_eq!(sharded.payload_bits, bits_sim);
+}
+
+/// Identity payloads through the sharded mesh: one layer window means one
+/// owner does the whole fold, the degenerate-but-legal corner of the
+/// ownership assignment — parity must still hold.
+#[test]
+fn sharded_wire_identity_matches_sim() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let x0 = vec![0.3; D];
+    let seed = 7u64;
+
+    let report = run_wire(
+        Workload::Oracle { op: &op, noise },
+        K,
+        &WireCodecSpec::Identity,
+        &x0,
+        STEPS,
+        seed,
+        &TopologySpec::ShardedReduceScatter,
+        ExchangePlan::synchronous(),
+        &WireOptions::default(),
+        &descent,
+    )
+    .expect("sharded identity wire run");
+
+    let codecs: Vec<Box<dyn Compressor>> = (0..K)
+        .map(|_| Box::new(IdentityCompressor::new()) as _)
+        .collect();
+    let (x_sim, bits_sim, mean_sim) = sim_reference(&op, noise, K, codecs, &x0, STEPS, seed);
+    assert_eq!(report.last_mean, mean_sim);
+    assert_eq!(report.x, x_sim);
+    assert_eq!(report.payload_bits, bits_sim);
+}
+
+/// The measured runtime declines what it cannot faithfully time, with typed
+/// errors: the ring is modeled-only, and the sharded mesh has no overlapped
+/// schedule yet.
+#[test]
+fn unsupported_wire_plans_are_typed_errors() {
+    let op = test_op();
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let x0 = vec![0.3; D];
+    let st = quant_state(ProtocolKind::Main);
+
+    let err = run_wire(
+        Workload::Oracle { op: &op, noise },
+        K,
+        &WireCodecSpec::Quant(st.clone()),
+        &x0,
+        STEPS,
+        11,
+        &TopologySpec::Ring,
+        ExchangePlan::synchronous(),
+        &WireOptions::default(),
+        &descent,
+    )
+    .expect_err("ring has no wire engine");
+    assert_eq!(err, CommError::Unsupported { what: "ring wire exchange" });
+
+    let err = run_wire(
+        Workload::Oracle { op: &op, noise },
+        K,
+        &WireCodecSpec::Quant(st),
+        &x0,
+        STEPS,
+        11,
+        &TopologySpec::ShardedReduceScatter,
+        ExchangePlan::overlapped(1, 0.0),
+        &WireOptions::default(),
+        &descent,
+    )
+    .expect_err("the sharded mesh is synchronous-only");
+    assert_eq!(
+        err,
+        CommError::Unsupported { what: "overlapped sharded wire exchange" }
+    );
+}
+
 /// The overlapped schedule over real sockets follows the threaded engine's
 /// depth-stale schedule exactly: same final iterate, same last aggregate,
 /// same wire bits as `run_rounds_over` under the same plan.
@@ -396,6 +527,9 @@ fn killed_worker_surfaces_worker_lost_not_deadlock() {
         // hierarchical, rack *leader* dies: both its members and the
         // cluster leader lose a peer
         (5, 3, 2, TopologySpec::Hierarchical { racks: 2 }, ExchangePlan::synchronous()),
+        // sharded mesh: a dead peer EOFs every other node's shard exchange
+        // and the leader's report gather
+        (4, 2, 2, TopologySpec::ShardedReduceScatter, ExchangePlan::synchronous()),
     ];
     for (k, victim, round, topology, plan) in cases {
         let t0 = Instant::now();

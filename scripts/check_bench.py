@@ -26,8 +26,23 @@ with ``wire/`` are *measured* socket latency from the TCP runtime
 (``qoda wire``): real wall-clock on whatever runner produced them, so they
 are listed as informational and never compared against a baseline — an old
 baseline without them (or with different timings) cannot fail the gate.
-A ``--require wire/`` can still assert they are being emitted. Exit code
-0 = gate passes; 1 = regression or missing record; 2 = usage/IO error.
+A ``--require wire/`` can still assert they are being emitted.
+
+Records named ``topology/<plan>/K=<k>`` are the deterministic per-link
+accounting of the new collectives (pure ``Transport::charge`` arithmetic,
+no timers), gated *within the fresh file*:
+
+* only the ``sharded`` and ``ring`` plans are known — any other name under
+  ``topology/`` is a hard error, so a renamed or mistyped record cannot
+  silently drop out of the gate;
+* every record must carry ``k``, ``peak_link_bytes`` and
+  ``flat_peak_link_bytes``;
+* ``sharded`` records must satisfy ``peak <= 1.5/K x flat`` — the
+  reduce-scatter's reason to exist — and ``ring`` records must stay under
+  flat's peak.
+
+Exit code 0 = gate passes; 1 = regression or missing record; 2 = usage/IO
+error.
 """
 
 import argparse
@@ -109,6 +124,45 @@ def main():
             ms = fresh[n].get("measured_comm_ms_per_round")
             note = f" {ms} ms/round" if ms is not None else ""
             print(f"  measured  {n}:{note}")
+
+    known_plans = ("sharded", "ring")
+    for name in sorted(fresh):
+        if not name.startswith("topology/"):
+            continue
+        rec = fresh[name]
+        parts = name.split("/")
+        plan = parts[1] if len(parts) > 1 else ""
+        if plan not in known_plans:
+            failures.append(
+                f"topology: unknown plan {plan!r} in record {name!r} "
+                f"(known: {', '.join(known_plans)})"
+            )
+            continue
+        try:
+            k = int(float(rec["k"]))
+            peak = float(rec["peak_link_bytes"])
+            flat_peak = float(rec["flat_peak_link_bytes"])
+        except (KeyError, TypeError, ValueError):
+            failures.append(
+                f"topology: {name} must carry numeric k, peak_link_bytes "
+                "and flat_peak_link_bytes"
+            )
+            continue
+        if k <= 1 or flat_peak <= 0:
+            failures.append(f"topology: {name} has degenerate k={k}/flat={flat_peak}")
+            continue
+        if plan == "sharded":
+            bound = 1.5 / k * flat_peak
+            what = f"1.5/K x flat = {bound:.1f}"
+        else:
+            bound = flat_peak
+            what = f"flat's {bound:.1f}"
+        verdict = "ok" if peak <= bound else "HOT LINK"
+        print(f"{verdict:>10}  {name}: peak {peak:.1f} B/link vs {what} B/link")
+        if peak > bound:
+            failures.append(
+                f"topology: {name} peak link {peak:.1f} B exceeds {what} B"
+            )
 
     compared = 0
     for name, b in sorted(base.items()):
