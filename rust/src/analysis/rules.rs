@@ -373,6 +373,18 @@ mod tests {
     }
 
     #[test]
+    fn scheduling_modules_are_in_scope() {
+        // the bit-width scheduler re-plans the codebooks every node decodes
+        // with, and the error-feedback wrapper sits directly on the encode
+        // path — a panic or hash-order wobble in either desynchronizes the
+        // wire stream, so both live under the wire-scope rules
+        for rel in ["quant/schedule.rs", "comm/feedback.rs"] {
+            let a = audit_file(rel, "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n");
+            assert_eq!(violations(&a), vec![(RULE_PANIC, 1)], "{rel}");
+        }
+    }
+
+    #[test]
     fn widening_casts_not_flagged() {
         let a = audit_file("coding/huffman.rs", "fn f(l: u8) -> u32 { l as u32 }\n");
         assert!(a.findings.is_empty());

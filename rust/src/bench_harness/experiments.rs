@@ -15,10 +15,12 @@ use crate::oda::{
     CompressionSpec, ConstantLr, GapMode, LrSpec, OperatorSpec, Qoda, RunDriver,
     RunSpec, SolverKind, StreamSource,
 };
+use crate::quant::adaptive::TypeStats;
 use crate::quant::layer_map::LayerMap;
 use crate::quant::levels::LevelSequence;
 use crate::quant::quantizer::{quantize, QuantConfig};
 use crate::quant::variance;
+use crate::quant::{lgreco, schedule};
 use crate::stats::rng::Rng;
 use crate::util::table::Table;
 use crate::vi::noise::NoiseModel;
@@ -930,4 +932,168 @@ pub fn ablation_table() -> Table {
         ]);
     }
     t
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive bit-width scheduling (quant::schedule) vs static allocations at
+// equal total wire bits.
+// ---------------------------------------------------------------------------
+
+/// Measured per-type statistics of a heterogeneous gradient stream:
+/// `samples` draws per layer with strongly type-dependent scales (quiet ff
+/// weights, spiky embeddings, unit-scale attention), so redistributing bits
+/// across layers has something to win. Shared by
+/// [`adaptive_schedule_table`], its tier-1 pin and
+/// `examples/adaptive_sweep.rs`.
+pub fn scheduling_stats(map: &LayerMap, samples: usize, seed: u64) -> Vec<TypeStats> {
+    let mut stats: Vec<TypeStats> =
+        (0..map.num_types()).map(|_| TypeStats::default()).collect();
+    let mut rng = Rng::new(seed);
+    for _ in 0..samples {
+        for l in &map.layers {
+            let v: Vec<f32> = (0..l.len)
+                .map(|_| {
+                    let scale = match l.type_id % 3 {
+                        0 => 0.05,
+                        1 => {
+                            if rng.uniform() < 0.05 {
+                                5.0
+                            } else {
+                                0.01
+                            }
+                        }
+                        _ => 1.0,
+                    };
+                    (rng.gaussian() * scale) as f32
+                })
+                .collect();
+            stats[l.type_id].add_layer_sample(&v, 2.0);
+        }
+    }
+    stats
+}
+
+/// True cost and weighted error of the uniform width-`b` static allocation
+/// on the DP's candidate grid (ladder index `b - 1` in every layer), summed
+/// in the DP's own layer order so the comparison is term-for-term.
+pub fn static_allocation(problems: &[lgreco::LayerProblem], b: usize) -> (f64, f64) {
+    let mut bits = 0.0f64;
+    let mut err = 0.0f64;
+    for p in problems {
+        let c = &p.candidates[(b - 1).min(p.candidates.len() - 1)];
+        bits += c.bits * p.size as f64;
+        err += c.err * p.size as f64;
+    }
+    (bits, err)
+}
+
+/// The budget that makes the uniform width-`b` choice provably reachable in
+/// the DP's ceil-discretized state space: the static allocation's true cost
+/// plus the [`lgreco::UNITS`] headroom (each layer's ceil adds less than one
+/// unit). At this budget the DP's solved error is a certified lower bound on
+/// the static error.
+pub fn matched_budget(static_cost: f64, num_layers: usize) -> f64 {
+    static_cost * (1.0 + (num_layers + 1) as f64 / lgreco::UNITS as f64)
+}
+
+/// Ablation: the scheduled planner ([`schedule::plan`]) vs every static
+/// uniform bit width on the same measured statistics, each comparison at
+/// the static allocation's own true wire cost (plus only the DP's
+/// discretization headroom — under 0.2%). The static choice is inside the
+/// DP's reachable set, and the DP minimizes weighted quantization error
+/// over that set, so the adaptive row can never lose; heterogeneous layer
+/// statistics are where it wins outright.
+pub fn adaptive_schedule_table() -> Table {
+    let map = LayerMap::from_spec(&[
+        ("dense.w", 4096, "ff"),
+        ("emb.w", 2048, "embedding"),
+        ("head.w", 1024, "attention"),
+    ]);
+    let stats = scheduling_stats(&map, 8, 31);
+    let max_bits = 6u32;
+    let ladder = lgreco::alpha_ladder(max_bits);
+    let problems = schedule::type_problems(&map, &stats, &ladder);
+    let mut t = Table::new(
+        "Adaptive schedule vs static uniform widths (equal total wire bits)",
+        &[
+            "static width",
+            "bits/coord",
+            "static err",
+            "adaptive bits/coord",
+            "adaptive err",
+            "err ratio",
+        ],
+    );
+    for b in 1..=max_bits as usize {
+        let (cost, err) = static_allocation(&problems, b);
+        let budget = matched_budget(cost, problems.len());
+        let plan = schedule::plan(&map, &stats, budget / map.dim as f64, max_bits);
+        let ratio = if plan.total_err > 0.0 { err / plan.total_err } else { 1.0 };
+        t.row(&[
+            format!("{b}-bit"),
+            format!("{:.3}", cost / map.dim as f64),
+            format!("{err:.5}"),
+            format!("{:.3}", plan.bits_per_coord(map.dim)),
+            format!("{:.5}", plan.total_err),
+            format!("{ratio:.3}x"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod schedule_pins {
+    use super::*;
+
+    /// The ablation's acceptance bar, as a proof rather than a benchmark:
+    /// for every static uniform width, grant the planner the static
+    /// allocation's true cost plus only the DP's ceil-discretization
+    /// headroom ([`matched_budget`]). The uniform choice is then reachable
+    /// in the DP's state space, the DP minimizes weighted error over the
+    /// reachable set, so the scheduled plan can never have higher error —
+    /// and never exceeds the granted budget.
+    #[test]
+    fn adaptive_never_loses_to_any_static_at_equal_budget() {
+        let map = LayerMap::from_spec(&[
+            ("dense.w", 4096, "ff"),
+            ("emb.w", 2048, "embedding"),
+            ("head.w", 1024, "attention"),
+        ]);
+        for seed in [31u64, 77, 123] {
+            let stats = scheduling_stats(&map, 8, seed);
+            let ladder = lgreco::alpha_ladder(6);
+            let problems = schedule::type_problems(&map, &stats, &ladder);
+            let mut strict_win = false;
+            for b in 1..=6usize {
+                let (cost, err) = static_allocation(&problems, b);
+                let budget = matched_budget(cost, problems.len());
+                let plan = schedule::plan(&map, &stats, budget / map.dim as f64, 6);
+                assert!(
+                    plan.total_bits <= budget,
+                    "seed {seed} b={b}: {} bits over budget {budget}",
+                    plan.total_bits
+                );
+                assert!(
+                    plan.total_err <= err * (1.0 + 1e-12),
+                    "seed {seed} b={b}: adaptive err {} vs static {err}",
+                    plan.total_err
+                );
+                if plan.total_err < err * (1.0 - 1e-9) {
+                    strict_win = true;
+                }
+            }
+            // heterogeneous per-type scales: at least one width must be
+            // beaten outright, not just matched
+            assert!(strict_win, "seed {seed}: adaptive never improved on static");
+        }
+    }
+
+    /// The table renders one row per static width without panicking and the
+    /// shared stats helper is deterministic (the schedule layer's contract).
+    #[test]
+    fn adaptive_schedule_table_is_deterministic() {
+        let a = format!("{:?}", adaptive_schedule_table());
+        let b = format!("{:?}", adaptive_schedule_table());
+        assert_eq!(a, b);
+    }
 }

@@ -31,7 +31,6 @@ use crate::coding::protocol::{
 };
 use crate::quant::adaptive::TypeStats;
 use crate::quant::layer_map::LayerMap;
-use crate::quant::lgreco;
 use crate::quant::quantizer::{
     dequantize_into, quantize_into, QuantizedLayer, QuantizedVector,
 };
@@ -181,6 +180,16 @@ pub enum Adaptation {
     /// full L-GreCo: re-allocate per-type alphas under a total bit budget
     /// (bits/coordinate) *and* re-optimize levels every `every` compressions
     LGreco { every: usize, budget_bits_per_coord: f64, max_bits: u32 },
+    /// scheduled L-GreCo driven by *receiver-observable* statistics: the
+    /// codec folds histograms from the values it **decodes** and re-solves
+    /// the budgeted allocation (via `quant::schedule::plan_sequences`) every
+    /// `every` decodes, checked at the start of both ENC and DEC. Every
+    /// party that observes a node's stream — the encoding node itself via a
+    /// self-decode, a sim endpoint, the leader's per-node decoder replica —
+    /// folds identical values and updates at identical counts, so schedules
+    /// stay in lock-step across engines with no side channel (pinned by
+    /// `tests/scheduled_parity.rs`).
+    Scheduled { every: usize, budget_bits_per_coord: f64, max_bits: u32 },
 }
 
 /// Quantize + entropy-code codec (the paper's scheme).
@@ -198,8 +207,14 @@ pub struct QuantCompressor {
     pub staged: bool,
     books: Codebooks,
     stats: Vec<TypeStats>,
+    /// receiver-side statistics: histograms folded from *decoded* values,
+    /// the sole input of `Adaptation::Scheduled` updates (every observer of
+    /// a stream reconstructs these identically)
+    sched_stats: Vec<TypeStats>,
     rng: Rng,
     calls: usize,
+    /// successful full-vector decodes — the `Scheduled` update trigger
+    decodes: usize,
     last_scheduled_update: usize,
     /// running totals for reporting
     pub total_bits: u64,
@@ -213,6 +228,8 @@ pub struct QuantCompressor {
     enc_tables: Vec<Vec<(u64, u32)>>,
     /// per-layer raw norms of the current encode (parallel fused path)
     layer_norms: Vec<f64>,
+    /// f32 view of a decoded slice for the scheduled statistics fold
+    sched_v32: Vec<f32>,
     // staged-path scratch
     v32: Vec<f32>,
     qv: QuantizedVector,
@@ -230,6 +247,7 @@ impl QuantCompressor {
     ) -> Self {
         let books = Codebooks::uniform(protocol, &cfg, &map.type_proportions());
         let stats = (0..map.num_types()).map(|_| TypeStats::default()).collect();
+        let sched_stats = (0..map.num_types()).map(|_| TypeStats::default()).collect();
         let eps = crate::quant::variance::eps_q_for(&map, &cfg);
         let mut c = QuantCompressor {
             map,
@@ -240,8 +258,10 @@ impl QuantCompressor {
             staged: false,
             books,
             stats,
+            sched_stats,
             rng: Rng::new(seed),
             calls: 0,
+            decodes: 0,
             last_scheduled_update: 0,
             total_bits: 0,
             total_coords: 0,
@@ -249,6 +269,7 @@ impl QuantCompressor {
             w: BitWriter::new(),
             enc_tables: Vec::new(),
             layer_norms: Vec::new(),
+            sched_v32: Vec::new(),
             v32: Vec::new(),
             qv: QuantizedVector::default(),
             dec_qv: QuantizedVector::default(),
@@ -312,6 +333,33 @@ impl QuantCompressor {
         )
     }
 
+    /// Scheduled compressor: per-type sequences starting at the budget's
+    /// uniform allocation, then receiver-driven L-GreCo re-planning every
+    /// `every` decodes under `budget_bits_per_coord` total wire bits per
+    /// coordinate (fixed-width model, sign included).
+    pub fn scheduled_proto(
+        map: &LayerMap,
+        budget_bits_per_coord: f64,
+        bucket: usize,
+        every: usize,
+        protocol: ProtocolKind,
+        seed: u64,
+    ) -> Self {
+        let m = map.bucketed(bucket);
+        // same perf-motivated ladder cap as `layerwise_proto`
+        let max_bits = 6u32;
+        // start uniform at the budget's per-coordinate spend (sign costs 1)
+        let start = ((budget_bits_per_coord - 1.0).round() as u32).clamp(1, max_bits);
+        let cfg = QuantConfig::uniform_bits(m.num_types(), start, 2.0);
+        Self::new(
+            m,
+            cfg,
+            protocol,
+            Adaptation::Scheduled { every, budget_bits_per_coord, max_bits },
+            seed,
+        )
+    }
+
     /// Rebuild the entropy codebooks from the statistics gathered since the
     /// last reset, *without* moving the level sequences — the lightweight
     /// half of an update step (Prop D.1 codebook synchronization).
@@ -320,13 +368,21 @@ impl QuantCompressor {
     }
 
     fn refresh_codebooks(&mut self) {
+        // scheduled adaptation builds books from the receiver-side
+        // histograms so pure decoders (which never encode) reconstruct the
+        // exact same books as encoding nodes
+        let src = if matches!(self.adaptation, Adaptation::Scheduled { .. }) {
+            &self.sched_stats
+        } else {
+            &self.stats
+        };
         let probs: Vec<Vec<f64>> = self
             .cfg
             .sequences
             .iter()
             .enumerate()
             .map(|(m, seq)| {
-                crate::coding::length::level_probabilities(&self.stats[m].hist, seq)
+                crate::coding::length::level_probabilities(&src[m].hist, seq)
             })
             .collect();
         self.books = Codebooks::build(self.protocol, &probs, &self.map.type_proportions());
@@ -348,7 +404,7 @@ impl QuantCompressor {
     fn maybe_scheduled_update(&mut self) {
         let every = match self.adaptation {
             Adaptation::Levels { every } | Adaptation::LGreco { every, .. } => every,
-            Adaptation::Fixed => 0,
+            Adaptation::Fixed | Adaptation::Scheduled { .. } => 0,
         };
         if every > 0
             && self.calls > 0
@@ -358,6 +414,46 @@ impl QuantCompressor {
             self.last_scheduled_update = self.calls;
             self.update_levels();
         }
+    }
+
+    /// The `Scheduled` update trigger: fires on the *decode* counter,
+    /// checked at the start of both ENC and DEC. An encoding node that
+    /// self-decodes each packet (worker, sim endpoint) reaches count `t-1`
+    /// before encoding packet `t`; a pure decoder replica reaches the same
+    /// count before decoding packet `t` — so packet `t` is encoded *and*
+    /// decoded under the post-update books on every party, and a packet is
+    /// never split across an update boundary.
+    fn maybe_decode_scheduled_update(&mut self) {
+        let every = match self.adaptation {
+            Adaptation::Scheduled { every, .. } => every,
+            _ => 0,
+        };
+        if every > 0
+            && self.decodes > 0
+            && self.decodes % every == 0
+            && self.last_scheduled_update != self.decodes
+        {
+            self.last_scheduled_update = self.decodes;
+            self.update_levels();
+        }
+    }
+
+    /// Fold a successfully decoded vector into the receiver-side statistics
+    /// and advance the `Scheduled` decode counter. Decoded values are
+    /// identical on every observer of the stream (wire determinism), so the
+    /// folded histograms — and therefore the schedules they drive — are too.
+    fn fold_scheduled_stats(&mut self, out: &[f64]) {
+        if !matches!(self.adaptation, Adaptation::Scheduled { .. }) {
+            return;
+        }
+        for l in &self.map.layers {
+            self.sched_v32.clear();
+            let s = &out[l.offset..l.offset + l.len];
+            // audit:allow(lossy-cast) — receiver-side statistics fold at the fp32 wire precision
+            self.sched_v32.extend(s.iter().map(|&x| x as f32));
+            self.sched_stats[l.type_id].add_layer_sample(&self.sched_v32, self.cfg.q);
+        }
+        self.decodes += 1;
     }
 
     /// Staged reference ENC: four explicit passes (f32 copy, statistics
@@ -583,6 +679,7 @@ impl Compressor for QuantCompressor {
     fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket)
         -> Result<(), CommError> {
         self.maybe_scheduled_update();
+        self.maybe_decode_scheduled_update();
         if self.staged {
             self.encode_staged(v, packet)?;
         } else {
@@ -599,6 +696,7 @@ impl Compressor for QuantCompressor {
         packet: &WirePacket,
         out: &mut Vec<f64>,
     ) -> Result<(), CommError> {
+        self.maybe_decode_scheduled_update();
         if packet.dim() != self.map.dim {
             return Err(CommError::DimMismatch { want: self.map.dim, got: packet.dim() });
         }
@@ -607,6 +705,9 @@ impl Compressor for QuantCompressor {
         #[cfg(debug_assertions)]
         if let Err(ref e) = res {
             debug_check_decode_error(packet, &r, e);
+        }
+        if res.is_ok() {
+            self.fold_scheduled_stats(out);
         }
         res
     }
@@ -621,6 +722,14 @@ impl Compressor for QuantCompressor {
         layers: std::ops::Range<usize>,
         out: &mut Vec<f64>,
     ) -> Result<(), CommError> {
+        if matches!(self.adaptation, Adaptation::Scheduled { .. }) {
+            // a shard observer sees only part of the stream, so it cannot
+            // fold the full-vector statistics the schedule trigger needs;
+            // the sharded transports pin Adaptation::Fixed anyway
+            return Err(CommError::Unsupported {
+                what: "partial decode under scheduled adaptation",
+            });
+        }
         let total = self.map.layers.len();
         if layers.start > layers.end || layers.end > total {
             return Err(CommError::ShardRange {
@@ -659,34 +768,35 @@ impl Compressor for QuantCompressor {
                 self.cfg.sequences = seqs;
             }
             Adaptation::LGreco { budget_bits_per_coord, max_bits, .. } => {
-                // error curves per *type* (types share statistics), sizes
-                // aggregated over layers of that type
-                let ladder = lgreco::alpha_ladder(max_bits);
-                let problems: Vec<lgreco::LayerProblem> = (0..self.map.num_types())
-                    .map(|m| {
-                        let size: usize =
-                            self.map.layers_of_type(m).map(|l| l.len).sum();
-                        lgreco::LayerProblem {
-                            size: size.max(1),
-                            candidates: lgreco::error_curve(&self.stats[m].hist, &ladder, 4),
-                        }
-                    })
-                    .collect();
-                let budget = budget_bits_per_coord * self.map.dim as f64;
-                let alloc = lgreco::allocate(&problems, budget);
-                // adopt the chosen alphas with optimized levels
-                let alphas: Vec<usize> = alloc
-                    .choice
-                    .iter()
-                    .map(|&c| ladder[c.min(ladder.len() - 1)])
-                    .collect();
-                let (seqs, _) = crate::quant::adaptive::adapt_all(&self.stats, &alphas, 6);
-                self.cfg.sequences = seqs;
+                // budgeted re-plan from the encode-side statistics (error
+                // curves per *type* — types share statistics — with sizes
+                // aggregated over layers of that type); the solve lives in
+                // quant::schedule and is bit-identical to the historical
+                // inline DP arm
+                self.cfg.sequences = crate::quant::schedule::plan_sequences(
+                    &self.map,
+                    &self.stats,
+                    budget_bits_per_coord,
+                    max_bits,
+                );
+            }
+            Adaptation::Scheduled { budget_bits_per_coord, max_bits, .. } => {
+                // same solve, driven by the receiver-side statistics every
+                // observer of the stream reconstructs identically
+                self.cfg.sequences = crate::quant::schedule::plan_sequences(
+                    &self.map,
+                    &self.sched_stats,
+                    budget_bits_per_coord,
+                    max_bits,
+                );
             }
         }
         self.refresh_codebooks();
         self.current_eps_q = crate::quant::variance::eps_q_for(&self.map, &self.cfg);
         for s in &mut self.stats {
+            s.reset();
+        }
+        for s in &mut self.sched_stats {
             s.reset();
         }
     }
@@ -696,6 +806,7 @@ impl Compressor for QuantCompressor {
             Adaptation::Fixed => "quantized-global",
             Adaptation::Levels { .. } => "quantized-adaptive",
             Adaptation::LGreco { .. } => "quantized-lgreco",
+            Adaptation::Scheduled { .. } => "quantized-scheduled",
         }
     }
 }
@@ -1055,6 +1166,51 @@ mod tests {
         c.retune_books();
         let (_, tuned) = roundtrip(&mut c, &v);
         assert!(tuned as f64 <= cold as f64 * 1.01, "{tuned} vs {cold}");
+    }
+
+    #[test]
+    fn scheduled_observers_stay_bit_identical() {
+        // node A encodes + self-decodes each packet; observer B only
+        // decodes A's stream. Both fold the same decoded values, so when
+        // the decode-count trigger fires their re-planned sequences and
+        // books agree and decodes stay bit-identical across updates.
+        let map = LayerMap::from_spec(&[("a", 600, "ff"), ("e", 200, "embedding")]);
+        let mk = || {
+            QuantCompressor::scheduled_proto(&map, 5.0, 1 << 30, 3, ProtocolKind::Main, 9)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        assert_eq!(a.name(), "quantized-scheduled");
+        for step in 0..10 {
+            let v = grad_like(&map, 700 + step);
+            let p = a.encode(&v).expect("encode");
+            let da = a.decode(&p).expect("self decode");
+            let db = b.decode(&p).expect("observer decode");
+            for (x, y) in da.iter().zip(&db) {
+                assert_eq!(x.to_bits(), y.to_bits(), "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn scheduled_declines_partial_decode() {
+        let map = LayerMap::from_spec(&[("a", 256, "ff"), ("b", 128, "bias")]);
+        let mut c = QuantCompressor::scheduled_proto(
+            &map,
+            4.0,
+            64,
+            0, // never updates; the decline is unconditional under Scheduled
+            ProtocolKind::Main,
+            3,
+        );
+        let packet = c.encode(&grad_like(&map, 4)).expect("encode");
+        let mut out = Vec::new();
+        assert!(matches!(
+            c.decode_layers_into(&packet, 0..1, &mut out),
+            Err(CommError::Unsupported { .. })
+        ));
+        // the full decode path still works
+        c.decode_into(&packet, &mut out).expect("full decode");
+        assert_eq!(out.len(), map.dim);
     }
 
     #[test]

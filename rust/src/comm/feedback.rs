@@ -1,0 +1,233 @@
+//! Error feedback (EF14/EF21-style compensation): keep the quantization
+//! residual on the encoder and fold it into the next dual before
+//! compressing ("Quantized Adam with Error Feedback").
+//!
+//! [`FeedbackCompressor`] wraps any inner [`Compressor`]. On encode it
+//! compresses the *compensated* vector `v + e_t`, immediately self-decodes
+//! the packet it just produced, and stores the new residual
+//! `e_{t+1} = (v + e_t) - Q(v + e_t)`. What travels on the wire is exactly
+//! the inner codec's packet for the compensated vector, so receivers decode
+//! it with the inner codec's ordinary decode path — no receiver-side state,
+//! and the staged/fused parity pin of the inner codec carries over
+//! unchanged (the wrapper never reaches into the coding layer).
+//!
+//! Because the encoder self-decodes its own packet, an inner codec with
+//! decode-count-triggered scheduling (`Adaptation::Scheduled`) sees **two**
+//! decodes per exchanged packet on the encoding node (the self-decode plus
+//! the engine's aggregate decode) and one on pure receivers of other nodes'
+//! streams. Constructors that combine EF with scheduling therefore double
+//! the inner `every` (see `CompressionSpec`/`GanCompression`), which keeps
+//! updates firing at encode boundaries only — never between a packet's
+//! encode and its aggregate decode.
+
+use super::codec::Compressor;
+use super::packet::WirePacket;
+use super::CommError;
+
+/// Error-feedback wrapper: residual-compensated encode over any inner codec.
+pub struct FeedbackCompressor {
+    inner: Box<dyn Compressor>,
+    /// e_t — the accumulated compression error, one entry per coordinate
+    residual: Vec<f64>,
+    /// scratch: v + e_t, the vector actually handed to the inner codec
+    compensated: Vec<f64>,
+    /// scratch: the self-decoded Q(v + e_t)
+    decoded: Vec<f64>,
+}
+
+impl FeedbackCompressor {
+    pub fn new(inner: Box<dyn Compressor>) -> Self {
+        FeedbackCompressor {
+            inner,
+            residual: Vec::new(),
+            compensated: Vec::new(),
+            decoded: Vec::new(),
+        }
+    }
+
+    /// The wrapped codec.
+    pub fn inner(&self) -> &dyn Compressor {
+        self.inner.as_ref()
+    }
+
+    /// Mutable access to the wrapped codec (tests retune books through it).
+    pub fn inner_mut(&mut self) -> &mut dyn Compressor {
+        self.inner.as_mut()
+    }
+
+    /// l2 norm of the current residual — bounded over a run when the inner
+    /// codec is a contraction on the compensated vector.
+    pub fn residual_norm(&self) -> f64 {
+        self.residual.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+impl Compressor for FeedbackCompressor {
+    fn encode_into(&mut self, v: &[f64], packet: &mut WirePacket)
+        -> Result<(), CommError> {
+        if self.residual.len() != v.len() {
+            // first call (or a dimension change): start from zero error
+            self.residual.clear();
+            self.residual.resize(v.len(), 0.0);
+        }
+        self.compensated.clear();
+        self.compensated
+            .extend(v.iter().zip(&self.residual).map(|(&x, &e)| x + e));
+        self.inner.encode_into(&self.compensated, packet)?;
+        // self-decode the freshly produced packet: the residual must be
+        // measured against exactly what receivers will reconstruct
+        self.inner.decode_into(packet, &mut self.decoded)?;
+        for ((e, &c), &d) in self
+            .residual
+            .iter_mut()
+            .zip(&self.compensated)
+            .zip(&self.decoded)
+        {
+            *e = c - d;
+        }
+        Ok(())
+    }
+
+    fn decode_into(
+        &mut self,
+        packet: &WirePacket,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        // EF is encoder-side only: receiving is the inner codec's decode
+        self.inner.decode_into(packet, out)
+    }
+
+    fn decode_layers_into(
+        &mut self,
+        packet: &WirePacket,
+        layers: std::ops::Range<usize>,
+        out: &mut Vec<f64>,
+    ) -> Result<(), CommError> {
+        self.inner.decode_layers_into(packet, layers, out)
+    }
+
+    fn update_levels(&mut self) {
+        self.inner.update_levels();
+    }
+
+    fn name(&self) -> &'static str {
+        "error-feedback"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::codec::{Adaptation, QuantCompressor};
+    use crate::quant::{LayerMap, QuantConfig};
+    use crate::stats::rng::Rng;
+
+    fn grad_like(dim: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..dim).map(|_| rng.gaussian() * 0.3).collect()
+    }
+
+    fn quant(map: &LayerMap, bits: u32, seed: u64) -> Box<dyn Compressor> {
+        Box::new(QuantCompressor::new(
+            map.clone(),
+            QuantConfig::uniform_bits(map.num_types(), bits, 2.0),
+            crate::coding::protocol::ProtocolKind::Main,
+            Adaptation::Fixed,
+            seed,
+        ))
+    }
+
+    #[test]
+    fn wire_is_the_inner_packet_for_the_compensated_vector() {
+        let map = LayerMap::single(256).bucketed(64);
+        let mut ef = FeedbackCompressor::new(quant(&map, 3, 7));
+        let mut plain = QuantCompressor::new(
+            map.clone(),
+            QuantConfig::uniform_bits(map.num_types(), 3, 2.0),
+            crate::coding::protocol::ProtocolKind::Main,
+            Adaptation::Fixed,
+            7,
+        );
+        let v = grad_like(map.dim, 8);
+        // step 1: residual is zero, so EF's packet == plain packet
+        let p_ef = ef.encode(&v).expect("ef encode");
+        let p_plain = plain.encode(&v).expect("plain encode");
+        assert_eq!(p_ef.payload(), p_plain.payload());
+        // receivers decode with the ordinary path
+        let d = ef.decode(&p_ef).expect("decode");
+        assert_eq!(d.len(), v.len());
+    }
+
+    #[test]
+    fn residual_tracks_compression_error() {
+        let map = LayerMap::single(512).bucketed(128);
+        let mut ef = FeedbackCompressor::new(quant(&map, 2, 21));
+        let v = grad_like(map.dim, 22);
+        ef.encode(&v).expect("encode");
+        let r1 = ef.residual_norm();
+        assert!(r1 > 0.0, "2-bit quantization must leave a residual");
+        // residual stays bounded across steps (no blow-up)
+        let mut last = r1;
+        for s in 0..20 {
+            ef.encode(&grad_like(map.dim, 100 + s)).expect("encode");
+            last = ef.residual_norm();
+        }
+        let vnorm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(last < 4.0 * vnorm, "residual blew up: {last} vs |v|={vnorm}");
+    }
+
+    #[test]
+    fn compensation_reduces_accumulated_error() {
+        // the EF telescoping sum: after T steps the accumulated decoded
+        // stream is within one residual of the accumulated input stream,
+        // while the uncompensated codec's errors add up independently
+        let map = LayerMap::single(512).bucketed(128);
+        let mut ef = FeedbackCompressor::new(quant(&map, 2, 5));
+        let mut plain = quant(&map, 2, 5);
+        let dim = map.dim;
+        let (mut sum_v, mut sum_ef, mut sum_plain) =
+            (vec![0.0f64; dim], vec![0.0f64; dim], vec![0.0f64; dim]);
+        for s in 0..30 {
+            let v = grad_like(dim, 300 + s);
+            let pe = ef.encode(&v).expect("ef encode");
+            let de = ef.decode(&pe).expect("ef decode");
+            let pp = plain.encode(&v).expect("plain encode");
+            let dp = plain.decode(&pp).expect("plain decode");
+            for i in 0..dim {
+                sum_v[i] += v[i];
+                sum_ef[i] += de[i];
+                sum_plain[i] += dp[i];
+            }
+        }
+        let err = |s: &[f64]| -> f64 {
+            s.iter().zip(&sum_v).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
+        };
+        let (e_ef, e_plain) = (err(&sum_ef), err(&sum_plain));
+        assert!(
+            e_ef < e_plain,
+            "EF should shrink accumulated error: {e_ef} vs {e_plain}"
+        );
+        // and the telescoped error is exactly the final residual
+        let res2: f64 = ef.residual_norm().powi(2);
+        assert!(
+            (e_ef - res2).abs() <= 1e-6 * (1.0 + res2),
+            "telescope broken: {e_ef} vs residual^2 {res2}"
+        );
+    }
+
+    #[test]
+    fn dimension_change_resets_the_residual() {
+        // the identity codec accepts any dimension, so one wrapper can see a
+        // length change mid-run; the residual must re-zero, not mis-zip
+        let mut ef = FeedbackCompressor::new(Box::new(
+            crate::comm::codec::IdentityCompressor::new(),
+        ));
+        ef.encode(&grad_like(64, 1)).expect("encode");
+        ef.encode(&grad_like(32, 2)).expect("encode after dim change");
+        assert!(ef.residual_norm().is_finite());
+        // fp32 wire: per-coordinate residual is at most one f32 ulp around
+        let v = grad_like(32, 3);
+        ef.encode(&v).expect("encode");
+        assert!(ef.residual_norm() < 1e-5);
+    }
+}

@@ -32,6 +32,22 @@
 //! * [`endpoint`] — `CommEndpoint`: one node's codec + packet scratch, the
 //!   unit both engines hold per node.
 //!
+//! # Error feedback
+//!
+//! [`FeedbackCompressor`] ([`feedback`]) wraps any codec with EF14-style
+//! compensation: each encode compresses `v + e_t` (the input plus the
+//! residual left by the previous compression), self-decodes its own packet
+//! and stores `e_{t+1} = (v + e_t) - Q(v + e_t)`. The semantics are
+//! strictly encoder-side: the wire carries the inner codec's ordinary
+//! packet for the compensated vector, receivers decode with the inner
+//! decode path, and no state crosses the wire — so EF composes with every
+//! transport unchanged. Over a run the decoded stream telescopes to the
+//! input stream minus one residual, which is what keeps aggressive low-bit
+//! schedules convergent. Combined with decode-count-triggered scheduling
+//! (`Adaptation::Scheduled`), the encoder's self-decode doubles its decode
+//! rate, so EF constructors double the inner schedule's `every` to keep
+//! update steps at packet boundaries (see [`feedback`] docs).
+//!
 //! Both directions are fallible end to end: corrupt or truncated wire bytes
 //! surface as [`CommError`], never a panic, and a panicking encode worker
 //! thread is contained as [`CommError::EncodeWorker`] instead of poisoning
@@ -43,10 +59,12 @@
 
 pub mod codec;
 pub mod endpoint;
+pub mod feedback;
 pub mod packet;
 
 pub use codec::{default_sequences, Adaptation, Compressor, IdentityCompressor, QuantCompressor};
 pub use endpoint::CommEndpoint;
+pub use feedback::FeedbackCompressor;
 pub use packet::WirePacket;
 
 use crate::coding::DecodeError;

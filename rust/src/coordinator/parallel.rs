@@ -56,18 +56,25 @@ pub struct SharedQuantState {
     pub map: LayerMap,
     pub cfg: QuantConfig,
     pub protocol: ProtocolKind,
+    /// adaptation policy every node starts from. `Fixed` (the wire-safe
+    /// default) keeps books static for the whole run; `Scheduled` re-plans
+    /// bit-widths from receiver-observable statistics, which this engine
+    /// supports by decoding each node's stream through a dedicated per-node
+    /// replica (see [`run_rounds_over`]). Encode-count policies (`Levels` /
+    /// `LGreco`) are loopback-only: a pure decoder cannot replicate their
+    /// encode-side statistics.
+    pub adaptation: Adaptation,
 }
 
 impl SharedQuantState {
-    /// Build the node codec for this synchronized state: fixed (non-
-    /// adaptive) quantization, uniform codebooks — identical on every node,
-    /// so codebooks never travel on the wire.
+    /// Build the node codec for this synchronized state — identical on
+    /// every node, so codebooks never travel on the wire.
     pub fn codec(&self, seed: u64) -> QuantCompressor {
         QuantCompressor::new(
             self.map.clone(),
             self.cfg.clone(),
             self.protocol,
-            Adaptation::Fixed,
+            self.adaptation.clone(),
             seed,
         )
     }
@@ -174,6 +181,18 @@ pub fn run_rounds_over(
     // the leader decodes with the same synchronized state (its RNG seed is
     // irrelevant: decode draws no randomness)
     let mut decoder = state.codec(0);
+    // under scheduled adaptation the leader keeps one decoder replica per
+    // node: replica n decodes only node n's stream, so it folds exactly the
+    // statistics node n folds through its self-decode and re-plans at the
+    // same decode counts — their books stay bit-identical with no side
+    // channel (a single shared decoder would see k decodes per round and
+    // desynchronize immediately)
+    let scheduled = matches!(state.adaptation, Adaptation::Scheduled { .. });
+    let mut replicas: Vec<QuantCompressor> = if scheduled {
+        (0..k).map(|n| state.codec(worker_codec_seed(seed, n))).collect()
+    } else {
+        Vec::new()
+    };
     let mut decoded = Vec::with_capacity(d);
     let mut transport = topology.build();
     let mut charge_rng = Rng::new(seed ^ 0x7A11);
@@ -198,11 +217,24 @@ pub fn run_rounds_over(
             let mut codec = state.codec(worker_codec_seed(seed, node));
             scope.spawn(move || {
                 let mut oracle = Oracle::new(op, noise, worker_oracle_seed(seed, node));
+                let mut selfdec: Vec<f64> = Vec::new();
                 let mut round = 0usize;
                 while let Ok(Cmd::Eval(xq)) = rx.recv() {
                     round += 1;
                     let dual = oracle.sample(&xq);
-                    let packet = codec.encode(&dual);
+                    let mut packet = codec.encode(&dual);
+                    if scheduled {
+                        // observe the own stream: fold the decoded packet
+                        // into the scheduled statistics so this node's
+                        // schedule advances in lock-step with the leader's
+                        // replica (which decodes the same packet with the
+                        // same books and folds the same values)
+                        if let Ok(p) = &packet {
+                            if let Err(e) = codec.decode_into(p, &mut selfdec) {
+                                packet = Err(e);
+                            }
+                        }
+                    }
                     if reply_tx.send(Reply { node, round, packet }).is_err() {
                         break;
                     }
@@ -267,6 +299,7 @@ pub fn run_rounds_over(
             }
             decode_aggregate_into(k, d, mean, &mut decoded, |node, out| {
                 match slots[node].as_ref() {
+                    Some(packet) if scheduled => replicas[node].decode_into(packet, out),
                     Some(packet) => decoder.decode_into(packet, out),
                     None => Err(CommError::WorkerLost),
                 }
@@ -367,6 +400,7 @@ mod tests {
             map: LayerMap::single(d),
             cfg: QuantConfig::same(1, LevelSequence::bits(bits), 2.0),
             protocol: ProtocolKind::Main,
+            adaptation: Adaptation::Fixed,
         }
     }
 

@@ -9,7 +9,8 @@
 //!   * QODA-Adam + layer-wise (L-GreCo)  — the paper's method
 
 use super::fid::fid;
-use crate::comm::{Compressor, IdentityCompressor, QuantCompressor};
+use crate::coding::protocol::ProtocolKind;
+use crate::comm::{Compressor, FeedbackCompressor, IdentityCompressor, QuantCompressor};
 use crate::coordinator::metrics::RunMetrics;
 use crate::coordinator::sim::ClusterSim;
 use crate::coordinator::topology::{ExchangeMode, ExchangePlan, TopologySpec};
@@ -33,6 +34,10 @@ pub enum GanCompression {
     Global { bits: u32, bucket: usize },
     /// layer-wise adaptive with L-GreCo re-allocation every `every` steps
     LayerwiseLGreco { bits: u32, bucket: usize, every: usize },
+    /// decode-count-scheduled bit widths under `budget` wire bits per
+    /// coordinate, optionally with encoder-side error feedback (the
+    /// residual-compensated EF14 wrapper)
+    Scheduled { budget: f64, bucket: usize, every: usize, error_feedback: bool },
 }
 
 #[derive(Clone, Debug)]
@@ -118,6 +123,25 @@ fn build_compressors(
                 GanCompression::LayerwiseLGreco { bits, bucket, every } => Box::new(
                     QuantCompressor::layerwise(&model.meta, bits, bucket, every, seed + i as u64),
                 ),
+                GanCompression::Scheduled { budget, bucket, every, error_feedback } => {
+                    // EF's self-decode doubles the inner decode rate: double
+                    // `every` so updates stay at packet boundaries
+                    let every =
+                        if error_feedback { every.saturating_mul(2) } else { every };
+                    let inner: Box<dyn Compressor> = Box::new(QuantCompressor::scheduled_proto(
+                        &model.meta,
+                        budget,
+                        bucket,
+                        every,
+                        ProtocolKind::Main,
+                        seed + i as u64,
+                    ));
+                    if error_feedback {
+                        Box::new(FeedbackCompressor::new(inner))
+                    } else {
+                        inner
+                    }
+                }
             }
         })
         .collect()

@@ -17,6 +17,8 @@
 //!   protocols         Main vs Alternating under jitter (V6)
 //!   optimism          QODA vs Q-GenX oracle/wire cost
 //!   ablations         adaptation-knob ablation (static/adaptive/L-GreCo)
+//!   adaptive          scheduled bit widths vs every static width at equal
+//!                     total wire bits (quant::schedule ablation)
 //!   wire              measured-wire TCP runtime: fp32 vs coded exchanges
 //!                     over real localhost sockets per K, comm_s from
 //!                     monotonic clocks (never the analytic charge model)
@@ -40,6 +42,8 @@
 //!   --lr adaptive|alt|constant        --qhat F --gamma F --eta F
 //!   --protocol main|alternating       --steps T
 //!   --checkpoints t1,t2,...           --update-every N
+//!   --bit-budget B (scheduled layer-wise bit widths under B wire bits/coord)
+//!   --error-feedback (EF14 residual compensation on every node's encoder)
 //!   --gap true|false                  --gap-every N --gap-stop THRESH
 //!   --topology flat|hier|ps|sharded|ring   --racks R (hier; 0 = K/4)
 //!   --bandwidth GBPS (attach the network clock and report comm seconds)
@@ -64,8 +68,8 @@ use qoda::wire::{run_wire, WireCodecSpec, WireOptions, Workload};
 
 fn usage() -> &'static str {
     "usage: qoda <run|table1|table2|topology|overlap|fig4|table3|fig5|rates|verify-variance|\
-     verify-codelen|verify-mqv|protocols|optimism|ablations|wire|train-gan|train-lm|audit|all> \
-     [flags]\n(see `qoda help` or the module docs for per-command flags)"
+     verify-codelen|verify-mqv|protocols|optimism|ablations|adaptive|wire|train-gan|train-lm|\
+     audit|all> [flags]\n(see `qoda help` or the module docs for per-command flags)"
 }
 
 /// Resolve `--exchange` / `--depth`. `ExchangeMode::parse` is the single
@@ -165,6 +169,7 @@ fn run_spec_from_args(args: &Args) -> Result<RunSpec> {
         .checkpoints(&checkpoints)
         .seed(seed)
         .update_every(args.usize_or("update-every", 0)?)
+        .error_feedback(args.has("error-feedback"))
         .gap(gap)
         .topology(topology_from_args(args, k)?)
         .exchange(exchange_from_args(args)?)
@@ -175,6 +180,9 @@ fn run_spec_from_args(args: &Args) -> Result<RunSpec> {
     // net_wire_bits accounting)
     if args.has("bandwidth") || args.has("topology") || args.has("exchange") {
         spec = spec.network(NetworkModel::genesis_cloud(args.f64_or("bandwidth", 5.0)?));
+    }
+    if args.has("bit-budget") {
+        spec = spec.bit_budget(args.f64_or("bit-budget", 4.0)?);
     }
     Ok(spec)
 }
@@ -462,6 +470,11 @@ fn dispatch(args: &Args) -> Result<()> {
             t.print();
             t.save_csv("ablations.csv")?;
         }
+        "adaptive" => {
+            let t = experiments::adaptive_schedule_table();
+            t.print();
+            t.save_csv("adaptive.csv")?;
+        }
         "optimism" => {
             let t = experiments::optimism_table();
             t.print();
@@ -480,13 +493,23 @@ fn dispatch(args: &Args) -> Result<()> {
                     _ => GanOptimizer::OptimisticAdam,
                 },
                 compression: match args
-                    .one_of("compression", "layerwise", &["none", "global", "layerwise"])?
+                    .one_of(
+                        "compression",
+                        "layerwise",
+                        &["none", "global", "layerwise", "scheduled"],
+                    )?
                     .as_str()
                 {
                     "none" => GanCompression::None,
                     "global" => GanCompression::Global {
                         bits: args.usize_or("bits", 5)? as u32,
                         bucket: args.usize_or("bucket", 128)?,
+                    },
+                    "scheduled" => GanCompression::Scheduled {
+                        budget: args.f64_or("bit-budget", 4.0)?,
+                        bucket: args.usize_or("bucket", 128)?,
+                        every: args.usize_or("update-every", 50)?,
+                        error_feedback: args.has("error-feedback"),
                     },
                     _ => GanCompression::LayerwiseLGreco {
                         bits: args.usize_or("bits", 5)? as u32,
@@ -585,6 +608,7 @@ fn dispatch(args: &Args) -> Result<()> {
                 ("verify_mqv", experiments::verify_mqv()),
                 ("protocols", experiments::protocols_table()),
                 ("optimism", experiments::optimism_table()),
+                ("adaptive", experiments::adaptive_schedule_table()),
             ] {
                 t.print();
                 t.save_csv(&format!("{name}.csv"))?;

@@ -39,7 +39,8 @@ use super::qoda::Qoda;
 use super::source::OracleSource;
 use crate::coding::protocol::ProtocolKind;
 use crate::comm::{
-    Adaptation, CommEndpoint, CommError, Compressor, IdentityCompressor, QuantCompressor,
+    Adaptation, CommEndpoint, CommError, Compressor, FeedbackCompressor, IdentityCompressor,
+    QuantCompressor,
 };
 use crate::coordinator::parallel::SharedQuantState;
 use crate::coordinator::topology::{
@@ -648,12 +649,39 @@ impl CompressionSpec {
         }
     }
 
+    /// Build one node's compressor under a scheduled bit budget
+    /// ([`RunSpec::bit_budget`]): the spec's layer/bucket structure with
+    /// [`Adaptation::Scheduled`] re-planning under `budget` wire bits per
+    /// coordinate every `every` decodes. Callers that wrap the result in
+    /// error feedback must double `every` first (the EF self-decode doubles
+    /// the inner codec's decode rate — see [`crate::comm::feedback`]).
+    pub fn build_scheduled(
+        &self,
+        dim: usize,
+        protocol: ProtocolKind,
+        seed: u64,
+        budget: f64,
+        every: usize,
+    ) -> Box<dyn Compressor> {
+        let (map, bucket) = match self {
+            CompressionSpec::None => (LayerMap::single(dim), 128),
+            CompressionSpec::Global { bucket, .. } => (LayerMap::single(dim), *bucket),
+            CompressionSpec::Layerwise { map, bucket, .. } => (map.clone(), *bucket),
+            // a bucket wider than any layer leaves the map's own structure
+            CompressionSpec::Quantized { map, .. } => (map.clone(), 1 << 30),
+        };
+        Box::new(QuantCompressor::scheduled_proto(
+            &map, budget, bucket, every, protocol, seed,
+        ))
+    }
+
     /// The [`WireCodecSpec`] equivalent of this compression for the
     /// measured-wire TCP runtime ([`crate::wire`]): the same layer maps and
     /// level widths, pinned to `Adaptation::Fixed`. Wire nodes carry no
-    /// codebook control channel, so adaptive schedules (L-GreCo) map to
-    /// their fixed-level equivalents — bit widths and bucket structure are
-    /// preserved, in-run level adaptation is not.
+    /// codebook control channel, so adaptive schedules (L-GreCo, the
+    /// scheduled bit budget) map to their fixed-level equivalents — bit
+    /// widths and bucket structure are preserved, in-run level adaptation
+    /// is not.
     pub fn wire_codec(&self, dim: usize, protocol: ProtocolKind) -> WireCodecSpec {
         match self {
             CompressionSpec::None => WireCodecSpec::Identity,
@@ -664,18 +692,25 @@ impl CompressionSpec {
                     map: LayerMap::single(dim).bucketed(*bucket).with_single_type(),
                     cfg: QuantConfig::uniform_bits(1, *bits, 2.0),
                     protocol,
+                    adaptation: Adaptation::Fixed,
                 })
             }
             CompressionSpec::Layerwise { map, bits, bucket, .. } => {
                 let m = map.bucketed(*bucket);
                 let cfg = QuantConfig::uniform_bits(m.num_types(), *bits, 2.0);
-                WireCodecSpec::Quant(SharedQuantState { map: m, cfg, protocol })
+                WireCodecSpec::Quant(SharedQuantState {
+                    map: m,
+                    cfg,
+                    protocol,
+                    adaptation: Adaptation::Fixed,
+                })
             }
             CompressionSpec::Quantized { map, bits, .. } => {
                 WireCodecSpec::Quant(SharedQuantState {
                     map: map.clone(),
                     cfg: QuantConfig::uniform_bits(map.num_types(), *bits, 2.0),
                     protocol,
+                    adaptation: Adaptation::Fixed,
                 })
             }
         }
@@ -749,6 +784,18 @@ pub struct RunSpec {
     pub seed: u64,
     /// Algorithm 1's explicit update-step period (0 = codec self-scheduled)
     pub update_every: usize,
+    /// Global wire-bit budget per coordinate. When set, the loopback engines
+    /// replace the spec's static levels with [`Adaptation::Scheduled`]: the
+    /// fixed L-GreCo DP re-plans per-layer bit widths from receiver-observed
+    /// statistics every `update_every` decodes (64 if unset) and retunes the
+    /// entropy codebooks. The measured-wire path ([`Self::wire`]) ignores
+    /// this and stays pinned to the fixed-level equivalent.
+    pub bit_budget: Option<f64>,
+    /// Wrap every node's codec in [`FeedbackCompressor`]: the quantization
+    /// residual is folded into the next dual before compression (EF14).
+    /// Encoder-side only — the wire format is unchanged. Ignored by
+    /// [`Self::wire`].
+    pub error_feedback: bool,
     /// starting point X_1 (default: the origin)
     pub x0: Option<Vec<f64>>,
     pub gap: GapMode,
@@ -777,6 +824,8 @@ impl RunSpec {
             checkpoints: Vec::new(),
             seed: 1,
             update_every: 0,
+            bit_budget: None,
+            error_feedback: false,
             x0: None,
             gap: GapMode::Off,
             topology: TopologySpec::BroadcastAllGather,
@@ -827,6 +876,19 @@ impl RunSpec {
 
     pub fn update_every(mut self, every: usize) -> Self {
         self.update_every = every;
+        self
+    }
+
+    /// Drive layer-wise bit widths adaptively under a global wire-bit budget
+    /// per coordinate (see [`RunSpec::bit_budget`]).
+    pub fn bit_budget(mut self, bits_per_coord: f64) -> Self {
+        self.bit_budget = Some(bits_per_coord);
+        self
+    }
+
+    /// Enable encoder-side error feedback (see [`RunSpec::error_feedback`]).
+    pub fn error_feedback(mut self, on: bool) -> Self {
+        self.error_feedback = on;
         self
     }
 
@@ -932,7 +994,34 @@ impl RunSpec {
         let mut src =
             OracleSource::new(op.as_ref(), self.nodes, self.noise, self.seed ^ 0xABCD);
         let comps: Vec<Box<dyn Compressor>> = (0..self.nodes)
-            .map(|i| self.compression.build(d, self.protocol, self.seed + i as u64))
+            .map(|i| {
+                let node_seed = self.seed + i as u64;
+                let inner = match self.bit_budget {
+                    Some(budget) => {
+                        // decode-count cadence: explicit period, or a 64-step
+                        // default; EF's self-decode doubles the decode rate,
+                        // so double `every` to keep updates at packet
+                        // boundaries (comm::feedback)
+                        let every =
+                            if self.update_every > 0 { self.update_every } else { 64 };
+                        let every =
+                            if self.error_feedback { every.saturating_mul(2) } else { every };
+                        self.compression.build_scheduled(
+                            d,
+                            self.protocol,
+                            node_seed,
+                            budget,
+                            every,
+                        )
+                    }
+                    None => self.compression.build(d, self.protocol, node_seed),
+                };
+                if self.error_feedback {
+                    Box::new(FeedbackCompressor::new(inner)) as Box<dyn Compressor>
+                } else {
+                    inner
+                }
+            })
             .collect();
         let mut driver = RunDriver::new().checkpoints(&self.checkpoints);
         if let Some(model) = &self.network {
@@ -970,7 +1059,11 @@ impl RunSpec {
         match self.solver {
             SolverKind::Qoda => {
                 let mut solver = Qoda::new(&mut src, comps, self.lr.build());
-                solver.update_every = self.update_every;
+                // under a scheduled bit budget the codec adapts on its own
+                // decode counter; driving Algorithm 1's explicit update step
+                // on top would reset the receiver-side statistics mid-window
+                solver.update_every =
+                    if self.bit_budget.is_some() { 0 } else { self.update_every };
                 driver.run_observed(&mut solver, &x0, self.steps, sinks)
             }
             SolverKind::QGenX => {

@@ -121,10 +121,35 @@ impl LevelSequence {
 
     /// Bracket index tau(u): largest j with l_j <= u, clipped so that
     /// [l_tau, l_{tau+1}] is always valid (u = 1 falls in the last interval).
+    ///
+    /// The uniform fast path is *exact*: the closed-form guess is corrected
+    /// against the actual level values, so it agrees with [`bracket_search`]
+    /// for every u — including exact level boundaries, where the f64 product
+    /// `u * inv` can round to either side of the integer.
+    ///
+    /// [`bracket_search`]: Self::bracket_search
     #[inline]
     pub fn bracket(&self, u: f64) -> usize {
+        debug_assert!(
+            (0.0..=1.0).contains(&u),
+            "bracket domain is the normalized magnitude [0, 1], got {u}"
+        );
         if let Some(inv) = self.uniform_inv_step {
-            return ((u * inv) as usize).min(self.levels.len() - 2);
+            let ls = &self.levels;
+            let top = ls.len() - 2;
+            // closed-form guess; `.max(0.0)` keeps an (out-of-contract)
+            // negative u on the same answer as the binary search instead of
+            // relying on the cast's silent saturation to 0
+            let mut j = ((u.max(0.0) * inv) as usize).min(top);
+            // correct the guess by the <= 1 step FP rounding can move it
+            while j < top && ls[j + 1] <= u {
+                j += 1;
+            }
+            while j > 0 && ls[j] > u {
+                j -= 1;
+            }
+            debug_assert_eq!(j, self.bracket_search(u));
+            return j;
         }
         self.bracket_search(u)
     }
@@ -158,6 +183,7 @@ impl LevelSequence {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::for_cases;
 
     #[test]
     fn uniform_structure() {
@@ -192,6 +218,37 @@ mod tests {
         assert_eq!(l.bracket(0.6), 2);
         assert_eq!(l.bracket(0.99), 3);
         assert_eq!(l.bracket(1.0), 3); // clipped into the final interval
+    }
+
+    #[test]
+    fn prop_bracket_matches_search_on_uniform() {
+        // the uniform fast path must agree with the binary search for every
+        // u in [0, 1] — random points, the exact stored boundaries, their
+        // one-ulp FP neighbors, and the independently recomputed j/(s+1)
+        // products (which can round to the other side of the stored level)
+        for_cases(60, 0xb4ac, |g| {
+            let s = g.usize_in(1, 62);
+            let l = LevelSequence::uniform(s);
+            for _ in 0..64 {
+                let u = g.f64_in(0.0, 1.0);
+                assert_eq!(l.bracket(u), l.bracket_search(u), "u={u} s={s}");
+            }
+            let boundaries: Vec<f64> = l
+                .as_slice()
+                .iter()
+                .copied()
+                .chain((0..=s + 1).map(|j| j as f64 / (s + 1) as f64))
+                .collect();
+            for b in boundaries {
+                let mut probes = vec![b, f64::from_bits(b.to_bits() + 1).min(1.0)];
+                if b > 0.0 {
+                    probes.push(f64::from_bits(b.to_bits() - 1));
+                }
+                for u in probes {
+                    assert_eq!(l.bracket(u), l.bracket_search(u), "u={u} s={s}");
+                }
+            }
+        });
     }
 
     #[test]

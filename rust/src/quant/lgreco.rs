@@ -46,11 +46,33 @@ pub struct Allocation {
 }
 
 /// Budget resolution: the DP quantizes bit costs into this many units.
-const UNITS: usize = 2048;
+/// Public because the ceil-rounded discretization bounds how closely a true
+/// bit cost maps into the DP's state space: a choice whose true cost is at
+/// most `budget * (1 - (layers + 1) / UNITS)` is always reachable (each
+/// layer's ceil adds less than one unit). The scheduling ablation pins
+/// DP-optimality against static allocations through this bound.
+pub const UNITS: usize = 2048;
+
+/// Discretized unit cost of a candidate, rounded *up*: overestimating the
+/// cost keeps every DP-reachable state's true bit total at or below
+/// `units * unit`, so a feasible budget can never be overshot (the old
+/// `.round()` understated costs and let `total_bits` exceed the budget).
+#[inline]
+fn cost_units(c: &Candidate, size: usize, unit: f64) -> usize {
+    ((c.bits * size as f64) / unit).ceil() as usize
+}
 
 /// Solve the allocation problem. `budget_bits` is the total wire budget for
 /// one dual vector (excluding norms). Greedy-safe fallback: if even the
 /// cheapest choice per layer exceeds the budget, pick the cheapest anyway.
+///
+/// Guarantees, relied on by the schedule layer and the property suite:
+/// - whenever the budget is *feasible* (the cheapest choice per layer fits),
+///   the returned `total_bits <= budget_bits` — exactly, not within slack;
+/// - `total_err` is monotone non-increasing in `budget_bits`: ceil-rounded
+///   unit costs shrink as the budget (and hence the unit) grows, so every
+///   allocation reachable at a smaller budget stays reachable at a larger
+///   one.
 pub fn allocate(layers: &[LayerProblem], budget_bits: f64) -> Allocation {
     assert!(!layers.is_empty());
     let cheapest_total: f64 = layers
@@ -62,34 +84,36 @@ pub fn allocate(layers: &[LayerProblem], budget_bits: f64) -> Allocation {
                 .fold(f64::INFINITY, f64::min)
         })
         .sum();
+    let feasible = budget_bits >= cheapest_total;
     let budget = budget_bits.max(cheapest_total);
     let unit = budget / UNITS as f64;
 
-    // dp[u] = (err, per-layer choices) best using <= u units; forward DP.
+    // dp[u] = min err over allocations of the layers so far whose ceil-unit
+    // costs sum to exactly u; pick[l][u] = the candidate that achieved it
+    // (one flat u16 row per layer — the old code cloned a Vec per relaxed
+    // cell, O(layers^2 x UNITS) churn).
+    const UNSET: u16 = u16::MAX;
     let neg = f64::INFINITY;
     let mut dp = vec![neg; UNITS + 1];
-    let mut back: Vec<Vec<u16>> = vec![Vec::new(); UNITS + 1];
     dp[0] = 0.0;
-    // layer-by-layer: dp2[u] = min over candidates of dp[u - cost] + err
+    let mut picks: Vec<Vec<u16>> = Vec::with_capacity(layers.len());
     for l in layers {
         let mut dp2 = vec![neg; UNITS + 1];
-        let mut back2: Vec<Vec<u16>> = vec![Vec::new(); UNITS + 1];
+        let mut pick = vec![UNSET; UNITS + 1];
         for (ci, c) in l.candidates.iter().enumerate() {
-            let cost_units = ((c.bits * l.size as f64) / unit).round() as usize;
+            let cost = cost_units(c, l.size, unit);
             let err = c.err * l.size as f64;
-            for u in cost_units..=UNITS {
-                let prev = dp[u - cost_units];
+            for u in cost..=UNITS {
+                let prev = dp[u - cost];
                 if prev.is_finite() && prev + err < dp2[u] {
                     dp2[u] = prev + err;
-                    let mut b = back[u - cost_units].clone();
                     // audit:allow(lossy-cast) — candidate index into the small alpha ladder
-                    b.push(ci as u16);
-                    back2[u] = b;
+                    pick[u] = ci as u16;
                 }
             }
         }
         dp = dp2;
-        back = back2;
+        picks.push(pick);
     }
     // best over all u
     let (mut best_u, mut best) = (UNITS, f64::INFINITY);
@@ -100,7 +124,9 @@ pub fn allocate(layers: &[LayerProblem], budget_bits: f64) -> Allocation {
         }
     }
     if !best.is_finite() {
-        // degenerate fallback: cheapest everywhere
+        // degenerate fallback: cheapest everywhere (also covers feasible
+        // budgets so close to the floor that ceil-rounding overflows the
+        // unit axis — the cheapest choice is within budget by definition)
         let choice: Vec<usize> = layers
             .iter()
             .map(|l| {
@@ -112,7 +138,7 @@ pub fn allocate(layers: &[LayerProblem], budget_bits: f64) -> Allocation {
                     .unwrap_or(0)
             })
             .collect();
-        let total_bits = layers
+        let total_bits: f64 = layers
             .iter()
             .zip(&choice)
             .map(|(l, &c)| l.candidates[c].bits * l.size as f64)
@@ -122,14 +148,32 @@ pub fn allocate(layers: &[LayerProblem], budget_bits: f64) -> Allocation {
             .zip(&choice)
             .map(|(l, &c)| l.candidates[c].err * l.size as f64)
             .sum();
+        assert!(
+            !feasible || total_bits <= budget_bits,
+            "feasible budget overshot by cheapest fallback: {total_bits} > {budget_bits}"
+        );
         return Allocation { choice, total_bits, total_err };
     }
-    let choice: Vec<usize> = back[best_u].iter().map(|&c| c as usize).collect();
-    let total_bits = layers
+    // backtrack through the per-layer choice tables: each layer's pick at
+    // the current unit index names the candidate, whose ceil cost rewinds
+    // the index deterministically
+    let mut choice = vec![0usize; layers.len()];
+    let mut u = best_u;
+    for (li, l) in layers.iter().enumerate().rev() {
+        let ci = picks[li][u] as usize;
+        choice[li] = ci;
+        u -= cost_units(&l.candidates[ci], l.size, unit);
+    }
+    let total_bits: f64 = layers
         .iter()
         .zip(&choice)
         .map(|(l, &c)| l.candidates[c].bits * l.size as f64)
         .sum();
+    // ceil costs overestimate: sum of true bits <= best_u * unit <= budget
+    assert!(
+        !feasible || total_bits <= budget_bits,
+        "feasible budget overshot by DP: {total_bits} > {budget_bits}"
+    );
     Allocation { choice, total_bits, total_err: best }
 }
 
@@ -160,6 +204,7 @@ pub fn alpha_ladder(max_bits: u32) -> Vec<usize> {
 mod tests {
     use super::*;
     use crate::stats::rng::Rng;
+    use crate::util::prop::{for_cases, Gen};
 
     fn flat_candidates(errs: &[f64], bits: &[f64]) -> Vec<Candidate> {
         errs.iter()
@@ -181,9 +226,10 @@ mod tests {
                 candidates: flat_candidates(&[0.1, 0.01], &[2.0, 6.0]),
             },
         ];
-        // budget only allows one layer at 6 bits
+        // budget only allows one layer at 6 bits; the bound is exact — ceil
+        // cost discretization never overshoots a feasible budget
         let a = allocate(&layers, 8500.0);
-        assert!(a.total_bits <= 8500.0 * 1.01);
+        assert!(a.total_bits <= 8500.0);
         // it should upgrade exactly one layer
         let upgraded = a.choice.iter().filter(|&&c| c == 1).count();
         assert_eq!(upgraded, 1, "{:?}", a.choice);
@@ -239,6 +285,84 @@ mod tests {
         }
     }
 
+    /// Random allocation problems: heterogeneous sizes, unsorted-by-merit
+    /// candidate ladders with increasing bit costs.
+    fn random_layers(g: &mut Gen) -> Vec<LayerProblem> {
+        let nl = g.usize_in(1, 5);
+        (0..nl)
+            .map(|_| {
+                let size = g.usize_in(1, 3000);
+                let nc = g.usize_in(1, 5);
+                let mut bits: Vec<f64> = (0..nc).map(|_| g.f64_in(1.0, 9.0)).collect();
+                bits.sort_by(f64::total_cmp);
+                let candidates = bits
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| Candidate {
+                        alpha: i + 1,
+                        bits: b,
+                        err: g.f64_in(1e-4, 1.0),
+                    })
+                    .collect();
+                LayerProblem { size, candidates }
+            })
+            .collect()
+    }
+
+    fn cheapest_total(layers: &[LayerProblem]) -> f64 {
+        layers
+            .iter()
+            .map(|l| {
+                l.candidates
+                    .iter()
+                    .map(|c| c.bits * l.size as f64)
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .sum()
+    }
+
+    #[test]
+    fn prop_allocate_never_exceeds_feasible_budget() {
+        for_cases(80, 0x1ecc0, |g| {
+            let layers = random_layers(g);
+            let cheapest = cheapest_total(&layers);
+            let max_total: f64 = layers
+                .iter()
+                .map(|l| {
+                    l.candidates
+                        .iter()
+                        .map(|c| c.bits * l.size as f64)
+                        .fold(0.0, f64::max)
+                })
+                .sum();
+            // anywhere from the feasibility floor to beyond the richest spend
+            let budget = cheapest + g.f64_in(0.0, 1.5) * (max_total - cheapest).max(1.0);
+            let a = allocate(&layers, budget);
+            assert!(
+                a.total_bits <= budget,
+                "overshoot: {} > {budget} (choice {:?})",
+                a.total_bits,
+                a.choice
+            );
+        });
+    }
+
+    #[test]
+    fn prop_allocate_monotone_in_budget() {
+        // more budget never hurts: ceil-rounded unit costs shrink as the
+        // budget grows, so every allocation reachable at b1 stays reachable
+        // at b2 >= b1 (this covers the infeasible -> fallback region too)
+        for_cases(80, 0x1ecc1, |g| {
+            let layers = random_layers(g);
+            let cheapest = cheapest_total(&layers);
+            let b1 = g.f64_in(0.1, 2.5) * cheapest.max(1.0);
+            let b2 = b1 * (1.0 + g.f64_in(0.0, 2.0));
+            let e1 = allocate(&layers, b1).total_err;
+            let e2 = allocate(&layers, b2).total_err;
+            assert!(e2 <= e1, "err went up with budget: {e2} > {e1} ({b1} -> {b2})");
+        });
+    }
+
     #[test]
     fn dp_beats_uniform_allocation_on_heterogeneous_layers() {
         // Two layers, same size; one has near-zero error even at 2 bits.
@@ -258,6 +382,6 @@ mod tests {
         let a = allocate(&layers, budget);
         let uniform_err = (0.001 + 0.3) * 100.0;
         assert!(a.total_err < uniform_err, "{} vs {uniform_err}", a.total_err);
-        assert!(a.total_bits <= budget * 1.01);
+        assert!(a.total_bits <= budget);
     }
 }

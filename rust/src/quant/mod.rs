@@ -1,13 +1,50 @@
 //! Layer-wise quantization framework (paper Section 3):
 //! level sequences, the unbiased stochastic quantizer, layer maps, the
-//! Theorem 5.1 variance bound, adaptive level optimization (Eq. 2–3) and
-//! the L-GreCo dynamic-programming bit allocator.
+//! Theorem 5.1 variance bound, adaptive level optimization (Eq. 2–3), the
+//! L-GreCo dynamic-programming bit allocator and the bit-width scheduler
+//! that re-runs it over training.
+//!
+//! # Static vs scheduled allocation
+//!
+//! The quantizer itself is static per call: a [`QuantConfig`] holds one
+//! [`LevelSequence`] per layer type and every encode quantizes against it.
+//! What changes over training is *which* sequences are installed:
+//!
+//! - **Fixed** (`Adaptation::Fixed`): the start sequences live for the whole
+//!   run — the QSGD/Q-GenX-style global baseline.
+//! - **Measured re-tuning** (`Adaptation::Levels` / `Adaptation::LGreco`):
+//!   every `every` *encodes*, the codec re-optimizes levels (and, for
+//!   L-GreCo, re-allocates per-type alphas under a bit budget) from the
+//!   encode-side histograms it folded since the last update.
+//! - **Scheduled** (`Adaptation::Scheduled`): the same L-GreCo solve, but
+//!   driven by [`schedule::plan_sequences`] from *receiver-observable*
+//!   statistics — histograms folded from **decoded** values, triggered by
+//!   the decode counter. Every party that observes a stream (the encoding
+//!   worker via a self-decode, the sim endpoint, the leader's per-node
+//!   decoder replica) folds identical values and re-plans at identical
+//!   counts, so the schedule stays in lock-step on every node without any
+//!   side channel.
+//!
+//! # Determinism contract (what the parity suites pin)
+//!
+//! An update step is a pure function of the statistics folded since the last
+//! update: [`schedule::plan`] draws no randomness, iterates types in index
+//! order, and the DP breaks ties deterministically. Two codecs that fold the
+//! same values in the same order and update at the same call counts hold
+//! bit-identical sequences and codebooks forever after. This is the
+//! invariant that keeps `tests/golden_parity.rs`, `tests/fused_parity.rs`,
+//! `tests/topology_equivalence.rs` and `tests/wire_e2e.rs` bit-identical
+//! with scheduling off, and `tests/scheduled_parity.rs` bit-identical across
+//! both engines with scheduling on. Update steps happen only *between*
+//! packets: a packet already encoded always decodes with the books it was
+//! encoded under.
 
 pub mod adaptive;
 pub mod layer_map;
 pub mod levels;
 pub mod lgreco;
 pub mod quantizer;
+pub mod schedule;
 pub mod variance;
 
 pub use layer_map::{Layer, LayerMap};

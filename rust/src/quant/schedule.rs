@@ -1,0 +1,195 @@
+//! Bit-width scheduling: re-solve the L-GreCo allocation from measured
+//! statistics as training evolves (ALQ-style norm/variance-driven
+//! re-allocation).
+//!
+//! This module is the pure planning half of the scheduled adaptation loop:
+//! given the per-type histograms gathered since the last update
+//! ([`TypeStats`]) and the layer sizes of a [`LayerMap`], it runs the fixed
+//! L-GreCo DP under a global wire-bit budget and maps the chosen alphas back
+//! through `adaptive::optimize_levels` into per-type [`LevelSequence`]s.
+//! [`plan_sequences`] is the exact computation `QuantCompressor::update_levels`
+//! performs at an `Adaptation::LGreco`/`Adaptation::Scheduled` update step —
+//! the codec delegates here, so the parity suites pin this function too.
+//!
+//! Determinism contract: the plan is a pure function of `(map, stats, budget,
+//! max_bits)`. Nodes that fold identical statistics and call at identical
+//! step counts compute identical schedules — this is what keeps the scheduled
+//! runs bit-identical across engines (see `quant/mod.rs` and
+//! `tests/scheduled_parity.rs`).
+
+use crate::quant::adaptive::{adapt_all, TypeStats};
+use crate::quant::layer_map::LayerMap;
+use crate::quant::lgreco;
+use crate::quant::LevelSequence;
+
+/// One solved schedule: the DP's choice per type plus its cost/error
+/// accounting, for reporting and for the ablation pins.
+#[derive(Clone, Debug)]
+pub struct BitSchedule {
+    /// chosen interior-level count (alpha) per type
+    pub alphas: Vec<usize>,
+    /// fixed-width wire bits/coordinate per type (incl. sign) of the choice
+    pub wire_bits: Vec<f64>,
+    /// total estimated wire bits of the allocation (fixed-width model)
+    pub total_bits: f64,
+    /// total weighted quantization error of the allocation
+    pub total_err: f64,
+    /// the budget the plan was solved under, in total wire bits
+    pub budget_bits: f64,
+}
+
+impl BitSchedule {
+    /// Average scheduled bits/coordinate across the whole vector.
+    pub fn bits_per_coord(&self, dim: usize) -> f64 {
+        self.total_bits / dim.max(1) as f64
+    }
+}
+
+/// Build the per-type DP inputs from the measured histograms: one
+/// [`lgreco::LayerProblem`] per type, sized by the total coordinates of that
+/// type's layers, with candidates along the standard alpha ladder. Public so
+/// the ablation harness can evaluate static allocations on the exact
+/// candidate grid the planner solves over.
+pub fn type_problems(
+    map: &LayerMap,
+    stats: &[TypeStats],
+    ladder: &[usize],
+) -> Vec<lgreco::LayerProblem> {
+    (0..map.num_types())
+        .map(|m| {
+            let size: usize = map.layers_of_type(m).map(|l| l.len).sum();
+            lgreco::LayerProblem {
+                size: size.max(1),
+                candidates: lgreco::error_curve(&stats[m].hist, ladder, 4),
+            }
+        })
+        .collect()
+}
+
+/// Solve the budgeted allocation and return the chosen per-type alphas with
+/// their cost/error accounting. `budget_bits_per_coord` is the global budget
+/// divided by the vector dimension (the same convention as
+/// `Adaptation::LGreco`); `max_bits` caps the candidate ladder.
+pub fn plan(
+    map: &LayerMap,
+    stats: &[TypeStats],
+    budget_bits_per_coord: f64,
+    max_bits: u32,
+) -> BitSchedule {
+    debug_assert!(max_bits >= 1, "the alpha ladder needs at least 1 bit");
+    debug_assert_eq!(stats.len(), map.num_types());
+    let ladder = lgreco::alpha_ladder(max_bits);
+    let problems = type_problems(map, stats, &ladder);
+    let budget = budget_bits_per_coord * map.dim as f64;
+    let alloc = lgreco::allocate(&problems, budget);
+    let alphas: Vec<usize> = alloc
+        .choice
+        .iter()
+        .map(|&c| ladder[c.min(ladder.len() - 1)])
+        .collect();
+    let wire_bits: Vec<f64> = alloc
+        .choice
+        .iter()
+        .zip(&problems)
+        .map(|(&c, p)| p.candidates[c.min(p.candidates.len() - 1)].bits)
+        .collect();
+    BitSchedule {
+        alphas,
+        wire_bits,
+        total_bits: alloc.total_bits,
+        total_err: alloc.total_err,
+        budget_bits: budget,
+    }
+}
+
+/// The full update step the codec runs under scheduled adaptation: solve the
+/// budgeted allocation, then re-optimize each type's levels at its chosen
+/// alpha against the measured CDF. Bit-identical to the historical inline
+/// `Adaptation::LGreco` arm of `QuantCompressor::update_levels` — the codec
+/// now calls this function, and `tests/fused_parity.rs` pins the grid.
+pub fn plan_sequences(
+    map: &LayerMap,
+    stats: &[TypeStats],
+    budget_bits_per_coord: f64,
+    max_bits: u32,
+) -> Vec<LevelSequence> {
+    let schedule = plan(map, stats, budget_bits_per_coord, max_bits);
+    let (seqs, _) = adapt_all(stats, &schedule.alphas, 6);
+    seqs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Rng;
+
+    fn map3() -> LayerMap {
+        LayerMap::from_spec(&[
+            ("dense.w", 2048, "ff"),
+            ("emb.w", 1024, "embedding"),
+            ("head.w", 512, "attention"),
+        ])
+    }
+
+    /// Fold gradient-like samples with per-type scale separation so the DP
+    /// has a real trade-off to exploit.
+    fn measured_stats(map: &LayerMap, seed: u64) -> Vec<TypeStats> {
+        let mut rng = Rng::new(seed);
+        let mut stats: Vec<TypeStats> =
+            (0..map.num_types()).map(|_| TypeStats::default()).collect();
+        for l in &map.layers {
+            let scale = [1.0f32, 0.05, 2.0][l.type_id % 3];
+            let v: Vec<f32> =
+                (0..l.len).map(|_| rng.gaussian() as f32 * scale).collect();
+            stats[l.type_id].add_layer_sample(&v, 2.0);
+        }
+        stats
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let map = map3();
+        let stats = measured_stats(&map, 9);
+        let a = plan(&map, &stats, 5.0, 6);
+        let b = plan(&map, &stats, 5.0, 6);
+        assert_eq!(a.alphas, b.alphas);
+        assert_eq!(a.total_bits.to_bits(), b.total_bits.to_bits());
+        assert_eq!(a.total_err.to_bits(), b.total_err.to_bits());
+    }
+
+    #[test]
+    fn plan_respects_budget_and_monotone_error() {
+        let map = map3();
+        let stats = measured_stats(&map, 10);
+        let tight = plan(&map, &stats, 2.0, 6);
+        let loose = plan(&map, &stats, 6.0, 6);
+        assert!(tight.total_bits <= tight.budget_bits);
+        assert!(loose.total_bits <= loose.budget_bits);
+        assert!(loose.total_err <= tight.total_err);
+        assert!(tight.bits_per_coord(map.dim) <= 2.0);
+    }
+
+    #[test]
+    fn plan_sequences_matches_plan_alphas() {
+        let map = map3();
+        let stats = measured_stats(&map, 11);
+        let schedule = plan(&map, &stats, 5.0, 6);
+        let seqs = plan_sequences(&map, &stats, 5.0, 6);
+        assert_eq!(seqs.len(), map.num_types());
+        for (seq, &alpha) in seqs.iter().zip(&schedule.alphas) {
+            assert_eq!(seq.alpha(), alpha);
+        }
+    }
+
+    #[test]
+    fn empty_stats_still_plan() {
+        // cold-start: no samples folded yet — the curve degenerates but the
+        // plan must stay valid (cheapest-feasible) and never panic
+        let map = map3();
+        let stats: Vec<TypeStats> =
+            (0..map.num_types()).map(|_| TypeStats::default()).collect();
+        let s = plan(&map, &stats, 4.0, 6);
+        assert_eq!(s.alphas.len(), map.num_types());
+        assert!(s.total_bits <= s.budget_bits);
+    }
+}

@@ -5,7 +5,7 @@
 //! runs.
 
 use qoda::coding::protocol::ProtocolKind;
-use qoda::comm::Compressor;
+use qoda::comm::{Adaptation, Compressor};
 use qoda::coordinator::parallel::{
     run_rounds, worker_codec_seed, worker_oracle_seed, SharedQuantState,
 };
@@ -28,6 +28,7 @@ fn threaded_coordinator_trains_distributed_sgd() {
         map: LayerMap::single(32).bucketed(16),
         cfg: QuantConfig::same(1, LevelSequence::bits(5), 2.0),
         protocol: ProtocolKind::Main,
+        adaptation: Adaptation::Fixed,
     };
     let (x, bits, _) = run_rounds(
         &op,
@@ -81,6 +82,7 @@ fn sim_and_parallel_agree_bitwise_across_protocols_and_seeds() {
                     q: 2.0,
                 },
                 protocol,
+                adaptation: Adaptation::Fixed,
             };
             let x0 = vec![0.3; d];
 

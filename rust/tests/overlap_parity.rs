@@ -11,7 +11,7 @@
 //! engines agree bit-for-bit on the depth-stale iterate trajectory.
 
 use qoda::coding::protocol::ProtocolKind;
-use qoda::comm::Compressor;
+use qoda::comm::{Adaptation, Compressor};
 use qoda::coordinator::parallel::{
     run_rounds_over, worker_codec_seed, worker_oracle_seed, SharedQuantState,
 };
@@ -37,6 +37,7 @@ fn shared_state() -> SharedQuantState {
             q: 2.0,
         },
         protocol: ProtocolKind::Main,
+        adaptation: Adaptation::Fixed,
     }
 }
 

@@ -1,0 +1,143 @@
+//! Parity for decode-count-scheduled adaptation (`Adaptation::Scheduled`):
+//! the threaded coordinator and the deterministic sim engine, driven by the
+//! same seeds through the same `comm` codecs, must stay **bit-identical**
+//! while the schedule re-plans bit widths and retunes codebooks mid-run.
+//!
+//! The mechanism under test: every consumer of node n's stream (the node's
+//! own self-decode, the threaded leader's per-node replica, the sim
+//! engine's endpoint) folds identical receiver-side statistics at identical
+//! decode counts, so all of them re-plan to identical books with no side
+//! channel. One desynchronized update anywhere and the entropy decode
+//! diverges immediately — equality of the decoded aggregates across engines
+//! is therefore a sharp pin, not a smoke test.
+
+use qoda::comm::{Adaptation, Compressor};
+use qoda::coordinator::parallel::{
+    run_rounds, worker_codec_seed, worker_oracle_seed, SharedQuantState,
+};
+use qoda::coordinator::sim::ClusterSim;
+use qoda::net::NetworkModel;
+use qoda::quant::layer_map::LayerMap;
+use qoda::quant::QuantConfig;
+use qoda::stats::rng::Rng;
+use qoda::vi::noise::{NoiseModel, Oracle};
+use qoda::vi::operator::QuadraticOperator;
+
+const D: usize = 24;
+const K: usize = 3;
+const STEPS: usize = 6;
+const LR: f64 = 0.07;
+
+/// `every: 2` over 6 steps fires the re-plan at decode counts 2 and 4 (the
+/// count-6 update would first apply to a 7th packet), so the run crosses
+/// two live codebook updates.
+fn scheduled_state() -> SharedQuantState {
+    let map = LayerMap::from_spec(&[("a", 16, "ff"), ("b", 8, "emb")]).bucketed(8);
+    let cfg = QuantConfig::uniform_bits(map.num_types(), 4, 2.0);
+    SharedQuantState {
+        map,
+        cfg,
+        protocol: qoda::coding::protocol::ProtocolKind::Main,
+        adaptation: Adaptation::Scheduled {
+            every: 2,
+            budget_bits_per_coord: 5.0,
+            max_bits: 6,
+        },
+    }
+}
+
+/// The sim-engine reference: per-node codecs and oracles built from the
+/// exact worker seed formulas, each endpoint encoding and self-decoding its
+/// own packet (one decode per round per codec — the same counter the
+/// threaded worker and its leader replica advance).
+fn sim_run(
+    op: &QuadraticOperator,
+    noise: NoiseModel,
+    st: &SharedQuantState,
+    x0: &[f64],
+    seed: u64,
+) -> (Vec<f64>, Vec<f64>) {
+    let comps: Vec<Box<dyn Compressor>> = (0..K)
+        .map(|n| {
+            Box::new(st.codec(worker_codec_seed(seed, n))) as Box<dyn Compressor>
+        })
+        .collect();
+    let mut sim = ClusterSim::new(comps, NetworkModel::genesis_cloud(5.0), false);
+    let mut oracles: Vec<Oracle> = (0..K)
+        .map(|n| Oracle::new(op, noise, worker_oracle_seed(seed, n)))
+        .collect();
+    let mut x = x0.to_vec();
+    let mut last_mean = vec![0.0; D];
+    for _t in 1..=STEPS {
+        let duals: Vec<Vec<f64>> =
+            oracles.iter_mut().map(|o| o.sample(&x)).collect();
+        let (mean, _metrics) = sim.exchange(&duals).expect("sim exchange");
+        for (xi, g) in x.iter_mut().zip(&mean) {
+            *xi -= LR * g;
+        }
+        last_mean = mean;
+    }
+    (x, last_mean)
+}
+
+#[test]
+fn scheduled_runs_are_bit_identical_across_engines_and_seeds() {
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let mut op_rng = Rng::new(99);
+    let op = QuadraticOperator::random(D, 0.5, &mut op_rng);
+    for seed in [11u64, 29, 47] {
+        let st = scheduled_state();
+        let x0 = vec![0.3; D];
+
+        let (x_par, bits_par, mean_par) = run_rounds(
+            &op,
+            noise,
+            K,
+            &st,
+            x0.clone(),
+            STEPS,
+            seed,
+            |x, mean, _| {
+                for (xi, g) in x.iter_mut().zip(mean) {
+                    *xi -= LR * g;
+                }
+            },
+        )
+        .expect("threaded scheduled run");
+
+        let (x_sim, mean_sim) = sim_run(&op, noise, &st, &x0, seed);
+
+        assert_eq!(x_par, x_sim, "seed {seed}: iterates diverged");
+        assert_eq!(mean_par, mean_sim, "seed {seed}: last aggregates diverged");
+        assert!(bits_par > 0, "seed {seed}: no wire bits charged");
+    }
+}
+
+#[test]
+fn scheduled_run_actually_reallocates() {
+    // the parity above would hold vacuously if the schedule never fired;
+    // pin that the scheduled run's wire spend differs from the same run
+    // with adaptation pinned off (identical cfg, seeds and oracle stream)
+    let noise = NoiseModel::Absolute { sigma: 0.2 };
+    let mut op_rng = Rng::new(99);
+    let op = QuadraticOperator::random(D, 0.5, &mut op_rng);
+    let x0 = vec![0.3; D];
+    let run = |st: &SharedQuantState| {
+        run_rounds(&op, noise, K, st, x0.clone(), STEPS, 11, |x, mean, _| {
+            for (xi, g) in x.iter_mut().zip(mean) {
+                *xi -= LR * g;
+            }
+        })
+        .expect("run")
+    };
+    let scheduled = run(&scheduled_state());
+    let mut fixed_st = scheduled_state();
+    fixed_st.adaptation = Adaptation::Fixed;
+    let fixed = run(&fixed_st);
+    // first update fires at decode count 2 of 6: books were retuned against
+    // measured statistics, so the entropy-coded wire totals must move
+    assert_ne!(
+        scheduled.1, fixed.1,
+        "scheduled adaptation never changed the wire stream"
+    );
+}

@@ -5,7 +5,7 @@
 //! charge the exact pre-refactor network-clock time (golden parity).
 
 use qoda::coding::protocol::ProtocolKind;
-use qoda::comm::Compressor;
+use qoda::comm::{Adaptation, Compressor};
 use qoda::coordinator::collectives::{assign_layers_by_bits, split_share};
 use qoda::coordinator::parallel::{
     run_rounds_over, worker_codec_seed, worker_oracle_seed, SharedQuantState,
@@ -30,6 +30,7 @@ fn shared_state() -> SharedQuantState {
             q: 2.0,
         },
         protocol: ProtocolKind::Main,
+        adaptation: Adaptation::Fixed,
     }
 }
 

@@ -13,7 +13,7 @@
 //! deadlocking the cluster.
 
 use qoda::coding::protocol::ProtocolKind;
-use qoda::comm::{CommError, Compressor, IdentityCompressor};
+use qoda::comm::{Adaptation, CommError, Compressor, IdentityCompressor};
 use qoda::coordinator::parallel::{
     run_rounds_over, worker_codec_seed, worker_oracle_seed, SharedQuantState,
 };
@@ -52,6 +52,7 @@ fn quant_state(protocol: ProtocolKind) -> SharedQuantState {
             q: 2.0,
         },
         protocol,
+        adaptation: Adaptation::Fixed,
     }
 }
 
